@@ -1,0 +1,78 @@
+//! GNMT placement walkthrough (paper Table 4 scenario): compare all
+//! placers on the full-memory 4-GPU cluster, show the optimizer's op
+//! reduction, and the speedup over single-GPU.
+//!
+//! ```text
+//! cargo run --release --example gnmt_placement [-- --batch 128 --len 40]
+//! ```
+
+use baechi::coordinator::{run, BaechiConfig, PlacerKind};
+use baechi::models::Benchmark;
+use baechi::util::cli::{Args, OptSpec};
+use baechi::util::table::{fmt_secs, Table};
+
+fn main() -> anyhow::Result<()> {
+    let specs = [
+        OptSpec {
+            name: "batch",
+            help: "batch size",
+            takes_value: true,
+            default: Some("128"),
+        },
+        OptSpec {
+            name: "len",
+            help: "sequence length",
+            takes_value: true,
+            default: Some("40"),
+        },
+    ];
+    let args = Args::parse(&specs)?;
+    let batch = args.get_usize("batch", 128)?;
+    let seq_len = args.get_usize("len", 40)?;
+    let benchmark = Benchmark::Gnmt { batch, seq_len };
+
+    let mut rows = Vec::new();
+    for placer in [
+        PlacerKind::Single,
+        PlacerKind::Expert,
+        PlacerKind::MTopo,
+        PlacerKind::MEtf,
+        PlacerKind::MSct,
+    ] {
+        let cfg = BaechiConfig::paper_default(benchmark, placer);
+        let r = run(&cfg)?;
+        rows.push(r);
+    }
+    let single_step = rows[0].step_time();
+
+    let mut t = Table::new(
+        &format!("GNMT bs{batch} len{seq_len} on 4 × 8 GiB GPUs (Table 4 scenario)"),
+        &[
+            "placer",
+            "ops placed",
+            "placement time",
+            "step time",
+            "speedup vs single",
+        ],
+    );
+    for r in &rows {
+        let speedup = match (single_step, r.step_time()) {
+            (Some(s), Some(x)) => format!("{:+.1}%", (s / x - 1.0) * 100.0),
+            _ => "-".into(),
+        };
+        t.row(&[
+            r.placer.clone(),
+            r.placed_ops.to_string(),
+            fmt_secs(r.placement_time),
+            r.step_time().map(fmt_secs).unwrap_or_else(|| "OOM".into()),
+            speedup,
+        ]);
+    }
+    t.print();
+    println!(
+        "graph optimizer: {} ops → {} placed groups",
+        rows.last().unwrap().original_ops,
+        rows.last().unwrap().placed_ops
+    );
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Inception-V3 under memory pressure (paper Table 5 + Fig. 7 scenario):
+//! at a 30 % memory cap the single-GPU and expert placements OOM while
+//! m-TOPO / m-ETF / m-SCT place successfully; print the step times and
+//! the per-device peak-memory load balance.
+//!
+//! ```text
+//! cargo run --release --example inception_placement [-- --batch 32 --fraction 0.3]
+//! ```
+
+use baechi::coordinator::{run, BaechiConfig, PlacerKind};
+use baechi::models::Benchmark;
+use baechi::util::cli::{Args, OptSpec};
+use baechi::util::table::{fmt_bytes, fmt_secs, Table};
+
+fn main() -> anyhow::Result<()> {
+    let specs = [
+        OptSpec {
+            name: "batch",
+            help: "batch size",
+            takes_value: true,
+            default: Some("32"),
+        },
+        OptSpec {
+            name: "fraction",
+            help: "memory fraction per device",
+            takes_value: true,
+            default: Some("0.3"),
+        },
+    ];
+    let args = Args::parse(&specs)?;
+    let batch = args.get_usize("batch", 32)?;
+    let fraction = args.get_f64("fraction", 0.3)?;
+    let benchmark = Benchmark::InceptionV3 { batch };
+
+    let mut t = Table::new(
+        &format!("Inception-V3 bs{batch} at {:.0}% memory (4 GPUs)", fraction * 100.0),
+        &["placer", "placement time", "step time", "devices"],
+    );
+    let mut load_balance: Option<(String, Vec<u64>, u64)> = None;
+    for placer in [
+        PlacerKind::Single,
+        PlacerKind::Expert,
+        PlacerKind::MTopo,
+        PlacerKind::MEtf,
+        PlacerKind::MSct,
+    ] {
+        let cfg = BaechiConfig::paper_default(benchmark, placer).with_memory_fraction(fraction);
+        match run(&cfg) {
+            Ok(r) => {
+                t.row(&[
+                    r.placer.clone(),
+                    fmt_secs(r.placement_time),
+                    r.step_time().map(fmt_secs).unwrap_or_else(|| "OOM".into()),
+                    r.devices_used.to_string(),
+                ]);
+                if placer == PlacerKind::MSct && r.sim.ok() {
+                    load_balance = Some((r.placer, r.peak_memory, r.device_capacity));
+                }
+            }
+            Err(e) => {
+                t.row(&[
+                    placer.name().into(),
+                    "-".into(),
+                    format!("placement OOM ({e})"),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    // Fig. 7: memory load balance.
+    if let Some((name, peaks, cap)) = load_balance {
+        let mut t = Table::new(
+            &format!("Fig. 7 load balance ({name}) — bars normalized to the cap"),
+            &["device", "peak", "of cap", "bar"],
+        );
+        for (i, &p) in peaks.iter().enumerate() {
+            let frac = p as f64 / cap as f64;
+            t.row(&[
+                format!("gpu{i}"),
+                fmt_bytes(p),
+                format!("{:.0}%", frac * 100.0),
+                "█".repeat((frac * 40.0).round() as usize),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Quickstart: place the paper's two didactic graphs and reproduce the
+//! Figure-1 story — classical SCT (no memory awareness) OOMs on
+//! memory-capped devices while m-SCT succeeds with a slightly longer
+//! makespan.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use baechi::graph::DeviceId;
+use baechi::models::linreg::{fig1_graph, linreg_graph, FIG1_MEM_UNIT};
+use baechi::placer::{msct::MSct, Placer};
+use baechi::profile::{Cluster, CommModel};
+use baechi::sim::{simulate, SimConfig};
+use baechi::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    // ---- Figure 1: SCT vs m-SCT under a memory cap -------------------
+    let g = fig1_graph();
+    // Abstract units: 1 byte moves in 1 time-unit.
+    let unit_comm = CommModel::new(0.0, 1.0);
+
+    // "Classical SCT": memory-oblivious — place with effectively infinite
+    // memory, then *run* it on capped devices. The cap is 4 memory units
+    // plus a few bytes of transfer-buffer headroom (paper §4.2: "usually
+    // a device has at least a few bytes left").
+    let cap = 4 * FIG1_MEM_UNIT + 12;
+    let free_cluster = Cluster::homogeneous(3, 1_000_000 * FIG1_MEM_UNIT, unit_comm);
+    let capped_cluster = Cluster::homogeneous(3, cap, unit_comm);
+    let sct_placement = MSct::with_lp().place(&g, &free_cluster)?;
+    let sct_on_capped = simulate(&g, &capped_cluster, &sct_placement.device_of, SimConfig::default());
+
+    // m-SCT: memory-aware placement on the capped devices.
+    let msct_placement = MSct::with_lp().place(&g, &capped_cluster)?;
+    let msct_run = simulate(&g, &capped_cluster, &msct_placement.device_of, SimConfig::default());
+
+    let mut t = Table::new(
+        "Figure 1: classical SCT vs m-SCT (per-device memory = 4 units)",
+        &["schedule", "makespan", "outcome"],
+    );
+    t.row(&[
+        "SCT (memory-oblivious)".into(),
+        format!("{:.0}", sct_placement.predicted_makespan),
+        match &sct_on_capped.oom {
+            Some(o) => format!("OOM (gpu{})", o.device),
+            None => "fits (lucky layout)".into(),
+        },
+    ]);
+    t.row(&[
+        "m-SCT (memory-aware)".into(),
+        format!("{:.0}", msct_run.makespan),
+        "succeeds".into(),
+    ]);
+    t.print();
+    assert!(msct_run.ok(), "m-SCT must run within the cap");
+    for (i, &p) in msct_run.peak_memory.iter().enumerate() {
+        println!(
+            "  gpu{i} peak memory: {:.2} / 4 units",
+            p as f64 / FIG1_MEM_UNIT as f64
+        );
+        assert!(p <= cap);
+    }
+
+    // ---- Figure 2: the linear-regression working example --------------
+    println!();
+    let lr = linreg_graph();
+    let cluster = Cluster::homogeneous(2, 100, unit_comm);
+    let placement = MSct::with_lp().place(&lr, &cluster)?;
+    let mut t = Table::new(
+        "Figure 2: linear regression placed by m-SCT on 2 devices",
+        &["operator", "device"],
+    );
+    for n in lr.iter_nodes() {
+        t.row(&[n.name.clone(), placement.device(n.id).to_string()]);
+    }
+    t.print();
+    // TF colocation constraints hold:
+    for (grp, members) in lr.colocation_groups() {
+        let d0 = placement.device(members[0]);
+        for &m in &members[1..] {
+            assert_eq!(placement.device(m), d0, "group {grp} split");
+        }
+        println!("colocation group '{grp}' intact on {}", d0);
+    }
+    // DOT export for inspection.
+    let dot = lr.to_dot(Some(
+        &placement
+            .device_of
+            .iter()
+            .map(|(&k, &v)| (k, v))
+            .collect::<std::collections::BTreeMap<_, DeviceId>>(),
+    ));
+    std::fs::write("/tmp/baechi_linreg.dot", dot)?;
+    println!("wrote /tmp/baechi_linreg.dot");
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT lowering: JAX/Pallas → HLO **text** → artifacts/ + manifest.json.
+
+Run once via ``make artifacts``; the Rust runtime loads the HLO text with
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.attention import attention
+from .kernels.lstm_cell import lstm_cell
+from .kernels.matmul import matmul
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def exports():
+    """(name, fn, arg_specs, num_outputs) for every artifact."""
+    b = model.BATCH
+    out = []
+    # Per-layer forward/backward modules.
+    for li, (din, dout, relu) in enumerate(model.LAYER_DIMS):
+        fwd = functools.partial(model.layer_fwd, relu=relu)
+        bwd = functools.partial(model.layer_bwd, relu=relu)
+        out.append((f"layer{li}_fwd", fwd, [f32(b, din), f32(din, dout), f32(dout)], 1))
+        out.append(
+            (
+                f"layer{li}_bwd",
+                bwd,
+                [f32(b, din), f32(din, dout), f32(b, dout), f32(b, dout)],
+                3,
+            )
+        )
+    # Loss forward/backward.
+    c = model.CLASSES
+    out.append(("loss_fwd", model.loss_fwd, [f32(b, c), f32(b, c)], 2))
+    out.append(("loss_bwd", model.loss_bwd, [f32(b, c), f32(b, c)], 1))
+    # Fused oracle train step + prediction.
+    nparams = 2 * model.num_layers()
+    param_specs = []
+    for din, dout, _ in model.LAYER_DIMS:
+        param_specs += [f32(din, dout), f32(dout)]
+
+    def train_step_flat(*args):
+        params = list(args[:nparams])
+        x, onehot, lr = args[nparams], args[nparams + 1], args[nparams + 2]
+        return model.train_step(params, x, onehot, lr)
+
+    out.append(
+        (
+            "train_step",
+            train_step_flat,
+            param_specs + [f32(b, model.LAYER_DIMS[0][0]), f32(b, c), f32()],
+            1 + nparams,
+        )
+    )
+
+    def predict_flat(*args):
+        params = list(args[:nparams])
+        return model.predict(params, args[nparams])
+
+    out.append(
+        ("predict", predict_flat, param_specs + [f32(b, model.LAYER_DIMS[0][0])], 1)
+    )
+    # Standalone kernel demos (profiling + integration tests).
+    out.append(
+        ("kernel_matmul", lambda x, y: (matmul(x, y),), [f32(128, 128), f32(128, 128)], 1)
+    )
+    out.append(
+        (
+            "kernel_lstm_cell",
+            lambda x, h, cc, wx, wh, bb: lstm_cell(x, h, cc, wx, wh, bb),
+            [f32(64, 128), f32(64, 128), f32(64, 128), f32(128, 512), f32(128, 512), f32(512)],
+            2,
+        )
+    )
+    out.append(
+        (
+            "kernel_attention",
+            lambda q, k, v: (attention(q, k, v),),
+            [f32(64, 64), f32(64, 64), f32(64, 64)],
+            1,
+        )
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for name, fn, specs, num_outputs in exports():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest.append(
+            {
+                "name": name,
+                "file": fname,
+                "input_shapes": [list(s.shape) for s in specs],
+                "num_outputs": num_outputs,
+            }
+        )
+        print(f"  lowered {name}: {len(text)} chars, inputs={len(specs)}")
+
+    meta = {
+        "batch": model.BATCH,
+        "classes": model.CLASSES,
+        "layer_dims": [list(d) for d in model.LAYER_DIMS],
+        "artifacts": manifest,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Row-blocked scaled-dot-product attention Pallas kernel (Layer 1).
+
+The Transformer benchmark's hot-spot. The paper's PyTorch implementation
+treats attention as "one large matrix multiplication … a single module"
+(§5.1); on TPU we stream query row-blocks through VMEM against the full
+K/V for the sequence — a FlashAttention-style HBM↔VMEM schedule expressed
+with BlockSpec index maps instead of CUDA thread-blocks (DESIGN.md §3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    # q: [bl, D]; k, v: [L, D] — one query block vs the full sequence.
+    d = q_ref.shape[-1]
+    s = jnp.dot(q_ref[...], k_ref[...].T, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    # numerically-stable softmax in VMEM
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def attention(q, k, v, *, block_q=64):
+    """Single-head attention: q, k, v: f32[L, D] → f32[L, D]."""
+    l, d = q.shape
+    bq = min(block_q, l)
+    while l % bq != 0:
+        bq -= 1
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(l // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((l, d), lambda i: (0, 0)),
+            pl.BlockSpec((l, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,47 @@
+"""Fused LSTM cell Pallas kernel (Layer 1).
+
+The GNMT benchmark's hot-spot (paper §5.1). A TF-granularity LSTM cell is
+~25 kernel launches (two matmuls, bias adds, four activations, elementwise
+state updates); on TPU we fuse the whole cell so the 4H-wide gate block
+stays in VMEM between the MXU matmuls and the VPU elementwise tail —
+exactly the fusion Baechi's co-placement approximates at placement level.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out, c_out):
+    # gates: [B, 4H] resident in VMEM.
+    gates = (
+        jnp.dot(x_ref[...], wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h_ref[...], wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    hsize = h_ref.shape[1]
+    i = jax.nn.sigmoid(gates[:, 0 * hsize : 1 * hsize])
+    f = jax.nn.sigmoid(gates[:, 1 * hsize : 2 * hsize])
+    g = jnp.tanh(gates[:, 2 * hsize : 3 * hsize])
+    o = jax.nn.sigmoid(gates[:, 3 * hsize : 4 * hsize])
+    c_new = f * c_ref[...] + i * g
+    h_out[...] = o * jnp.tanh(c_new)
+    c_out[...] = c_new
+
+
+@jax.jit
+def lstm_cell(x, h, c, wx, wh, b):
+    """One fused LSTM step.
+
+    x: f32[B, I], h/c: f32[B, H], wx: f32[I, 4H], wh: f32[H, 4H],
+    b: f32[4H] → (h', c').
+    """
+    bsz, hidden = h.shape
+    return pl.pallas_call(
+        _lstm_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, hidden), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, hidden), jnp.float32),
+        ),
+        interpret=True,
+    )(x, h, c, wx, wh, b)

@@ -1,0 +1,76 @@
+"""Tiled Pallas matmul kernel (Layer 1).
+
+TPU-adapted (DESIGN.md §3): tiles are sized for the 128×128 MXU and the
+HBM↔VMEM schedule is expressed with a 3-D grid + BlockSpec index maps —
+the K dimension is innermost so each (i, j) output tile stays resident in
+VMEM while partial products accumulate (the Pallas revolving-buffer
+pattern), replacing the CUDA shared-memory tiling the paper's GPU
+operators rely on.
+
+Runs with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tile sizes; shrunk automatically for small dims.
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _tile(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ preferred (≥ 1)."""
+    t = min(preferred, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: accumulate x_tile @ y_tile into o_tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm=TILE_M, bn=TILE_N, bk=TILE_K):
+    """``x @ y`` via the tiled Pallas kernel.
+
+    x: f32[M, K], y: f32[K, N] → f32[M, N].
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    bm = _tile(m, bm)
+    bn = _tile(n, bn)
+    bk = _tile(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(m, n, k, bm=TILE_M, bn=TILE_N, bk=TILE_K):
+    """Estimated VMEM footprint of one grid step (perf analysis, §Perf)."""
+    bm, bn, bk = _tile(m, bm), _tile(n, bn), _tile(k, bk)
+    return 4 * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+pytest checks every kernel against (build-time gate for the AOT path)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def bias_act_ref(x, b, act="relu"):
+    z = x + b
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "gelu":
+        return 0.5 * z * (1.0 + jnp.tanh(0.7978845608 * (z + 0.044715 * z**3)))
+    return z
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    gates = x @ wx + h @ wh + b
+    hsize = h.shape[1]
+    i = jax.nn.sigmoid(gates[:, 0 * hsize : 1 * hsize])
+    f = jax.nn.sigmoid(gates[:, 1 * hsize : 2 * hsize])
+    g = jnp.tanh(gates[:, 2 * hsize : 3 * hsize])
+    o = jax.nn.sigmoid(gates[:, 3 * hsize : 4 * hsize])
+    c_new = f * c + i * g
+    return o * jnp.tanh(c_new), c_new
+
+
+def attention_ref(q, k, v):
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v

@@ -1,0 +1,132 @@
+"""Layer 2: the end-to-end MLP's forward/backward compute graph in JAX,
+built on the Layer-1 Pallas kernels.
+
+Layer shapes must match ``rust/src/models/mlp.rs`` (`MlpConfig::default`):
+batch 64, dims 64→128→128→64→10. Each layer's forward and backward are
+exported as separate AOT artifacts so the Rust multi-device executor can
+*place* them independently (forward/backward co-placement, paper §3.1.3);
+``train_step`` is the fused single-module oracle the distributed execution
+is validated against.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.elementwise import bias_act
+from .kernels.matmul import matmul
+
+BATCH = 64
+# (din, dout, relu?)
+LAYER_DIMS = [(64, 128, True), (128, 128, True), (128, 64, True), (64, 10, False)]
+CLASSES = 10
+
+
+def num_layers():
+    return len(LAYER_DIMS)
+
+
+def init_params(seed=0):
+    """He-initialized parameters, a flat list [w0, b0, w1, b1, ...]."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for din, dout, _ in LAYER_DIMS:
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (din, dout), jnp.float32) * jnp.sqrt(2.0 / din)
+        params += [w, jnp.zeros((dout,), jnp.float32)]
+    return params
+
+
+# --------------------------------------------------------------------------
+# Per-layer forward/backward (the placeable modules).
+# --------------------------------------------------------------------------
+
+
+def layer_fwd(x, w, b, *, relu):
+    """y = act(x @ w + b). Residuals for backward: (x, w, y)."""
+    z = matmul(x, w)
+    y = bias_act(z, b, act="relu" if relu else "none")
+    return (y,)
+
+
+def layer_bwd(x, w, y, dy, *, relu):
+    """Gradients given the forward residuals.
+
+    Returns (dx, dw, db). Uses `y > 0` for the ReLU mask (valid because
+    y = relu(z) ⇒ y > 0 ⇔ z > 0).
+    """
+    if relu:
+        dz = dy * (y > 0).astype(jnp.float32)
+    else:
+        # keep `y` in the lowered signature: the stablehlo→XLA conversion
+        # prunes unused parameters, which would desync the artifact arity
+        dz = dy + 0.0 * y
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    dx = matmul(dz, w.T)
+    return (dx, dw, db)
+
+
+def loss_fwd(logits, onehot):
+    """Softmax cross-entropy. Returns (loss, probs) — probs is the
+    backward residual."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    probs = jax.nn.softmax(logits, axis=-1)
+    return (loss, probs)
+
+
+def loss_bwd(probs, onehot):
+    """dlogits of the mean cross-entropy."""
+    bsz = probs.shape[0]
+    return ((probs - onehot) / bsz,)
+
+
+# --------------------------------------------------------------------------
+# Fused train step (oracle; also the single-device execution path).
+# --------------------------------------------------------------------------
+
+
+def forward_all(params, x):
+    """Forward pass returning activations [x, a1, ..., logits]."""
+    acts = [x]
+    for li, (_, _, relu) in enumerate(LAYER_DIMS):
+        (y,) = layer_fwd(acts[-1], params[2 * li], params[2 * li + 1], relu=relu)
+        acts.append(y)
+    return acts
+
+
+def train_step(params, x, onehot, lr):
+    """One SGD step. Returns (loss, *new_params)."""
+    acts = forward_all(params, x)
+    loss, probs = loss_fwd(acts[-1], onehot)
+    (dy,) = loss_bwd(probs, onehot)
+    new_params = list(params)
+    for li in reversed(range(len(LAYER_DIMS))):
+        _, _, relu = LAYER_DIMS[li]
+        dx, dw, db = layer_bwd(acts[li], params[2 * li], acts[li + 1], dy, relu=relu)
+        new_params[2 * li] = params[2 * li] - lr * dw
+        new_params[2 * li + 1] = params[2 * li + 1] - lr * db
+        dy = dx
+    return (loss, *new_params)
+
+
+def predict(params, x):
+    """Logits for evaluation."""
+    return (forward_all(params, x)[-1],)
+
+
+# --------------------------------------------------------------------------
+# Synthetic dataset (deterministic): a teacher projection labels random
+# inputs, giving the e2e example a learnable task with a real loss curve.
+# --------------------------------------------------------------------------
+
+
+def synthetic_batch(step, seed=1234):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    x = jax.random.normal(key, (BATCH, LAYER_DIMS[0][0]), jnp.float32)
+    teacher = jax.random.normal(
+        jax.random.PRNGKey(seed + 1), (LAYER_DIMS[0][0], CLASSES), jnp.float32
+    )
+    labels = jnp.argmax(x @ teacher, axis=-1)
+    onehot = jax.nn.one_hot(labels, CLASSES, dtype=jnp.float32)
+    return x, onehot

@@ -1,0 +1,59 @@
+"""AOT emission smoke tests: HLO text parses, manifest is consistent."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # run in-process for speed
+    old_argv = sys.argv
+    sys.argv = ["aot", "--out", str(out)]
+    try:
+        aot.main()
+    finally:
+        sys.argv = old_argv
+    return out
+
+
+def test_manifest_complete(artifacts):
+    meta = json.loads((artifacts / "manifest.json").read_text())
+    names = {a["name"] for a in meta["artifacts"]}
+    for li in range(model.num_layers()):
+        assert f"layer{li}_fwd" in names
+        assert f"layer{li}_bwd" in names
+    for required in ["loss_fwd", "loss_bwd", "train_step", "predict",
+                     "kernel_matmul", "kernel_lstm_cell", "kernel_attention"]:
+        assert required in names
+    assert meta["batch"] == model.BATCH
+
+
+def test_hlo_text_is_parseable_hlo(artifacts):
+    meta = json.loads((artifacts / "manifest.json").read_text())
+    for a in meta["artifacts"]:
+        text = (artifacts / a["file"]).read_text()
+        assert "HloModule" in text, a["name"]
+        assert "ENTRY" in text, a["name"]
+
+
+def test_shapes_recorded(artifacts):
+    meta = json.loads((artifacts / "manifest.json").read_text())
+    by_name = {a["name"]: a for a in meta["artifacts"]}
+    l0 = by_name["layer0_fwd"]
+    din, dout, _ = model.LAYER_DIMS[0]
+    assert l0["input_shapes"] == [[model.BATCH, din], [din, dout], [dout]]
+    assert by_name["layer0_bwd"]["num_outputs"] == 3
+    assert by_name["train_step"]["num_outputs"] == 1 + 2 * model.num_layers()
+
+
+def test_pallas_lowered_to_plain_hlo(artifacts):
+    # interpret=True must not leave custom-calls the CPU client can't run
+    text = (artifacts / "kernel_matmul.hlo.txt").read_text()
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()

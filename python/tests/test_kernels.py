@@ -1,0 +1,132 @@
+"""Layer-1 correctness: every Pallas kernel against its pure-jnp oracle,
+swept over shapes/configs with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.elementwise import bias_act
+from compile.kernels.lstm_cell import lstm_cell
+from compile.kernels.matmul import matmul, vmem_bytes
+from compile.kernels import ref
+
+DIMS = [1, 2, 3, 4, 8, 16, 24, 32, 64, 96, 128, 160, 256]
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from(DIMS),
+        k=st.sampled_from(DIMS),
+        n=st.sampled_from(DIMS),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, m, k, n, seed):
+        x = rand(seed, m, k)
+        y = rand(seed + 1, k, n)
+        got = matmul(x, y)
+        want = ref.matmul_ref(x, y)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bm=st.sampled_from([16, 32, 128]),
+        bn=st.sampled_from([16, 64, 128]),
+        bk=st.sampled_from([16, 32, 128]),
+    )
+    def test_tile_shapes_equivalent(self, bm, bn, bk):
+        x = rand(7, 64, 96)
+        y = rand(8, 96, 32)
+        got = matmul(x, y, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_vmem_estimate_under_budget(self):
+        # Default tiles must fit a 16 MiB VMEM with generous headroom.
+        assert vmem_bytes(4096, 4096, 4096) < 4 << 20
+
+    def test_rejects_mismatched_inner(self):
+        with pytest.raises(AssertionError):
+            matmul(rand(0, 4, 5), rand(1, 6, 4))
+
+
+class TestBiasAct:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from(DIMS),
+        n=st.sampled_from(DIMS),
+        act=st.sampled_from(["relu", "gelu", "none"]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, m, n, act, seed):
+        x = rand(seed, m, n)
+        b = rand(seed + 1, n)
+        got = bias_act(x, b, act=act)
+        want = ref.bias_act_ref(x, b, act)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_relu_clamps(self):
+        x = jnp.array([[-1.0, 2.0]], jnp.float32)
+        b = jnp.zeros((2,), jnp.float32)
+        out = np.asarray(bias_act(x, b, act="relu"))
+        assert out[0, 0] == 0.0 and out[0, 1] == 2.0
+
+
+class TestLstmCell:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        bsz=st.sampled_from([1, 4, 16, 64]),
+        inp=st.sampled_from([8, 32, 128]),
+        hid=st.sampled_from([8, 64, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, bsz, inp, hid, seed):
+        x = rand(seed, bsz, inp)
+        h = rand(seed + 1, bsz, hid)
+        c = rand(seed + 2, bsz, hid)
+        wx = rand(seed + 3, inp, 4 * hid) * 0.1
+        wh = rand(seed + 4, hid, 4 * hid) * 0.1
+        b = rand(seed + 5, 4 * hid) * 0.1
+        h2, c2 = lstm_cell(x, h, c, wx, wh, b)
+        hr, cr = ref.lstm_cell_ref(x, h, c, wx, wh, b)
+        np.testing.assert_allclose(h2, hr, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(c2, cr, rtol=1e-4, atol=1e-5)
+
+    def test_state_bounded(self):
+        # h' = o·tanh(c') ∈ (-1, 1)
+        h2, _ = lstm_cell(
+            rand(0, 8, 16), rand(1, 8, 32), rand(2, 8, 32),
+            rand(3, 16, 128), rand(4, 32, 128), rand(5, 128),
+        )
+        assert np.all(np.abs(np.asarray(h2)) < 1.0)
+
+
+class TestAttention:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        l=st.sampled_from([4, 16, 50, 64, 128]),
+        d=st.sampled_from([8, 16, 64]),
+        bq=st.sampled_from([8, 16, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, l, d, bq, seed):
+        q = rand(seed, l, d)
+        k = rand(seed + 1, l, d)
+        v = rand(seed + 2, l, d)
+        got = attention(q, k, v, block_q=bq)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_rows_are_convex_combinations(self):
+        # attention output rows lie within [min(v), max(v)] per column
+        v = rand(3, 16, 8)
+        out = np.asarray(attention(rand(1, 16, 8), rand(2, 16, 8), v))
+        v = np.asarray(v)
+        assert np.all(out <= v.max(axis=0) + 1e-5)
+        assert np.all(out >= v.min(axis=0) - 1e-5)

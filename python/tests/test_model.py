@@ -1,0 +1,101 @@
+"""Layer-2 correctness: per-layer backward against jax.vjp, loss gradient
+against jax.grad, and the fused train step actually learns."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def test_layer_bwd_matches_vjp():
+    for li, (din, dout, relu) in enumerate(model.LAYER_DIMS):
+        key = jax.random.PRNGKey(li)
+        kx, kw, kb, kd = jax.random.split(key, 4)
+        x = jax.random.normal(kx, (model.BATCH, din), jnp.float32)
+        w = jax.random.normal(kw, (din, dout), jnp.float32) * 0.3
+        b = jax.random.normal(kb, (dout,), jnp.float32) * 0.1
+        dy = jax.random.normal(kd, (model.BATCH, dout), jnp.float32)
+
+        # jax.vjp cannot trace through the interpret-mode Pallas
+        # accumulation kernel, so take the VJP of the jnp reference
+        # forward — the kernel tests already pin pallas == ref.
+        def ref_fwd(x, w, b):
+            z = x @ w + b
+            return jnp.maximum(z, 0.0) if relu else z
+
+        y_ref, vjp = jax.vjp(ref_fwd, x, w, b)
+        dx_ref, dw_ref, db_ref = vjp(dy)
+        (y,) = model.layer_fwd(x, w, b, relu=relu)
+        np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+        dx, dw, db = model.layer_bwd(x, w, y, dy, relu=relu)
+        np.testing.assert_allclose(dx, dx_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(dw, dw_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(db, db_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_loss_bwd_matches_grad():
+    key = jax.random.PRNGKey(9)
+    logits = jax.random.normal(key, (model.BATCH, model.CLASSES), jnp.float32)
+    labels = jax.random.randint(key, (model.BATCH,), 0, model.CLASSES)
+    onehot = jax.nn.one_hot(labels, model.CLASSES, dtype=jnp.float32)
+
+    loss_of = lambda lg: model.loss_fwd(lg, onehot)[0]
+    dl_ref = jax.grad(loss_of)(logits)
+    _, probs = model.loss_fwd(logits, onehot)
+    (dl,) = model.loss_bwd(probs, onehot)
+    np.testing.assert_allclose(dl, dl_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_train_step_decreases_loss():
+    params = model.init_params(seed=0)
+    x, onehot = model.synthetic_batch(0)
+    lr = jnp.float32(0.1)
+    losses = []
+    for step in range(30):
+        x, onehot = model.synthetic_batch(step % 4)  # small cycling set
+        out = model.train_step(params, x, onehot, lr)
+        losses.append(float(out[0]))
+        params = list(out[1:])
+    assert losses[-1] < losses[0] * 0.7, f"no learning: {losses[0]} -> {losses[-1]}"
+
+
+def test_train_step_matches_manual_composition():
+    """The fused step equals composing the per-layer artifacts — the same
+    equivalence the Rust distributed executor relies on."""
+    params = model.init_params(seed=3)
+    x, onehot = model.synthetic_batch(17)
+    lr = jnp.float32(0.05)
+    fused = model.train_step(params, x, onehot, lr)
+
+    # manual composition
+    acts = [x]
+    for li, (_, _, relu) in enumerate(model.LAYER_DIMS):
+        (y,) = model.layer_fwd(acts[-1], params[2 * li], params[2 * li + 1], relu=relu)
+        acts.append(y)
+    loss, probs = model.loss_fwd(acts[-1], onehot)
+    (dy,) = model.loss_bwd(probs, onehot)
+    new_params = list(params)
+    for li in reversed(range(model.num_layers())):
+        _, _, relu = model.LAYER_DIMS[li]
+        dx, dw, db = model.layer_bwd(
+            acts[li], params[2 * li], acts[li + 1], dy, relu=relu
+        )
+        new_params[2 * li] = params[2 * li] - lr * dw
+        new_params[2 * li + 1] = params[2 * li + 1] - lr * db
+        dy = dx
+
+    np.testing.assert_allclose(float(fused[0]), float(loss), rtol=1e-6)
+    for a, b in zip(fused[1:], new_params):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_synthetic_batch_deterministic():
+    x1, o1 = model.synthetic_batch(5)
+    x2, o2 = model.synthetic_batch(5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(o1, o2)
+    assert o1.shape == (model.BATCH, model.CLASSES)
+    np.testing.assert_allclose(np.asarray(o1).sum(axis=1), 1.0)

@@ -1,0 +1,49 @@
+//! Paper Figure 7: per-GPU peak memory usage under m-SCT, normalized to
+//! the (fractional) memory limit. Expected shape: Inception leans on a
+//! subset of GPUs (barriers limit parallelism); GNMT/Transformer are
+//! spread more evenly.
+
+use baechi::coordinator::{run, BaechiConfig, PlacerKind};
+use baechi::models::Benchmark;
+use baechi::util::table::{fmt_bytes, Table};
+
+fn main() {
+    let rows = [
+        (Benchmark::InceptionV3 { batch: 32 }, 0.3),
+        (
+            Benchmark::Gnmt {
+                batch: 128,
+                seq_len: 40,
+            },
+            0.3,
+        ),
+        (Benchmark::Transformer { batch: 64 }, 0.3),
+    ];
+
+    for (b, fraction) in rows {
+        let cfg = BaechiConfig::paper_default(b, PlacerKind::MSct).with_memory_fraction(fraction);
+        let r = run(&cfg).expect("pipeline");
+        let mut t = Table::new(
+            &format!(
+                "Fig. 7 — m-SCT peak memory, {} at {:.0}% cap ({} per GPU)",
+                b.name(),
+                fraction * 100.0,
+                fmt_bytes(r.device_capacity)
+            ),
+            &["device", "peak", "normalized", "bar"],
+        );
+        for (i, &p) in r.peak_memory.iter().enumerate() {
+            let frac = p as f64 / r.device_capacity as f64;
+            t.row(&[
+                format!("gpu{i}"),
+                fmt_bytes(p),
+                format!("{frac:.2}"),
+                "█".repeat((frac * 40.0).round() as usize),
+            ]);
+        }
+        t.print();
+        if let Some(oom) = &r.sim.oom {
+            println!("  note: {oom}");
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Paper Figure 8: sensitivity to profiling errors — perturb every
+//! compute/communication profile by up to ±20 %, place from the
+//! *unperturbed* profile, and measure the perturbed step time relative
+//! to the unperturbed one. Expected shape: ratios within ~0.97–1.3×
+//! (m-SCT/m-ETF are resilient to profile noise).
+
+use baechi::coordinator::{BaechiConfig, PlacerKind};
+use baechi::models::Benchmark;
+use baechi::optimizer::{expand_placement, optimize};
+use baechi::profile::perturb::perturb_graph;
+use baechi::sim::{simulate, SimConfig};
+use baechi::util::rng::Pcg;
+use baechi::util::stats::Summary;
+use baechi::util::table::Table;
+
+fn main() {
+    let rows = [
+        (Benchmark::InceptionV3 { batch: 32 }, 1.0),
+        (Benchmark::InceptionV3 { batch: 32 }, 0.3),
+        (
+            Benchmark::Gnmt {
+                batch: 128,
+                seq_len: 40,
+            },
+            1.0,
+        ),
+        (Benchmark::Transformer { batch: 64 }, 1.0),
+    ];
+    const TRIALS: usize = 10;
+
+    let mut t = Table::new(
+        "Fig. 8 — step-time ratio under ±20% profile perturbation",
+        &[
+            "model (fraction)",
+            "placer",
+            "base step",
+            "mean ratio",
+            "min",
+            "max",
+        ],
+    );
+    for (b, fraction) in rows {
+        for placer in [PlacerKind::MEtf, PlacerKind::MSct] {
+            let cfg = BaechiConfig::paper_default(b, placer).with_memory_fraction(fraction);
+            let graph = b.graph();
+            let cluster = cfg.cluster();
+            let opt = optimize(&graph, &cfg.opt);
+            let p = placer
+                .build(b)
+                .place(&opt.graph, &cluster)
+                .expect("placement");
+            let full = expand_placement(&graph, &opt, &p.device_of);
+            let base = simulate(&graph, &cluster, &full, cfg.sim);
+            assert!(base.ok(), "base run OOM");
+
+            let mut rng = Pcg::seed(0xf18 + fraction.to_bits());
+            let ratios: Vec<f64> = (0..TRIALS)
+                .map(|_| {
+                    let pg = perturb_graph(&graph, 0.2, &mut rng);
+                    let r = simulate(&pg, &cluster, &full, cfg.sim);
+                    assert!(r.ok(), "perturbed run OOM");
+                    r.makespan / base.makespan
+                })
+                .collect();
+            let s = Summary::of(&ratios);
+            t.row(&[
+                format!("{} ({fraction})", b.name()),
+                placer.name().to_string(),
+                format!("{:.3}", base.makespan),
+                format!("{:.3}", s.mean),
+                format!("{:.3}", s.min),
+                format!("{:.3}", s.max),
+            ]);
+        }
+    }
+    t.print();
+    println!("paper: ratios 0.99–1.3 (TF) and 0.97–1.08 (PyTorch).");
+}
+
+trait FractionBits {
+    fn to_bits(&self) -> u64;
+}
+impl FractionBits for f64 {
+    fn to_bits(&self) -> u64 {
+        f64::to_bits(*self)
+    }
+}

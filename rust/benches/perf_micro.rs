@@ -1,0 +1,87 @@
+//! Micro-benchmarks of the hot paths (§Perf): graph generation,
+//! optimizer, each placer, ES throughput, LP solve, and the PJRT
+//! kernel-execution path. These are the before/after numbers for the
+//! EXPERIMENTS.md §Perf iteration log.
+
+use baechi::models::Benchmark;
+use baechi::optimizer::{optimize, OptConfig};
+use baechi::placer::{metf::MEtf, msct::MSct, mtopo::MTopo, Placer};
+use baechi::profile::{Cluster, CommModel};
+use baechi::sim::{simulate, SimConfig};
+use baechi::util::bench::Bench;
+use std::time::Duration;
+
+fn main() {
+    let mut bench = Bench::new("perf_micro")
+        .budget(Duration::from_millis(200), Duration::from_millis(1500))
+        .iters(3, 50);
+
+    // Graph generation.
+    bench.run("gen/gnmt:128:40", || {
+        Benchmark::Gnmt {
+            batch: 128,
+            seq_len: 40,
+        }
+        .graph()
+    });
+    bench.run("gen/inception:32", || {
+        Benchmark::InceptionV3 { batch: 32 }.graph()
+    });
+
+    // Optimizer.
+    let gnmt = Benchmark::Gnmt {
+        batch: 128,
+        seq_len: 40,
+    }
+    .graph();
+    bench.run("optimize/gnmt", || optimize(&gnmt, &OptConfig::default()));
+
+    // Placers on the fused graph.
+    let opt = optimize(&gnmt, &OptConfig::default());
+    let cluster = Cluster::homogeneous(4, 8 << 30, CommModel::pcie_via_host());
+    bench.run("place/m-topo/gnmt-fused", || {
+        MTopo.place(&opt.graph, &cluster).unwrap()
+    });
+    bench.run("place/m-etf/gnmt-fused", || {
+        MEtf.place(&opt.graph, &cluster).unwrap()
+    });
+    bench.run("place/m-sct/gnmt-fused", || {
+        MSct::default().place(&opt.graph, &cluster).unwrap()
+    });
+    // m-ETF on the raw 18k-op graph (placement-scalability hot path).
+    bench.run("place/m-etf/gnmt-raw-18k", || {
+        MEtf.place(&gnmt, &cluster).unwrap()
+    });
+
+    // ES throughput on the raw graph.
+    let placement = MEtf.place(&gnmt, &cluster).unwrap();
+    let m = bench.run("sim/gnmt-raw-18k", || {
+        simulate(&gnmt, &cluster, &placement.device_of, SimConfig::default())
+    });
+    let events = simulate(&gnmt, &cluster, &placement.device_of, SimConfig::default()).events;
+    let evps = events as f64 / m.summary.p50;
+    println!("ES throughput: {events} events in {:.1} ms → {:.2} M events/s", m.summary.p50 * 1e3, evps / 1e6);
+
+    // LP on the fused transformer.
+    let tf = Benchmark::Transformer { batch: 64 }.graph();
+    let tf_opt = optimize(&tf, &OptConfig::default());
+    let comm = CommModel::pcie_via_host();
+    bench.run("lp/sct-favorites/transformer-fused", || {
+        baechi::lp::sct::lp_favorites(&tf_opt.graph, &comm).unwrap()
+    });
+
+    // PJRT kernel execution (requires artifacts).
+    let dir = baechi::runtime::artifact::ArtifactRegistry::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = baechi::runtime::Runtime::cpu().unwrap();
+        let reg = baechi::runtime::artifact::ArtifactRegistry::open(rt, &dir).unwrap();
+        let exec = reg.load("kernel_matmul").unwrap();
+        let x = baechi::runtime::artifact::literal_f32(&vec![1.0; 128 * 128], &[128, 128]).unwrap();
+        let y = baechi::runtime::artifact::literal_f32(&vec![0.5; 128 * 128], &[128, 128]).unwrap();
+        bench.run("pjrt/kernel_matmul-128", || exec.run(&[x.clone(), y.clone()]).unwrap());
+    } else {
+        eprintln!("(skipping pjrt benches: run `make artifacts`)");
+    }
+
+    bench.finish();
+}

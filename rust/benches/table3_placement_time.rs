@@ -1,0 +1,87 @@
+//! Paper Table 3: time to generate a placement for the 4-GPU target —
+//! Baechi's algorithmic placers (measured) vs the learning-based
+//! baseline (RL episodes × per-episode step-evaluation cost, the
+//! normalized metric the paper uses for HierarchicalRL/Placeto).
+//!
+//! Expected shape: Baechi in milliseconds-to-seconds; learning-based
+//! placement orders of magnitude slower because every sample requires a
+//! full step execution on the target cluster.
+
+use baechi::baselines::rl::{RlConfig, RlPlacer};
+use baechi::coordinator::{run, BaechiConfig, PlacerKind};
+use baechi::models::Benchmark;
+use baechi::optimizer::{optimize, OptConfig};
+use baechi::util::table::{fmt_secs, Table};
+
+fn main() {
+    let benchmarks = [
+        Benchmark::InceptionV3 { batch: 32 },
+        Benchmark::Gnmt {
+            batch: 128,
+            seq_len: 40,
+        },
+        Benchmark::Gnmt {
+            batch: 128,
+            seq_len: 50,
+        },
+        Benchmark::Transformer { batch: 64 },
+    ];
+    // The real RL systems run 35 800 (HierarchicalRL) – 94 000 (Placeto)
+    // samples; we run a small fleet and extrapolate linearly, exactly
+    // like the paper normalizes the published numbers.
+    const MEASURED_EPISODES: usize = 50;
+    const PAPER_SAMPLES: f64 = 35_800.0;
+
+    let mut t = Table::new(
+        "Table 3 — placement generation time (4 devices)",
+        &[
+            "model",
+            "m-topo",
+            "m-etf",
+            "m-sct",
+            "rl (50 episodes, measured)",
+            "rl @35.8k samples (projected)",
+            "speedup m-sct vs rl",
+        ],
+    );
+
+    for b in benchmarks {
+        let mut row = vec![b.name()];
+        let mut msct_time = f64::NAN;
+        for placer in [PlacerKind::MTopo, PlacerKind::MEtf, PlacerKind::MSct] {
+            let cfg = BaechiConfig::paper_default(b, placer);
+            let r = run(&cfg).expect("placement");
+            // Placement time = algorithm + the optimizer pass it needs.
+            row.push(fmt_secs(r.placement_time));
+            if placer == PlacerKind::MSct {
+                msct_time = r.placement_time;
+            }
+        }
+        // RL baseline on the optimized graph (sane action space).
+        let cfg = BaechiConfig::paper_default(b, PlacerKind::MEtf);
+        let g = b.graph();
+        let opt = optimize(&g, &OptConfig::default());
+        let cluster = cfg.cluster();
+        let t0 = std::time::Instant::now();
+        let rl = RlPlacer::new(RlConfig {
+            episodes: MEASURED_EPISODES,
+            ..Default::default()
+        });
+        let (_, stats) = rl.place_with_stats(&opt.graph, &cluster).expect("rl");
+        let measured = t0.elapsed().as_secs_f64();
+        // Projection: what a *real* learning placer pays — each sample
+        // executes a step on the cluster (simulated step time total),
+        // scaled to the paper's sample count.
+        let per_sample_real = stats.simulated_step_time_total / MEASURED_EPISODES as f64;
+        let projected = PAPER_SAMPLES * (per_sample_real + measured / MEASURED_EPISODES as f64);
+        row.push(fmt_secs(measured));
+        row.push(fmt_secs(projected));
+        row.push(format!("{:.0}×", projected / msct_time));
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "paper: Inception 1.8–11.8 h (RL) vs 1–10 s (Baechi); GNMT 1.9–2.9 days vs ≤48 s;\n\
+         shape check = Baechi orders of magnitude faster."
+    );
+}

@@ -1,0 +1,151 @@
+//! Expert placements (paper §5.3).
+//!
+//! * **GNMT** — Wu et al. [77]: each encoder/decoder LSTM layer on its
+//!   own GPU (round-robin when layers > GPUs); embeddings with the first
+//!   layer; attention and the output projection with the last decoder
+//!   layer.
+//! * **Transformer** — common practice [21]: encoder stack on one device,
+//!   decoder stack + generator on another.
+//! * **Inception-V3 / MLP / linreg** — single GPU (the paper's expert for
+//!   Inception-V3 is the single-GPU placement, following
+//!   HierarchicalRL).
+//!
+//! Assignment is by module-name prefix, so it works both on original and
+//! on fused graphs (fused meta-nodes keep a member's name).
+
+use super::place_fixed;
+use crate::graph::{DeviceId, NodeId, OpGraph};
+use crate::models::Benchmark;
+use crate::placer::{Placement, Placer};
+use crate::profile::Cluster;
+
+/// The per-benchmark expert placer.
+#[derive(Debug, Clone, Copy)]
+pub struct Expert {
+    pub benchmark: Benchmark,
+}
+
+impl Expert {
+    pub fn new(benchmark: Benchmark) -> Expert {
+        Expert { benchmark }
+    }
+
+    fn assign(&self, graph: &OpGraph, id: NodeId, n: usize) -> DeviceId {
+        let name = &graph.node(id).name;
+        match self.benchmark {
+            Benchmark::Gnmt { .. } => gnmt_expert(name, n),
+            Benchmark::Transformer { .. } => transformer_expert(name, n),
+            _ => DeviceId(0),
+        }
+    }
+}
+
+/// Extract the layer index from a module path like `enc/l2/t7/fwd0`.
+fn layer_of(name: &str, stage: &str) -> Option<usize> {
+    let rest = name.strip_prefix(stage)?.strip_prefix("/l")?;
+    let end = rest.find(['/', ':']).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn gnmt_expert(name: &str, n: usize) -> DeviceId {
+    // 4 enc + 4 dec layers on 4 GPUs: enc l → GPU l%n, dec l → GPU l%n
+    // (the paper's expert splits enc and dec across all GPUs).
+    if name.starts_with("enc_embed") {
+        return DeviceId(0);
+    }
+    if name.starts_with("dec_embed") {
+        return DeviceId(0);
+    }
+    if let Some(l) = layer_of(name, "enc") {
+        return DeviceId(l % n);
+    }
+    if let Some(l) = layer_of(name, "dec") {
+        return DeviceId(l % n);
+    }
+    // attention, projection, loss: with the last decoder layer
+    DeviceId((n - 1).min(3))
+}
+
+fn transformer_expert(name: &str, n: usize) -> DeviceId {
+    let dec_dev = DeviceId(1 % n);
+    if name.starts_with("enc") {
+        DeviceId(0)
+    } else if name.starts_with("dec")
+        || name.starts_with("generator")
+        || name.starts_with("loss")
+        || name.starts_with("tgt")
+    {
+        dec_dev
+    } else {
+        DeviceId(0)
+    }
+}
+
+impl Placer for Expert {
+    fn name(&self) -> String {
+        format!("expert({})", self.benchmark.name())
+    }
+
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement> {
+        place_fixed(&self.name(), graph, cluster, |id| {
+            self.assign(graph, id, cluster.n())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::CommModel;
+
+    #[test]
+    fn transformer_split_enc_dec() {
+        let b = Benchmark::Transformer { batch: 8 };
+        let g = b.graph();
+        let cluster = Cluster::homogeneous(4, 64 << 30, CommModel::pcie_via_host());
+        let p = Expert::new(b).place(&g, &cluster).unwrap();
+        assert_eq!(p.devices_used(), 2);
+        // encoder ops all on device 0
+        for nd in g.iter_nodes() {
+            if nd.name.starts_with("enc0/") {
+                assert_eq!(p.device(nd.id), DeviceId(0), "{}", nd.name);
+            }
+            if nd.name.starts_with("dec3/") {
+                assert_eq!(p.device(nd.id), DeviceId(1), "{}", nd.name);
+            }
+        }
+    }
+
+    #[test]
+    fn gnmt_layers_round_robin() {
+        let b = Benchmark::Gnmt {
+            batch: 32,
+            seq_len: 6,
+        };
+        let g = b.graph();
+        let cluster = Cluster::homogeneous(4, 64 << 30, CommModel::pcie_via_host());
+        let p = Expert::new(b).place(&g, &cluster).unwrap();
+        assert_eq!(p.devices_used(), 4);
+        for nd in g.iter_nodes() {
+            if nd.name.starts_with("enc/l2/") {
+                assert_eq!(p.device(nd.id), DeviceId(2), "{}", nd.name);
+            }
+        }
+    }
+
+    #[test]
+    fn inception_expert_is_single_gpu() {
+        let b = Benchmark::Mlp; // same single-GPU path as inception
+        let g = b.graph();
+        let cluster = Cluster::homogeneous(4, 64 << 30, CommModel::pcie_via_host());
+        let p = Expert::new(b).place(&g, &cluster).unwrap();
+        assert_eq!(p.devices_used(), 1);
+    }
+
+    #[test]
+    fn layer_parse() {
+        assert_eq!(layer_of("enc/l3/t5/fwd0", "enc"), Some(3));
+        assert_eq!(layer_of("dec/l0/t1/bwd2", "dec"), Some(0));
+        assert_eq!(layer_of("proj/fwd0", "enc"), None);
+    }
+}

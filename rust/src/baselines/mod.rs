@@ -1,0 +1,59 @@
+//! Baseline placers (paper §5): single-device, the per-model expert
+//! placements, and a REINFORCE-style learning-based placer standing in
+//! for HierarchicalRL/Placeto in the Table-3 comparison (DESIGN.md §2).
+
+pub mod expert;
+pub mod rl;
+pub mod single;
+
+use crate::graph::{DeviceId, NodeId, OpGraph};
+use crate::placer::sched::SchedState;
+use crate::placer::Placement;
+use crate::profile::Cluster;
+
+/// Replay a fixed assignment through the placement scheduler to obtain a
+/// `Placement` with a predicted makespan.
+///
+/// Baseline assignments are *not* memory-checked at placement time — the
+/// paper's single-GPU and expert placements fail at runtime (in the ES),
+/// not at placement time. The ledger runs against an uncapped cluster so
+/// `commit` cannot reject; OOM is the simulator's verdict (Table 5).
+pub(crate) fn place_fixed(
+    name: &str,
+    graph: &OpGraph,
+    cluster: &Cluster,
+    assign: impl Fn(NodeId) -> DeviceId,
+) -> anyhow::Result<Placement> {
+    let t0 = std::time::Instant::now();
+    let mut uncapped = cluster.clone();
+    for d in &mut uncapped.devices {
+        d.memory = u64::MAX / 4;
+    }
+    let mut st = SchedState::new(graph, &uncapped);
+    let order = graph
+        .topo_order()
+        .ok_or(crate::placer::PlaceError::Cyclic)?;
+    for id in order {
+        // TF colocation constraints (§3.1.1) override the assignment:
+        // once a group member lands somewhere, the rest follow.
+        let dev = st.ledger.pinned_device(graph, id).unwrap_or_else(|| assign(id));
+        anyhow::ensure!(dev.0 < cluster.n(), "device {dev} out of range");
+        st.commit(id, dev);
+    }
+    crate::placer::finish_placement(name, graph, st, t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::CommModel;
+
+    #[test]
+    fn place_fixed_roundrobin() {
+        let g = crate::models::linreg::linreg_graph();
+        let cluster = Cluster::homogeneous(2, 10, CommModel::new(0.0, 1.0));
+        let p = place_fixed("rr", &g, &cluster, |id| DeviceId(id.0 % 2)).unwrap();
+        assert_eq!(p.device_of.len(), g.len());
+        assert!(p.predicted_makespan > 0.0);
+    }
+}

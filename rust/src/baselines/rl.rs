@@ -1,0 +1,209 @@
+//! REINFORCE-style learning-based placer — the Table-3 comparator.
+//!
+//! HierarchicalRL [50] and Placeto [2] are unavailable (proprietary /
+//! incomplete); per the substitution rule we build a policy-gradient
+//! placer with the same cost structure: a categorical policy per
+//! operator group samples a placement, the placement is *evaluated by
+//! executing a training step* (here: the ES — in the real systems, a
+//! run on the physical cluster), and the makespan reward updates the
+//! policy. Placement cost therefore scales as
+//! `episodes × step-evaluation-time`, which is what makes learning-based
+//! placement take hours-to-days on real graphs (paper §5.2).
+
+use crate::graph::{DeviceId, NodeId, OpGraph};
+use crate::placer::{Placement, Placer};
+use crate::profile::Cluster;
+use crate::sim::{simulate, SimConfig};
+use crate::util::rng::Pcg;
+use std::collections::BTreeMap;
+
+/// Policy-gradient placer configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RlConfig {
+    pub episodes: usize,
+    pub lr: f64,
+    pub seed: u64,
+    /// Penalty multiplier for OOM placements.
+    pub oom_penalty: f64,
+}
+
+impl Default for RlConfig {
+    fn default() -> RlConfig {
+        RlConfig {
+            episodes: 200,
+            lr: 0.5,
+            seed: 7,
+            oom_penalty: 10.0,
+        }
+    }
+}
+
+/// The learning-based placer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RlPlacer {
+    pub cfg: RlConfig,
+}
+
+/// Outcome statistics beyond the placement itself.
+#[derive(Debug, Clone)]
+pub struct RlStats {
+    pub episodes: usize,
+    pub best_makespan: f64,
+    pub first_makespan: f64,
+    /// Total simulated step-evaluation time — the cost a *real*
+    /// learning-based placer pays in wall-clock on the target cluster
+    /// (Table 3's normalized metric: samples × step time).
+    pub simulated_step_time_total: f64,
+}
+
+impl RlPlacer {
+    pub fn new(cfg: RlConfig) -> RlPlacer {
+        RlPlacer { cfg }
+    }
+
+    /// Run the policy-gradient search, returning placement + stats.
+    pub fn place_with_stats(
+        &self,
+        graph: &OpGraph,
+        cluster: &Cluster,
+    ) -> anyhow::Result<(Placement, RlStats)> {
+        let t0 = std::time::Instant::now();
+        let n = cluster.n();
+        let ids: Vec<NodeId> = graph.node_ids().collect();
+        let idx_of: BTreeMap<NodeId, usize> =
+            ids.iter().enumerate().map(|(k, &v)| (v, k)).collect();
+        let mut rng = Pcg::seed(self.cfg.seed);
+        // Logits per op × device.
+        let mut logits = vec![vec![0.0f64; n]; ids.len()];
+        let mut baseline: Option<f64> = None;
+        let mut best: Option<(f64, Vec<usize>)> = None;
+        let mut first_makespan = f64::NAN;
+        let mut sim_time_total = 0.0;
+
+        for _ep in 0..self.cfg.episodes {
+            // Sample a placement from the softmax policy.
+            let mut choice = vec![0usize; ids.len()];
+            for (k, l) in logits.iter().enumerate() {
+                let mx = l.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let ws: Vec<f64> = l.iter().map(|v| (v - mx).exp()).collect();
+                choice[k] = rng.weighted(&ws);
+            }
+            let placement: BTreeMap<NodeId, DeviceId> = ids
+                .iter()
+                .enumerate()
+                .map(|(k, &id)| (id, DeviceId(choice[k])))
+                .collect();
+            // Evaluate: one simulated training step.
+            let r = simulate(graph, cluster, &placement, SimConfig::default());
+            let cost = if r.ok() {
+                sim_time_total += r.makespan;
+                r.makespan
+            } else {
+                sim_time_total += r.makespan; // partial step before OOM
+                // strongly discourage OOM
+                (r.makespan + graph.total_compute()) * self.cfg.oom_penalty
+            };
+            if first_makespan.is_nan() {
+                first_makespan = cost;
+            }
+            if best.as_ref().map(|(b, _)| cost < *b).unwrap_or(r.ok()) && r.ok() {
+                best = Some((cost, choice.clone()));
+            }
+            // REINFORCE with moving-average baseline.
+            let b = baseline.unwrap_or(cost);
+            let advantage = b - cost; // lower cost ⇒ positive advantage
+            baseline = Some(0.9 * b + 0.1 * cost);
+            let scale = self.cfg.lr * advantage / (b.abs() + 1e-12);
+            for (k, &ch) in choice.iter().enumerate() {
+                // ∇ log softmax: +1 on chosen, -p on all (approximated by
+                // a simple chosen-logit bump, which suffices for a
+                // baseline comparator).
+                logits[k][ch] += scale;
+            }
+        }
+
+        let (best_cost, best_choice) = best.ok_or_else(|| {
+            anyhow::anyhow!("RL placer found no feasible placement in {} episodes", self.cfg.episodes)
+        })?;
+        let device_of: BTreeMap<NodeId, DeviceId> = ids
+            .iter()
+            .map(|&id| (id, DeviceId(best_choice[idx_of[&id]])))
+            .collect();
+        let placement = Placement {
+            algorithm: "rl-reinforce".to_string(),
+            predicted_makespan: best_cost,
+            placement_time: t0.elapsed().as_secs_f64(),
+            peak_memory: vec![0; n],
+            device_of,
+        };
+        let stats = RlStats {
+            episodes: self.cfg.episodes,
+            best_makespan: best_cost,
+            first_makespan,
+            simulated_step_time_total: sim_time_total,
+        };
+        Ok((placement, stats))
+    }
+}
+
+impl Placer for RlPlacer {
+    fn name(&self) -> String {
+        "rl-reinforce".to_string()
+    }
+
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement> {
+        self.place_with_stats(graph, cluster).map(|(p, _)| p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::CommModel;
+
+    #[test]
+    fn improves_over_episodes() {
+        let g = crate::models::mlp::mlp(&crate::models::mlp::MlpConfig::default());
+        let cluster = Cluster::homogeneous(2, 64 << 30, CommModel::pcie_via_host());
+        let rl = RlPlacer::new(RlConfig {
+            episodes: 120,
+            ..Default::default()
+        });
+        let (p, stats) = rl.place_with_stats(&g, &cluster).unwrap();
+        assert_eq!(p.device_of.len(), g.len());
+        assert!(stats.best_makespan <= stats.first_makespan * 1.001);
+        assert!(stats.simulated_step_time_total > 0.0);
+    }
+
+    #[test]
+    fn respects_feasibility_eventually() {
+        // Cluster where a random placement usually works; RL must return
+        // a feasible (non-OOM) placement.
+        let g = crate::models::linreg::linreg_graph();
+        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0));
+        let rl = RlPlacer::new(RlConfig {
+            episodes: 30,
+            ..Default::default()
+        });
+        let (p, _) = rl.place_with_stats(&g, &cluster).unwrap();
+        let r = simulate(&g, &cluster, &p.device_of, SimConfig::default());
+        assert!(r.ok());
+    }
+
+    #[test]
+    fn placement_cost_scales_with_episodes() {
+        let g = crate::models::linreg::linreg_graph();
+        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0));
+        let short = RlPlacer::new(RlConfig {
+            episodes: 10,
+            ..Default::default()
+        });
+        let long = RlPlacer::new(RlConfig {
+            episodes: 100,
+            ..Default::default()
+        });
+        let (_, s1) = short.place_with_stats(&g, &cluster).unwrap();
+        let (_, s2) = long.place_with_stats(&g, &cluster).unwrap();
+        assert!(s2.simulated_step_time_total > s1.simulated_step_time_total * 5.0);
+    }
+}

@@ -1,0 +1,61 @@
+//! Single-device baseline: the whole graph on GPU 0 (paper Tables 4–5).
+
+use super::place_fixed;
+use crate::graph::{DeviceId, OpGraph};
+use crate::placer::{Placement, Placer};
+use crate::profile::Cluster;
+
+/// Places every operator on device 0. No communication, no parallelism;
+/// OOMs in the simulator whenever the model exceeds one device.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SingleDevice;
+
+impl Placer for SingleDevice {
+    fn name(&self) -> String {
+        "single-gpu".to_string()
+    }
+
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement> {
+        place_fixed(&self.name(), graph, cluster, |_| DeviceId(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::CommModel;
+    use crate::sim::{simulate, SimConfig};
+
+    #[test]
+    fn makespan_equals_total_compute() {
+        let g = crate::models::linreg::linreg_graph();
+        let cluster = Cluster::homogeneous(4, 1_000, CommModel::new(0.0, 1.0));
+        let p = SingleDevice.place(&g, &cluster).unwrap();
+        assert_eq!(p.devices_used(), 1);
+        assert!((p.predicted_makespan - g.total_compute()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sim_agrees_no_transfers() {
+        let g = crate::models::linreg::linreg_graph();
+        let cluster = Cluster::homogeneous(4, 1_000, CommModel::new(0.0, 1.0));
+        let p = SingleDevice.place(&g, &cluster).unwrap();
+        let r = simulate(&g, &cluster, &p.device_of, SimConfig::default());
+        assert!(r.ok());
+        assert_eq!(r.transfers, 0);
+        assert!((r.makespan - p.predicted_makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sim_ooms_when_too_small() {
+        let g = crate::models::transformer::transformer(
+            crate::models::transformer::TransformerConfig::paper(64),
+        );
+        // Far too small for the transformer.
+        let cluster = Cluster::homogeneous(4, 100 << 20, CommModel::pcie_via_host());
+        let p = SingleDevice.place(&g, &cluster).unwrap();
+        let r = simulate(&g, &cluster, &p.device_of, SimConfig::default());
+        assert!(!r.ok(), "100 MiB device must OOM");
+        assert_eq!(r.oom.unwrap().device, 0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Coordinator configuration: which benchmark, cluster, optimizer and
+//! placement algorithm to run.
+
+use crate::baselines::{expert::Expert, rl::RlPlacer, single::SingleDevice};
+use crate::models::Benchmark;
+use crate::optimizer::OptConfig;
+use crate::placer::{metf::MEtf, msct::MSct, mtopo::MTopo, Placer};
+use crate::profile::{Cluster, CommModel};
+use crate::sim::{Framework, SimConfig};
+
+/// Selection of a placement algorithm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlacerKind {
+    Single,
+    Expert,
+    MTopo,
+    MEtf,
+    MSct,
+    /// m-SCT with the greedy favorite-child heuristic (ablation).
+    MSctHeuristic,
+    /// REINFORCE baseline with this many episodes.
+    Rl { episodes: usize },
+}
+
+impl PlacerKind {
+    pub fn parse(s: &str) -> anyhow::Result<PlacerKind> {
+        Ok(match s {
+            "single" => PlacerKind::Single,
+            "expert" => PlacerKind::Expert,
+            "m-topo" | "mtopo" => PlacerKind::MTopo,
+            "m-etf" | "metf" => PlacerKind::MEtf,
+            "m-sct" | "msct" => PlacerKind::MSct,
+            "m-sct-heur" => PlacerKind::MSctHeuristic,
+            s if s.starts_with("rl") => {
+                let episodes = s
+                    .strip_prefix("rl:")
+                    .and_then(|e| e.parse().ok())
+                    .unwrap_or(200);
+                PlacerKind::Rl { episodes }
+            }
+            other => anyhow::bail!(
+                "unknown placer '{other}' (single|expert|m-topo|m-etf|m-sct|m-sct-heur|rl[:N])"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacerKind::Single => "single-gpu",
+            PlacerKind::Expert => "expert",
+            PlacerKind::MTopo => "m-topo",
+            PlacerKind::MEtf => "m-etf",
+            PlacerKind::MSct => "m-sct",
+            PlacerKind::MSctHeuristic => "m-sct-heur",
+            PlacerKind::Rl { .. } => "rl",
+        }
+    }
+
+    /// Instantiate the placer (the expert needs the benchmark identity).
+    pub fn build(&self, benchmark: Benchmark) -> Box<dyn Placer> {
+        match *self {
+            PlacerKind::Single => Box::new(SingleDevice),
+            PlacerKind::Expert => Box::new(Expert::new(benchmark)),
+            PlacerKind::MTopo => Box::new(MTopo),
+            PlacerKind::MEtf => Box::new(MEtf),
+            PlacerKind::MSct => Box::new(MSct::default()),
+            PlacerKind::MSctHeuristic => Box::new(MSct::with_heuristic()),
+            PlacerKind::Rl { episodes } => Box::new(RlPlacer::new(crate::baselines::rl::RlConfig {
+                episodes,
+                ..Default::default()
+            })),
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct BaechiConfig {
+    pub benchmark: Benchmark,
+    pub placer: PlacerKind,
+    pub devices: usize,
+    /// Bytes per device before the fraction cap.
+    pub device_memory: u64,
+    /// Table 5's memory fraction (1.0 = sufficient memory).
+    pub memory_fraction: f64,
+    pub opt: OptConfig,
+    pub comm: CommModel,
+    pub sequential_comm: bool,
+    pub sim: SimConfig,
+}
+
+impl BaechiConfig {
+    /// The paper's testbed defaults: 4 × 8 GB GPUs over host-mediated
+    /// PCIe, TF memory semantics.
+    pub fn paper_default(benchmark: Benchmark, placer: PlacerKind) -> BaechiConfig {
+        let framework = match benchmark {
+            Benchmark::InceptionV3 { .. } | Benchmark::Gnmt { .. } | Benchmark::LinReg => {
+                Framework::TensorFlow
+            }
+            Benchmark::Transformer { .. } | Benchmark::Mlp => Framework::PyTorch,
+        };
+        let comm = CommModel::pcie_via_host();
+        BaechiConfig {
+            benchmark,
+            placer,
+            devices: 4,
+            device_memory: 8 << 30,
+            memory_fraction: 1.0,
+            opt: OptConfig {
+                // price multi-tensor fused edges consistently with the ES
+                latency_equiv_bytes: (comm.latency * comm.bandwidth) as u64,
+                ..OptConfig::default()
+            },
+            comm,
+            sequential_comm: true,
+            sim: SimConfig {
+                framework,
+                overlap_comm: true,
+            },
+        }
+    }
+
+    pub fn with_memory_fraction(mut self, f: f64) -> BaechiConfig {
+        self.memory_fraction = f;
+        self
+    }
+
+    pub fn with_opt(mut self, opt: OptConfig) -> BaechiConfig {
+        self.opt = opt;
+        self
+    }
+
+    pub fn cluster(&self) -> Cluster {
+        Cluster::homogeneous(self.devices, self.device_memory, self.comm)
+            .with_memory_fraction(self.memory_fraction)
+            .with_sequential_comm(self.sequential_comm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placer_parse_roundtrip() {
+        assert_eq!(PlacerKind::parse("single").unwrap(), PlacerKind::Single);
+        assert_eq!(PlacerKind::parse("expert").unwrap(), PlacerKind::Expert);
+        assert_eq!(PlacerKind::parse("m-topo").unwrap(), PlacerKind::MTopo);
+        assert_eq!(PlacerKind::parse("m-etf").unwrap(), PlacerKind::MEtf);
+        assert_eq!(PlacerKind::parse("m-sct").unwrap(), PlacerKind::MSct);
+        assert_eq!(
+            PlacerKind::parse("m-sct-heur").unwrap(),
+            PlacerKind::MSctHeuristic
+        );
+        assert_eq!(
+            PlacerKind::parse("rl:50").unwrap(),
+            PlacerKind::Rl { episodes: 50 }
+        );
+        assert!(PlacerKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn paper_default_cluster() {
+        let c = BaechiConfig::paper_default(Benchmark::LinReg, PlacerKind::MEtf)
+            .with_memory_fraction(0.3)
+            .cluster();
+        assert_eq!(c.n(), 4);
+        assert_eq!(c.devices[0].memory, (8u64 << 30) * 3 / 10);
+        assert!(c.sequential_comm);
+    }
+}

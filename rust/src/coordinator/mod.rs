@@ -1,0 +1,9 @@
+//! The Baechi coordinator: the full profile → optimize → place →
+//! evaluate pipeline behind the CLI, examples, and benches (paper Fig. 6
+//! system architecture).
+
+pub mod config;
+pub mod pipeline;
+
+pub use config::{BaechiConfig, PlacerKind};
+pub use pipeline::{run, RunReport};

@@ -1,0 +1,96 @@
+//! Real multi-device execution of a placed model (the end-to-end
+//! deliverable).
+//!
+//! Each simulated device is an OS thread owning its own PJRT CPU client
+//! and compiled artifacts; devices exchange tensors over bounded
+//! channels, mirroring the Baechi-PY communication protocol (§3.2.2):
+//! outputs are pushed greedily to consumer devices, consumers block on
+//! their rx channels — the tx/rx stream pairs become channel endpoints.
+//! An optional calibrated delay models the interconnect (DESIGN.md §2:
+//! compute is real, the wire is modeled).
+//!
+//! The concrete workload is the AOT-compiled MLP from
+//! `python/compile/model.py`, placed at module granularity by any
+//! [`crate::placer::Placer`]; [`trainer`] drives training steps and
+//! validates the distributed numerics against the fused `train_step`
+//! oracle artifact.
+
+pub mod plan;
+pub mod trainer;
+pub mod worker;
+
+/// A host-side tensor (f32, row-major) — the wire format between device
+/// threads. PJRT literals are not `Send`, so transfers materialize
+/// through host memory exactly like the paper's no-P2P testbed (§5.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl HostTensor {
+    pub fn new(data: Vec<f32>, dims: Vec<i64>) -> HostTensor {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        HostTensor { data, dims }
+    }
+
+    pub fn scalar(v: f32) -> HostTensor {
+        HostTensor {
+            data: vec![v],
+            dims: vec![],
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        4 * self.data.len() as u64
+    }
+
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        if self.dims.is_empty() {
+            // rank-0 scalar
+            let lit = xla::Literal::vec1(&self.data);
+            return Ok(lit.reshape(&[])?);
+        }
+        Ok(xla::Literal::vec1(&self.data).reshape(&self.dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
+        let shape = lit.shape()?;
+        let dims: Vec<i64> = match &shape {
+            xla::Shape::Array(a) => a.dims().to_vec(),
+            _ => anyhow::bail!("non-array literal"),
+        };
+        Ok(HostTensor {
+            data: lit.to_vec::<f32>()?,
+            dims,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar(3.5);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.data, vec![3.5]);
+        assert!(back.dims.is_empty());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let t = HostTensor::new(vec![0.0; 16], vec![4, 4]);
+        assert_eq!(t.bytes(), 64);
+    }
+}

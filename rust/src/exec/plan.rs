@@ -1,0 +1,104 @@
+//! Execution plan: map a graph placement onto the MLP artifact pipeline.
+//!
+//! The MLP module graph (`models::mlp`) names its modules `layer{i}` and
+//! `loss`; the plan extracts each module's device from a [`Placement`]
+//! (forward, backward, and parameters share the module's device — the
+//! paper's fwd/bwd co-placement, which our optimizer guarantees via the
+//! shared co-placement group).
+
+use crate::graph::OpGraph;
+use crate::placer::Placement;
+
+/// Device assignment for the MLP pipeline stages.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpPlan {
+    /// Device index per layer (params + fwd + bwd).
+    pub layer_dev: Vec<usize>,
+    /// Device of the loss module (loss_fwd + loss_bwd).
+    pub loss_dev: usize,
+    pub n_devices: usize,
+}
+
+impl MlpPlan {
+    /// Derive the plan from a placement of the `models::mlp` graph.
+    pub fn from_placement(
+        graph: &OpGraph,
+        placement: &Placement,
+        n_devices: usize,
+        n_layers: usize,
+    ) -> anyhow::Result<MlpPlan> {
+        let dev_of_prefix = |prefix: &str| -> anyhow::Result<usize> {
+            let node = graph
+                .iter_nodes()
+                .find(|n| n.name.starts_with(prefix))
+                .ok_or_else(|| anyhow::anyhow!("no node with prefix '{prefix}'"))?;
+            Ok(placement.device(node.id).0)
+        };
+        let mut layer_dev = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            layer_dev.push(dev_of_prefix(&format!("layer{i}/fwd"))?);
+        }
+        let loss_dev = dev_of_prefix("loss/fwd")?;
+        Ok(MlpPlan {
+            layer_dev,
+            loss_dev,
+            n_devices,
+        })
+    }
+
+    /// All-on-one-device plan (oracle / single-GPU baseline).
+    pub fn single(n_layers: usize) -> MlpPlan {
+        MlpPlan {
+            layer_dev: vec![0; n_layers],
+            loss_dev: 0,
+            n_devices: 1,
+        }
+    }
+
+    /// Number of cross-device tensor hops per training step.
+    pub fn cross_device_hops(&self) -> usize {
+        let mut hops = 0;
+        // forward chain + dy backward chain
+        for w in self.layer_dev.windows(2) {
+            if w[0] != w[1] {
+                hops += 2; // activation fwd + gradient bwd
+            }
+        }
+        if self.layer_dev.last() != Some(&self.loss_dev) {
+            hops += 2; // logits + dy
+        }
+        hops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp::{mlp, MlpConfig};
+    use crate::placer::Placer;
+    use crate::profile::{Cluster, CommModel};
+
+    #[test]
+    fn derives_from_metf_placement() {
+        let cfg = MlpConfig::default();
+        let g = mlp(&cfg);
+        let cluster = Cluster::homogeneous(2, 64 << 30, CommModel::pcie_via_host());
+        let p = crate::placer::metf::MEtf.place(&g, &cluster).unwrap();
+        let plan = MlpPlan::from_placement(&g, &p, 2, 4).unwrap();
+        assert_eq!(plan.layer_dev.len(), 4);
+        assert!(plan.layer_dev.iter().all(|&d| d < 2));
+        assert!(plan.loss_dev < 2);
+    }
+
+    #[test]
+    fn hops_counted() {
+        let plan = MlpPlan {
+            layer_dev: vec![0, 0, 1, 1],
+            loss_dev: 1,
+            n_devices: 2,
+        };
+        assert_eq!(plan.cross_device_hops(), 2);
+        let single = MlpPlan::single(4);
+        assert_eq!(single.cross_device_hops(), 0);
+    }
+}

@@ -1,0 +1,355 @@
+//! End-to-end trainer: drive real distributed training steps over the
+//! placed MLP and validate against the fused `train_step` oracle
+//! artifact (EXPERIMENTS.md §E2E).
+
+use super::plan::MlpPlan;
+use super::worker::{run_worker, Msg, WorkerCfg};
+use super::HostTensor;
+use crate::profile::CommModel;
+use crate::runtime::artifact::ArtifactRegistry;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg;
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub artifacts_dir: PathBuf,
+    /// Model the interconnect with calibrated sleeps (None = raw).
+    pub comm: Option<CommModel>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            steps: 100,
+            lr: 0.05,
+            seed: 42,
+            artifacts_dir: ArtifactRegistry::default_dir(),
+            comm: None,
+        }
+    }
+}
+
+/// Model hyper-parameters read from the artifact manifest.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub batch: usize,
+    pub classes: usize,
+    /// (din, dout) per layer.
+    pub layer_dims: Vec<(usize, usize)>,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &std::path::Path) -> anyhow::Result<ModelMeta> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let root = crate::util::json::Json::parse(&text)?;
+        let batch = root
+            .get("batch")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing batch"))? as usize;
+        let classes = root
+            .get("classes")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing classes"))?
+            as usize;
+        let layer_dims = root
+            .get("layer_dims")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing layer_dims"))?
+            .iter()
+            .map(|d| {
+                let a = d.as_arr().unwrap();
+                (a[0].as_u64().unwrap() as usize, a[1].as_u64().unwrap() as usize)
+            })
+            .collect();
+        Ok(ModelMeta {
+            batch,
+            classes,
+            layer_dims,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layer_dims.len()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layer_dims[0].0
+    }
+}
+
+/// Training run report.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub wall_time: f64,
+    pub steps_per_sec: f64,
+    pub plan: MlpPlan,
+}
+
+/// Deterministic He-initialized parameters: `[(w, b); layers]`.
+pub fn init_params(meta: &ModelMeta, seed: u64) -> Vec<(HostTensor, HostTensor)> {
+    let mut rng = Pcg::seed(seed);
+    meta.layer_dims
+        .iter()
+        .map(|&(din, dout)| {
+            let scale = (2.0 / din as f64).sqrt();
+            let w: Vec<f32> = (0..din * dout)
+                .map(|_| (rng.normal() * scale) as f32)
+                .collect();
+            (
+                HostTensor::new(w, vec![din as i64, dout as i64]),
+                HostTensor::new(vec![0.0; dout], vec![dout as i64]),
+            )
+        })
+        .collect()
+}
+
+/// Deterministic synthetic batch: teacher-projection labels (mirrors
+/// `python/compile/model.py::synthetic_batch`, but self-contained so the
+/// rust binary needs no Python).
+pub fn synthetic_batch(meta: &ModelMeta, step: usize, seed: u64) -> (HostTensor, HostTensor) {
+    let din = meta.input_dim();
+    let mut teacher_rng = Pcg::seed(seed ^ 0x7e4c);
+    let teacher: Vec<f64> = (0..din * meta.classes).map(|_| teacher_rng.normal()).collect();
+    let mut rng = Pcg::new(seed, step as u64 + 1);
+    let x: Vec<f32> = (0..meta.batch * din).map(|_| rng.normal() as f32).collect();
+    let mut onehot = vec![0.0f32; meta.batch * meta.classes];
+    for r in 0..meta.batch {
+        let mut best = (f64::NEG_INFINITY, 0);
+        for c in 0..meta.classes {
+            let mut acc = 0.0f64;
+            for k in 0..din {
+                acc += x[r * din + k] as f64 * teacher[k * meta.classes + c];
+            }
+            if acc > best.0 {
+                best = (acc, c);
+            }
+        }
+        onehot[r * meta.classes + best.1] = 1.0;
+    }
+    (
+        HostTensor::new(x, vec![meta.batch as i64, din as i64]),
+        HostTensor::new(onehot, vec![meta.batch as i64, meta.classes as i64]),
+    )
+}
+
+/// Run distributed training per the plan. Spawns one worker thread per
+/// device, streams batches in, and collects the loss curve.
+pub fn train_distributed(plan: &MlpPlan, cfg: &TrainConfig) -> anyhow::Result<TrainReport> {
+    let meta = ModelMeta::load(&cfg.artifacts_dir)?;
+    let n_layers = meta.n_layers();
+    anyhow::ensure!(
+        plan.layer_dev.len() == n_layers,
+        "plan layers {} != artifact layers {}",
+        plan.layer_dev.len(),
+        n_layers
+    );
+    let params = init_params(&meta, cfg.seed);
+
+    // Channels: one inbox per device + the main inbox.
+    let mut senders = Vec::new();
+    let mut inboxes = Vec::new();
+    for _ in 0..plan.n_devices {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        senders.push(tx);
+        inboxes.push(rx);
+    }
+    let (main_tx, main_rx) = mpsc::channel::<Msg>();
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for (dev, inbox) in inboxes.into_iter().enumerate() {
+        let wcfg = WorkerCfg {
+            dev,
+            plan: plan.clone(),
+            steps: cfg.steps,
+            lr: cfg.lr,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            params: params
+                .iter()
+                .enumerate()
+                .filter(|(l, _)| plan.layer_dev[*l] == dev)
+                .map(|(l, (w, b))| (l, w.clone(), b.clone()))
+                .collect(),
+            comm: cfg.comm,
+        };
+        let peers = senders.clone();
+        let mtx = main_tx.clone();
+        let err_tx = main_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            if let Err(e) = run_worker(wcfg, inbox, peers, mtx) {
+                let _ = err_tx.send(Msg::Error(format!("{e:#}")));
+            }
+        }));
+    }
+    drop(main_tx);
+
+    // Stream batches.
+    for step in 0..cfg.steps {
+        let (x, onehot) = synthetic_batch(&meta, step, cfg.seed);
+        senders[plan.layer_dev[0]]
+            .send(Msg::Tensor {
+                key: format!("a0/{step}"),
+                t: x,
+            })
+            .map_err(|_| anyhow::anyhow!("worker died"))?;
+        senders[plan.loss_dev]
+            .send(Msg::Tensor {
+                key: format!("onehot/{step}"),
+                t: onehot,
+            })
+            .map_err(|_| anyhow::anyhow!("worker died"))?;
+    }
+
+    // Collect losses.
+    let mut losses = vec![f32::NAN; cfg.steps];
+    let mut got = 0;
+    while got < cfg.steps {
+        match main_rx.recv() {
+            Ok(Msg::Loss { step, value }) => {
+                losses[step] = value;
+                got += 1;
+            }
+            Ok(Msg::Error(e)) => anyhow::bail!("worker error: {e}"),
+            Ok(_) => {}
+            Err(_) => anyhow::bail!("workers exited before producing all losses"),
+        }
+    }
+    drop(senders);
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+    }
+    let wall_time = t0.elapsed().as_secs_f64();
+    Ok(TrainReport {
+        steps_per_sec: cfg.steps as f64 / wall_time,
+        losses,
+        wall_time,
+        plan: plan.clone(),
+    })
+}
+
+/// Oracle: run the fused `train_step` artifact single-device with the
+/// same data and initial parameters.
+pub fn train_oracle(cfg: &TrainConfig) -> anyhow::Result<Vec<f32>> {
+    let meta = ModelMeta::load(&cfg.artifacts_dir)?;
+    let runtime = Runtime::cpu()?;
+    let registry = ArtifactRegistry::open(runtime, &cfg.artifacts_dir)?;
+    let exec = registry.load("train_step")?;
+    let mut params = init_params(&meta, cfg.seed);
+    let lr = HostTensor::scalar(cfg.lr);
+    let mut losses = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        let (x, onehot) = synthetic_batch(&meta, step, cfg.seed);
+        let mut inputs = Vec::new();
+        for (w, b) in &params {
+            inputs.push(w.to_literal()?);
+            inputs.push(b.to_literal()?);
+        }
+        inputs.push(x.to_literal()?);
+        inputs.push(onehot.to_literal()?);
+        inputs.push(lr.to_literal()?);
+        let outs = exec.run(&inputs)?;
+        losses.push(HostTensor::from_literal(&outs[0])?.data[0]);
+        for (li, p) in params.iter_mut().enumerate() {
+            p.0 = HostTensor::from_literal(&outs[1 + 2 * li])?;
+            p.1 = HostTensor::from_literal(&outs[2 + 2 * li])?;
+        }
+    }
+    Ok(losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        ArtifactRegistry::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn synthetic_batch_deterministic_and_onehot() {
+        let meta = ModelMeta {
+            batch: 8,
+            classes: 4,
+            layer_dims: vec![(16, 8), (8, 4)],
+        };
+        let (x1, o1) = synthetic_batch(&meta, 3, 42);
+        let (x2, o2) = synthetic_batch(&meta, 3, 42);
+        assert_eq!(x1, x2);
+        assert_eq!(o1, o2);
+        for r in 0..meta.batch {
+            let row = &o1.data[r * meta.classes..(r + 1) * meta.classes];
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
+        let (x3, _) = synthetic_batch(&meta, 4, 42);
+        assert_ne!(x1, x3, "different steps differ");
+    }
+
+    #[test]
+    fn init_params_shapes() {
+        let meta = ModelMeta {
+            batch: 8,
+            classes: 4,
+            layer_dims: vec![(16, 8), (8, 4)],
+        };
+        let p = init_params(&meta, 1);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].0.dims, vec![16, 8]);
+        assert_eq!(p[1].1.dims, vec![4]);
+    }
+
+    /// Full distributed-vs-oracle equivalence on 2 devices. Requires
+    /// `make artifacts` to have run.
+    #[test]
+    fn distributed_matches_oracle() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let meta = ModelMeta::load(&ArtifactRegistry::default_dir()).unwrap();
+        let plan = MlpPlan {
+            layer_dev: (0..meta.n_layers()).map(|i| i % 2).collect(),
+            loss_dev: (meta.n_layers() - 1) % 2,
+            n_devices: 2,
+        };
+        let cfg = TrainConfig {
+            steps: 5,
+            ..Default::default()
+        };
+        let dist = train_distributed(&plan, &cfg).unwrap();
+        let oracle = train_oracle(&cfg).unwrap();
+        assert_eq!(dist.losses.len(), oracle.len());
+        for (s, (a, b)) in dist.losses.iter().zip(&oracle).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                "step {s}: dist {a} vs oracle {b}"
+            );
+        }
+    }
+
+    /// Loss must trend downward over a few dozen steps.
+    #[test]
+    fn training_learns() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let meta = ModelMeta::load(&ArtifactRegistry::default_dir()).unwrap();
+        let plan = MlpPlan::single(meta.n_layers());
+        let cfg = TrainConfig {
+            steps: 40,
+            lr: 0.1,
+            ..Default::default()
+        };
+        let r = train_distributed(&plan, &cfg).unwrap();
+        let head: f32 = r.losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = r.losses[r.losses.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(tail < head * 0.9, "no learning: {head} -> {tail}");
+    }
+}

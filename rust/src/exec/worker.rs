@@ -1,0 +1,300 @@
+//! Device worker thread: owns a PJRT client + compiled artifacts for its
+//! assigned pipeline stages, exchanges tensors with peer devices over
+//! channels, and applies SGD updates to its resident parameters.
+//!
+//! This is the runtime realization of the Baechi-PY protocol (§3.2.2):
+//! outputs are pushed greedily to consumer devices as soon as computed
+//! (the `tx` side), and a stage blocks on its inbox until all inputs
+//! have arrived (the `wait` side). Parameters never move: each layer's
+//! weights live on the device the placer chose.
+
+use super::plan::MlpPlan;
+use super::HostTensor;
+use crate::profile::CommModel;
+use crate::runtime::artifact::ArtifactRegistry;
+use crate::runtime::Runtime;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+
+/// Inter-thread message.
+#[derive(Debug)]
+pub enum Msg {
+    Tensor { key: String, t: HostTensor },
+    Loss { step: usize, value: f32 },
+    /// Worker error (panics are converted at join).
+    Error(String),
+}
+
+/// One pipeline stage (global order: F0..F{L-1}, LF, LB, B{L-1}..B0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Stage {
+    Fwd(usize),
+    LossFwd,
+    LossBwd,
+    Bwd(usize),
+}
+
+/// Global stage order for an L-layer MLP.
+pub fn stage_order(n_layers: usize) -> Vec<Stage> {
+    let mut v: Vec<Stage> = (0..n_layers).map(Stage::Fwd).collect();
+    v.push(Stage::LossFwd);
+    v.push(Stage::LossBwd);
+    v.extend((0..n_layers).rev().map(Stage::Bwd));
+    v
+}
+
+/// Device for a stage under a plan.
+pub fn stage_device(plan: &MlpPlan, s: Stage) -> usize {
+    match s {
+        Stage::Fwd(i) | Stage::Bwd(i) => plan.layer_dev[i],
+        Stage::LossFwd | Stage::LossBwd => plan.loss_dev,
+    }
+}
+
+/// Configuration passed to each worker thread.
+pub struct WorkerCfg {
+    pub dev: usize,
+    pub plan: MlpPlan,
+    pub steps: usize,
+    pub lr: f32,
+    pub artifacts_dir: PathBuf,
+    /// Initial parameters for the layers this device hosts: (layer, w, b).
+    pub params: Vec<(usize, HostTensor, HostTensor)>,
+    /// Sleep `comm.time(bytes)` before each cross-device send, modeling
+    /// the interconnect (None = raw channel speed).
+    pub comm: Option<CommModel>,
+}
+
+/// Run the worker loop (body of the device thread). Returns the final
+/// parameters of its layers.
+pub fn run_worker(
+    cfg: WorkerCfg,
+    inbox: Receiver<Msg>,
+    peers: Vec<Sender<Msg>>,
+    main_tx: Sender<Msg>,
+) -> anyhow::Result<Vec<(usize, HostTensor, HostTensor)>> {
+    let runtime = Runtime::cpu()?;
+    let registry = ArtifactRegistry::open(runtime, &cfg.artifacts_dir)?;
+    let n_layers = cfg.plan.layer_dev.len();
+    let my_stages: Vec<Stage> = stage_order(n_layers)
+        .into_iter()
+        .filter(|&s| stage_device(&cfg.plan, s) == cfg.dev)
+        .collect();
+    let mut params: HashMap<usize, (HostTensor, HostTensor)> = cfg
+        .params
+        .iter()
+        .map(|(l, w, b)| (*l, (w.clone(), b.clone())))
+        .collect();
+
+    // Per-step local tensor store.
+    let mut store: HashMap<String, HostTensor> = HashMap::new();
+    let recv_into =
+        |store: &mut HashMap<String, HostTensor>, key: &str| -> anyhow::Result<HostTensor> {
+            if let Some(t) = store.remove(key) {
+                return Ok(t);
+            }
+            loop {
+                match inbox.recv() {
+                    Ok(Msg::Tensor { key: k, t }) => {
+                        if k == key {
+                            return Ok(t);
+                        }
+                        store.insert(k, t);
+                    }
+                    Ok(other) => anyhow::bail!("unexpected message {other:?}"),
+                    Err(_) => anyhow::bail!("inbox closed waiting for {key}"),
+                }
+            }
+        };
+    // Peek without consuming (for residuals needed again later).
+    let fetch_keep = |store: &HashMap<String, HostTensor>, key: &str| -> Option<HostTensor> {
+        store.get(key).cloned()
+    };
+
+    let send_to = |dev: usize, key: &str, t: &HostTensor, peers: &[Sender<Msg>]| {
+        if let Some(comm) = &cfg.comm {
+            let secs = comm.time(t.bytes());
+            if secs > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+            }
+        }
+        let _ = peers[dev].send(Msg::Tensor {
+            key: key.to_string(),
+            t: t.clone(),
+        });
+    };
+
+    for step in 0..cfg.steps {
+        // Drop leftovers from completed steps (keys are "name/step";
+        // tensors for future steps may already have arrived and must
+        // survive).
+        store.retain(|k, _| {
+            k.rsplit('/')
+                .next()
+                .and_then(|s| s.parse::<usize>().ok())
+                .map(|s| s >= step)
+                .unwrap_or(true)
+        });
+        for &stage in &my_stages {
+            match stage {
+                Stage::Fwd(i) => {
+                    let a_key = format!("a{i}/{step}");
+                    // `a_i` is both this stage's input and B(i)'s residual:
+                    // keep it in the store.
+                    let a = match fetch_keep(&store, &a_key) {
+                        Some(t) => t,
+                        None => {
+                            let t = recv_into(&mut store, &a_key)?;
+                            store.insert(a_key.clone(), t.clone());
+                            t
+                        }
+                    };
+                    let (w, b) = params.get(&i).expect("layer params resident").clone();
+                    let exec = registry.load(&format!("layer{i}_fwd"))?;
+                    let outs = exec.run(&[a.to_literal()?, w.to_literal()?, b.to_literal()?])?;
+                    let y = HostTensor::from_literal(&outs[0])?;
+                    let y_key = format!("a{}/{step}", i + 1);
+                    // Residual for B(i) (same device) and input for F(i+1).
+                    store.insert(y_key.clone(), y.clone());
+                    let next_dev = if i + 1 < n_layers {
+                        cfg.plan.layer_dev[i + 1]
+                    } else {
+                        cfg.plan.loss_dev
+                    };
+                    if next_dev != cfg.dev {
+                        send_to(next_dev, &y_key, &y, &peers);
+                    }
+                }
+                Stage::LossFwd => {
+                    let logits_key = format!("a{n_layers}/{step}");
+                    let logits = match fetch_keep(&store, &logits_key) {
+                        Some(t) => t,
+                        None => {
+                            let t = recv_into(&mut store, &logits_key)?;
+                            store.insert(logits_key.clone(), t.clone());
+                            t
+                        }
+                    };
+                    let onehot = match fetch_keep(&store, &format!("onehot/{step}")) {
+                        Some(t) => t,
+                        None => {
+                            let t = recv_into(&mut store, &format!("onehot/{step}"))?;
+                            store.insert(format!("onehot/{step}"), t.clone());
+                            t
+                        }
+                    };
+                    let exec = registry.load("loss_fwd")?;
+                    let outs = exec.run(&[logits.to_literal()?, onehot.to_literal()?])?;
+                    let loss = HostTensor::from_literal(&outs[0])?;
+                    let probs = HostTensor::from_literal(&outs[1])?;
+                    store.insert(format!("probs/{step}"), probs);
+                    let _ = main_tx.send(Msg::Loss {
+                        step,
+                        value: loss.data[0],
+                    });
+                }
+                Stage::LossBwd => {
+                    let probs = store
+                        .remove(&format!("probs/{step}"))
+                        .expect("probs resident (loss fwd/bwd colocated)");
+                    let onehot = fetch_keep(&store, &format!("onehot/{step}"))
+                        .expect("onehot resident");
+                    let exec = registry.load("loss_bwd")?;
+                    let outs = exec.run(&[probs.to_literal()?, onehot.to_literal()?])?;
+                    let dy = HostTensor::from_literal(&outs[0])?;
+                    let key = format!("dy{n_layers}/{step}");
+                    let dst = cfg.plan.layer_dev[n_layers - 1];
+                    if dst != cfg.dev {
+                        send_to(dst, &key, &dy, &peers);
+                    } else {
+                        store.insert(key, dy);
+                    }
+                }
+                Stage::Bwd(i) => {
+                    let dy_key = format!("dy{}/{step}", i + 1);
+                    let dy = match store.remove(&dy_key) {
+                        Some(t) => t,
+                        None => recv_into(&mut store, &dy_key)?,
+                    };
+                    // Residuals are shared (a_{i+1} is layer i's `y` AND
+                    // layer i+1's `x`): read without consuming; the
+                    // step-start retain reclaims them.
+                    let x = fetch_keep(&store, &format!("a{i}/{step}"))
+                        .expect("residual x resident (fwd/bwd colocated)");
+                    let y = fetch_keep(&store, &format!("a{}/{step}", i + 1))
+                        .unwrap_or_else(|| panic!("residual y of layer {i} resident"));
+                    let (w, b) = params.get(&i).expect("params resident").clone();
+                    let exec = registry.load(&format!("layer{i}_bwd"))?;
+                    let outs = exec.run(&[
+                        x.to_literal()?,
+                        w.to_literal()?,
+                        y.to_literal()?,
+                        dy.to_literal()?,
+                    ])?;
+                    let dx = HostTensor::from_literal(&outs[0])?;
+                    let dw = HostTensor::from_literal(&outs[1])?;
+                    let db = HostTensor::from_literal(&outs[2])?;
+                    // Host-side SGD on the resident parameters.
+                    let entry = params.get_mut(&i).unwrap();
+                    for (wv, g) in entry.0.data.iter_mut().zip(&dw.data) {
+                        *wv -= cfg.lr * g;
+                    }
+                    for (bv, g) in entry.1.data.iter_mut().zip(&db.data) {
+                        *bv -= cfg.lr * g;
+                    }
+                    let _ = (w, b);
+                    if i > 0 {
+                        let key = format!("dy{i}/{step}");
+                        let dst = cfg.plan.layer_dev[i - 1];
+                        if dst != cfg.dev {
+                            send_to(dst, &key, &dx, &peers);
+                        } else {
+                            store.insert(key, dx);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(params
+        .into_iter()
+        .map(|(l, (w, b))| (l, w, b))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_order_shape() {
+        let order = stage_order(3);
+        assert_eq!(
+            order,
+            vec![
+                Stage::Fwd(0),
+                Stage::Fwd(1),
+                Stage::Fwd(2),
+                Stage::LossFwd,
+                Stage::LossBwd,
+                Stage::Bwd(2),
+                Stage::Bwd(1),
+                Stage::Bwd(0),
+            ]
+        );
+    }
+
+    #[test]
+    fn stage_device_mapping() {
+        let plan = MlpPlan {
+            layer_dev: vec![0, 1, 1],
+            loss_dev: 1,
+            n_devices: 2,
+        };
+        assert_eq!(stage_device(&plan, Stage::Fwd(0)), 0);
+        assert_eq!(stage_device(&plan, Stage::Bwd(2)), 1);
+        assert_eq!(stage_device(&plan, Stage::LossFwd), 1);
+    }
+}

@@ -1,0 +1,150 @@
+//! Fluent construction helpers for operator graphs.
+//!
+//! The model generators in [`crate::models`] use this to declare layers
+//! succinctly; tests use it to sketch small DAGs.
+
+use super::{MemorySpec, NodeId, OpGraph, OpKind};
+
+/// Builder wrapper holding defaults for batch construction.
+pub struct GraphBuilder {
+    pub graph: OpGraph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        GraphBuilder {
+            graph: OpGraph::new(name),
+        }
+    }
+
+    /// Start configuring a node.
+    pub fn op(&mut self, name: &str, kind: OpKind) -> NodeCfg<'_> {
+        let id = self.graph.add_node(name, kind);
+        NodeCfg { b: self, id }
+    }
+
+    /// Connect `src → dst` with the source's recorded output bytes.
+    pub fn wire(&mut self, src: NodeId, dst: NodeId) {
+        let bytes = self.graph.node(src).output_bytes;
+        self.graph.add_edge(src, dst, bytes);
+    }
+
+    /// Connect a chain of nodes head-to-tail.
+    pub fn chain(&mut self, nodes: &[NodeId]) {
+        for w in nodes.windows(2) {
+            self.wire(w[0], w[1]);
+        }
+    }
+
+    pub fn finish(self) -> OpGraph {
+        debug_assert!(self.graph.is_acyclic(), "builder produced a cycle");
+        self.graph
+    }
+}
+
+/// In-progress node configuration.
+pub struct NodeCfg<'a> {
+    b: &'a mut GraphBuilder,
+    id: NodeId,
+}
+
+impl<'a> NodeCfg<'a> {
+    pub fn compute(self, secs: f64) -> Self {
+        self.b.graph.node_mut(self.id).compute = secs;
+        self
+    }
+
+    pub fn mem(self, mem: MemorySpec) -> Self {
+        self.b.graph.node_mut(self.id).mem = mem;
+        self
+    }
+
+    /// Set params+grad memory and scratch in one call (common case).
+    pub fn mem_simple(self, params: u64, output: u64, temp: u64) -> Self {
+        let n = self.b.graph.node_mut(self.id);
+        n.mem = MemorySpec {
+            params,
+            output,
+            param_grad: params,
+            upstream_grad: output,
+            temp,
+        };
+        n.output_bytes = output;
+        self
+    }
+
+    pub fn output_bytes(self, bytes: u64) -> Self {
+        let n = self.b.graph.node_mut(self.id);
+        n.output_bytes = bytes;
+        n.mem.output = bytes;
+        self
+    }
+
+    pub fn colocate(self, group: &str) -> Self {
+        self.b.graph.node_mut(self.id).colocation_group = Some(group.to_string());
+        self
+    }
+
+    pub fn coplace(self, group: &str) -> Self {
+        self.b.graph.node_mut(self.id).coplacement_group = Some(group.to_string());
+        self
+    }
+
+    pub fn backward_of(self, fwd: NodeId) -> Self {
+        let n = self.b.graph.node_mut(self.id);
+        n.is_backward = true;
+        n.forward_of = Some(fwd);
+        self
+    }
+
+    /// Add incoming edges from the given nodes (each with its output size).
+    pub fn after(self, preds: &[NodeId]) -> Self {
+        for &p in preds {
+            self.b.wire(p, self.id);
+        }
+        self
+    }
+
+    pub fn id(self) -> NodeId {
+        self.id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_chain() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.op("x", OpKind::Input).output_bytes(64).id();
+        let l1 = b
+            .op("l1", OpKind::MatMul)
+            .compute(1e-3)
+            .mem_simple(1024, 128, 64)
+            .after(&[x])
+            .id();
+        let l2 = b
+            .op("l2", OpKind::MatMul)
+            .compute(2e-3)
+            .mem_simple(2048, 128, 64)
+            .after(&[l1])
+            .id();
+        let g = b.finish();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.edge_bytes(x, l1), Some(64));
+        assert_eq!(g.edge_bytes(l1, l2), Some(128));
+        assert!((g.total_compute() - 3e-3).abs() < 1e-12);
+        assert_eq!(g.node(l1).mem.param_grad, 1024);
+    }
+
+    #[test]
+    fn backward_links() {
+        let mut b = GraphBuilder::new("t");
+        let f = b.op("fwd", OpKind::MatMul).output_bytes(8).id();
+        let w = b.op("bwd", OpKind::MatMul).backward_of(f).after(&[f]).id();
+        let g = b.finish();
+        assert!(g.node(w).is_backward);
+        assert_eq!(g.node(w).forward_of, Some(f));
+    }
+}

@@ -1,0 +1,60 @@
+//! Graphviz DOT export for debugging placements.
+
+use super::{DeviceId, NodeId, OpGraph};
+use std::collections::BTreeMap;
+
+/// Color palette cycled per device.
+const COLORS: [&str; 8] = [
+    "lightblue", "lightsalmon", "palegreen", "plum", "khaki", "lightcyan", "mistyrose", "wheat",
+];
+
+impl OpGraph {
+    /// Render the graph in DOT, optionally coloring by placement.
+    pub fn to_dot(&self, placement: Option<&BTreeMap<NodeId, DeviceId>>) -> String {
+        let mut s = String::from("digraph G {\n  rankdir=TB;\n  node [shape=box, style=filled];\n");
+        for n in self.iter_nodes() {
+            let color = placement
+                .and_then(|p| p.get(&n.id))
+                .map(|d| COLORS[d.0 % COLORS.len()])
+                .unwrap_or("white");
+            s.push_str(&format!(
+                "  {} [label=\"{}\\n{:.2}ms\", fillcolor={}];\n",
+                n.id.0,
+                n.name.replace('"', "'"),
+                n.compute * 1e3,
+                color
+            ));
+        }
+        for e in self.edges() {
+            s.push_str(&format!(
+                "  {} -> {} [label=\"{}\"];\n",
+                e.src.0, e.dst.0, e.bytes
+            ));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::{DeviceId, OpGraph, OpKind};
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn dot_contains_nodes_and_edges() {
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("alpha", OpKind::Input);
+        let b = g.add_node("beta", OpKind::MatMul);
+        g.add_edge(a, b, 42);
+        let mut p = BTreeMap::new();
+        p.insert(a, DeviceId(0));
+        p.insert(b, DeviceId(1));
+        let dot = g.to_dot(Some(&p));
+        assert!(dot.contains("alpha"));
+        assert!(dot.contains("-> 1"));
+        assert!(dot.contains("lightblue"));
+        assert!(dot.contains("lightsalmon"));
+        assert!(dot.contains("label=\"42\""));
+    }
+}

@@ -1,0 +1,555 @@
+//! The annotated operator DAG consumed by every stage of Baechi.
+//!
+//! Mirrors the paper's NetworkX intermediate representation (§4.1): each
+//! node is an operator (TensorFlow) or module (PyTorch) annotated with its
+//! profiled compute time, the five-component memory model of paper Table 2,
+//! and the size of its output tensor; each edge carries the bytes
+//! communicated if its endpoints land on different devices.
+
+pub mod builder;
+pub mod dot;
+pub mod topo;
+
+use std::collections::BTreeMap;
+
+/// Index of a node in an [`OpGraph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// Index of a device in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeviceId(pub usize);
+
+impl std::fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "gpu{}", self.0)
+    }
+}
+
+/// Five-component memory model (paper §4.1.1, Table 2), in bytes.
+///
+/// | component        | training                | inference        |
+/// |------------------|-------------------------|------------------|
+/// | permanent        | params + output + grads | params           |
+/// | temporary        | temp + upstream grad    | temp + output    |
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemorySpec {
+    /// (a) parameter memory (weights).
+    pub params: u64,
+    /// (b) forward-output tensor memory.
+    pub output: u64,
+    /// (c) parameter-gradient memory.
+    pub param_grad: u64,
+    /// (d) upstream (output) gradient memory.
+    pub upstream_grad: u64,
+    /// (e) scratch used while computing the output/gradients.
+    pub temp: u64,
+}
+
+impl MemorySpec {
+    /// Permanent bytes held for the whole training run (Table 2, training).
+    pub fn permanent_training(&self) -> u64 {
+        self.params + self.output + self.param_grad
+    }
+
+    /// Peak temporary bytes during training.
+    pub fn temporary_training(&self) -> u64 {
+        self.temp + self.upstream_grad
+    }
+
+    /// Permanent bytes during inference.
+    pub fn permanent_inference(&self) -> u64 {
+        self.params
+    }
+
+    /// Peak temporary bytes during inference.
+    pub fn temporary_inference(&self) -> u64 {
+        self.temp + self.output
+    }
+
+    /// Total budget the placer must account for on the hosting device.
+    pub fn total_training(&self) -> u64 {
+        self.permanent_training() + self.temporary_training()
+    }
+
+    /// Component-wise sum (used when fusing operators).
+    pub fn merge(&self, other: &MemorySpec) -> MemorySpec {
+        MemorySpec {
+            params: self.params + other.params,
+            output: self.output + other.output,
+            param_grad: self.param_grad + other.param_grad,
+            upstream_grad: self.upstream_grad.max(other.upstream_grad),
+            temp: self.temp.max(other.temp),
+        }
+    }
+}
+
+/// Operator kind — used by the cost model, the runtime artifact registry,
+/// and the expert placers.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Dense matmul / fully-connected layer.
+    MatMul,
+    /// Convolution (modelled as an implicit-GEMM matmul on TPU).
+    Conv2d,
+    /// LSTM cell (fused gates).
+    LstmCell,
+    /// Scaled-dot-product attention.
+    Attention,
+    /// Embedding lookup.
+    Embedding,
+    /// Elementwise / activation / normalization and other cheap ops.
+    Elementwise,
+    /// Pooling.
+    Pool,
+    /// Concat / split / reshape plumbing.
+    Shape,
+    /// Loss computation.
+    Loss,
+    /// Optimizer state update (e.g. ApplyGradient).
+    ApplyGrad,
+    /// Variable read/assign (TF colocation-constrained ops).
+    Variable,
+    /// Input pipeline / constant.
+    Input,
+    /// Anything else.
+    Generic(u32),
+}
+
+impl OpKind {
+    pub fn name(&self) -> String {
+        match self {
+            OpKind::Generic(k) => format!("generic{k}"),
+            other => format!("{other:?}").to_lowercase(),
+        }
+    }
+}
+
+/// A graph node: one operator (or fused meta-operator).
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Profiled compute time, seconds.
+    pub compute: f64,
+    /// Five-component memory footprint.
+    pub mem: MemorySpec,
+    /// Bytes of this op's output tensor (what successors receive).
+    pub output_bytes: u64,
+    /// TensorFlow colocation-constraint group (§3.1.1), if any.
+    pub colocation_group: Option<String>,
+    /// Co-placement group chosen by the optimizer (§3.1.2), if any.
+    pub coplacement_group: Option<String>,
+    /// True for backward (gradient) operators.
+    pub is_backward: bool,
+    /// The forward op this backward op matches (for fwd/bwd co-placement).
+    pub forward_of: Option<NodeId>,
+    /// Original node ids folded into this node by operator fusion.
+    pub fused_from: Vec<NodeId>,
+}
+
+impl OpNode {
+    fn new(id: NodeId, name: &str, kind: OpKind) -> OpNode {
+        OpNode {
+            id,
+            name: name.to_string(),
+            kind,
+            compute: 0.0,
+            mem: MemorySpec::default(),
+            output_bytes: 0,
+            colocation_group: None,
+            coplacement_group: None,
+            is_backward: false,
+            forward_of: None,
+            fused_from: Vec::new(),
+        }
+    }
+}
+
+/// A directed edge with the bytes communicated along it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: u64,
+}
+
+/// The operator DAG.
+///
+/// Nodes are stored densely; removal is handled by tombstoning (`alive`)
+/// so `NodeId`s stay stable across optimizer passes.
+#[derive(Debug, Clone, Default)]
+pub struct OpGraph {
+    pub name: String,
+    nodes: Vec<OpNode>,
+    alive: Vec<bool>,
+    out_edges: Vec<Vec<(NodeId, u64)>>,
+    in_edges: Vec<Vec<(NodeId, u64)>>,
+}
+
+impl OpGraph {
+    pub fn new(name: &str) -> OpGraph {
+        OpGraph {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Add a node and return its id.
+    pub fn add_node(&mut self, name: &str, kind: OpKind) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(OpNode::new(id, name, kind));
+        self.alive.push(true);
+        self.out_edges.push(Vec::new());
+        self.in_edges.push(Vec::new());
+        id
+    }
+
+    /// Add an edge carrying `bytes`; duplicate (src,dst) edges are merged
+    /// by taking the max byte count (one physical transfer per tensor —
+    /// the ES caches tensors per destination device, §4.2).
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, bytes: u64) {
+        assert_ne!(src, dst, "self edge");
+        assert!(self.alive[src.0] && self.alive[dst.0], "edge to dead node");
+        if let Some(e) = self.out_edges[src.0].iter_mut().find(|(d, _)| *d == dst) {
+            e.1 = e.1.max(bytes);
+            if let Some(ie) = self.in_edges[dst.0].iter_mut().find(|(s, _)| *s == src) {
+                ie.1 = ie.1.max(bytes);
+            }
+            return;
+        }
+        self.out_edges[src.0].push((dst, bytes));
+        self.in_edges[dst.0].push((src, bytes));
+    }
+
+    /// Immutable node access. Panics on dead nodes in debug builds.
+    pub fn node(&self, id: NodeId) -> &OpNode {
+        debug_assert!(self.alive[id.0], "access to dead node {id}");
+        &self.nodes[id.0]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut OpNode {
+        debug_assert!(self.alive[id.0], "access to dead node {id}");
+        &mut self.nodes[id.0]
+    }
+
+    pub fn is_alive(&self, id: NodeId) -> bool {
+        self.alive[id.0]
+    }
+
+    /// Tombstone a node, detaching all its edges.
+    pub fn remove_node(&mut self, id: NodeId) {
+        assert!(self.alive[id.0]);
+        let outs: Vec<NodeId> = self.out_edges[id.0].iter().map(|(d, _)| *d).collect();
+        for d in outs {
+            self.in_edges[d.0].retain(|(s, _)| *s != id);
+        }
+        let ins: Vec<NodeId> = self.in_edges[id.0].iter().map(|(s, _)| *s).collect();
+        for s in ins {
+            self.out_edges[s.0].retain(|(d, _)| *d != id);
+        }
+        self.out_edges[id.0].clear();
+        self.in_edges[id.0].clear();
+        self.alive[id.0] = false;
+    }
+
+    /// Live node count.
+    pub fn len(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total allocated slots (dead + alive); `NodeId`s are `< capacity()`.
+    pub fn capacity(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Iterate live node ids.
+    pub fn node_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.alive
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a)
+            .map(|(i, _)| NodeId(i))
+    }
+
+    /// Iterate live nodes.
+    pub fn iter_nodes(&self) -> impl Iterator<Item = &OpNode> {
+        self.node_ids().map(|id| &self.nodes[id.0])
+    }
+
+    /// Successors with edge bytes.
+    pub fn successors(&self, id: NodeId) -> &[(NodeId, u64)] {
+        &self.out_edges[id.0]
+    }
+
+    /// Predecessors with edge bytes.
+    pub fn predecessors(&self, id: NodeId) -> &[(NodeId, u64)] {
+        &self.in_edges[id.0]
+    }
+
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        self.out_edges[id.0].len()
+    }
+
+    pub fn in_degree(&self, id: NodeId) -> usize {
+        self.in_edges[id.0].len()
+    }
+
+    /// Bytes on the edge `src → dst`, if present.
+    pub fn edge_bytes(&self, src: NodeId, dst: NodeId) -> Option<u64> {
+        self.out_edges[src.0]
+            .iter()
+            .find(|(d, _)| *d == dst)
+            .map(|(_, b)| *b)
+    }
+
+    /// All live edges.
+    pub fn edges(&self) -> Vec<Edge> {
+        let mut es = Vec::new();
+        for src in self.node_ids() {
+            for &(dst, bytes) in &self.out_edges[src.0] {
+                es.push(Edge { src, dst, bytes });
+            }
+        }
+        es
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.node_ids().map(|id| self.out_edges[id.0].len()).sum()
+    }
+
+    /// Source nodes (no predecessors).
+    pub fn sources(&self) -> Vec<NodeId> {
+        self.node_ids()
+            .filter(|&id| self.in_edges[id.0].is_empty())
+            .collect()
+    }
+
+    /// Sink nodes (no successors).
+    pub fn sinks(&self) -> Vec<NodeId> {
+        self.node_ids()
+            .filter(|&id| self.out_edges[id.0].is_empty())
+            .collect()
+    }
+
+    /// Sum of compute times over live nodes, seconds.
+    pub fn total_compute(&self) -> f64 {
+        self.iter_nodes().map(|n| n.compute).sum()
+    }
+
+    /// Sum of permanent training memory over live nodes, bytes.
+    pub fn total_permanent_memory(&self) -> u64 {
+        self.iter_nodes().map(|n| n.mem.permanent_training()).sum()
+    }
+
+    /// Largest single-node permanent training memory, bytes.
+    pub fn max_node_memory(&self) -> u64 {
+        self.iter_nodes()
+            .map(|n| n.mem.permanent_training())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Ratio of max edge communication time to min node computation time
+    /// (the paper's ρ; SCT assumption holds iff ρ ≤ 1). `comm` converts
+    /// bytes to seconds.
+    pub fn rho(&self, comm: impl Fn(u64) -> f64) -> f64 {
+        let max_comm = self
+            .edges()
+            .iter()
+            .map(|e| comm(e.bytes))
+            .fold(0.0f64, f64::max);
+        let min_comp = self
+            .iter_nodes()
+            .map(|n| n.compute)
+            .filter(|&c| c > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        if min_comp.is_finite() && min_comp > 0.0 {
+            max_comm / min_comp
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// True if `dst` is reachable from `src` (DFS).
+    pub fn reachable(&self, src: NodeId, dst: NodeId) -> bool {
+        if src == dst {
+            return true;
+        }
+        let mut seen = vec![false; self.capacity()];
+        let mut stack = vec![src];
+        seen[src.0] = true;
+        while let Some(u) = stack.pop() {
+            for &(v, _) in &self.out_edges[u.0] {
+                if v == dst {
+                    return true;
+                }
+                if !seen[v.0] {
+                    seen[v.0] = true;
+                    stack.push(v);
+                }
+            }
+        }
+        false
+    }
+
+    /// Critical (longest) path length, with `comm` charging every edge as
+    /// if endpoints were on different devices. A lower bound on makespan
+    /// with communication; with `|_| 0.0` it is the zero-comm lower bound.
+    pub fn critical_path(&self, comm: impl Fn(u64) -> f64) -> f64 {
+        let order = self.topo_order().expect("critical_path on cyclic graph");
+        let mut dist: Vec<f64> = vec![0.0; self.capacity()];
+        let mut best = 0.0f64;
+        for &u in &order {
+            let finish = dist[u.0] + self.nodes[u.0].compute;
+            best = best.max(finish);
+            for &(v, bytes) in &self.out_edges[u.0] {
+                let cand = finish + comm(bytes);
+                if cand > dist[v.0] {
+                    dist[v.0] = cand;
+                }
+            }
+        }
+        best
+    }
+
+    /// Map of colocation group → member nodes.
+    pub fn colocation_groups(&self) -> BTreeMap<String, Vec<NodeId>> {
+        let mut groups: BTreeMap<String, Vec<NodeId>> = BTreeMap::new();
+        for n in self.iter_nodes() {
+            if let Some(g) = &n.colocation_group {
+                groups.entry(g.clone()).or_default().push(n.id);
+            }
+        }
+        groups
+    }
+
+    /// Number of live forward (non-backward) operators.
+    pub fn forward_count(&self) -> usize {
+        self.iter_nodes().filter(|n| !n.is_backward).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> (OpGraph, [NodeId; 4]) {
+        // a → b → d, a → c → d
+        let mut g = OpGraph::new("diamond");
+        let a = g.add_node("a", OpKind::Input);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::Loss);
+        g.add_edge(a, b, 10);
+        g.add_edge(a, c, 10);
+        g.add_edge(b, d, 20);
+        g.add_edge(c, d, 20);
+        (g, [a, b, c, d])
+    }
+
+    #[test]
+    fn basic_structure() {
+        let (g, [a, b, _c, d]) = diamond();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.edge_count(), 4);
+        assert_eq!(g.sources(), vec![a]);
+        assert_eq!(g.sinks(), vec![d]);
+        assert_eq!(g.out_degree(a), 2);
+        assert_eq!(g.in_degree(d), 2);
+        assert_eq!(g.edge_bytes(a, b), Some(10));
+        assert_eq!(g.edge_bytes(b, a), None);
+    }
+
+    #[test]
+    fn duplicate_edge_merged() {
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::Input);
+        let b = g.add_node("b", OpKind::MatMul);
+        g.add_edge(a, b, 10);
+        g.add_edge(a, b, 30);
+        assert_eq!(g.edge_count(), 1);
+        assert_eq!(g.edge_bytes(a, b), Some(30));
+        assert_eq!(g.predecessors(b), &[(a, 30)]);
+    }
+
+    #[test]
+    fn remove_node_detaches_edges() {
+        let (mut g, [a, b, c, d]) = diamond();
+        g.remove_node(b);
+        assert_eq!(g.len(), 3);
+        assert!(!g.is_alive(b));
+        assert_eq!(g.out_degree(a), 1);
+        assert_eq!(g.in_degree(d), 1);
+        assert!(g.reachable(a, d)); // via c
+        let _ = c;
+    }
+
+    #[test]
+    fn reachability() {
+        let (g, [a, b, c, d]) = diamond();
+        assert!(g.reachable(a, d));
+        assert!(g.reachable(a, a));
+        assert!(!g.reachable(d, a));
+        assert!(!g.reachable(b, c));
+    }
+
+    #[test]
+    fn critical_path_with_comm() {
+        let (mut g, [a, b, c, d]) = diamond();
+        g.node_mut(a).compute = 1.0;
+        g.node_mut(b).compute = 2.0;
+        g.node_mut(c).compute = 5.0;
+        g.node_mut(d).compute = 1.0;
+        // zero comm: a + c + d = 7
+        assert!((g.critical_path(|_| 0.0) - 7.0).abs() < 1e-12);
+        // comm = bytes/10 seconds: a +1 + c +2 + d = 10
+        assert!((g.critical_path(|b| b as f64 / 10.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_spec_table2() {
+        let m = MemorySpec {
+            params: 100,
+            output: 50,
+            param_grad: 100,
+            upstream_grad: 50,
+            temp: 30,
+        };
+        assert_eq!(m.permanent_training(), 250);
+        assert_eq!(m.temporary_training(), 80);
+        assert_eq!(m.permanent_inference(), 100);
+        assert_eq!(m.temporary_inference(), 80);
+    }
+
+    #[test]
+    fn rho_computation() {
+        let (mut g, [a, b, c, d]) = diamond();
+        for id in [a, b, c, d] {
+            g.node_mut(id).compute = 2.0;
+        }
+        // max comm = 20 bytes * 0.05 = 1.0 s; min comp 2.0 → rho = 0.5
+        let rho = g.rho(|bytes| bytes as f64 * 0.05);
+        assert!((rho - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn colocation_groups_collected() {
+        let (mut g, [a, b, _, _]) = diamond();
+        g.node_mut(a).colocation_group = Some("w".into());
+        g.node_mut(b).colocation_group = Some("w".into());
+        let groups = g.colocation_groups();
+        assert_eq!(groups["w"], vec![a, b]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Topological ordering and cycle detection (Kahn's algorithm, paper §2.2).
+
+use super::{NodeId, OpGraph};
+
+impl OpGraph {
+    /// Kahn topological order over live nodes; `None` if the graph has a
+    /// cycle. Ties are broken by node id for determinism.
+    pub fn topo_order(&self) -> Option<Vec<NodeId>> {
+        let cap = self.capacity();
+        let mut indeg = vec![0usize; cap];
+        let mut live = 0usize;
+        for id in self.node_ids() {
+            live += 1;
+            indeg[id.0] = self.in_degree(id);
+        }
+        // BinaryHeap-free deterministic frontier: sorted insertion is
+        // O(n log n) overall using a min-ordered Vec used as a stack over
+        // reverse-sorted ids. For placement-scale graphs a simple
+        // BinaryHeap<Reverse<usize>> is clearer and fast.
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mut frontier: BinaryHeap<Reverse<usize>> = self
+            .node_ids()
+            .filter(|&id| indeg[id.0] == 0)
+            .map(|id| Reverse(id.0))
+            .collect();
+        let mut order = Vec::with_capacity(live);
+        while let Some(Reverse(u)) = frontier.pop() {
+            let u = NodeId(u);
+            order.push(u);
+            for &(v, _) in self.successors(u) {
+                indeg[v.0] -= 1;
+                if indeg[v.0] == 0 {
+                    frontier.push(Reverse(v.0));
+                }
+            }
+        }
+        if order.len() == live {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    /// True if the live graph is acyclic.
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// Position of each node in the topological order (`usize::MAX` for
+    /// dead nodes). Panics on cyclic graphs.
+    pub fn topo_ranks(&self) -> Vec<usize> {
+        let order = self.topo_order().expect("topo_ranks on cyclic graph");
+        let mut ranks = vec![usize::MAX; self.capacity()];
+        for (rank, id) in order.iter().enumerate() {
+            ranks[id.0] = rank;
+        }
+        ranks
+    }
+
+    /// Depth of each node = longest hop-count path from any source.
+    pub fn depths(&self) -> Vec<usize> {
+        let order = self.topo_order().expect("depths on cyclic graph");
+        let mut depth = vec![0usize; self.capacity()];
+        for &u in &order {
+            for &(v, _) in self.successors(u) {
+                depth[v.0] = depth[v.0].max(depth[u.0] + 1);
+            }
+        }
+        depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::{OpGraph, OpKind};
+
+    #[test]
+    fn topo_respects_edges() {
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::Input);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::Loss);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        g.add_edge(b, d, 1);
+        g.add_edge(c, d, 1);
+        let order = g.topo_order().unwrap();
+        let rank = g.topo_ranks();
+        for e in g.edges() {
+            assert!(rank[e.src.0] < rank[e.dst.0]);
+        }
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0], a);
+        assert_eq!(order[3], d);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = OpGraph::new("c");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        g.add_edge(a, b, 1);
+        g.add_edge(b, c, 1);
+        g.add_edge(c, a, 1);
+        assert!(g.topo_order().is_none());
+        assert!(!g.is_acyclic());
+    }
+
+    #[test]
+    fn topo_skips_dead_nodes() {
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::Input);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::Loss);
+        g.add_edge(a, b, 1);
+        g.add_edge(b, c, 1);
+        g.remove_node(b);
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), 2);
+        assert!(!order.contains(&b));
+    }
+
+    #[test]
+    fn depths_longest_path() {
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::Input);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::Loss);
+        g.add_edge(a, d, 1); // short path
+        g.add_edge(a, b, 1);
+        g.add_edge(b, c, 1);
+        g.add_edge(c, d, 1); // long path
+        let depth = g.depths();
+        assert_eq!(depth[a.0], 0);
+        assert_eq!(depth[d.0], 3);
+    }
+}

@@ -1,0 +1,40 @@
+//! # Baechi — fast algorithmic device placement of ML graphs
+//!
+//! Rust + JAX + Pallas reproduction of *"Baechi: Fast Device Placement of
+//! Machine Learning Graphs"* (Jeon et al., CS.DC 2023 / SoCC '20).
+//!
+//! The library is organized bottom-up:
+//!
+//! * [`util`] — in-repo substrates (RNG, JSON, CLI, stats, bench & property
+//!   harnesses) that replace crates unavailable in the offline registry.
+//! * [`graph`] — the annotated operator DAG that every stage consumes.
+//! * [`models`] — synthetic profiled-graph generators matching the paper's
+//!   benchmarks (Inception-V3, GNMT, Transformer) plus small real models.
+//! * [`profile`] — device specs, communication cost model, perturbation.
+//! * [`optimizer`] — colocation / co-placement / cycle-safe fusion /
+//!   forward-only placement (paper §3.1).
+//! * [`lp`] — dense interior-point LP solver + the SCT favorite-child LP.
+//! * [`placer`] — m-TOPO, m-ETF, m-SCT (paper §2).
+//! * [`sim`] — the event-driven Execution Simulator (paper §4.2).
+//! * [`baselines`] — single-device, expert, and RL placers (paper §5).
+//! * [`runtime`] — PJRT client + AOT HLO artifact registry.
+//! * [`exec`] — real multi-device executor + trainer (end-to-end example).
+//! * [`coordinator`] — the full profile→optimize→place→evaluate pipeline.
+//!
+//! See `DESIGN.md` for the per-experiment index and substitution notes.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod exec;
+pub mod graph;
+pub mod lp;
+pub mod models;
+pub mod optimizer;
+pub mod placer;
+pub mod profile;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,299 @@
+//! Primal–dual interior-point LP solver (Mehrotra predictor–corrector).
+//!
+//! Solves standard-form problems
+//!
+//! ```text
+//! min cᵀx   s.t.  A x = b,  x ≥ 0
+//! ```
+//!
+//! replacing the paper's Mosek homogeneous interior-point solver (§4.2).
+//! The constraint matrix is sparse (≤ 4 nonzeros per column for the SCT
+//! LP); the normal matrix `A D Aᵀ` is assembled sparsely and factored
+//! with a dense Cholesky — the same structure commercial IPMs use, minus
+//! sparse elimination ordering.
+
+use super::matrix::{Cholesky, SparseCols};
+
+/// Standard-form LP.
+#[derive(Debug, Clone)]
+pub struct StandardLp {
+    pub a: SparseCols,
+    pub b: Vec<f64>,
+    pub c: Vec<f64>,
+}
+
+/// Solver result.
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub iterations: usize,
+    /// Final complementarity gap μ.
+    pub gap: f64,
+}
+
+/// Solver options.
+#[derive(Debug, Clone, Copy)]
+pub struct IpmOptions {
+    pub max_iters: usize,
+    pub tol: f64,
+}
+
+impl Default for IpmOptions {
+    fn default() -> IpmOptions {
+        IpmOptions {
+            max_iters: 60,
+            // the SCT rounding threshold is 0.1 — 1e-6 is ample (§Perf)
+            tol: 1e-6,
+        }
+    }
+}
+
+/// Solve a standard-form LP. Assumes the problem is feasible and bounded
+/// (the SCT LP always is: x = rounding of any valid schedule).
+pub fn solve(lp: &StandardLp, opts: IpmOptions) -> anyhow::Result<LpSolution> {
+    let m = lp.a.rows;
+    let n = lp.a.cols;
+    anyhow::ensure!(lp.b.len() == m && lp.c.len() == n, "lp shape mismatch");
+    anyhow::ensure!(n > 0 && m > 0, "empty lp");
+
+    // --- Initial point (Mehrotra's heuristic) ---------------------------
+    // x0 = Aᵀ(AAᵀ)⁻¹ b (min-norm primal), y0 = (AAᵀ)⁻¹ A c, s0 = c - Aᵀy0,
+    // then shift into the positive orthant.
+    let ones = vec![1.0; n];
+    let aat = lp.a.normal_matrix(&ones);
+    let reg = 1e-8;
+    let ch = Cholesky::factor(aat, reg)?;
+    let x_tilde = lp.a.matvec_t(&ch.solve(&lp.b));
+    let y0 = ch.solve(&lp.a.matvec(&lp.c));
+    let s_tilde: Vec<f64> = lp
+        .c
+        .iter()
+        .zip(lp.a.matvec_t(&y0))
+        .map(|(c, aty)| c - aty)
+        .collect();
+    let dx = (-x_tilde.iter().cloned().fold(f64::INFINITY, f64::min)).max(0.0) + 0.1;
+    let ds = (-s_tilde.iter().cloned().fold(f64::INFINITY, f64::min)).max(0.0) + 0.1;
+    let mut x: Vec<f64> = x_tilde.iter().map(|v| v + dx).collect();
+    let mut s: Vec<f64> = s_tilde.iter().map(|v| v + ds).collect();
+    let mut y = y0;
+    // second shift for balance
+    let xs: f64 = x.iter().zip(&s).map(|(a, b)| a * b).sum();
+    let sx: f64 = s.iter().sum();
+    let sxx: f64 = x.iter().sum();
+    let dx2 = 0.5 * xs / sx.max(1e-12);
+    let ds2 = 0.5 * xs / sxx.max(1e-12);
+    for v in x.iter_mut() {
+        *v += dx2;
+    }
+    for v in s.iter_mut() {
+        *v += ds2;
+    }
+
+    let bnorm = 1.0 + norm_inf(&lp.b);
+    let cnorm = 1.0 + norm_inf(&lp.c);
+
+    let mut iterations = 0;
+    let mut mu = dot(&x, &s) / n as f64;
+    for iter in 0..opts.max_iters {
+        iterations = iter + 1;
+        // Residuals.
+        let ax = lp.a.matvec(&x);
+        let rp: Vec<f64> = lp.b.iter().zip(&ax).map(|(b, a)| b - a).collect();
+        let aty = lp.a.matvec_t(&y);
+        let rd: Vec<f64> = lp
+            .c
+            .iter()
+            .zip(aty.iter().zip(&s))
+            .map(|(c, (aty, s))| c - aty - s)
+            .collect();
+        mu = dot(&x, &s) / n as f64;
+
+        if norm_inf(&rp) / bnorm < opts.tol
+            && norm_inf(&rd) / cnorm < opts.tol
+            && mu < opts.tol
+        {
+            break;
+        }
+
+        // Normal matrix with D = X S⁻¹.
+        let d: Vec<f64> = x.iter().zip(&s).map(|(x, s)| x / s).collect();
+        let mm = lp.a.normal_matrix(&d);
+        let ch = match Cholesky::factor(mm, 1e-10 * (1.0 + mu)) {
+            Ok(c) => c,
+            Err(_) => break, // numerically done
+        };
+
+        // --- Affine (predictor) step: v = -XSe → S⁻¹v = -x -------------
+        let solve_dir = |sinv_v: &[f64]| -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+            // rhs = rp + A D rd - A (S⁻¹ v)
+            let mut tmp: Vec<f64> = (0..n).map(|j| d[j] * rd[j] - sinv_v[j]).collect();
+            let atmp = lp.a.matvec(&tmp);
+            let rhs: Vec<f64> = rp.iter().zip(&atmp).map(|(r, a)| r + a).collect();
+            let dy = ch.solve(&rhs);
+            let atdy = lp.a.matvec_t(&dy);
+            let dsv: Vec<f64> = (0..n).map(|j| rd[j] - atdy[j]).collect();
+            for j in 0..n {
+                tmp[j] = sinv_v[j] - d[j] * dsv[j];
+            }
+            (tmp, dy, dsv) // (dx, dy, ds)
+        };
+
+        let sinv_v_aff: Vec<f64> = x.iter().map(|xv| -xv).collect();
+        let (dx_aff, _dy_aff, ds_aff) = solve_dir(&sinv_v_aff);
+        let alpha_p_aff = max_step(&x, &dx_aff);
+        let alpha_d_aff = max_step(&s, &ds_aff);
+        let mu_aff = {
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += (x[j] + alpha_p_aff * dx_aff[j]) * (s[j] + alpha_d_aff * ds_aff[j]);
+            }
+            acc / n as f64
+        };
+        let sigma = (mu_aff / mu).powi(3).clamp(0.0, 1.0);
+
+        // --- Corrector step: v = σμe - XSe - ΔXaff ΔSaff e --------------
+        let sinv_v: Vec<f64> = (0..n)
+            .map(|j| (sigma * mu - dx_aff[j] * ds_aff[j]) / s[j] - x[j])
+            .collect();
+        let (dxv, dyv, dsv) = solve_dir(&sinv_v);
+
+        let eta = 0.995_f64.max(1.0 - mu);
+        let alpha_p = (eta * max_step(&x, &dxv)).min(1.0);
+        let alpha_d = (eta * max_step(&s, &dsv)).min(1.0);
+        for j in 0..n {
+            x[j] += alpha_p * dxv[j];
+            s[j] += alpha_d * dsv[j];
+        }
+        for i in 0..m {
+            y[i] += alpha_d * dyv[i];
+        }
+    }
+
+    Ok(LpSolution {
+        objective: dot(&lp.c, &x),
+        x,
+        iterations,
+        gap: mu,
+    })
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn norm_inf(v: &[f64]) -> f64 {
+    v.iter().fold(0.0, |m, x| m.max(x.abs()))
+}
+
+/// Largest α ∈ (0, 1] with v + α d ≥ 0.
+fn max_step(v: &[f64], d: &[f64]) -> f64 {
+    let mut alpha = 1.0f64;
+    for j in 0..v.len() {
+        if d[j] < 0.0 {
+            alpha = alpha.min(-v[j] / d[j]);
+        }
+    }
+    alpha.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Helper: build sparse A from dense rows.
+    fn sparse(rows: &[&[f64]]) -> SparseCols {
+        let m = rows.len();
+        let n = rows[0].len();
+        let mut a = SparseCols::new(m, n);
+        for (i, r) in rows.iter().enumerate() {
+            for (j, &v) in r.iter().enumerate() {
+                a.push(i, j, v);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn solves_textbook_lp() {
+        // max x1 + 2x2 s.t. x1 + x2 ≤ 4, x1 ≤ 2, x2 ≤ 3, x ≥ 0
+        // → min -x1 - 2x2 with slacks. Optimum at x1=1, x2=3 → obj -7.
+        let a = sparse(&[
+            &[1.0, 1.0, 1.0, 0.0, 0.0],
+            &[1.0, 0.0, 0.0, 1.0, 0.0],
+            &[0.0, 1.0, 0.0, 0.0, 1.0],
+        ]);
+        let lp = StandardLp {
+            a,
+            b: vec![4.0, 2.0, 3.0],
+            c: vec![-1.0, -2.0, 0.0, 0.0, 0.0],
+        };
+        let sol = solve(&lp, IpmOptions::default()).unwrap();
+        assert!((sol.objective + 7.0).abs() < 1e-5, "obj {}", sol.objective);
+        assert!((sol.x[0] - 1.0).abs() < 1e-4);
+        assert!((sol.x[1] - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn solves_degenerate_lp() {
+        // min x1 s.t. x1 + x2 = 1, x ≥ 0 → x1 = 0.
+        let a = sparse(&[&[1.0, 1.0]]);
+        let lp = StandardLp {
+            a,
+            b: vec![1.0],
+            c: vec![1.0, 0.0],
+        };
+        let sol = solve(&lp, IpmOptions::default()).unwrap();
+        assert!(sol.objective.abs() < 1e-6);
+        assert!(sol.x[0].abs() < 1e-5);
+        assert!((sol.x[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn random_lps_match_vertex_enumeration() {
+        // Small random LPs: min cᵀx s.t. x1 + ... + xn = 1, x ≥ 0 —
+        // optimum is min(c).
+        let mut rng = crate::util::rng::Pcg::seed(99);
+        for _ in 0..20 {
+            let n = rng.range(2, 8);
+            let mut a = SparseCols::new(1, n);
+            for j in 0..n {
+                a.push(0, j, 1.0);
+            }
+            let c: Vec<f64> = (0..n).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let lp = StandardLp {
+                a,
+                b: vec![1.0],
+                c: c.clone(),
+            };
+            let sol = solve(&lp, IpmOptions::default()).unwrap();
+            let best = c.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(
+                (sol.objective - best).abs() < 1e-5,
+                "obj {} vs best {}",
+                sol.objective,
+                best
+            );
+        }
+    }
+
+    #[test]
+    fn transportation_like_lp() {
+        // min Σ cost·flow, 2 supplies × 2 demands with equality rows.
+        // supplies 3, 2; demands 4, 1; costs [[1, 3], [2, 1]].
+        // Optimal: x11=3, x21=1, x22=1 → 3 + 2 + 1 = 6.
+        let a = sparse(&[
+            &[1.0, 1.0, 0.0, 0.0], // supply 1
+            &[0.0, 0.0, 1.0, 1.0], // supply 2
+            &[1.0, 0.0, 1.0, 0.0], // demand 1
+            &[0.0, 1.0, 0.0, 1.0], // demand 2
+        ]);
+        let lp = StandardLp {
+            a,
+            b: vec![3.0, 2.0, 4.0, 1.0],
+            c: vec![1.0, 3.0, 2.0, 1.0],
+        };
+        let sol = solve(&lp, IpmOptions::default()).unwrap();
+        assert!((sol.objective - 6.0).abs() < 1e-4, "obj {}", sol.objective);
+    }
+}

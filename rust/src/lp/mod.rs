@@ -1,0 +1,15 @@
+//! Linear programming substrate for m-SCT (paper §2.4, §4.2).
+//!
+//! * [`matrix`] — dense matrix, Cholesky, and the sparse constraint
+//!   matrix with `A·D·Aᵀ` normal-matrix assembly.
+//! * [`interior`] — Mehrotra predictor–corrector primal–dual interior
+//!   point solver for standard-form LPs (replaces Mosek).
+//! * [`sct`] — the relaxed SCT favorite-child LP, 0.1-threshold rounding,
+//!   and the greedy max-communication fallback.
+
+pub mod interior;
+pub mod matrix;
+pub mod sct;
+
+pub use interior::{solve, IpmOptions, LpSolution, StandardLp};
+pub use sct::{favorites, FavoriteMethod, Favorites};

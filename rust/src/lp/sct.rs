@@ -1,0 +1,326 @@
+//! The SCT favorite-child LP (paper §2.4).
+//!
+//! Relaxation of the ILP from Hanen & Munier [26]: `x_ij ∈ [0,1]`,
+//! `x_ij = 0` ⇔ `j` is `i`'s favorite child. Solved with the
+//! interior-point method and rounded at threshold 0.1 (paper §4.4: the
+//! default 0.5 rounding produced favorite-child violations; 0.1 removes
+//! them). A greedy max-communication heuristic is provided both as the
+//! large-graph fallback and as an ablation (DESIGN.md §6).
+
+use super::interior::{solve, IpmOptions, StandardLp};
+use super::matrix::SparseCols;
+use crate::graph::{NodeId, OpGraph};
+use crate::profile::CommModel;
+
+/// Favorite child/parent assignment (at most one each, paper §2.4).
+#[derive(Debug, Clone, Default)]
+pub struct Favorites {
+    /// fav_child[i] = Some(j): prefer scheduling j on i's device.
+    pub fav_child: Vec<Option<NodeId>>,
+    /// fav_parent[j] = Some(i).
+    pub fav_parent: Vec<Option<NodeId>>,
+    /// Whether the LP path was used (vs the heuristic fallback).
+    pub used_lp: bool,
+    /// LP iterations (0 for heuristic).
+    pub lp_iterations: usize,
+}
+
+impl Favorites {
+    pub fn empty(cap: usize) -> Favorites {
+        Favorites {
+            fav_child: vec![None; cap],
+            fav_parent: vec![None; cap],
+            used_lp: false,
+            lp_iterations: 0,
+        }
+    }
+
+    pub fn is_favorite_edge(&self, i: NodeId, j: NodeId) -> bool {
+        self.fav_child[i.0] == Some(j)
+    }
+}
+
+/// Favorite-child selection method.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FavoriteMethod {
+    /// Solve the relaxed LP (paper default).
+    Lp,
+    /// Greedy max-communication matching (fallback/ablation).
+    Heuristic,
+    /// LP when the graph has at most this many edges, else heuristic.
+    Auto { edge_limit: usize },
+}
+
+/// Compute favorite children for a graph.
+pub fn favorites(graph: &OpGraph, comm: &CommModel, method: FavoriteMethod) -> Favorites {
+    let edges = graph.edge_count();
+    match method {
+        FavoriteMethod::Heuristic => heuristic_favorites(graph, comm),
+        FavoriteMethod::Lp => lp_favorites(graph, comm)
+            .unwrap_or_else(|_| heuristic_favorites(graph, comm)),
+        FavoriteMethod::Auto { edge_limit } => {
+            if edges <= edge_limit {
+                lp_favorites(graph, comm).unwrap_or_else(|_| heuristic_favorites(graph, comm))
+            } else {
+                heuristic_favorites(graph, comm)
+            }
+        }
+    }
+}
+
+/// Greedy matching on edges by descending communication time: each node
+/// gets at most one favorite child and is the favorite child of at most
+/// one parent.
+pub fn heuristic_favorites(graph: &OpGraph, comm: &CommModel) -> Favorites {
+    let mut fav = Favorites::empty(graph.capacity());
+    let mut edges = graph.edges();
+    edges.sort_by(|a, b| {
+        comm.time(b.bytes)
+            .partial_cmp(&comm.time(a.bytes))
+            .unwrap()
+            .then(a.src.cmp(&b.src))
+            .then(a.dst.cmp(&b.dst))
+    });
+    for e in edges {
+        if fav.fav_child[e.src.0].is_none() && fav.fav_parent[e.dst.0].is_none() {
+            fav.fav_child[e.src.0] = Some(e.dst);
+            fav.fav_parent[e.dst.0] = Some(e.src);
+        }
+    }
+    fav
+}
+
+/// Build and solve the relaxed SCT LP; round x_ij at `0.1`.
+///
+/// Standard-form layout (columns):
+/// `[ s_0..s_{V-1} | w | x_e (per edge) | slacks... ]`
+///
+/// Rows:
+/// 1. makespan:    s_i + k_i ≤ w                       (V rows)
+/// 2. precedence:  s_i + k_i + c_ij·x_ij ≤ s_j         (E rows)
+/// 3. fav child:   Σ_j x_ij ≥ out(i) − 1               (rows where out ≥ 2)
+/// 4. fav parent:  Σ_i x_ij ≥ in(j) − 1                (rows where in ≥ 2)
+/// 5. bound:       x_ij ≤ 1                            (E rows)
+pub fn lp_favorites(graph: &OpGraph, comm: &CommModel) -> anyhow::Result<Favorites> {
+    let ids: Vec<NodeId> = graph.node_ids().collect();
+    anyhow::ensure!(!ids.is_empty(), "empty graph");
+    let node_col: std::collections::BTreeMap<NodeId, usize> =
+        ids.iter().enumerate().map(|(k, &id)| (id, k)).collect();
+    let nv = ids.len();
+    let edges = graph.edges();
+    let ne = edges.len();
+    anyhow::ensure!(ne > 0, "no edges");
+
+    let w_col = nv;
+    let x_col = |e: usize| nv + 1 + e;
+
+    // Count rows.
+    let fav_child_rows: Vec<NodeId> = ids
+        .iter()
+        .copied()
+        .filter(|&i| graph.out_degree(i) >= 2)
+        .collect();
+    let fav_parent_rows: Vec<NodeId> = ids
+        .iter()
+        .copied()
+        .filter(|&j| graph.in_degree(j) >= 2)
+        .collect();
+    let m = nv + ne + fav_child_rows.len() + fav_parent_rows.len() + ne;
+    let n_structural = nv + 1 + ne;
+    let n = n_structural + m; // one slack per row
+
+    let mut a = SparseCols::new(m, n);
+    let mut b = vec![0.0; m];
+    let mut c = vec![0.0; n];
+    c[w_col] = 1.0; // min w
+
+    // Scale times so coefficients are O(1) for numerical stability.
+    let tmax = ids
+        .iter()
+        .map(|&i| graph.node(i).compute)
+        .fold(0.0f64, f64::max)
+        .max(edges.iter().map(|e| comm.time(e.bytes)).fold(0.0, f64::max))
+        .max(1e-9);
+
+    let mut row = 0;
+    // 1. makespan rows: s_i - w ≤ -k_i  →  s_i - w + slack = -k_i
+    // (negate to keep b ≥ 0: -s_i + w - k_i ≥ 0 → w - s_i - slack = k_i)
+    for &i in &ids {
+        a.push(row, w_col, 1.0);
+        a.push(row, node_col[&i], -1.0);
+        a.push(row, n_structural + row, -1.0);
+        b[row] = graph.node(i).compute / tmax;
+        row += 1;
+    }
+    // 2. precedence: s_j - s_i - c_ij x_ij - slack = k_i
+    for (e_idx, e) in edges.iter().enumerate() {
+        a.push(row, node_col[&e.dst], 1.0);
+        a.push(row, node_col[&e.src], -1.0);
+        a.push(row, x_col(e_idx), -comm.time(e.bytes) / tmax);
+        a.push(row, n_structural + row, -1.0);
+        b[row] = graph.node(e.src).compute / tmax;
+        row += 1;
+    }
+    // 3. favorite child: Σ x_ij - slack = out(i) - 1
+    for &i in &fav_child_rows {
+        for (e_idx, e) in edges.iter().enumerate() {
+            if e.src == i {
+                a.push(row, x_col(e_idx), 1.0);
+            }
+        }
+        a.push(row, n_structural + row, -1.0);
+        b[row] = graph.out_degree(i) as f64 - 1.0;
+        row += 1;
+    }
+    // 4. favorite parent: Σ x_ji - slack = in(j) - 1
+    for &j in &fav_parent_rows {
+        for (e_idx, e) in edges.iter().enumerate() {
+            if e.dst == j {
+                a.push(row, x_col(e_idx), 1.0);
+            }
+        }
+        a.push(row, n_structural + row, -1.0);
+        b[row] = graph.in_degree(j) as f64 - 1.0;
+        row += 1;
+    }
+    // 5. x_ij + slack = 1
+    for e_idx in 0..ne {
+        a.push(row, x_col(e_idx), 1.0);
+        a.push(row, n_structural + row, 1.0);
+        b[row] = 1.0;
+        row += 1;
+    }
+    debug_assert_eq!(row, m);
+
+    let sol = solve(&StandardLp { a, b, c }, IpmOptions::default())?;
+
+    // Round: favorite edge iff x < 0.1; enforce uniqueness by picking the
+    // smallest x per source and per destination.
+    let mut fav = Favorites::empty(graph.capacity());
+    fav.used_lp = true;
+    fav.lp_iterations = sol.iterations;
+    let mut candidates: Vec<(f64, NodeId, NodeId)> = edges
+        .iter()
+        .enumerate()
+        .filter_map(|(e_idx, e)| {
+            let xv = sol.x[x_col(e_idx)];
+            if xv < 0.1 {
+                Some((xv, e.src, e.dst))
+            } else {
+                None
+            }
+        })
+        .collect();
+    candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (_, src, dst) in candidates {
+        if fav.fav_child[src.0].is_none() && fav.fav_parent[dst.0].is_none() {
+            fav.fav_child[src.0] = Some(dst);
+            fav.fav_parent[dst.0] = Some(src);
+        }
+    }
+    Ok(fav)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpGraph, OpKind};
+
+    /// Chain a→b→c: every edge should be a favorite edge (no contention).
+    #[test]
+    fn chain_all_favorites() {
+        let mut g = OpGraph::new("chain");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        for id in [a, b, c] {
+            g.node_mut(id).compute = 1.0;
+        }
+        g.add_edge(a, b, 1000);
+        g.add_edge(b, c, 1000);
+        let comm = CommModel::new(0.0, 1e3); // 1 s per edge (SCT-ish ρ=1)
+        let fav = lp_favorites(&g, &comm).unwrap();
+        assert!(fav.used_lp);
+        assert_eq!(fav.fav_child[a.0], Some(b));
+        assert_eq!(fav.fav_child[b.0], Some(c));
+        assert_eq!(fav.fav_parent[c.0], Some(b));
+    }
+
+    /// Fork a→{b,c}: exactly one of b,c is a's favorite child, and the LP
+    /// should pick the one on the critical path (heavier subtree).
+    #[test]
+    fn fork_picks_single_favorite() {
+        let mut g = OpGraph::new("fork");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        g.node_mut(a).compute = 1.0;
+        g.node_mut(b).compute = 5.0; // heavy child
+        g.node_mut(c).compute = 1.0;
+        g.add_edge(a, b, 1000);
+        g.add_edge(a, c, 1000);
+        let comm = CommModel::new(0.0, 1e3);
+        let fav = lp_favorites(&g, &comm).unwrap();
+        let chosen = fav.fav_child[a.0].expect("one favorite");
+        assert_eq!(chosen, b, "LP should favor the critical-path child");
+        // uniqueness
+        let n_favs = [b, c]
+            .iter()
+            .filter(|&&x| fav.fav_child[a.0] == Some(x))
+            .count();
+        assert_eq!(n_favs, 1);
+    }
+
+    #[test]
+    fn heuristic_respects_uniqueness() {
+        let mut g = OpGraph::new("x");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::MatMul);
+        g.add_edge(a, c, 100);
+        g.add_edge(b, c, 200);
+        g.add_edge(a, d, 50);
+        let comm = CommModel::new(0.0, 1e3);
+        let fav = heuristic_favorites(&g, &comm);
+        // b→c is heaviest: b's favorite child = c; then a can't take c,
+        // falls back to d.
+        assert_eq!(fav.fav_child[b.0], Some(c));
+        assert_eq!(fav.fav_child[a.0], Some(d));
+        assert_eq!(fav.fav_parent[c.0], Some(b));
+    }
+
+    #[test]
+    fn auto_switches_on_size() {
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        g.node_mut(a).compute = 1.0;
+        g.node_mut(b).compute = 1.0;
+        g.add_edge(a, b, 100);
+        let comm = CommModel::new(0.0, 1e3);
+        let lp = favorites(&g, &comm, FavoriteMethod::Auto { edge_limit: 10 });
+        assert!(lp.used_lp);
+        let heur = favorites(&g, &comm, FavoriteMethod::Auto { edge_limit: 0 });
+        assert!(!heur.used_lp);
+        assert_eq!(lp.fav_child[a.0], heur.fav_child[a.0]);
+    }
+
+    /// LP on a model-scale (fused transformer) graph terminates and
+    /// produces a consistent assignment.
+    #[test]
+    fn lp_on_fused_transformer() {
+        let g = crate::models::transformer::transformer(
+            crate::models::transformer::TransformerConfig::paper(64),
+        );
+        let opt = crate::optimizer::optimize(&g, &crate::optimizer::OptConfig::full());
+        let comm = CommModel::pcie_via_host();
+        let fav = lp_favorites(&opt.graph, &comm).unwrap();
+        // consistency: fav_child/fav_parent are inverse partial maps
+        for i in opt.graph.node_ids() {
+            if let Some(j) = fav.fav_child[i.0] {
+                assert_eq!(fav.fav_parent[j.0], Some(i));
+            }
+        }
+    }
+}

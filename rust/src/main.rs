@@ -1,0 +1,276 @@
+//! Baechi CLI — the Layer-3 leader entrypoint.
+//!
+//! ```text
+//! baechi place   --model gnmt:128:40 --placer m-sct [--memory-fraction 0.3]
+//! baechi compare --model transformer:64
+//! baechi e2e     --steps 200 --devices 2 [--placer m-sct]
+//! baechi info    --model inception:32
+//! ```
+
+use baechi::coordinator::{run, BaechiConfig, PlacerKind};
+use baechi::models::Benchmark;
+use baechi::util::cli::{Args, OptSpec};
+use baechi::util::table::{fmt_bytes, fmt_secs, Table};
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec {
+            name: "model",
+            help: "benchmark: inception[:bs] | gnmt[:bs[:len]] | transformer[:bs] | linreg | mlp",
+            takes_value: true,
+            default: Some("transformer:64"),
+        },
+        OptSpec {
+            name: "placer",
+            help: "single | expert | m-topo | m-etf | m-sct | m-sct-heur | rl[:episodes]",
+            takes_value: true,
+            default: Some("m-sct"),
+        },
+        OptSpec {
+            name: "devices",
+            help: "number of devices",
+            takes_value: true,
+            default: Some("4"),
+        },
+        OptSpec {
+            name: "memory-gb",
+            help: "memory per device in GiB",
+            takes_value: true,
+            default: Some("8"),
+        },
+        OptSpec {
+            name: "memory-fraction",
+            help: "fraction of device memory available (Table 5)",
+            takes_value: true,
+            default: Some("1.0"),
+        },
+        OptSpec {
+            name: "steps",
+            help: "e2e: training steps",
+            takes_value: true,
+            default: Some("200"),
+        },
+        OptSpec {
+            name: "lr",
+            help: "e2e: learning rate",
+            takes_value: true,
+            default: Some("0.05"),
+        },
+        OptSpec {
+            name: "json",
+            help: "emit the report as JSON",
+            takes_value: false,
+            default: None,
+        },
+        OptSpec {
+            name: "no-opt",
+            help: "disable the graph optimizer (Table 6 ablation)",
+            takes_value: false,
+            default: None,
+        },
+    ]
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::parse(&specs())?;
+    let cmd = args
+        .positional()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("compare");
+    match cmd {
+        "place" => cmd_place(&args),
+        "compare" => cmd_compare(&args),
+        "e2e" => cmd_e2e(&args),
+        "info" => cmd_info(&args),
+        other => anyhow::bail!(
+            "unknown command '{other}' (place|compare|e2e|info)\n{}",
+            args.usage()
+        ),
+    }
+}
+
+fn config_from(args: &Args) -> anyhow::Result<BaechiConfig> {
+    let benchmark = Benchmark::parse(&args.get_or("model", "transformer:64"))?;
+    let placer = PlacerKind::parse(&args.get_or("placer", "m-sct"))?;
+    let mut cfg = BaechiConfig::paper_default(benchmark, placer);
+    cfg.devices = args.get_usize("devices", 4)?;
+    cfg.device_memory = (args.get_f64("memory-gb", 8.0)? * (1u64 << 30) as f64) as u64;
+    cfg.memory_fraction = args.get_f64("memory-fraction", 1.0)?;
+    if args.has("no-opt") {
+        cfg.opt = baechi::optimizer::OptConfig::none();
+    }
+    Ok(cfg)
+}
+
+fn cmd_place(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let report = run(&cfg)?;
+    if args.has("json") {
+        println!("{}", report.to_json().pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!("placement: {} via {}", report.benchmark, report.placer),
+        &["metric", "value"],
+    );
+    t.row_strs(&["ops (original)", &report.original_ops.to_string()]);
+    t.row_strs(&["ops (placed)", &report.placed_ops.to_string()]);
+    t.row_strs(&["placement time", &fmt_secs(report.placement_time)]);
+    t.row_strs(&["predicted makespan", &fmt_secs(report.predicted_makespan)]);
+    match report.step_time() {
+        Some(s) => t.row_strs(&["simulated step time", &fmt_secs(s)]),
+        None => t.row_strs(&["simulated step time", "OOM"]),
+    };
+    t.row_strs(&["devices used", &report.devices_used.to_string()]);
+    for (i, &p) in report.peak_memory.iter().enumerate() {
+        t.row_strs(&[&format!("peak memory gpu{i}"), &fmt_bytes(p)]);
+    }
+    if let Some(oom) = &report.sim.oom {
+        t.row_strs(&["OOM detail", &oom.to_string()]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let base = config_from(args)?;
+    let mut t = Table::new(
+        &format!(
+            "compare: {} on {} devices ({} each, fraction {})",
+            base.benchmark.name(),
+            base.devices,
+            fmt_bytes(base.device_memory),
+            base.memory_fraction
+        ),
+        &["placer", "placement time", "step time", "devices used"],
+    );
+    for placer in [
+        PlacerKind::Single,
+        PlacerKind::Expert,
+        PlacerKind::MTopo,
+        PlacerKind::MEtf,
+        PlacerKind::MSct,
+    ] {
+        let cfg = BaechiConfig {
+            placer,
+            ..base.clone()
+        };
+        match run(&cfg) {
+            Ok(r) => {
+                t.row(&[
+                    r.placer.clone(),
+                    fmt_secs(r.placement_time),
+                    r.step_time().map(fmt_secs).unwrap_or_else(|| "OOM".into()),
+                    r.devices_used.to_string(),
+                ]);
+            }
+            Err(e) => {
+                t.row(&[
+                    placer.name().to_string(),
+                    "-".into(),
+                    format!("placement failed: {e}"),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
+    use baechi::exec::plan::MlpPlan;
+    use baechi::exec::trainer::{train_distributed, train_oracle, ModelMeta, TrainConfig};
+
+    let devices = args.get_usize("devices", 2)?;
+    let steps = args.get_usize("steps", 200)?;
+    let lr = args.get_f64("lr", 0.05)? as f32;
+    let placer = PlacerKind::parse(&args.get_or("placer", "m-sct"))?;
+
+    // Place the MLP module graph on memory-tight devices so the placer
+    // must genuinely split it.
+    let benchmark = Benchmark::Mlp;
+    let graph = benchmark.graph();
+    let cluster = baechi::profile::Cluster::homogeneous(
+        devices,
+        320 << 10, // tight: the model cannot fit one device
+        baechi::profile::CommModel::pcie_via_host(),
+    );
+    let opt = baechi::optimizer::optimize(&graph, &baechi::optimizer::OptConfig::default());
+    let placement = placer.build(benchmark).place(&opt.graph, &cluster)?;
+    let full = baechi::optimizer::expand_placement(&graph, &opt, &placement.device_of);
+    let placement = baechi::placer::Placement {
+        device_of: full,
+        ..placement
+    };
+    let meta = ModelMeta::load(&baechi::runtime::artifact::ArtifactRegistry::default_dir())?;
+    let plan = MlpPlan::from_placement(&graph, &placement, devices, meta.n_layers())?;
+    println!(
+        "placement ({}): layers → {:?}, loss → gpu{}",
+        placement.algorithm, plan.layer_dev, plan.loss_dev
+    );
+
+    let cfg = TrainConfig {
+        steps,
+        lr,
+        ..Default::default()
+    };
+    let report = train_distributed(&plan, &cfg)?;
+    println!(
+        "distributed: {} steps in {:.2}s ({:.1} steps/s) across {} devices",
+        steps, report.wall_time, report.steps_per_sec, devices
+    );
+    for (s, l) in report.losses.iter().enumerate() {
+        if s % (steps / 10).max(1) == 0 || s == steps - 1 {
+            println!("  step {s:>5}  loss {l:.4}");
+        }
+    }
+    // Oracle check on a prefix.
+    let oracle_cfg = TrainConfig {
+        steps: steps.min(10),
+        lr,
+        ..Default::default()
+    };
+    let oracle = train_oracle(&oracle_cfg)?;
+    for (s, (a, b)) in report.losses.iter().zip(&oracle).enumerate() {
+        anyhow::ensure!(
+            (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+            "divergence at step {s}: {a} vs oracle {b}"
+        );
+    }
+    println!(
+        "oracle check: first {} steps match the fused train_step",
+        oracle.len()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let g = cfg.benchmark.graph();
+    let opt = baechi::optimizer::optimize(&g, &cfg.opt);
+    let mut t = Table::new(&format!("graph: {}", g.name), &["metric", "value"]);
+    t.row_strs(&["ops", &g.len().to_string()]);
+    t.row_strs(&["edges", &g.edge_count().to_string()]);
+    t.row_strs(&["ops after optimization", &opt.graph.len().to_string()]);
+    t.row_strs(&["total compute", &fmt_secs(g.total_compute())]);
+    t.row_strs(&[
+        "critical path (no comm)",
+        &fmt_secs(g.critical_path(|_| 0.0)),
+    ]);
+    t.row_strs(&["permanent memory", &fmt_bytes(g.total_permanent_memory())]);
+    t.row_strs(&[
+        "rho (comm/compute)",
+        &format!("{:.2}", g.rho(|b| cfg.comm.time(b))),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,486 @@
+//! Shared machinery for the synthetic benchmark-graph generators.
+//!
+//! The paper profiles real TensorFlow/PyTorch graphs; our substitution
+//! (DESIGN.md §2) generates graphs with the same *structure* (module DAG,
+//! op expansion granularity, colocation/co-placement groups, fwd/bwd
+//! pairing) and *cost distributions* (an analytic GPU cost model with
+//! per-op launch overhead, so unoptimized graphs have the paper's ρ ≫ 1).
+//!
+//! A model is declared as a DAG of **modules** (PyTorch granularity); each
+//! module expands into a chain of **micro-ops** (TensorFlow granularity):
+//! variable ops (carrying parameters, colocation-constrained with their
+//! ApplyGrad), a forward compute chain, a mirrored backward chain, and an
+//! optimizer op. [`ModelBuilder::build_training_graph`] materializes the
+//! full fwd+bwd operator graph.
+
+use crate::graph::{MemorySpec, NodeId, OpGraph, OpKind};
+
+/// Analytic device cost model (GTX-2080-like, DESIGN.md §2).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Sustained FLOP/s for large dense ops.
+    pub flops_per_sec: f64,
+    /// Fixed per-kernel launch overhead, seconds. This is what makes
+    /// thousands of tiny TF ops expensive and drives the paper's
+    /// optimization gains (Table 6).
+    pub launch_overhead: f64,
+    /// Sustained memory bandwidth for elementwise ops, bytes/s.
+    pub mem_bw: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> CostModel {
+        CostModel {
+            flops_per_sec: 6.0e12,
+            launch_overhead: 8.0e-6,
+            mem_bw: 350.0e9,
+        }
+    }
+}
+
+impl CostModel {
+    /// Time for a dense op of `flops` touching `bytes` of memory.
+    pub fn op_time(&self, flops: f64, bytes: u64) -> f64 {
+        self.launch_overhead + (flops / self.flops_per_sec).max(bytes as f64 / self.mem_bw)
+    }
+}
+
+/// Declarative module description.
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub kind: OpKind,
+    /// Number of micro-ops the forward compute expands into (TF
+    /// granularity). The backward chain mirrors this count.
+    pub micro_ops: usize,
+    /// Number of variable (parameter) ops.
+    pub var_ops: usize,
+    /// Forward FLOPs of the whole module.
+    pub flops: f64,
+    /// Parameter bytes (split across variable ops).
+    pub params: u64,
+    /// Output tensor bytes (what successors receive).
+    pub output: u64,
+    /// Scratch bytes used while computing.
+    pub temp: u64,
+}
+
+impl ModuleSpec {
+    pub fn new(name: &str, kind: OpKind) -> ModuleSpec {
+        ModuleSpec {
+            name: name.to_string(),
+            kind,
+            micro_ops: 1,
+            var_ops: 0,
+            flops: 0.0,
+            params: 0,
+            output: 0,
+            temp: 0,
+        }
+    }
+
+    pub fn micro(mut self, n: usize) -> Self {
+        self.micro_ops = n.max(1);
+        self
+    }
+    pub fn vars(mut self, n: usize) -> Self {
+        self.var_ops = n;
+        self
+    }
+    pub fn flops(mut self, f: f64) -> Self {
+        self.flops = f;
+        self
+    }
+    pub fn params(mut self, b: u64) -> Self {
+        self.params = b;
+        self
+    }
+    pub fn output(mut self, b: u64) -> Self {
+        self.output = b;
+        self
+    }
+    pub fn temp(mut self, b: u64) -> Self {
+        self.temp = b;
+        self
+    }
+}
+
+/// A materialized module: the op ids it expanded into.
+#[derive(Debug, Clone)]
+pub struct ModuleInst {
+    pub spec: ModuleSpec,
+    /// First forward compute op (receives inputs).
+    pub fwd_in: NodeId,
+    /// Last forward compute op (produces the module output).
+    pub fwd_out: NodeId,
+    /// All forward compute ops, in chain order.
+    pub fwd_ops: Vec<NodeId>,
+    /// Variable ops.
+    pub var_ops: Vec<NodeId>,
+    /// Backward ops (filled by `build_training_graph`), reverse order.
+    pub bwd_ops: Vec<NodeId>,
+    /// Gradient output op of the backward chain (feeds deps' backward).
+    pub bwd_out: Option<NodeId>,
+}
+
+/// Module-DAG builder that expands to the operator graph.
+pub struct ModelBuilder {
+    pub graph: OpGraph,
+    pub cost: CostModel,
+    modules: Vec<ModuleInst>,
+    /// Module-level edges (dep → consumer, forward bytes).
+    edges: Vec<(usize, usize, u64)>,
+}
+
+impl ModelBuilder {
+    pub fn new(name: &str, cost: CostModel) -> ModelBuilder {
+        ModelBuilder {
+            graph: OpGraph::new(name),
+            cost,
+            modules: Vec::new(),
+            edges: Vec::new(),
+        }
+    }
+
+    pub fn module_count(&self) -> usize {
+        self.modules.len()
+    }
+
+    pub fn module(&self, idx: usize) -> &ModuleInst {
+        &self.modules[idx]
+    }
+
+    /// Expand a module and wire it after its dependencies. Returns the
+    /// module index.
+    pub fn add_module(&mut self, spec: ModuleSpec, deps: &[usize]) -> usize {
+        let deps: Vec<(usize, Option<u64>)> = deps.iter().map(|&d| (d, None)).collect();
+        self.add_module_edges(spec, &deps)
+    }
+
+    /// Like [`Self::add_module`], but each dependency may override the
+    /// bytes its edge carries — e.g. an unrolled cell consumes only its
+    /// time-step *slice* of the embedding output, not the whole tensor.
+    pub fn add_module_edges(&mut self, spec: ModuleSpec, deps: &[(usize, Option<u64>)]) -> usize {
+        let n_micro = spec.micro_ops;
+        let per_op_flops = spec.flops / n_micro as f64;
+        // Intermediate micro-op outputs are a fraction of the module
+        // output (bias/BN/activation stages reuse or slim the tensor);
+        // the final op carries the real output tensor. The ratio is
+        // calibrated so training peaks land in the paper's regime
+        // (Inception bs32 ≈ 2.5–4 GiB, bs64 < 8 GiB on one device).
+        let inter_bytes = (spec.output / 16).max(4);
+        let per_op_temp = spec.temp / n_micro as u64;
+
+        // Variable ops: hold parameters, colocation-constrained (§3.1.1).
+        let mut var_ids = Vec::new();
+        for v in 0..spec.var_ops {
+            let id = self
+                .graph
+                .add_node(&format!("{}/var{}", spec.name, v), OpKind::Variable);
+            let n = self.graph.node_mut(id);
+            let share = spec.params / spec.var_ops as u64;
+            n.mem = MemorySpec {
+                params: share,
+                param_grad: share,
+                ..Default::default()
+            };
+            n.compute = 1.0e-6; // variable read is nearly free
+            n.output_bytes = share;
+            n.colocation_group = Some(format!("{}/colo{}", spec.name, v));
+            n.coplacement_group = Some(spec.name.clone());
+            var_ids.push(id);
+        }
+
+        // Forward compute chain.
+        let mut fwd_ops = Vec::new();
+        for i in 0..n_micro {
+            let last = i == n_micro - 1;
+            let id = self
+                .graph
+                .add_node(&format!("{}/fwd{}", spec.name, i), spec.kind.clone());
+            let out_bytes = if last { spec.output } else { inter_bytes };
+            let n = self.graph.node_mut(id);
+            n.compute = self.cost.op_time(per_op_flops, out_bytes + per_op_temp);
+            n.mem = MemorySpec {
+                output: out_bytes,
+                upstream_grad: out_bytes,
+                temp: per_op_temp,
+                ..Default::default()
+            };
+            n.output_bytes = out_bytes;
+            n.coplacement_group = Some(spec.name.clone());
+            if let Some(&prev) = fwd_ops.last() {
+                self.graph.add_edge(prev, id, inter_bytes);
+            }
+            fwd_ops.push(id);
+        }
+        // Wire variables into the first compute op.
+        for &v in &var_ids {
+            let bytes = self.graph.node(v).output_bytes;
+            self.graph.add_edge(v, fwd_ops[0], bytes);
+        }
+        // Wire dependencies.
+        for &(d, byte_override) in deps {
+            let dep_out = self.modules[d].fwd_out;
+            let bytes = byte_override.unwrap_or(self.graph.node(dep_out).output_bytes);
+            self.graph.add_edge(dep_out, fwd_ops[0], bytes);
+            self.edges.push((d, self.modules.len(), bytes));
+        }
+
+        self.modules.push(ModuleInst {
+            spec,
+            fwd_in: fwd_ops[0],
+            fwd_out: *fwd_ops.last().unwrap(),
+            fwd_ops,
+            var_ops: var_ids,
+            bwd_ops: Vec::new(),
+            bwd_out: None,
+        });
+        self.modules.len() - 1
+    }
+
+    /// Convenience: input module (no params, no backward).
+    pub fn add_input(&mut self, name: &str, bytes: u64) -> usize {
+        self.add_module(
+            ModuleSpec::new(name, OpKind::Input)
+                .output(bytes)
+                .flops(0.0),
+            &[],
+        )
+    }
+
+    /// Generate the mirrored backward graph plus optimizer ops, producing
+    /// the full training graph. `loss_module` must be the unique sink.
+    ///
+    /// Backward of module `m` consumes the upstream gradients from the
+    /// backward of every consumer of `m`, plus `m`'s forward output
+    /// (residuals); each backward micro-op is tagged with `forward_of` its
+    /// mirrored forward op for the co-placement heuristic (§3.1.2). Each
+    /// variable gets an ApplyGrad op colocation-constrained with it
+    /// (§3.1.1) fed by the module's backward chain.
+    pub fn build_training_graph(mut self, loss_module: usize) -> OpGraph {
+        // Consumers per module, with the forward bytes each consumed.
+        let mut consumers: Vec<Vec<(usize, u64)>> = vec![Vec::new(); self.modules.len()];
+        for &(dep, cons, bytes) in &self.edges {
+            consumers[dep].push((cons, bytes));
+        }
+        // Module-level reverse topological order = reverse of insertion
+        // order (modules can only depend on earlier modules).
+        let order: Vec<usize> = (0..self.modules.len()).rev().collect();
+
+        for &mi in &order {
+            let (spec, fwd_ops, var_ids, fwd_out) = {
+                let m = &self.modules[mi];
+                (
+                    m.spec.clone(),
+                    m.fwd_ops.clone(),
+                    m.var_ops.clone(),
+                    m.fwd_out,
+                )
+            };
+            if matches!(spec.kind, OpKind::Input) {
+                continue; // inputs need no gradient
+            }
+            let n_micro = fwd_ops.len();
+            // Backward flops ≈ 2× forward (dX and dW matmuls).
+            let per_op_flops = 2.0 * spec.flops / n_micro as f64;
+            let grad_bytes = spec.output.max(4);
+            let inter_bytes = (grad_bytes / 4).max(4);
+
+            let mut bwd_ops = Vec::new();
+            for i in 0..n_micro {
+                let fwd_match = fwd_ops[n_micro - 1 - i];
+                let id = self
+                    .graph
+                    .add_node(&format!("{}/bwd{}", spec.name, i), spec.kind.clone());
+                let out_bytes = if i == n_micro - 1 {
+                    // gradient w.r.t. module input
+                    grad_bytes
+                } else {
+                    inter_bytes
+                };
+                let n = self.graph.node_mut(id);
+                n.compute = self.cost.op_time(per_op_flops, out_bytes);
+                n.mem = MemorySpec {
+                    upstream_grad: out_bytes,
+                    temp: spec.temp / n_micro as u64,
+                    ..Default::default()
+                };
+                n.output_bytes = out_bytes;
+                n.is_backward = true;
+                n.forward_of = Some(fwd_match);
+                n.coplacement_group = Some(spec.name.clone());
+                if let Some(&prev) = bwd_ops.last() {
+                    self.graph.add_edge(prev, id, inter_bytes);
+                }
+                bwd_ops.push(id);
+            }
+            // Residual edges: every forward micro-op's activation is
+            // consumed by its mirrored backward op, so activations stay
+            // resident until the backward pass reaches them — the memory
+            // behaviour that makes training peaks several × inference
+            // peaks (paper Table 2 / §4.2).
+            for (i, &b) in bwd_ops.iter().enumerate() {
+                let fwd_match = fwd_ops[n_micro - 1 - i];
+                let bytes = self.graph.node(fwd_match).output_bytes;
+                self.graph.add_edge(fwd_match, b, bytes);
+            }
+            let _ = fwd_out;
+            // Upstream gradients from consumers' backward chains carry
+            // ∂L/∂out_m — sized by *this* module's output, not by the
+            // consumer's gradient (a classifier's bwd sends each LSTM
+            // cell a hidden-sized slice, not the logits-sized tensor).
+            // The loss module's backward starts from its own forward.
+            if mi != loss_module {
+                // Each consumer's backward returns the gradient of what
+                // it consumed — sized by the *forward edge*. Variable
+                // modules (shared weights read by many unrolled
+                // consumers) receive pre-aggregated gradient shards
+                // instead: TF reduces each device's dW contributions
+                // with a local AddN before shipping, so the wire carries
+                // ≈ one weight tensor total, not one per consumer.
+                let n_consumers = consumers[mi].len().max(1) as u64;
+                for &(c, fwd_bytes) in &consumers[mi] {
+                    if let Some(cb) = self.modules[c].bwd_out {
+                        let grad_bytes = if matches!(spec.kind, OpKind::Variable) {
+                            (fwd_bytes / n_consumers).max(4)
+                        } else {
+                            fwd_bytes.max(4)
+                        };
+                        self.graph.add_edge(cb, bwd_ops[0], grad_bytes);
+                    }
+                }
+            }
+            // ApplyGrad per variable, TF-colocation-constrained with it.
+            let bwd_last = *bwd_ops.last().unwrap();
+            for (v, &var) in var_ids.iter().enumerate() {
+                let id = self
+                    .graph
+                    .add_node(&format!("{}/apply{}", spec.name, v), OpKind::ApplyGrad);
+                let share = spec.params / spec.var_ops.max(1) as u64;
+                let var_colo = self.graph.node(var).colocation_group.clone();
+                let n = self.graph.node_mut(id);
+                n.compute = self.cost.op_time(share as f64 / 2.0, share);
+                n.mem = MemorySpec {
+                    temp: share / 2,
+                    ..Default::default()
+                };
+                n.output_bytes = 4;
+                n.is_backward = true;
+                n.colocation_group = var_colo;
+                n.coplacement_group = Some(spec.name.clone());
+                let gb = self.graph.node(bwd_last).output_bytes;
+                self.graph.add_edge(bwd_last, id, gb);
+            }
+            let m = &mut self.modules[mi];
+            m.bwd_out = Some(bwd_last);
+            m.bwd_ops = bwd_ops;
+        }
+        debug_assert!(self.graph.is_acyclic(), "training graph has a cycle");
+        self.graph
+    }
+
+    /// Forward-only graph (inference), without backward generation.
+    pub fn build_forward_graph(self) -> OpGraph {
+        debug_assert!(self.graph.is_acyclic());
+        self.graph
+    }
+}
+
+/// f32 tensor bytes for a shape.
+pub fn bytes_f32(dims: &[usize]) -> u64 {
+    4 * dims.iter().product::<usize>() as u64
+}
+
+/// FLOPs of a dense `m×k · k×n` matmul.
+pub fn matmul_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+/// FLOPs of a conv as implicit GEMM: output `h×w×cout`, kernel `kh×kw×cin`.
+pub fn conv_flops(batch: usize, h: usize, w: usize, cin: usize, cout: usize, kh: usize, kw: usize) -> f64 {
+    2.0 * batch as f64 * h as f64 * w as f64 * cout as f64 * (kh * kw * cin) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> OpGraph {
+        let mut b = ModelBuilder::new("tiny", CostModel::default());
+        let x = b.add_input("x", bytes_f32(&[32, 64]));
+        let l1 = b.add_module(
+            ModuleSpec::new("dense1", OpKind::MatMul)
+                .micro(3)
+                .vars(2)
+                .flops(matmul_flops(32, 64, 128))
+                .params(bytes_f32(&[64, 128]))
+                .output(bytes_f32(&[32, 128]))
+                .temp(1024),
+            &[x],
+        );
+        let loss = b.add_module(
+            ModuleSpec::new("loss", OpKind::Loss)
+                .micro(2)
+                .flops(1e4)
+                .output(4),
+            &[l1],
+        );
+        b.build_training_graph(loss)
+    }
+
+    #[test]
+    fn expansion_counts() {
+        let g = tiny_model();
+        // x: 1 fwd; dense1: 2 vars + 3 fwd + 3 bwd + 2 apply; loss: 2 fwd + 2 bwd
+        assert_eq!(g.len(), 1 + 2 + 3 + 3 + 2 + 2 + 2);
+        assert!(g.is_acyclic());
+        // exactly one sink cluster: apply ops
+        assert!(g.sinks().len() >= 2);
+    }
+
+    #[test]
+    fn bwd_links_and_flags() {
+        let g = tiny_model();
+        let bwd: Vec<_> = g.iter_nodes().filter(|n| n.is_backward).collect();
+        assert_eq!(bwd.len(), 3 + 2 + 2); // dense bwd + apply + loss bwd
+        for n in &bwd {
+            if n.kind != OpKind::ApplyGrad {
+                let f = n.forward_of.expect("bwd op has forward link");
+                assert!(!g.node(f).is_backward);
+            }
+        }
+    }
+
+    #[test]
+    fn colocation_constraints_present() {
+        let g = tiny_model();
+        let groups = g.colocation_groups();
+        assert_eq!(groups.len(), 2); // one per variable
+        for (_, members) in groups {
+            assert_eq!(members.len(), 2); // var + apply
+        }
+    }
+
+    #[test]
+    fn loss_backward_reaches_first_layer() {
+        let g = tiny_model();
+        // every apply op is reachable from the loss fwd output
+        let loss_fwd = g
+            .iter_nodes()
+            .find(|n| n.name == "loss/fwd1")
+            .unwrap()
+            .id;
+        for n in g.iter_nodes().filter(|n| n.kind == OpKind::ApplyGrad) {
+            assert!(g.reachable(loss_fwd, n.id), "{} unreachable", n.name);
+        }
+    }
+
+    #[test]
+    fn cost_model_monotone() {
+        let c = CostModel::default();
+        assert!(c.op_time(1e9, 0) > c.op_time(1e6, 0));
+        assert!(c.op_time(0.0, 1 << 30) > c.op_time(0.0, 1 << 10));
+        assert!(c.op_time(0.0, 0) >= c.launch_overhead);
+    }
+}

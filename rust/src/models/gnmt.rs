@@ -1,0 +1,294 @@
+//! GNMT-like benchmark graph (paper §5.1): 4-layer LSTM encoder and
+//! decoder with residual connections, Bahdanau attention, 30 k vocabulary,
+//! unrolled to the configured sequence length.
+//!
+//! The unrolled graph at TF granularity matches the paper's op counts
+//! (Table 6: 18 050 ops at length 40, 22 340 at length 50) and fuses to
+//! cell-level groups (542 / 706). Unlike Inception, GNMT has few sync
+//! barriers, so placers can exploit cross-layer parallelism (§5.3).
+
+use super::common::{bytes_f32, matmul_flops, CostModel, ModelBuilder, ModuleSpec};
+use crate::graph::{OpGraph, OpKind};
+
+/// Configuration mirroring the paper's GNMT benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct GnmtConfig {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub vocab: usize,
+}
+
+impl GnmtConfig {
+    pub fn paper(batch: usize, seq_len: usize) -> GnmtConfig {
+        GnmtConfig {
+            batch,
+            seq_len,
+            hidden: 512,
+            layers: 4,
+            vocab: 30_000,
+        }
+    }
+}
+
+/// Micro-ops per unrolled LSTM cell at TF granularity (gate matmuls,
+/// bias adds, sigmoids/tanhs, elementwise state updates ≈ 25 ops).
+const MICRO_PER_CELL: usize = 25;
+
+/// Per-layer weight module: the unrolled cells of a layer *share* one
+/// weight set (a single `tf.Variable` read by every time step). Placing
+/// a cell away from its weights incurs the kernel-weight transfer the
+/// paper blames for m-TOPO's GNMT slowdown (§5.3).
+fn layer_weights(b: &mut ModelBuilder, name: &str, input_dim: usize, h: usize) -> usize {
+    let params = bytes_f32(&[input_dim + h, 4 * h]) + bytes_f32(&[4 * h]);
+    b.add_module(
+        ModuleSpec::new(name, OpKind::Variable)
+            .micro(1)
+            .vars(2)
+            .flops(0.0)
+            .params(params)
+            .output(params),
+        &[],
+    )
+}
+
+fn lstm_cell(
+    b: &mut ModelBuilder,
+    name: &str,
+    cfg: &GnmtConfig,
+    input_dim: usize,
+    deps: &[(usize, Option<u64>)],
+) -> usize {
+    let h = cfg.hidden;
+    // 4 gates: [x;h] · W(input_dim+h × 4h)
+    let flops = matmul_flops(cfg.batch, input_dim + h, 4 * h);
+    let output = bytes_f32(&[cfg.batch, h]);
+    let temp = bytes_f32(&[cfg.batch, 4 * h]) * 2;
+    b.add_module_edges(
+        ModuleSpec::new(name, OpKind::LstmCell)
+            .micro(MICRO_PER_CELL)
+            .flops(flops)
+            .output(output)
+            .temp(temp),
+        deps,
+    )
+}
+
+/// Bahdanau attention for one decoder step (~10 TF ops); weights are
+/// shared across steps via the `dec/attn/weights` module.
+fn attention(b: &mut ModelBuilder, name: &str, cfg: &GnmtConfig, deps: &[usize]) -> usize {
+    let h = cfg.hidden;
+    // scores = v · tanh(W1·enc + W2·dec): batch × seq_len × hidden
+    let flops = 2.0 * (cfg.batch * cfg.seq_len * h) as f64 * 2.0 + matmul_flops(cfg.batch, cfg.seq_len, h);
+    let output = bytes_f32(&[cfg.batch, h]);
+    let temp = bytes_f32(&[cfg.batch, cfg.seq_len, h]);
+    b.add_module(
+        ModuleSpec::new(name, OpKind::Attention)
+            .micro(10)
+            .flops(flops)
+            .output(output)
+            .temp(temp),
+        deps,
+    )
+}
+
+/// Build the GNMT training graph.
+pub fn gnmt(cfg: GnmtConfig) -> OpGraph {
+    let h = cfg.hidden;
+    let mut b = ModelBuilder::new(
+        &format!("gnmt_bs{}_len{}", cfg.batch, cfg.seq_len),
+        CostModel::default(),
+    );
+
+    // Source/target token inputs.
+    let src = b.add_input("src_tokens", bytes_f32(&[cfg.batch, cfg.seq_len]));
+    let tgt = b.add_input("tgt_tokens", bytes_f32(&[cfg.batch, cfg.seq_len]));
+
+    // Embeddings (shared across time steps; variables live here).
+    let enc_emb = b.add_module(
+        ModuleSpec::new("enc_embed", OpKind::Embedding)
+            .micro(3)
+            .vars(1)
+            .flops((cfg.batch * cfg.seq_len * h) as f64)
+            .params(bytes_f32(&[cfg.vocab, h]))
+            .output(bytes_f32(&[cfg.batch, cfg.seq_len, h]))
+            .temp(0),
+        &[src],
+    );
+    let dec_emb = b.add_module(
+        ModuleSpec::new("dec_embed", OpKind::Embedding)
+            .micro(3)
+            .vars(1)
+            .flops((cfg.batch * cfg.seq_len * h) as f64)
+            .params(bytes_f32(&[cfg.vocab, h]))
+            .output(bytes_f32(&[cfg.batch, cfg.seq_len, h]))
+            .temp(0),
+        &[tgt],
+    );
+
+    // Encoder: layers × seq_len unrolled cells. Cell (l, t) depends on
+    // (l-1, t) below and (l, t-1) to the left; residual connections on
+    // upper layers add a dependency on (l-2, t)'s output stream, which we
+    // fold into the (l-1, t) edge (module-level granularity).
+    let mut enc_prev_layer: Vec<usize> = vec![enc_emb; cfg.seq_len];
+    let mut enc_top: Vec<usize> = Vec::new();
+    for l in 0..cfg.layers {
+        let input_dim = h; // embeddings and hidden are both `h`
+        let wt = layer_weights(&mut b, &format!("enc/l{l}/weights"), input_dim, h);
+        let mut prev_t: Option<usize> = None;
+        let mut this_layer = Vec::with_capacity(cfg.seq_len);
+        for t in 0..cfg.seq_len {
+            // layer 0 consumes only the t-th slice of the embedding
+            let slice = if l == 0 { Some(bytes_f32(&[cfg.batch, h])) } else { None };
+            let mut deps = vec![(enc_prev_layer[t], slice), (wt, None)];
+            if let Some(p) = prev_t {
+                deps.push((p, None));
+            }
+            let cell = lstm_cell(&mut b, &format!("enc/l{l}/t{t}"), &cfg, input_dim, &deps);
+            prev_t = Some(cell);
+            this_layer.push(cell);
+        }
+        enc_prev_layer = this_layer.clone();
+        enc_top = this_layer;
+    }
+
+    // Decoder with attention: cell (l, t); layer-0 cells attend over the
+    // encoder top layer's final states.
+    let enc_final = *enc_top.last().unwrap();
+    let mut dec_prev_layer: Vec<usize> = vec![dec_emb; cfg.seq_len];
+    let mut dec_top: Vec<usize> = Vec::new();
+    let mut attn_of_t: Vec<usize> = Vec::with_capacity(cfg.seq_len);
+    let attn_wt = b.add_module(
+        ModuleSpec::new("dec/attn/weights", OpKind::Variable)
+            .micro(1)
+            .vars(1)
+            .params(bytes_f32(&[2 * h, h]) + bytes_f32(&[h]))
+            .output(bytes_f32(&[2 * h, h])),
+        &[],
+    );
+    for t in 0..cfg.seq_len {
+        // attention reads the whole encoder top (module edge from the
+        // last encoder cell, which transitively syncs the layer).
+        let attn = attention(&mut b, &format!("dec/attn/t{t}"), &cfg, &[enc_final, attn_wt]);
+        attn_of_t.push(attn);
+    }
+    for l in 0..cfg.layers {
+        let input_dim = if l == 0 { 2 * h } else { h };
+        let wt = layer_weights(&mut b, &format!("dec/l{l}/weights"), input_dim, h);
+        let mut prev_t: Option<usize> = None;
+        let mut this_layer = Vec::with_capacity(cfg.seq_len);
+        for t in 0..cfg.seq_len {
+            let slice = if l == 0 { Some(bytes_f32(&[cfg.batch, h])) } else { None };
+            let mut deps = vec![(dec_prev_layer[t], slice), (wt, None)];
+            if l == 0 {
+                deps.push((attn_of_t[t], None));
+            }
+            if let Some(p) = prev_t {
+                deps.push((p, None));
+            }
+            let cell = lstm_cell(&mut b, &format!("dec/l{l}/t{t}"), &cfg, input_dim, &deps);
+            prev_t = Some(cell);
+            this_layer.push(cell);
+        }
+        dec_prev_layer = this_layer.clone();
+        dec_top = this_layer;
+    }
+
+    // Output projection (hidden → vocab) applied to the concatenated
+    // decoder outputs, then softmax cross-entropy loss.
+    let proj = b.add_module(
+        ModuleSpec::new("proj", OpKind::MatMul)
+            .micro(3)
+            .vars(2)
+            .flops(matmul_flops(cfg.batch * cfg.seq_len, h, cfg.vocab))
+            .params(bytes_f32(&[h, cfg.vocab]))
+            .output(bytes_f32(&[cfg.batch, cfg.seq_len, cfg.vocab]))
+            .temp(bytes_f32(&[cfg.batch, cfg.seq_len, cfg.vocab])),
+        &dec_top.clone(),
+    );
+    // The softmax output (probs, logits-sized) is retained for the
+    // backward pass — in TF it is the loss subgraph's persistent output.
+    let loss = b.add_module(
+        ModuleSpec::new("loss", OpKind::Loss)
+            .micro(2)
+            .flops((cfg.batch * cfg.seq_len * cfg.vocab) as f64 * 4.0)
+            .output(bytes_f32(&[cfg.batch, cfg.seq_len, cfg.vocab]))
+            .temp(2 * bytes_f32(&[cfg.batch, cfg.seq_len, cfg.vocab])),
+        &[proj],
+    );
+    b.build_training_graph(loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_counts_match_paper_scale() {
+        // Paper Table 6: 18 050 unoptimized ops at length 40, 22 340 at 50.
+        let g40 = gnmt(GnmtConfig::paper(128, 40));
+        let g50 = gnmt(GnmtConfig::paper(128, 50));
+        assert!(g40.is_acyclic());
+        assert!(
+            (10_000..30_000).contains(&g40.len()),
+            "len40 ops = {}",
+            g40.len()
+        );
+        assert!(g50.len() > g40.len());
+    }
+
+    #[test]
+    fn cell_grid_shape() {
+        let cfg = GnmtConfig::paper(128, 10);
+        let g = gnmt(cfg);
+        // 4 enc layers × 10 + 4 dec layers × 10 cells, 25 micro-ops each
+        let lstm_fwd = g
+            .iter_nodes()
+            .filter(|n| n.kind == OpKind::LstmCell && !n.is_backward)
+            .count();
+        assert_eq!(lstm_fwd, 8 * 10 * MICRO_PER_CELL);
+        let attn = g
+            .iter_nodes()
+            .filter(|n| n.kind == OpKind::Attention && !n.is_backward)
+            .count();
+        assert_eq!(attn, 10 * 10);
+    }
+
+    #[test]
+    fn coplacement_groups_at_cell_granularity() {
+        let cfg = GnmtConfig::paper(128, 8);
+        let g = gnmt(cfg);
+        let mut groups = std::collections::BTreeSet::new();
+        for n in g.iter_nodes() {
+            if let Some(gp) = &n.coplacement_group {
+                groups.insert(gp.clone());
+            }
+        }
+        // ≈ cells (8·8) + attention (8) + embeddings + proj + loss
+        assert!(
+            (70..110).contains(&groups.len()),
+            "groups = {}",
+            groups.len()
+        );
+    }
+
+    #[test]
+    fn memory_in_paper_regime() {
+        // bs 128 len 40: must exceed the 30 % cap (2.4 GB) on one device
+        // but fit in aggregate 4 × 2.4 GB.
+        let g = gnmt(GnmtConfig::paper(128, 40));
+        let permanent = g.total_permanent_memory();
+        assert!(permanent > 1_000_000_000, "permanent = {permanent}");
+        assert!(permanent < 9_600_000_000, "permanent = {permanent}");
+    }
+
+    #[test]
+    fn compute_magnitude_sane() {
+        let g = gnmt(GnmtConfig::paper(128, 40));
+        let total = g.total_compute();
+        // paper single-GPU step: 0.251 s
+        assert!(total > 0.05, "{total}");
+        assert!(total < 3.0, "{total}");
+    }
+}

@@ -1,0 +1,131 @@
+//! The paper's didactic graphs: the Figure-2 linear-regression working
+//! example and the Figure-1 SCT-vs-m-SCT example.
+
+use crate::graph::{MemorySpec, NodeId, OpGraph, OpKind};
+
+/// Paper Figure 2: simplified TensorFlow graph for linear-regression
+/// training with SGD. Colocation groups: {Weight, ApplyGrad} and
+/// {Step, UpdateStep}. Compute costs are 1 time-unit, the Grad →
+/// UpdateStep tensor costs 5 units to move (the §3.1.3 fusion example).
+///
+/// Units here are abstract (seconds == "time units", bytes == "memory
+/// units"); pair with a `CommModel { latency: 0, bandwidth: 1.0 }` so a
+/// `bytes`-unit tensor costs `bytes` time-units to transfer.
+pub fn linreg_graph() -> OpGraph {
+    let mut g = OpGraph::new("linreg");
+    let mut add = |name: &str, kind: OpKind, compute: f64, mem: u64, out: u64| -> NodeId {
+        let id = g.add_node(name, kind);
+        let n = g.node_mut(id);
+        n.compute = compute;
+        n.mem = MemorySpec {
+            params: mem,
+            ..Default::default()
+        };
+        n.output_bytes = out;
+        id
+    };
+    let input = add("Input", OpKind::Input, 1.0, 1, 1);
+    let weight = add("Weight", OpKind::Variable, 1.0, 2, 1);
+    let matmul = add("MatMul", OpKind::MatMul, 1.0, 1, 1);
+    let grad = add("Grad", OpKind::MatMul, 1.0, 1, 5);
+    let step = add("Step", OpKind::Variable, 1.0, 1, 1);
+    let update = add("UpdateStep", OpKind::Elementwise, 1.0, 1, 1);
+    let apply = add("ApplyGrad", OpKind::ApplyGrad, 1.0, 1, 1);
+
+    g.node_mut(weight).colocation_group = Some("weight".into());
+    g.node_mut(apply).colocation_group = Some("weight".into());
+    g.node_mut(step).colocation_group = Some("step".into());
+    g.node_mut(update).colocation_group = Some("step".into());
+    g.node_mut(grad).is_backward = true;
+    g.node_mut(grad).forward_of = Some(matmul);
+    g.node_mut(apply).is_backward = true;
+
+    g.add_edge(input, matmul, 1);
+    g.add_edge(weight, matmul, 1);
+    g.add_edge(matmul, grad, 1);
+    g.add_edge(grad, update, 5); // the expensive tensor of Fig. 5
+    g.add_edge(step, update, 1);
+    g.add_edge(update, apply, 1);
+    g.add_edge(grad, apply, 5);
+    g
+}
+
+/// A Figure-1-style example graph where classical SCT (no memory limit)
+/// packs more persistent state onto one device than fits in `M = 4`
+/// memory units, while m-SCT succeeds with a slightly longer makespan.
+///
+/// Layout (compute time t, memory d in units):
+///
+/// ```text
+///   a(1,2) ─→ b(3,2) ─→ d(2,2) ─→ f(1,1)
+///     └────→ c(3,2) ─→ e(2,2) ──────┘
+/// ```
+///
+/// One memory unit = [`FIG1_MEM_UNIT`] bytes; every edge moves 1 byte
+/// (1 time-unit at unit bandwidth), so transfer buffers are the "few
+/// bytes left" of the paper's §4.2 footnote rather than a whole memory
+/// unit. With unlimited memory two devices suffice for makespan 8 but
+/// one device would hold 3 ops (6 > 4 units); with M = 4 units the
+/// placement must spread 2+2, stretching the makespan slightly.
+pub const FIG1_MEM_UNIT: u64 = 100;
+
+pub fn fig1_graph() -> OpGraph {
+    let mut g = OpGraph::new("fig1");
+    let mut add = |name: &str, t: f64, d: u64, out: u64| -> NodeId {
+        let id = g.add_node(name, OpKind::Generic(0));
+        let n = g.node_mut(id);
+        n.compute = t;
+        n.mem = MemorySpec {
+            params: d * FIG1_MEM_UNIT,
+            ..Default::default()
+        };
+        n.output_bytes = out;
+        id
+    };
+    let a = add("a", 1.0, 2, 1);
+    let b = add("b", 3.0, 2, 1);
+    let c = add("c", 3.0, 2, 1);
+    let d = add("d", 2.0, 2, 1);
+    let e = add("e", 2.0, 2, 1);
+    let f = add("f", 1.0, 1, 1);
+    g.add_edge(a, b, 1);
+    g.add_edge(a, c, 1);
+    g.add_edge(b, d, 1);
+    g.add_edge(c, e, 1);
+    g.add_edge(d, f, 1);
+    g.add_edge(e, f, 1);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linreg_matches_paper_shape() {
+        let g = linreg_graph();
+        assert_eq!(g.len(), 7);
+        assert!(g.is_acyclic());
+        let groups = g.colocation_groups();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups["weight"].len(), 2);
+        assert_eq!(groups["step"].len(), 2);
+        // the expensive grad tensor
+        let grad = g.iter_nodes().find(|n| n.name == "Grad").unwrap().id;
+        let update = g.iter_nodes().find(|n| n.name == "UpdateStep").unwrap().id;
+        assert_eq!(g.edge_bytes(grad, update), Some(5));
+    }
+
+    #[test]
+    fn fig1_structure() {
+        let g = fig1_graph();
+        assert_eq!(g.len(), 6);
+        assert!(g.is_acyclic());
+        assert_eq!(g.sources().len(), 1);
+        assert_eq!(g.sinks().len(), 1);
+        // total memory = 11 units; see the quickstart example for the
+        // SCT-OOM vs m-SCT-succeeds reproduction on 3 × 4-unit devices.
+        let total: u64 = g.iter_nodes().map(|n| n.mem.permanent_training()).sum();
+        assert_eq!(total, 11 * FIG1_MEM_UNIT);
+    }
+}

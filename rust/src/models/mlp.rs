@@ -1,0 +1,99 @@
+//! Small MLP whose layers correspond 1:1 to the AOT HLO artifacts
+//! produced by `python/compile/model.py` — the model the end-to-end
+//! example *really trains* on the multi-device executor.
+//!
+//! Layer names here must match the artifact manifest: `layer{i}_fwd`,
+//! `layer{i}_bwd`, `loss_fwd`, `loss_bwd` (see `python/compile/aot.py`).
+
+use super::common::{bytes_f32, matmul_flops, CostModel, ModelBuilder, ModuleSpec};
+use crate::graph::{OpGraph, OpKind};
+
+/// MLP configuration; defaults mirror the e2e example.
+#[derive(Debug, Clone)]
+pub struct MlpConfig {
+    pub batch: usize,
+    pub dims: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Default for MlpConfig {
+    fn default() -> MlpConfig {
+        MlpConfig {
+            batch: 64,
+            dims: vec![64, 128, 128, 64],
+            classes: 10,
+        }
+    }
+}
+
+impl MlpConfig {
+    /// Layer (in, out) dims, including the classifier layer.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for w in self.dims.windows(2) {
+            v.push((w[0], w[1]));
+        }
+        v.push((*self.dims.last().unwrap(), self.classes));
+        v
+    }
+}
+
+/// Build the module-level MLP training graph matching the artifacts.
+pub fn mlp(cfg: &MlpConfig) -> OpGraph {
+    let mut b = ModelBuilder::new("mlp", CostModel::default());
+    let x = b.add_input("input", bytes_f32(&[cfg.batch, cfg.dims[0]]));
+    let mut prev = x;
+    for (i, (din, dout)) in cfg.layer_dims().into_iter().enumerate() {
+        prev = b.add_module(
+            ModuleSpec::new(&format!("layer{i}"), OpKind::MatMul)
+                .micro(1) // module == one artifact call
+                .vars(1)
+                .flops(matmul_flops(cfg.batch, din, dout))
+                .params(bytes_f32(&[din, dout]) + bytes_f32(&[dout]))
+                .output(bytes_f32(&[cfg.batch, dout]))
+                .temp(bytes_f32(&[cfg.batch, dout])),
+            &[prev],
+        );
+    }
+    let loss = b.add_module(
+        ModuleSpec::new("loss", OpKind::Loss)
+            .micro(1)
+            .flops((cfg.batch * cfg.classes) as f64 * 4.0)
+            .output(4)
+            .temp(bytes_f32(&[cfg.batch, cfg.classes])),
+        &[prev],
+    );
+    b.build_training_graph(loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_matches_artifacts() {
+        let cfg = MlpConfig::default();
+        let g = mlp(&cfg);
+        assert!(g.is_acyclic());
+        // 4 layers + loss: each layer = var + fwd + bwd + apply
+        let fwd_layers = g
+            .iter_nodes()
+            .filter(|n| n.name.contains("layer") && n.name.contains("fwd"))
+            .count();
+        assert_eq!(fwd_layers, 4);
+        let bwd_layers = g
+            .iter_nodes()
+            .filter(|n| n.name.contains("layer") && n.name.contains("bwd"))
+            .count();
+        assert_eq!(bwd_layers, 4);
+    }
+
+    #[test]
+    fn layer_dims_include_classifier() {
+        let cfg = MlpConfig::default();
+        let dims = cfg.layer_dims();
+        assert_eq!(dims.len(), 4);
+        assert_eq!(dims[0], (64, 128));
+        assert_eq!(dims[3], (64, 10));
+    }
+}

@@ -1,0 +1,103 @@
+//! Benchmark model-graph generators (paper §5.1).
+//!
+//! These reproduce the *structure and cost distributions* of the paper's
+//! profiled TensorFlow/PyTorch graphs — see DESIGN.md §2 for the
+//! substitution rationale. Every generator emits a full training graph
+//! (forward + backward + optimizer ops) with colocation constraints and
+//! co-placement group annotations.
+
+pub mod common;
+pub mod gnmt;
+pub mod inception;
+pub mod linreg;
+pub mod mlp;
+pub mod transformer;
+
+use crate::graph::OpGraph;
+
+/// The paper's benchmark suite, one variant per evaluated configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Benchmark {
+    /// Inception-V3 at a batch size (paper: 32, 64).
+    InceptionV3 { batch: usize },
+    /// GNMT at (batch, seq_len) (paper: 128/256 × 40/50).
+    Gnmt { batch: usize, seq_len: usize },
+    /// Transformer base at a batch size (paper: 64, 128).
+    Transformer { batch: usize },
+    /// The Fig. 2 linear-regression working example.
+    LinReg,
+    /// The e2e-trainable MLP.
+    Mlp,
+}
+
+impl Benchmark {
+    /// Parse `inception:32`, `gnmt:128:40`, `transformer:64`, `linreg`,
+    /// `mlp`.
+    pub fn parse(s: &str) -> anyhow::Result<Benchmark> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |i: usize, d: usize| -> usize {
+            parts.get(i).and_then(|p| p.parse().ok()).unwrap_or(d)
+        };
+        match parts[0] {
+            "inception" => Ok(Benchmark::InceptionV3 { batch: num(1, 32) }),
+            "gnmt" => Ok(Benchmark::Gnmt {
+                batch: num(1, 128),
+                seq_len: num(2, 40),
+            }),
+            "transformer" => Ok(Benchmark::Transformer { batch: num(1, 64) }),
+            "linreg" => Ok(Benchmark::LinReg),
+            "mlp" => Ok(Benchmark::Mlp),
+            other => anyhow::bail!("unknown benchmark '{other}'"),
+        }
+    }
+
+    /// Generate the training graph.
+    pub fn graph(&self) -> OpGraph {
+        match *self {
+            Benchmark::InceptionV3 { batch } => inception::inception_v3(batch),
+            Benchmark::Gnmt { batch, seq_len } => {
+                gnmt::gnmt(gnmt::GnmtConfig::paper(batch, seq_len))
+            }
+            Benchmark::Transformer { batch } => {
+                transformer::transformer(transformer::TransformerConfig::paper(batch))
+            }
+            Benchmark::LinReg => linreg::linreg_graph(),
+            Benchmark::Mlp => mlp::mlp(&mlp::MlpConfig::default()),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            Benchmark::InceptionV3 { batch } => format!("inception:{batch}"),
+            Benchmark::Gnmt { batch, seq_len } => format!("gnmt:{batch}:{seq_len}"),
+            Benchmark::Transformer { batch } => format!("transformer:{batch}"),
+            Benchmark::LinReg => "linreg".to_string(),
+            Benchmark::Mlp => "mlp".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["inception:32", "gnmt:128:40", "transformer:64", "linreg", "mlp"] {
+            let b = Benchmark::parse(s).unwrap();
+            assert_eq!(b.name(), s);
+        }
+        assert!(Benchmark::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn all_graphs_acyclic() {
+        for b in [
+            Benchmark::Transformer { batch: 64 },
+            Benchmark::LinReg,
+            Benchmark::Mlp,
+        ] {
+            assert!(b.graph().is_acyclic(), "{}", b.name());
+        }
+    }
+}

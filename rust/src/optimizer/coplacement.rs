@@ -1,0 +1,156 @@
+//! Co-placement heuristics (paper §3.1.2).
+//!
+//! Two rules:
+//! 1. **Single-consumer chains** — "if the output of an operator is only
+//!    used by its next operator, we place both operators on the same
+//!    device" (the `tf.tensordot` example of Fig. 3). We express this by
+//!    assigning both ops the same co-placement group label.
+//! 2. **Forward/backward matching** — each backward op joins its matched
+//!    forward op's group.
+//!
+//! Labels already assigned by the model generators are respected; the
+//! heuristic only adds labels, never rewrites existing ones (rewriting
+//! could merge unrelated groups through a shared neighbor).
+
+use crate::graph::OpGraph;
+
+/// Statistics from a co-placement pass.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct CoplacementStats {
+    /// Ops newly labeled by the single-consumer rule.
+    pub chain_labeled: usize,
+    /// Backward ops newly labeled via their forward match.
+    pub bwd_labeled: usize,
+}
+
+/// Apply both heuristics in place.
+pub fn apply_coplacement(graph: &mut OpGraph) -> CoplacementStats {
+    let mut stats = CoplacementStats::default();
+
+    // Rule 1: single-consumer chains, walked in topological order so a
+    // chain a→b→c acquires one shared label.
+    let order = graph
+        .topo_order()
+        .expect("coplacement requires acyclic graph");
+    for &u in &order {
+        if graph.out_degree(u) != 1 {
+            continue;
+        }
+        let (v, _) = graph.successors(u)[0];
+        let u_grp = graph.node(u).coplacement_group.clone();
+        let v_grp = graph.node(v).coplacement_group.clone();
+        match (u_grp, v_grp) {
+            (Some(g), None) => {
+                // extend u's group forward onto its only consumer
+                graph.node_mut(v).coplacement_group = Some(g);
+                stats.chain_labeled += 1;
+            }
+            (None, Some(g)) => {
+                graph.node_mut(u).coplacement_group = Some(g);
+                stats.chain_labeled += 1;
+            }
+            (None, None) => {
+                let label = format!("chain/{}", u.0);
+                graph.node_mut(u).coplacement_group = Some(label.clone());
+                graph.node_mut(v).coplacement_group = Some(label);
+                stats.chain_labeled += 2;
+            }
+            (Some(_), Some(_)) => {} // both already grouped: leave as-is
+        }
+    }
+
+    // Rule 2: backward ops join their forward op's group.
+    let ids: Vec<_> = graph.node_ids().collect();
+    for id in ids {
+        let n = graph.node(id);
+        if !n.is_backward || n.coplacement_group.is_some() {
+            continue;
+        }
+        if let Some(f) = n.forward_of {
+            if let Some(g) = graph.node(f).coplacement_group.clone() {
+                graph.node_mut(id).coplacement_group = Some(g);
+                stats.bwd_labeled += 1;
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpGraph, OpKind};
+
+    #[test]
+    fn tensordot_pattern_grouped() {
+        // Fig. 3: op_in → Transpose → Reshape chain, with perm/Shape
+        // constants feeding in. Single-consumer rule groups the chain.
+        let mut g = OpGraph::new("tensordot");
+        let op_in = g.add_node("op_in", OpKind::MatMul);
+        let perm = g.add_node("perm", OpKind::Shape);
+        let transpose = g.add_node("transpose", OpKind::Shape);
+        let shape = g.add_node("shape", OpKind::Shape);
+        let reshape = g.add_node("reshape", OpKind::Shape);
+        g.add_edge(op_in, transpose, 100);
+        g.add_edge(perm, transpose, 4);
+        g.add_edge(transpose, reshape, 100);
+        g.add_edge(shape, reshape, 4);
+        let stats = apply_coplacement(&mut g);
+        assert!(stats.chain_labeled > 0);
+        // op_in, perm, transpose, reshape, shape should share one group
+        // through the chain rule (each feeds a single consumer).
+        let grp = g.node(transpose).coplacement_group.clone().unwrap();
+        for id in [op_in, perm, shape, reshape] {
+            assert_eq!(
+                g.node(id).coplacement_group.as_ref(),
+                Some(&grp),
+                "node {} not grouped",
+                g.node(id).name
+            );
+        }
+    }
+
+    #[test]
+    fn fanout_not_grouped() {
+        let mut g = OpGraph::new("fan");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        apply_coplacement(&mut g);
+        // `a` has two consumers → no chain label for a.
+        assert!(g.node(a).coplacement_group.is_none());
+    }
+
+    #[test]
+    fn bwd_joins_fwd_group() {
+        let mut g = OpGraph::new("t");
+        let f1 = g.add_node("f1", OpKind::MatMul);
+        let f2 = g.add_node("f2", OpKind::MatMul);
+        let b1 = g.add_node("b1", OpKind::MatMul);
+        g.add_edge(f1, f2, 1);
+        g.add_edge(f2, b1, 1);
+        g.node_mut(b1).is_backward = true;
+        g.node_mut(b1).forward_of = Some(f1);
+        // pre-label fwd chain
+        g.node_mut(f1).coplacement_group = Some("L".into());
+        g.node_mut(f2).coplacement_group = Some("L".into());
+        let stats = apply_coplacement(&mut g);
+        assert_eq!(g.node(b1).coplacement_group.as_deref(), Some("L"));
+        assert!(stats.bwd_labeled <= 1); // may be chain-labeled first
+    }
+
+    #[test]
+    fn existing_labels_not_rewritten() {
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        g.add_edge(a, b, 1);
+        g.node_mut(a).coplacement_group = Some("A".into());
+        g.node_mut(b).coplacement_group = Some("B".into());
+        apply_coplacement(&mut g);
+        assert_eq!(g.node(a).coplacement_group.as_deref(), Some("A"));
+        assert_eq!(g.node(b).coplacement_group.as_deref(), Some("B"));
+    }
+}

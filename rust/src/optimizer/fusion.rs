@@ -1,0 +1,429 @@
+//! Cycle-safe operator fusion (paper §3.1.3).
+//!
+//! Baechi fuses directly-connected operators that share a colocation or
+//! co-placement group. Merging `src → dst` creates a cycle iff another
+//! `src ⇝ dst` path exists; checking that per edge is unscalable, so the
+//! paper fuses only when `out_degree(src) ≤ 1` **or** `in_degree(dst) ≤ 1`
+//! (Figures 4e/4f) — a *necessary* condition for an alternative path is
+//! out-degree ≥ 2 at the source and in-degree ≥ 2 at the destination.
+//!
+//! Fusion runs to a fixpoint: contracting an edge lowers degrees and can
+//! enable further fusions (e.g. a chain collapses completely).
+
+use crate::graph::{MemorySpec, NodeId, OpGraph, OpNode};
+use std::collections::BTreeSet;
+
+/// Union-find over node slots.
+struct Dsu {
+    parent: Vec<usize>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Dsu {
+        Dsu {
+            parent: (0..n).collect(),
+        }
+    }
+    fn find(&mut self, x: usize) -> usize {
+        if self.parent[x] != x {
+            let root = self.find(self.parent[x]);
+            self.parent[x] = root;
+        }
+        self.parent[x]
+    }
+    fn union_into(&mut self, child: usize, root: usize) {
+        let c = self.find(child);
+        let r = self.find(root);
+        if c != r {
+            self.parent[c] = r;
+        }
+    }
+}
+
+/// Result of fusing a graph.
+pub struct Fused {
+    /// The fused meta-operator graph.
+    pub graph: OpGraph,
+    /// Map original node slot → meta node id (None for dead slots).
+    pub meta_of: Vec<Option<NodeId>>,
+    /// Number of edge contractions performed.
+    pub fused_edges: usize,
+}
+
+/// Whether two ops belong to the same fusion group (same colocation
+/// constraint group or same co-placement group).
+pub fn same_group(a: &OpNode, b: &OpNode) -> bool {
+    let colo = match (&a.colocation_group, &b.colocation_group) {
+        (Some(x), Some(y)) => x == y,
+        _ => false,
+    };
+    let copl = match (&a.coplacement_group, &b.coplacement_group) {
+        (Some(x), Some(y)) => x == y,
+        _ => false,
+    };
+    colo || copl
+}
+
+/// Fuse the graph to a fixpoint under the cycle-safe rule. `eligible`
+/// decides whether a directly-connected pair may fuse (on top of the
+/// degree rule).
+pub fn fuse(graph: &OpGraph, eligible: impl Fn(&OpNode, &OpNode) -> bool) -> Fused {
+    fuse_with_latency_equiv(graph, eligible, 0)
+}
+
+/// Like [`fuse`], additionally padding each merged meta-edge with
+/// `latency_equiv_bytes` per extra constituent tensor. With
+/// `latency_equiv = latency × bandwidth`, the linear comm model then
+/// prices a meta edge at exactly `count × latency + Σbytes / bandwidth`
+/// — the cost the execution simulator charges when it moves every
+/// constituent tensor individually. Without this, placement-time
+/// schedules systematically underestimate scattering penalties on
+/// latency-bound interconnects.
+pub fn fuse_with_latency_equiv(
+    graph: &OpGraph,
+    eligible: impl Fn(&OpNode, &OpNode) -> bool,
+    latency_equiv_bytes: u64,
+) -> Fused {
+    let cap = graph.capacity();
+    let mut dsu = Dsu::new(cap);
+    // Live adjacency over representatives, with per-edge max bytes.
+    let mut outs: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); cap];
+    let mut ins: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); cap];
+    // Parallel edges between (future) meta nodes each carry their own
+    // tensor at runtime — track (summed bytes, tensor count) per pair.
+    let mut bytes: std::collections::BTreeMap<(usize, usize), (u64, u32)> = Default::default();
+    let mut alive: Vec<bool> = (0..cap).map(|i| graph.is_alive(NodeId(i))).collect();
+    for e in graph.edges() {
+        outs[e.src.0].insert(e.dst.0);
+        ins[e.dst.0].insert(e.src.0);
+        let slot = bytes.entry((e.src.0, e.dst.0)).or_insert((0, 0));
+        slot.0 += e.bytes;
+        slot.1 += 1;
+    }
+
+    let mut fused_edges = 0usize;
+    // Worklist of candidate edges.
+    let mut work: Vec<(usize, usize)> = bytes.keys().copied().collect();
+    while let Some((u0, v0)) = work.pop() {
+        let u = dsu.find(u0);
+        let v = dsu.find(v0);
+        if u == v || !alive[u] || !alive[v] || !outs[u].contains(&v) {
+            continue;
+        }
+        // Group eligibility is defined on representative *members*; we use
+        // the original nodes' annotations (groups never change under
+        // fusion — a meta node inherits its members' groups).
+        if !eligible(graph.node(NodeId(u0)), graph.node(NodeId(v0))) {
+            continue;
+        }
+        // Cycle-safe degree rule on the *current* contracted graph.
+        if outs[u].len() > 1 && ins[v].len() > 1 {
+            continue;
+        }
+        // Contract v into u.
+        fused_edges += 1;
+        alive[v] = false;
+        dsu.union_into(v, u);
+        outs[u].remove(&v);
+        ins[v].remove(&u);
+        bytes.remove(&(u, v));
+        // Redirect v's out-edges to u.
+        let v_outs: Vec<usize> = outs[v].iter().copied().collect();
+        for w in v_outs {
+            ins[w].remove(&v);
+            let (b, c) = bytes.remove(&(v, w)).unwrap_or((0, 0));
+            if w != u {
+                outs[u].insert(w);
+                ins[w].insert(u);
+                let slot = bytes.entry((u, w)).or_insert((0, 0));
+                slot.0 += b;
+                slot.1 += c;
+                work.push((u, w));
+            }
+        }
+        outs[v].clear();
+        // Redirect v's in-edges to u.
+        let v_ins: Vec<usize> = ins[v].iter().copied().collect();
+        for w in v_ins {
+            outs[w].remove(&v);
+            let (b, c) = bytes.remove(&(w, v)).unwrap_or((0, 0));
+            if w != u {
+                outs[w].insert(u);
+                ins[u].insert(w);
+                let slot = bytes.entry((w, u)).or_insert((0, 0));
+                slot.0 += b;
+                slot.1 += c;
+                work.push((w, u));
+            }
+        }
+        ins[v].clear();
+        // New degree situation at u may enable more fusions.
+        for &w in &outs[u] {
+            work.push((u, w));
+        }
+        for &w in &ins[u] {
+            work.push((w, u));
+        }
+    }
+
+    // Build the meta graph: one node per live representative.
+    let mut meta = OpGraph::new(&graph.name);
+    let mut meta_of: Vec<Option<NodeId>> = vec![None; cap];
+    // Group members per representative for annotation merging.
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); cap];
+    for i in 0..cap {
+        if graph.is_alive(NodeId(i)) {
+            members[dsu.find(i)].push(i);
+        }
+    }
+    // Colocation groups whose members were fused into the same meta node
+    // transitively merge (everything must land on one device): union the
+    // labels so every affected meta node carries one canonical group.
+    fn colo_root(map: &mut std::collections::BTreeMap<String, String>, g: &str) -> String {
+        let parent = map
+            .entry(g.to_string())
+            .or_insert_with(|| g.to_string())
+            .clone();
+        if parent == g {
+            return parent;
+        }
+        let root = colo_root(map, &parent);
+        map.insert(g.to_string(), root.clone());
+        root
+    }
+    let mut colo_union: std::collections::BTreeMap<String, String> = Default::default();
+    for rep in 0..cap {
+        if !alive[rep] || members[rep].is_empty() {
+            continue;
+        }
+        let mut first_grp: Option<String> = None;
+        for &m in &members[rep] {
+            if let Some(g) = &graph.node(NodeId(m)).colocation_group {
+                let root = colo_root(&mut colo_union, g);
+                match &first_grp {
+                    None => first_grp = Some(root),
+                    Some(f) => {
+                        let froot = colo_root(&mut colo_union, &f.clone());
+                        if froot != root {
+                            colo_union.insert(root, froot);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    for rep in 0..cap {
+        if !alive[rep] || members[rep].is_empty() {
+            continue;
+        }
+        let first = graph.node(NodeId(members[rep][0]));
+        let id = meta.add_node(&first.name, first.kind.clone());
+        let mut compute = 0.0;
+        let mut mem = MemorySpec::default();
+        let mut is_backward = true;
+        let mut colo = None;
+        let mut copl = None;
+        for &m in &members[rep] {
+            let n = graph.node(NodeId(m));
+            compute += n.compute;
+            mem = mem.merge(&n.mem);
+            is_backward &= n.is_backward;
+            if colo.is_none() {
+                colo = n
+                    .colocation_group
+                    .as_ref()
+                    .map(|g| colo_root(&mut colo_union, g));
+            }
+            if copl.is_none() {
+                copl = n.coplacement_group.clone();
+            }
+        }
+        {
+            let mn = meta.node_mut(id);
+            mn.compute = compute;
+            mn.mem = mem;
+            mn.is_backward = is_backward;
+            mn.colocation_group = colo;
+            mn.coplacement_group = copl;
+            mn.fused_from = members[rep].iter().map(|&m| NodeId(m)).collect();
+        }
+        for &m in &members[rep] {
+            meta_of[m] = Some(id);
+        }
+    }
+    // Meta node output bytes: max outgoing edge payload. Multi-tensor
+    // meta edges get latency-equivalent padding (see fn docs).
+    for (&(u, v), &(b, c)) in &bytes {
+        let (mu, mv) = (meta_of[u].unwrap(), meta_of[v].unwrap());
+        if mu != mv {
+            let eff = b + latency_equiv_bytes * c.saturating_sub(1) as u64;
+            meta.add_edge(mu, mv, eff);
+            let n = meta.node_mut(mu);
+            n.output_bytes = n.output_bytes.max(b);
+            n.mem.output = n.mem.output.max(b);
+        }
+    }
+    // Map forward_of through the contraction.
+    let fwd_map: Vec<Option<NodeId>> = (0..cap)
+        .map(|i| {
+            if graph.is_alive(NodeId(i)) {
+                graph.node(NodeId(i)).forward_of.and_then(|f| meta_of[f.0])
+            } else {
+                None
+            }
+        })
+        .collect();
+    for i in 0..cap {
+        if let (Some(meta_id), Some(fwd_meta)) = (meta_of[i], fwd_map[i]) {
+            if meta_id != fwd_meta && meta.node(meta_id).forward_of.is_none() {
+                meta.node_mut(meta_id).forward_of = Some(fwd_meta);
+            }
+        }
+    }
+
+    debug_assert!(meta.is_acyclic(), "fusion created a cycle");
+    Fused {
+        graph: meta,
+        meta_of,
+        fused_edges,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpGraph, OpKind};
+
+    fn grouped(g: &mut OpGraph, id: NodeId, grp: &str) {
+        g.node_mut(id).coplacement_group = Some(grp.to_string());
+    }
+
+    #[test]
+    fn chain_collapses() {
+        let mut g = OpGraph::new("chain");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        g.add_edge(a, b, 1);
+        g.add_edge(b, c, 1);
+        for (id, t) in [(a, 1.0), (b, 2.0), (c, 3.0)] {
+            g.node_mut(id).compute = t;
+        }
+        for id in [a, b, c] {
+            grouped(&mut g, id, "x");
+        }
+        let f = fuse(&g, same_group);
+        assert_eq!(f.graph.len(), 1);
+        assert_eq!(f.fused_edges, 2);
+        let meta = f.graph.iter_nodes().next().unwrap();
+        assert!((meta.compute - 6.0).abs() < 1e-12);
+        assert_eq!(meta.fused_from.len(), 3);
+    }
+
+    #[test]
+    fn unsafe_diamond_edge_not_fused() {
+        // a → b, a → c, b → d, c → d, plus direct a → d in group with d:
+        // fusing a,d would create a cycle (paths via b and c). Degree rule
+        // must reject (outdeg(a)=3 > 1, indeg(d)=3 > 1).
+        let mut g = OpGraph::new("diamond");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::MatMul);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        g.add_edge(a, d, 1);
+        g.add_edge(b, d, 1);
+        g.add_edge(c, d, 1);
+        grouped(&mut g, a, "x");
+        grouped(&mut g, d, "x");
+        let f = fuse(&g, same_group);
+        assert_eq!(f.graph.len(), 4, "a–d must not fuse");
+        assert!(f.graph.is_acyclic());
+    }
+
+    #[test]
+    fn figure_4e_pattern_fuses() {
+        // Fig 4e: src out-degree 1, dst in-degree 2 → safe.
+        let mut g = OpGraph::new("4e");
+        let p = g.add_node("p", OpKind::MatMul);
+        let src = g.add_node("src", OpKind::MatMul);
+        let dst = g.add_node("dst", OpKind::MatMul);
+        g.add_edge(p, dst, 1);
+        g.add_edge(src, dst, 1);
+        grouped(&mut g, src, "x");
+        grouped(&mut g, dst, "x");
+        let f = fuse(&g, same_group);
+        assert_eq!(f.graph.len(), 2);
+        assert!(f.graph.is_acyclic());
+    }
+
+    #[test]
+    fn different_groups_do_not_fuse() {
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        g.add_edge(a, b, 1);
+        grouped(&mut g, a, "x");
+        grouped(&mut g, b, "y");
+        let f = fuse(&g, same_group);
+        assert_eq!(f.graph.len(), 2);
+        assert_eq!(f.fused_edges, 0);
+    }
+
+    #[test]
+    fn colocation_groups_also_fuse() {
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::Variable);
+        let b = g.add_node("b", OpKind::ApplyGrad);
+        g.add_edge(a, b, 1);
+        g.node_mut(a).colocation_group = Some("w".into());
+        g.node_mut(b).colocation_group = Some("w".into());
+        let f = fuse(&g, same_group);
+        assert_eq!(f.graph.len(), 1);
+    }
+
+    #[test]
+    fn edges_redirected_with_bytes() {
+        // a --(5)--> b(fuse with c) --(7)--> d ; a-b fuse? a not grouped.
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::MatMul);
+        g.add_edge(a, b, 5);
+        g.add_edge(b, c, 3);
+        g.add_edge(c, d, 7);
+        grouped(&mut g, b, "x");
+        grouped(&mut g, c, "x");
+        let f = fuse(&g, same_group);
+        assert_eq!(f.graph.len(), 3);
+        let meta_b = f.meta_of[b.0].unwrap();
+        assert_eq!(f.meta_of[c.0].unwrap(), meta_b);
+        let ma = f.meta_of[a.0].unwrap();
+        let md = f.meta_of[d.0].unwrap();
+        assert_eq!(f.graph.edge_bytes(ma, meta_b), Some(5));
+        assert_eq!(f.graph.edge_bytes(meta_b, md), Some(7));
+    }
+
+    #[test]
+    fn fuses_model_scale_graph() {
+        let g = crate::models::transformer::transformer(
+            crate::models::transformer::TransformerConfig::paper(64),
+        );
+        let before = g.len();
+        let f = fuse(&g, same_group);
+        assert!(f.graph.is_acyclic());
+        assert!(
+            f.graph.len() * 2 < before,
+            "{} -> {}",
+            before,
+            f.graph.len()
+        );
+        // Every live original node maps to a meta node.
+        for id in g.node_ids() {
+            assert!(f.meta_of[id.0].is_some());
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! Graph optimizer (paper §3.1): co-placement, operator fusion, and
+//! forward-operator-based placement, producing the reduced meta-graph
+//! the placement algorithms run on.
+//!
+//! Pipeline (all stages optional, mirroring Table 6's ablation):
+//!
+//! 1. [`coplacement::apply_coplacement`] labels single-consumer chains and
+//!    backward ops (§3.1.2).
+//! 2. [`fusion::fuse`] contracts same-group edges under the cycle-safe
+//!    degree rule (§3.1.3).
+//! 3. Forward-only projection drops backward nodes from the placement
+//!    graph when memory suffices, folding their memory into their forward
+//!    anchor; after placement they inherit the anchor's device (§3.1.3).
+//!
+//! [`expand_placement`] maps a meta-graph placement back onto the full
+//! original operator graph.
+
+pub mod coplacement;
+pub mod fusion;
+
+use crate::graph::{DeviceId, NodeId, OpGraph};
+use std::collections::BTreeMap;
+
+/// Optimizer configuration (Table 6 toggles these).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptConfig {
+    /// Apply the co-placement heuristics (§3.1.2).
+    pub coplacement: bool,
+    /// Apply cycle-safe operator fusion (§3.1.3).
+    pub fusion: bool,
+    /// Place only forward operators (valid when memory is sufficient).
+    pub forward_only: bool,
+    /// Latency-equivalent bytes (`latency × bandwidth` of the comm
+    /// model) used to pad multi-tensor fused edges so placement-time
+    /// comm estimates match the per-tensor costs the ES charges.
+    pub latency_equiv_bytes: u64,
+}
+
+impl Default for OptConfig {
+    fn default() -> OptConfig {
+        OptConfig {
+            coplacement: true,
+            fusion: true,
+            forward_only: false,
+            latency_equiv_bytes: 0,
+        }
+    }
+}
+
+impl OptConfig {
+    /// Everything off — the "Un-Optimized" column of Table 6.
+    pub fn none() -> OptConfig {
+        OptConfig {
+            coplacement: false,
+            fusion: false,
+            forward_only: false,
+            latency_equiv_bytes: 0,
+        }
+    }
+
+    /// Everything on (sufficient-memory regime).
+    pub fn full() -> OptConfig {
+        OptConfig {
+            coplacement: true,
+            fusion: true,
+            forward_only: true,
+            latency_equiv_bytes: 0,
+        }
+    }
+}
+
+/// Optimizer output: the graph to place plus the bookkeeping needed to
+/// expand a placement back to the original graph.
+pub struct Optimized {
+    /// The (possibly fused, possibly forward-only) graph to place.
+    pub graph: OpGraph,
+    /// Original node slot → node in `graph` that decides its device.
+    pub anchor: Vec<Option<NodeId>>,
+    pub stats: OptStats,
+}
+
+/// Reduction statistics (Table 6 columns).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OptStats {
+    pub original_ops: usize,
+    pub placed_ops: usize,
+    pub fused_edges: usize,
+    pub coplacement_labels: usize,
+}
+
+/// Run the optimizer pipeline.
+pub fn optimize(original: &OpGraph, cfg: &OptConfig) -> Optimized {
+    let mut work = original.clone();
+    let mut stats = OptStats {
+        original_ops: original.len(),
+        ..Default::default()
+    };
+
+    if cfg.coplacement {
+        let s = coplacement::apply_coplacement(&mut work);
+        stats.coplacement_labels = s.chain_labeled + s.bwd_labeled;
+    }
+
+    // Fusion (uses colocation groups even when coplacement is off —
+    // TF colocation constraints always hold, §3.1.1).
+    let (mut graph, mut anchor) = if cfg.fusion {
+        let fused =
+            fusion::fuse_with_latency_equiv(&work, fusion::same_group, cfg.latency_equiv_bytes);
+        stats.fused_edges = fused.fused_edges;
+        (fused.graph, fused.meta_of)
+    } else {
+        // Identity mapping.
+        let anchor: Vec<Option<NodeId>> = (0..work.capacity())
+            .map(|i| {
+                if work.is_alive(NodeId(i)) {
+                    Some(NodeId(i))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        (work.clone(), anchor)
+    };
+
+    if cfg.forward_only {
+        let (fwd_graph, remap) = forward_projection(&graph);
+        // Compose: original → meta → forward anchor.
+        for slot in anchor.iter_mut() {
+            if let Some(meta) = *slot {
+                *slot = remap[meta.0];
+            }
+        }
+        graph = fwd_graph;
+    }
+
+    stats.placed_ops = graph.len();
+    Optimized {
+        graph,
+        anchor,
+        stats,
+    }
+}
+
+/// Project out backward nodes. Backward memory is folded into the anchor
+/// node so the placement-time memory ledger still covers it. Returns the
+/// forward graph and a map `meta node → forward node`.
+///
+/// The projected graph reuses the input's node ids for forward nodes
+/// (backward slots become tombstones), so edges can be copied directly.
+fn forward_projection(graph: &OpGraph) -> (OpGraph, Vec<Option<NodeId>>) {
+    let cap = graph.capacity();
+    let mut remap: Vec<Option<NodeId>> = vec![None; cap];
+    let mut out = OpGraph::new(&graph.name);
+    // Recreate all slots to preserve ids; tombstone dead + backward.
+    for i in 0..cap {
+        let id = NodeId(i);
+        let new_id = out.add_node("tomb", crate::graph::OpKind::Generic(0));
+        debug_assert_eq!(new_id.0, i);
+        if graph.is_alive(id) && !graph.node(id).is_backward {
+            *out.node_mut(new_id) = crate::graph::OpNode {
+                id: new_id,
+                ..graph.node(id).clone()
+            };
+            remap[i] = Some(new_id);
+        } else {
+            out.remove_node(new_id);
+        }
+    }
+    // Forward–forward edges survive.
+    for e in graph.edges() {
+        if remap[e.src.0].is_some() && remap[e.dst.0].is_some() {
+            out.add_edge(e.src, e.dst, e.bytes);
+        }
+    }
+    // Anchor backward nodes and fold their memory into the anchor.
+    for i in 0..cap {
+        let id = NodeId(i);
+        if !graph.is_alive(id) || !graph.node(id).is_backward {
+            continue;
+        }
+        let n = graph.node(id);
+        // Prefer the explicit forward link; otherwise a colocation-group
+        // sibling (ApplyGrad anchors to its Variable, §3.1.1); otherwise
+        // a forward predecessor.
+        let target = n
+            .forward_of
+            .filter(|f| remap[f.0].is_some())
+            .or_else(|| {
+                n.colocation_group.as_ref().and_then(|grp| {
+                    graph
+                        .iter_nodes()
+                        .find(|m| !m.is_backward && m.colocation_group.as_ref() == Some(grp))
+                        .map(|m| m.id)
+                })
+            })
+            .or_else(|| {
+                graph
+                    .predecessors(id)
+                    .iter()
+                    .map(|&(p, _)| p)
+                    .find(|p| remap[p.0].is_some())
+            });
+        if let Some(t) = target.and_then(|t| remap[t.0]) {
+            remap[i] = Some(t);
+            let mem = n.mem;
+            let anchor_node = out.node_mut(t);
+            anchor_node.mem = anchor_node.mem.merge(&mem);
+        } else {
+            // No forward anchor found (pathological); keep the node.
+            let keep = out.add_node("orphan_bwd", n.kind.clone());
+            *out.node_mut(keep) = crate::graph::OpNode {
+                id: keep,
+                ..n.clone()
+            };
+            remap[i] = Some(keep);
+        }
+    }
+    debug_assert!(out.is_acyclic());
+    (out, remap)
+}
+
+/// Expand a meta-graph placement to the original operator graph.
+pub fn expand_placement(
+    original: &OpGraph,
+    opt: &Optimized,
+    meta_placement: &BTreeMap<NodeId, DeviceId>,
+) -> BTreeMap<NodeId, DeviceId> {
+    let mut full = BTreeMap::new();
+    for id in original.node_ids() {
+        let anchor = opt.anchor[id.0].expect("every live op has an anchor");
+        let dev = *meta_placement
+            .get(&anchor)
+            .unwrap_or_else(|| panic!("anchor {anchor} unplaced for op {id}"));
+        full.insert(id, dev);
+    }
+    full
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::transformer::{transformer, TransformerConfig};
+
+    #[test]
+    fn full_pipeline_reduces_transformer() {
+        let g = transformer(TransformerConfig::paper(64));
+        let opt = optimize(&g, &OptConfig::full());
+        assert!(opt.graph.is_acyclic());
+        assert!(
+            opt.stats.placed_ops * 3 < opt.stats.original_ops,
+            "{} -> {}",
+            opt.stats.original_ops,
+            opt.stats.placed_ops
+        );
+        // Forward-only: no backward nodes remain.
+        assert!(opt.graph.iter_nodes().all(|n| !n.is_backward));
+        // Every original op has an anchor in the placed graph.
+        for id in g.node_ids() {
+            let a = opt.anchor[id.0].expect("anchor");
+            assert!(opt.graph.is_alive(a));
+        }
+    }
+
+    #[test]
+    fn none_config_is_identity() {
+        let g = transformer(TransformerConfig::paper(64));
+        let opt = optimize(&g, &OptConfig::none());
+        assert_eq!(opt.graph.len(), g.len());
+        assert_eq!(opt.stats.fused_edges, 0);
+        for id in g.node_ids() {
+            assert_eq!(opt.anchor[id.0], Some(id));
+        }
+    }
+
+    #[test]
+    fn memory_is_conserved_under_forward_only() {
+        // Folding backward memory into anchors must not lose bytes:
+        // total placed memory ≥ total original permanent memory.
+        let g = transformer(TransformerConfig::paper(64));
+        let opt = optimize(&g, &OptConfig::full());
+        let orig_mem = g.total_permanent_memory();
+        let placed_mem = opt.graph.total_permanent_memory();
+        assert!(
+            placed_mem >= orig_mem,
+            "placed {placed_mem} < original {orig_mem}"
+        );
+    }
+
+    #[test]
+    fn expand_placement_covers_all_ops() {
+        let g = transformer(TransformerConfig::paper(64));
+        let opt = optimize(&g, &OptConfig::full());
+        let mut meta_placement = BTreeMap::new();
+        for (i, id) in opt.graph.node_ids().enumerate() {
+            meta_placement.insert(id, DeviceId(i % 4));
+        }
+        let full = expand_placement(&g, &opt, &meta_placement);
+        assert_eq!(full.len(), g.len());
+        // fwd/bwd matching: when fused into the same meta node, devices
+        // must agree.
+        for n in g.iter_nodes().filter(|n| n.is_backward) {
+            if let Some(f) = n.forward_of {
+                if opt.anchor[n.id.0] == opt.anchor[f.0] {
+                    assert_eq!(full[&n.id], full[&f]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fusion_without_coplacement_uses_colocation_only() {
+        let g = crate::models::linreg::linreg_graph();
+        let opt = optimize(
+            &g,
+            &OptConfig {
+                coplacement: false,
+                fusion: true,
+                forward_only: false,
+                latency_equiv_bytes: 0,
+            },
+        );
+        // linreg has 2 colocation pairs; only directly-connected pairs
+        // fuse: {Step, UpdateStep} (edge) and {Weight, ApplyGrad} (no
+        // direct edge → cannot fuse). 7 ops → 6.
+        assert_eq!(opt.graph.len(), 6);
+    }
+}

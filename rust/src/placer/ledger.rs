@@ -1,0 +1,335 @@
+//! Placement-time device memory ledger (paper §3.1.1 + §4.2).
+//!
+//! Tracks, per device, the memory the placer has committed:
+//!
+//! * **permanent** bytes (parameters + gradients) accumulate monotonically;
+//! * **output** tensors are held from the producer's schedule until every
+//!   successor has been scheduled (in a training graph the backward op is
+//!   a successor, so outputs are naturally held across the forward pass —
+//!   the paper's dynamic-allocation model);
+//! * **temporary** bytes exist only during an op's execution window; since
+//!   a device executes one op at a time, the check is
+//!   `used + temp(op) ≤ capacity` at schedule time;
+//! * **colocation groups** (§3.1.1): when the first member of a group is
+//!   placed, the whole group's permanent memory is reserved on that device
+//!   at once, and the group is pinned there. If it does not fit, placement
+//!   of that member fails and the algorithm tries its next device choice.
+
+use crate::graph::{DeviceId, NodeId, OpGraph};
+use std::collections::BTreeMap;
+
+/// Ledger for one device.
+#[derive(Debug, Clone)]
+pub struct DeviceLedger {
+    pub capacity: u64,
+    /// Params + grads (+ group reservations) committed so far.
+    pub permanent: u64,
+    /// Output tensors currently held: node → bytes.
+    outputs: BTreeMap<NodeId, u64>,
+    output_bytes: u64,
+    /// Peak of permanent + outputs + transient temp.
+    pub peak: u64,
+}
+
+impl DeviceLedger {
+    pub fn new(capacity: u64) -> DeviceLedger {
+        DeviceLedger {
+            capacity,
+            permanent: 0,
+            outputs: BTreeMap::new(),
+            output_bytes: 0,
+            peak: 0,
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.permanent + self.output_bytes
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity.saturating_sub(self.used())
+    }
+
+    fn bump_peak(&mut self, transient: u64) {
+        self.peak = self.peak.max(self.used() + transient);
+    }
+}
+
+/// Cluster-wide ledger with colocation-group pinning.
+#[derive(Debug, Clone)]
+pub struct MemoryLedger {
+    pub devices: Vec<DeviceLedger>,
+    /// Colocation group → pinned device.
+    group_device: BTreeMap<String, DeviceId>,
+    /// Per-group total permanent bytes (reserved on first placement).
+    group_perm: BTreeMap<String, u64>,
+    /// Remaining unscheduled successors per node (for output freeing).
+    succ_remaining: Vec<usize>,
+    /// Where each node's output is held.
+    output_home: Vec<Option<DeviceId>>,
+}
+
+impl MemoryLedger {
+    /// Build from the graph to place and per-device capacities.
+    pub fn new(graph: &OpGraph, capacities: &[u64]) -> MemoryLedger {
+        // Colocation-group reservation covers the *entire* group's
+        // lasting memory (params, grads, and outputs): "memory is
+        // reserved for a colocation group at device p when the first
+        // operator is placed on p" (§4.2) — otherwise late group members
+        // (e.g. ApplyGrad pinned to its Variable) can dead-end on a
+        // device that filled up in the meantime.
+        // The reservation also sets aside the largest member's transient
+        // scratch: a pinned late member (ApplyGrad / fused backward) must
+        // still be runnable after other groups fill the device.
+        let mut group_perm: BTreeMap<String, u64> = BTreeMap::new();
+        let mut group_temp: BTreeMap<String, u64> = BTreeMap::new();
+        for n in graph.iter_nodes() {
+            if let Some(g) = &n.colocation_group {
+                *group_perm.entry(g.clone()).or_insert(0) +=
+                    n.mem.params + n.mem.param_grad + n.mem.output;
+                let t = group_temp.entry(g.clone()).or_insert(0);
+                *t = (*t).max(n.mem.temporary_training());
+            }
+        }
+        for (g, t) in group_temp {
+            *group_perm.get_mut(&g).unwrap() += t;
+        }
+        let mut succ_remaining = vec![0usize; graph.capacity()];
+        for id in graph.node_ids() {
+            succ_remaining[id.0] = graph.out_degree(id);
+        }
+        MemoryLedger {
+            devices: capacities.iter().map(|&c| DeviceLedger::new(c)).collect(),
+            group_device: BTreeMap::new(),
+            group_perm,
+            succ_remaining,
+            output_home: vec![None; graph.capacity()],
+        }
+    }
+
+    /// Device a node is constrained to via its colocation group, if the
+    /// group is already pinned.
+    pub fn pinned_device(&self, graph: &OpGraph, node: NodeId) -> Option<DeviceId> {
+        graph
+            .node(node)
+            .colocation_group
+            .as_ref()
+            .and_then(|g| self.group_device.get(g).copied())
+    }
+
+    /// Whether `node` can be scheduled on `dev` without exceeding memory.
+    pub fn fits(&self, graph: &OpGraph, node: NodeId, dev: DeviceId) -> bool {
+        // Colocation pinning dominates.
+        if let Some(p) = self.pinned_device(graph, node) {
+            if p != dev {
+                return false;
+            }
+        }
+        let n = graph.node(node);
+        let led = &self.devices[dev.0];
+        let need = match &n.colocation_group {
+            Some(g) if !self.group_device.contains_key(g) => {
+                // First member: the whole group's lasting memory (plus
+                // its worst transient) must fit.
+                self.group_perm[g]
+            }
+            // Group reservation already covers perm + output + max temp.
+            Some(_) => 0,
+            None => n.mem.params + n.mem.param_grad + n.mem.output + n.mem.temporary_training(),
+        };
+        need <= led.free()
+    }
+
+    /// Commit `node` to `dev`. Panics if `fits` would be false (callers
+    /// check first). Frees predecessors' outputs whose consumers are now
+    /// all scheduled.
+    pub fn commit(&mut self, graph: &OpGraph, node: NodeId, dev: DeviceId) {
+        debug_assert!(self.fits(graph, node, dev), "commit without fits");
+        let n = graph.node(node);
+        // Group reservation (covers params + grads + outputs of all
+        // members); non-grouped ops charge individually.
+        let in_group = n.colocation_group.is_some();
+        match &n.colocation_group {
+            Some(g) if !self.group_device.contains_key(g) => {
+                self.group_device.insert(g.clone(), dev);
+                self.devices[dev.0].permanent += self.group_perm[g];
+            }
+            Some(_) => {}
+            None => {
+                self.devices[dev.0].permanent += n.mem.params + n.mem.param_grad;
+            }
+        }
+        // Output allocation (held until all successors scheduled);
+        // grouped ops' outputs live inside the group reservation.
+        if !in_group && n.mem.output > 0 && self.succ_remaining[node.0] > 0 {
+            let led = &mut self.devices[dev.0];
+            led.outputs.insert(node, n.mem.output);
+            led.output_bytes += n.mem.output;
+            self.output_home[node.0] = Some(dev);
+        }
+        // Transient peak accounting.
+        self.devices[dev.0].bump_peak(n.mem.temporary_training());
+        // Free predecessors whose successors are all scheduled.
+        for &(p, _) in graph.predecessors(node) {
+            let r = &mut self.succ_remaining[p.0];
+            *r = r.saturating_sub(1);
+            if *r == 0 {
+                if let Some(home) = self.output_home[p.0].take() {
+                    let led = &mut self.devices[home.0];
+                    if let Some(bytes) = led.outputs.remove(&p) {
+                        led.output_bytes -= bytes;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Peak usage per device (for Fig. 7).
+    pub fn peaks(&self) -> Vec<u64> {
+        self.devices.iter().map(|d| d.peak).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{MemorySpec, OpGraph, OpKind};
+
+    fn node_with_mem(g: &mut OpGraph, name: &str, mem: MemorySpec) -> NodeId {
+        let id = g.add_node(name, OpKind::MatMul);
+        g.node_mut(id).mem = mem;
+        id
+    }
+
+    #[test]
+    fn permanent_accumulates_and_outputs_free() {
+        let mut g = OpGraph::new("t");
+        let a = node_with_mem(
+            &mut g,
+            "a",
+            MemorySpec {
+                params: 100,
+                output: 50,
+                ..Default::default()
+            },
+        );
+        let b = node_with_mem(
+            &mut g,
+            "b",
+            MemorySpec {
+                params: 10,
+                ..Default::default()
+            },
+        );
+        g.add_edge(a, b, 50);
+        let mut led = MemoryLedger::new(&g, &[1000]);
+        assert!(led.fits(&g, a, DeviceId(0)));
+        led.commit(&g, a, DeviceId(0));
+        assert_eq!(led.devices[0].used(), 150); // params + held output
+        led.commit(&g, b, DeviceId(0));
+        // b scheduled → a's output freed
+        assert_eq!(led.devices[0].used(), 110);
+    }
+
+    #[test]
+    fn rejects_oversized_op() {
+        let mut g = OpGraph::new("t");
+        let a = node_with_mem(
+            &mut g,
+            "a",
+            MemorySpec {
+                params: 2000,
+                ..Default::default()
+            },
+        );
+        let led = MemoryLedger::new(&g, &[1000, 4000]);
+        assert!(!led.fits(&g, a, DeviceId(0)));
+        assert!(led.fits(&g, a, DeviceId(1)));
+    }
+
+    #[test]
+    fn colocation_group_reserved_once_and_pins() {
+        let mut g = OpGraph::new("t");
+        let v = node_with_mem(
+            &mut g,
+            "var",
+            MemorySpec {
+                params: 400,
+                ..Default::default()
+            },
+        );
+        let ap = node_with_mem(
+            &mut g,
+            "apply",
+            MemorySpec {
+                params: 300,
+                ..Default::default()
+            },
+        );
+        g.node_mut(v).colocation_group = Some("w".into());
+        g.node_mut(ap).colocation_group = Some("w".into());
+        let mut led = MemoryLedger::new(&g, &[1000, 1000]);
+        // First member needs the whole group's 700.
+        assert!(led.fits(&g, v, DeviceId(0)));
+        led.commit(&g, v, DeviceId(0));
+        assert_eq!(led.devices[0].permanent, 700);
+        // Second member pinned to device 0 and costs no extra permanent.
+        assert!(!led.fits(&g, ap, DeviceId(1)), "pinned to dev0");
+        assert!(led.fits(&g, ap, DeviceId(0)));
+        led.commit(&g, ap, DeviceId(0));
+        assert_eq!(led.devices[0].permanent, 700);
+    }
+
+    #[test]
+    fn group_too_big_rejected_at_first_member() {
+        let mut g = OpGraph::new("t");
+        let v = node_with_mem(
+            &mut g,
+            "var",
+            MemorySpec {
+                params: 600,
+                ..Default::default()
+            },
+        );
+        let ap = node_with_mem(
+            &mut g,
+            "apply",
+            MemorySpec {
+                params: 600,
+                ..Default::default()
+            },
+        );
+        g.node_mut(v).colocation_group = Some("w".into());
+        g.node_mut(ap).colocation_group = Some("w".into());
+        let led = MemoryLedger::new(&g, &[1000]);
+        assert!(!led.fits(&g, v, DeviceId(0)), "group of 1200 > 1000");
+    }
+
+    #[test]
+    fn temp_is_transient() {
+        let mut g = OpGraph::new("t");
+        let a = node_with_mem(
+            &mut g,
+            "a",
+            MemorySpec {
+                temp: 900,
+                ..Default::default()
+            },
+        );
+        let b = node_with_mem(
+            &mut g,
+            "b",
+            MemorySpec {
+                temp: 900,
+                ..Default::default()
+            },
+        );
+        let mut led = MemoryLedger::new(&g, &[1000]);
+        assert!(led.fits(&g, a, DeviceId(0)));
+        led.commit(&g, a, DeviceId(0));
+        // temp released: b's 900 still fits
+        assert!(led.fits(&g, b, DeviceId(0)));
+        led.commit(&g, b, DeviceId(0));
+        assert_eq!(led.devices[0].peak, 900);
+    }
+}

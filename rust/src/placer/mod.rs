@@ -1,0 +1,146 @@
+//! The memory-constrained placement algorithms (paper §2): m-TOPO,
+//! m-ETF and m-SCT, plus the shared [`Placement`] result type and the
+//! [`Placer`] trait implemented by the baselines as well.
+
+pub mod ledger;
+pub mod metf;
+pub mod msct;
+pub mod mtopo;
+pub mod sched;
+
+use crate::graph::{DeviceId, NodeId, OpGraph};
+use crate::profile::Cluster;
+use std::collections::BTreeMap;
+
+/// A completed placement of a graph on a cluster.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub algorithm: String,
+    pub device_of: BTreeMap<NodeId, DeviceId>,
+    /// Makespan predicted by the placement-time schedule, seconds.
+    pub predicted_makespan: f64,
+    /// Wall-clock time the algorithm took, seconds.
+    pub placement_time: f64,
+    /// Peak memory per device as tracked by the placement ledger.
+    pub peak_memory: Vec<u64>,
+}
+
+impl Placement {
+    pub fn device(&self, id: NodeId) -> DeviceId {
+        self.device_of[&id]
+    }
+
+    /// Ops per device.
+    pub fn device_histogram(&self, n: usize) -> Vec<usize> {
+        let mut h = vec![0; n];
+        for d in self.device_of.values() {
+            h[d.0] += 1;
+        }
+        h
+    }
+
+    /// Number of distinct devices actually used.
+    pub fn devices_used(&self) -> usize {
+        let set: std::collections::BTreeSet<_> = self.device_of.values().collect();
+        set.len()
+    }
+}
+
+/// Placement failure.
+#[derive(Debug, thiserror::Error)]
+pub enum PlaceError {
+    #[error("out of memory: operator {op} does not fit on any device")]
+    Oom { op: String },
+    #[error("graph is not a DAG")]
+    Cyclic,
+}
+
+/// A placement algorithm.
+pub trait Placer {
+    fn name(&self) -> String;
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement>;
+}
+
+/// Helper shared by placers: verify the result covers every live op.
+pub(crate) fn finish_placement(
+    algorithm: &str,
+    graph: &OpGraph,
+    st: sched::SchedState<'_>,
+    t0: std::time::Instant,
+) -> anyhow::Result<Placement> {
+    let mut device_of = BTreeMap::new();
+    for id in graph.node_ids() {
+        match st.device_of[id.0] {
+            Some(d) => {
+                device_of.insert(id, d);
+            }
+            None => {
+                return Err(PlaceError::Oom {
+                    op: graph.node(id).name.clone(),
+                }
+                .into())
+            }
+        }
+    }
+    Ok(Placement {
+        algorithm: algorithm.to_string(),
+        predicted_makespan: st.makespan(),
+        placement_time: t0.elapsed().as_secs_f64(),
+        peak_memory: st.ledger.peaks(),
+        device_of,
+    })
+}
+
+/// Heap entry ordered by earliest schedulable time. Ties break on
+/// favorite-device preference, then ids, for determinism. Used as
+/// `Reverse<QueueEntry>` inside a max-heap to obtain a min-heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct QueueEntry {
+    pub est: f64,
+    pub prefer: bool, // favorite-parent device gets priority on ties
+    pub node: NodeId,
+    pub dev: DeviceId,
+}
+
+impl Eq for QueueEntry {}
+
+impl Ord for QueueEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.est
+            .partial_cmp(&other.est)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.prefer.cmp(&self.prefer)) // prefer=true first
+            .then_with(|| self.node.cmp(&other.node))
+            .then_with(|| self.dev.cmp(&other.dev))
+    }
+}
+
+impl PartialOrd for QueueEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_entry_ordering() {
+        let a = QueueEntry {
+            est: 1.0,
+            prefer: false,
+            node: NodeId(0),
+            dev: DeviceId(0),
+        };
+        let b = QueueEntry {
+            est: 2.0,
+            prefer: true,
+            node: NodeId(0),
+            dev: DeviceId(0),
+        };
+        assert!(a < b, "earlier est wins regardless of preference");
+        let c = QueueEntry { prefer: true, ..a };
+        assert!(c < a, "preference breaks ties");
+    }
+}

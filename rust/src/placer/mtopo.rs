@@ -1,0 +1,163 @@
+//! m-TOPO: the topological-sort strawman placer (paper §2.2).
+//!
+//! Computes the load-balanced per-device cap
+//! `Cap = Σᵢ dᵢ / n + maxᵢ dᵢ`, then walks the graph in topological order
+//! filling device 0, then device 1, … until each device's permanent
+//! memory reaches the cap. Colocation groups are honored by pinning a
+//! group to the device of its first-placed member.
+
+use super::sched::SchedState;
+use super::{finish_placement, Placement, Placer};
+use crate::graph::{DeviceId, OpGraph};
+use crate::profile::Cluster;
+
+/// The m-TOPO placer.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MTopo;
+
+impl Placer for MTopo {
+    fn name(&self) -> String {
+        "m-topo".to_string()
+    }
+
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement> {
+        let t0 = std::time::Instant::now();
+        let order = graph.topo_order().ok_or(super::PlaceError::Cyclic)?;
+        // Memory requirement dᵢ: what the op permanently holds.
+        let d = |id: crate::graph::NodeId| graph.node(id).mem.permanent_training();
+        let total: u64 = order.iter().map(|&i| d(i)).sum();
+        let max_d: u64 = order.iter().map(|&i| d(i)).max().unwrap_or(0);
+        let n = cluster.n() as u64;
+        let cap = total / n + max_d;
+
+        // Fill devices in topo order; the SchedState replays the schedule
+        // (each device runs its ops in topological order — m-TOPO's
+        // runtime semantics) and provides the memory ledger, which also
+        // enforces colocation pinning.
+        let mut st = SchedState::new(graph, cluster);
+        let mut dev = 0usize;
+        let mut filled: u64 = 0;
+        for &id in &order {
+            // Colocation pinning can override the fill device.
+            let pinned = st.ledger.pinned_device(graph, id);
+            let target = match pinned {
+                Some(p) => p,
+                None => {
+                    // Advance while this op would push the current device
+                    // past the cap (and a later device exists).
+                    while dev + 1 < cluster.n() && filled + d(id) > cap {
+                        dev += 1;
+                        filled = 0;
+                    }
+                    DeviceId(dev)
+                }
+            };
+            // Memory feasibility: try the target, then subsequent devices.
+            let mut chosen = None;
+            if st.est(id, target).is_some() {
+                chosen = Some(target);
+            } else if pinned.is_none() {
+                for probe in 0..cluster.n() {
+                    let cand = DeviceId((target.0 + probe + 1) % cluster.n());
+                    if st.est(id, cand).is_some() {
+                        chosen = Some(cand);
+                        break;
+                    }
+                }
+            }
+            let chosen = chosen.ok_or_else(|| super::PlaceError::Oom {
+                op: graph.node(id).name.clone(),
+            })?;
+            st.commit(id, chosen);
+            if pinned.is_none() && chosen.0 == dev {
+                filled += d(id);
+            }
+        }
+        finish_placement(&self.name(), graph, st, t0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{MemorySpec, OpKind};
+    use crate::profile::CommModel;
+
+    fn chain_graph(n: usize, mem_each: u64) -> OpGraph {
+        let mut g = OpGraph::new("chain");
+        let mut prev = None;
+        for i in 0..n {
+            let id = g.add_node(&format!("op{i}"), OpKind::MatMul);
+            g.node_mut(id).compute = 1.0;
+            g.node_mut(id).mem = MemorySpec {
+                params: mem_each,
+                ..Default::default()
+            };
+            if let Some(p) = prev {
+                g.add_edge(p, id, 1);
+            }
+            prev = Some(id);
+        }
+        g
+    }
+
+    #[test]
+    fn splits_by_cap() {
+        // 8 ops × 100 bytes on 4 devices: cap = 200 + 100 = 300 → 3,3,2.
+        let g = chain_graph(8, 100);
+        let cluster = Cluster::homogeneous(4, 10_000, CommModel::new(0.0, 1e9));
+        let p = MTopo.place(&g, &cluster).unwrap();
+        let hist = p.device_histogram(4);
+        assert_eq!(hist.iter().sum::<usize>(), 8);
+        assert!(hist[0] >= 2 && hist[0] <= 3, "hist {:?}", hist);
+        assert!(p.devices_used() >= 2);
+    }
+
+    #[test]
+    fn topo_order_preserved_per_device() {
+        let g = chain_graph(6, 10);
+        let cluster = Cluster::homogeneous(2, 10_000, CommModel::new(0.0, 1e9));
+        let p = MTopo.place(&g, &cluster).unwrap();
+        // chain: placement must be a prefix on dev0 and suffix on dev1
+        let mut seen_dev1 = false;
+        for id in g.topo_order().unwrap() {
+            let d = p.device(id);
+            if d == DeviceId(1) {
+                seen_dev1 = true;
+            } else {
+                assert!(!seen_dev1, "device 0 op after device 1 op");
+            }
+        }
+    }
+
+    #[test]
+    fn oom_when_cluster_too_small() {
+        let g = chain_graph(4, 1000);
+        let cluster = Cluster::homogeneous(2, 1500, CommModel::new(0.0, 1e9));
+        assert!(MTopo.place(&g, &cluster).is_err());
+    }
+
+    #[test]
+    fn single_huge_op_on_emptier_device() {
+        // One op larger than cap must still place (cap includes max dᵢ).
+        let mut g = chain_graph(3, 10);
+        let big = g.add_node("big", OpKind::MatMul);
+        g.node_mut(big).mem = MemorySpec {
+            params: 500,
+            ..Default::default()
+        };
+        let first = g.node_ids().next().unwrap();
+        g.add_edge(first, big, 1);
+        let cluster = Cluster::homogeneous(2, 2000, CommModel::new(0.0, 1e9));
+        let p = MTopo.place(&g, &cluster).unwrap();
+        assert_eq!(p.device_of.len(), 4);
+    }
+
+    #[test]
+    fn makespan_positive_and_covers_compute() {
+        let g = chain_graph(5, 10);
+        let cluster = Cluster::homogeneous(2, 10_000, CommModel::new(0.0, 1e9));
+        let p = MTopo.place(&g, &cluster).unwrap();
+        assert!(p.predicted_makespan >= 5.0, "{}", p.predicted_makespan);
+    }
+}

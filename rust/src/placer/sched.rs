@@ -1,0 +1,299 @@
+//! Shared scheduling state for m-ETF and m-SCT: earliest-schedulable-time
+//! computation (paper Eq. 1), sequential communication queues (§3.1.4),
+//! per-destination tensor caching (§4.2), and the memory ledger.
+
+use super::ledger::MemoryLedger;
+use crate::graph::{DeviceId, NodeId, OpGraph};
+use crate::profile::Cluster;
+
+const INF: f64 = f64::INFINITY;
+
+/// Mutable schedule being constructed by a placement algorithm.
+pub struct SchedState<'a> {
+    pub graph: &'a OpGraph,
+    pub cluster: &'a Cluster,
+    pub ledger: MemoryLedger,
+    pub start: Vec<f64>,
+    pub finish: Vec<f64>,
+    pub device_of: Vec<Option<DeviceId>>,
+    /// Earliest time each device's compute queue is free.
+    pub device_free: Vec<f64>,
+    /// Earliest time each device's transfer engine is free (§3.1.4:
+    /// one transfer at a time, shared by in- and out-bound).
+    pub comm_free: Vec<f64>,
+    /// arrival[node][device]: when the node's output tensor is available
+    /// on that device (INF = not transferred). The home device is set at
+    /// schedule time.
+    arrival: Vec<Vec<f64>>,
+    /// Unscheduled predecessor count (readiness tracking).
+    pub unscheduled_preds: Vec<usize>,
+    pub scheduled_count: usize,
+}
+
+impl<'a> SchedState<'a> {
+    pub fn new(graph: &'a OpGraph, cluster: &'a Cluster) -> SchedState<'a> {
+        let cap = graph.capacity();
+        let n = cluster.n();
+        let capacities: Vec<u64> = cluster.devices.iter().map(|d| d.memory).collect();
+        let mut unscheduled_preds = vec![usize::MAX; cap];
+        for id in graph.node_ids() {
+            unscheduled_preds[id.0] = graph.in_degree(id);
+        }
+        SchedState {
+            graph,
+            cluster,
+            ledger: MemoryLedger::new(graph, &capacities),
+            start: vec![0.0; cap],
+            finish: vec![0.0; cap],
+            device_of: vec![None; cap],
+            device_free: vec![0.0; n],
+            comm_free: vec![0.0; n],
+            arrival: vec![vec![INF; n]; cap],
+            unscheduled_preds,
+            scheduled_count: 0,
+        }
+    }
+
+    /// Ops with no unscheduled predecessors and not yet scheduled.
+    pub fn initial_ready(&self) -> Vec<NodeId> {
+        self.graph
+            .node_ids()
+            .filter(|&id| self.unscheduled_preds[id.0] == 0)
+            .collect()
+    }
+
+    pub fn is_scheduled(&self, id: NodeId) -> bool {
+        self.device_of[id.0].is_some()
+    }
+
+    pub fn done(&self) -> bool {
+        self.scheduled_count == self.graph.len()
+    }
+
+    /// Makespan of the schedule so far.
+    pub fn makespan(&self) -> f64 {
+        self.graph
+            .node_ids()
+            .map(|id| self.finish[id.0])
+            .fold(0.0, f64::max)
+    }
+
+    /// When would pred `i`'s tensor be available on device `p`
+    /// (hypothetically — does not reserve transfer slots)?
+    fn data_ready_from(&self, i: NodeId, p: DeviceId, bytes: u64) -> f64 {
+        let src = self.device_of[i.0].expect("pred must be scheduled");
+        if src == p {
+            return self.finish[i.0];
+        }
+        let cached = self.arrival[i.0][p.0];
+        if cached.is_finite() {
+            return cached;
+        }
+        let t = self.cluster.comm.time(bytes);
+        if self.cluster.sequential_comm {
+            let start = self.finish[i.0]
+                .max(self.comm_free[src.0])
+                .max(self.comm_free[p.0]);
+            start + t
+        } else {
+            self.finish[i.0] + t
+        }
+    }
+
+    /// Earliest schedulable time of `j` on `p` (paper Eq. 1, with queue
+    /// wait added per §3.1.4). `None` if memory/colocation forbids it.
+    pub fn est(&self, j: NodeId, p: DeviceId) -> Option<f64> {
+        if !self.ledger.fits(self.graph, j, p) {
+            return None;
+        }
+        let mut ready = 0.0f64;
+        for &(i, bytes) in self.graph.predecessors(j) {
+            ready = ready.max(self.data_ready_from(i, p, bytes));
+        }
+        Some(ready.max(self.device_free[p.0]))
+    }
+
+    /// Urgent time of `j`: the earliest `j` could start on *any* device,
+    /// charging full communication from every predecessor (paper App. B).
+    pub fn urgent_time(&self, j: NodeId) -> f64 {
+        let mut u = 0.0f64;
+        for &(i, bytes) in self.graph.predecessors(j) {
+            u = u.max(self.finish[i.0] + self.cluster.comm.time(bytes));
+        }
+        u
+    }
+
+    /// Commit `j` to `p`: reserve transfer slots for its inputs, set
+    /// start/finish, charge memory, and update readiness. Returns the
+    /// newly-ready successors.
+    pub fn commit(&mut self, j: NodeId, p: DeviceId) -> Vec<NodeId> {
+        debug_assert!(self.device_of[j.0].is_none(), "double schedule of {j}");
+        // Reserve transfers, in order of predecessor finish time.
+        let mut preds: Vec<(NodeId, u64)> = self.graph.predecessors(j).to_vec();
+        preds.sort_by(|a, b| {
+            self.finish[a.0 .0]
+                .partial_cmp(&self.finish[b.0 .0])
+                .unwrap()
+                .then(a.0.cmp(&b.0))
+        });
+        let mut ready = 0.0f64;
+        for (i, bytes) in preds {
+            let src = self.device_of[i.0].expect("pred scheduled");
+            let avail = if src == p {
+                self.finish[i.0]
+            } else if self.arrival[i.0][p.0].is_finite() {
+                self.arrival[i.0][p.0] // cached — no new transfer
+            } else {
+                let t = self.cluster.comm.time(bytes);
+                let arr = if self.cluster.sequential_comm {
+                    let start = self.finish[i.0]
+                        .max(self.comm_free[src.0])
+                        .max(self.comm_free[p.0]);
+                    let end = start + t;
+                    self.comm_free[src.0] = end;
+                    self.comm_free[p.0] = end;
+                    end
+                } else {
+                    self.finish[i.0] + t
+                };
+                self.arrival[i.0][p.0] = arr;
+                arr
+            };
+            ready = ready.max(avail);
+        }
+        let start = ready.max(self.device_free[p.0]);
+        let compute = self.graph.node(j).compute / self.cluster.devices[p.0].speed;
+        let finish = start + compute;
+        self.start[j.0] = start;
+        self.finish[j.0] = finish;
+        self.device_free[p.0] = finish;
+        self.device_of[j.0] = Some(p);
+        self.arrival[j.0][p.0] = finish;
+        self.ledger.commit(self.graph, j, p);
+        self.scheduled_count += 1;
+
+        let mut newly_ready = Vec::new();
+        for &(s, _) in self.graph.successors(j) {
+            let r = &mut self.unscheduled_preds[s.0];
+            *r -= 1;
+            if *r == 0 {
+                newly_ready.push(s);
+            }
+        }
+        newly_ready
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{MemorySpec, OpGraph, OpKind};
+    use crate::profile::CommModel;
+
+    fn two_device_cluster() -> Cluster {
+        // 1 byte/s bandwidth, zero latency: bytes == seconds.
+        Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0))
+    }
+
+    fn simple_graph() -> (OpGraph, NodeId, NodeId, NodeId) {
+        // a(1s) → b(2s), a → c(1s); edges 5 bytes
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        g.node_mut(a).compute = 1.0;
+        g.node_mut(b).compute = 2.0;
+        g.node_mut(c).compute = 1.0;
+        for id in [a, b, c] {
+            g.node_mut(id).mem = MemorySpec {
+                params: 10,
+                ..Default::default()
+            };
+        }
+        g.add_edge(a, b, 5);
+        g.add_edge(a, c, 5);
+        (g, a, b, c)
+    }
+
+    #[test]
+    fn est_accounts_for_comm_and_device_free() {
+        let (g, a, b, _c) = simple_graph();
+        let cluster = two_device_cluster();
+        let mut st = SchedState::new(&g, &cluster);
+        assert_eq!(st.initial_ready(), vec![a]);
+        st.commit(a, DeviceId(0));
+        // On a's device: ready at finish(a)=1. On device 1: 1 + 5 = 6.
+        assert_eq!(st.est(b, DeviceId(0)), Some(1.0));
+        assert_eq!(st.est(b, DeviceId(1)), Some(6.0));
+    }
+
+    #[test]
+    fn transfer_caching_avoids_second_transfer() {
+        let (g, a, b, c) = simple_graph();
+        let cluster = two_device_cluster();
+        let mut st = SchedState::new(&g, &cluster);
+        st.commit(a, DeviceId(0));
+        st.commit(b, DeviceId(1)); // transfers a's tensor to dev1: arrives at 6
+        assert_eq!(st.start[b.0], 6.0);
+        // c on dev1 reuses the cached tensor: est = max(free(dev1)=8, 6) = 8
+        assert_eq!(st.est(c, DeviceId(1)), Some(8.0));
+        // comm queues were consumed once
+        assert_eq!(st.comm_free[0], 6.0);
+    }
+
+    #[test]
+    fn sequential_comm_queues_serialize() {
+        // a → b and a → c, b and c on different devices: the two
+        // transfers out of a's device must serialize (§3.1.4).
+        let (g, a, b, c) = simple_graph();
+        let mut cluster = two_device_cluster();
+        cluster.devices.push(crate::profile::DeviceSpec {
+            memory: 1000,
+            speed: 1.0,
+        });
+        cluster.comm = CommModel::new(0.0, 1.0);
+        let mut st = SchedState::new(&g, &cluster);
+        st.commit(a, DeviceId(0));
+        st.commit(b, DeviceId(1)); // transfer occupies [1, 6] on dev0+dev1
+        st.commit(c, DeviceId(2)); // queued behind: [6, 11]
+        assert_eq!(st.start[b.0], 6.0);
+        assert_eq!(st.start[c.0], 11.0);
+    }
+
+    #[test]
+    fn parallel_comm_overlaps() {
+        let (g, a, b, c) = simple_graph();
+        let mut cluster = two_device_cluster().with_sequential_comm(false);
+        cluster.devices.push(crate::profile::DeviceSpec {
+            memory: 1000,
+            speed: 1.0,
+        });
+        let mut st = SchedState::new(&g, &cluster);
+        st.commit(a, DeviceId(0));
+        st.commit(b, DeviceId(1));
+        st.commit(c, DeviceId(2));
+        assert_eq!(st.start[b.0], 6.0);
+        assert_eq!(st.start[c.0], 6.0); // overlapped transfers
+    }
+
+    #[test]
+    fn est_respects_memory() {
+        let (mut g, a, _b, _c) = simple_graph();
+        g.node_mut(a).mem.params = 5000; // too big for 1000-byte devices
+        let cluster = two_device_cluster();
+        let st = SchedState::new(&g, &cluster);
+        assert_eq!(st.est(a, DeviceId(0)), None);
+    }
+
+    #[test]
+    fn makespan_tracks_finish() {
+        let (g, a, b, c) = simple_graph();
+        let cluster = two_device_cluster();
+        let mut st = SchedState::new(&g, &cluster);
+        st.commit(a, DeviceId(0));
+        st.commit(b, DeviceId(0));
+        st.commit(c, DeviceId(0));
+        assert!(st.done());
+        assert_eq!(st.makespan(), 4.0); // 1 + 2 + 1 sequential
+    }
+}

@@ -1,0 +1,152 @@
+//! Profiling substrate: device specifications, the linear communication
+//! cost model (paper §4.1), and profile perturbation (paper Fig. 8).
+//!
+//! The paper profiles each operator on the target GPU and fits a linear
+//! communication-cost model `t(bytes) = a + b·bytes` from a microbenchmark.
+//! We reproduce both: [`CommModel::fit`] performs the least-squares fit,
+//! and [`pjrt`] measures real per-op wall times of the AOT HLO kernels.
+
+pub mod perturb;
+pub mod pjrt;
+
+use crate::util::stats::linear_fit;
+
+/// Static description of one device in the cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    /// Usable memory in bytes (possibly capped to a fraction, Table 5).
+    pub memory: u64,
+    /// Relative compute speed (1.0 = the profiling device).
+    pub speed: f64,
+}
+
+/// Cluster description handed to placers and the ES.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub devices: Vec<DeviceSpec>,
+    pub comm: CommModel,
+    /// If true, each device performs at most one transfer at a time and
+    /// transfers queue up (paper §3.1.4 — the PCIe-through-host testbed).
+    pub sequential_comm: bool,
+}
+
+impl Cluster {
+    /// Homogeneous cluster of `n` devices with `memory` bytes each.
+    pub fn homogeneous(n: usize, memory: u64, comm: CommModel) -> Cluster {
+        Cluster {
+            devices: vec![DeviceSpec { memory, speed: 1.0 }; n],
+            comm,
+            sequential_comm: true,
+        }
+    }
+
+    /// Cap every device's memory to `fraction` of its current value
+    /// (the paper's "insufficient memory" regime, Table 5).
+    pub fn with_memory_fraction(mut self, fraction: f64) -> Cluster {
+        for d in &mut self.devices {
+            d.memory = (d.memory as f64 * fraction) as u64;
+        }
+        self
+    }
+
+    pub fn with_sequential_comm(mut self, seq: bool) -> Cluster {
+        self.sequential_comm = seq;
+        self
+    }
+
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Total cluster memory, bytes.
+    pub fn total_memory(&self) -> u64 {
+        self.devices.iter().map(|d| d.memory).sum()
+    }
+}
+
+/// Linear communication cost model `t(bytes) = latency + bytes / bandwidth`
+/// (paper §4.1: "we use a linear model proportional to data size ...
+/// generated a communication cost function through linear regression").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommModel {
+    /// Fixed per-transfer latency, seconds.
+    pub latency: f64,
+    /// Bandwidth, bytes per second.
+    pub bandwidth: f64,
+}
+
+impl CommModel {
+    pub fn new(latency: f64, bandwidth: f64) -> CommModel {
+        assert!(bandwidth > 0.0);
+        CommModel { latency, bandwidth }
+    }
+
+    /// The paper's testbed: GPUs on PCIe 3.0 x16 through host memory, no
+    /// P2P — effective ~6 GB/s with high (~50 µs) per-transfer latency.
+    /// (Paper §5.3 reports a 4-byte transfer costs 50–200 µs.)
+    pub fn pcie_via_host() -> CommModel {
+        CommModel::new(50e-6, 6e9)
+    }
+
+    /// A fast NVLink-like interconnect (ablation; paper footnote 4).
+    pub fn nvlink_like() -> CommModel {
+        CommModel::new(5e-6, 50e9)
+    }
+
+    /// Transfer time for a payload, seconds. Zero-byte transfers are free
+    /// (no tensor moves).
+    pub fn time(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency + bytes as f64 / self.bandwidth
+        }
+    }
+
+    /// Least-squares fit from `(bytes, seconds)` microbenchmark samples.
+    pub fn fit(samples: &[(u64, f64)]) -> CommModel {
+        let xs: Vec<f64> = samples.iter().map(|&(b, _)| b as f64).collect();
+        let ys: Vec<f64> = samples.iter().map(|&(_, t)| t).collect();
+        let (a, b, _r2) = linear_fit(&xs, &ys);
+        CommModel {
+            latency: a.max(0.0),
+            bandwidth: if b > 0.0 { 1.0 / b } else { f64::INFINITY },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_model_linear() {
+        let m = CommModel::new(1e-4, 1e9);
+        assert_eq!(m.time(0), 0.0);
+        assert!((m.time(1_000_000) - (1e-4 + 1e-3)).abs() < 1e-12);
+        assert!(m.time(2_000_000) > m.time(1_000_000));
+    }
+
+    #[test]
+    fn fit_recovers_parameters() {
+        let truth = CommModel::new(5e-5, 2e9);
+        let samples: Vec<(u64, f64)> = (1..20)
+            .map(|i| {
+                let b = i * 500_000;
+                (b, truth.time(b))
+            })
+            .collect();
+        let fitted = CommModel::fit(&samples);
+        assert!((fitted.latency - truth.latency).abs() / truth.latency < 0.01);
+        assert!((fitted.bandwidth - truth.bandwidth).abs() / truth.bandwidth < 0.01);
+    }
+
+    #[test]
+    fn cluster_memory_fraction() {
+        let c = Cluster::homogeneous(4, 8_000_000_000, CommModel::pcie_via_host())
+            .with_memory_fraction(0.3);
+        assert_eq!(c.n(), 4);
+        assert_eq!(c.devices[0].memory, 2_400_000_000);
+        assert_eq!(c.total_memory(), 4 * 2_400_000_000);
+    }
+}

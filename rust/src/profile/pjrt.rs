@@ -1,0 +1,92 @@
+//! PJRT-backed operator profiler.
+//!
+//! Mirrors the paper's Profiler (§4.1.1): runs each compiled kernel a few
+//! warmup iterations (ignoring bootstrap steps, §4.4), then measures
+//! steady-state wall time. Used by the end-to-end example to annotate the
+//! real model's graph with measured compute times; the synthetic paper
+//! benchmarks use the analytic cost model in [`crate::models`] instead.
+
+use crate::runtime::artifact::LoadedExec;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of profiling one executable.
+#[derive(Debug, Clone)]
+pub struct OpProfile {
+    pub name: String,
+    /// Steady-state mean wall time, seconds.
+    pub compute: f64,
+    pub summary: Summary,
+}
+
+/// Profile an executable with the given literal inputs.
+///
+/// `warmup` iterations are discarded (TF-style bootstrap skipping), then
+/// `iters` timed runs are summarized.
+pub fn profile_exec(
+    exec: &LoadedExec,
+    inputs: &[xla::Literal],
+    warmup: usize,
+    iters: usize,
+) -> anyhow::Result<OpProfile> {
+    for _ in 0..warmup {
+        exec.run(inputs)?;
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let out = exec.run(inputs)?;
+        // Force materialization so we time the full execution.
+        std::hint::black_box(&out);
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let summary = Summary::of(&samples);
+    Ok(OpProfile {
+        name: exec.name.clone(),
+        compute: summary.p50, // median is robust to scheduler noise
+        summary,
+    })
+}
+
+/// Microbenchmark host-side buffer copies of increasing size and fit the
+/// linear communication model from the samples. This stands in for the
+/// paper's GPU-to-GPU transfer microbenchmark: in our substitution the
+/// interconnect is host memory, so a memcpy-based model is the honest
+/// equivalent (DESIGN.md §2).
+pub fn microbench_comm(max_mb: usize) -> super::CommModel {
+    let mut samples = Vec::new();
+    let mut size = 64 * 1024; // 64 KiB
+    let max = max_mb * 1024 * 1024;
+    while size <= max {
+        let src = vec![0u8; size];
+        let mut dst = vec![0u8; size];
+        // Warm.
+        dst.copy_from_slice(&src);
+        let reps = (8 * 1024 * 1024 / size).clamp(3, 64);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            dst.copy_from_slice(&src);
+            std::hint::black_box(&dst);
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        samples.push((size as u64, per));
+        size *= 2;
+    }
+    super::CommModel::fit(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microbench_produces_sane_model() {
+        let m = microbench_comm(4);
+        // Host memcpy bandwidth should be between 100 MB/s and 1 TB/s.
+        assert!(m.bandwidth > 1e8, "bandwidth {}", m.bandwidth);
+        assert!(m.bandwidth < 1e13, "bandwidth {}", m.bandwidth);
+        assert!(m.latency >= 0.0);
+        // Larger transfers take longer.
+        assert!(m.time(64 * 1024 * 1024) > m.time(1024 * 1024));
+    }
+}

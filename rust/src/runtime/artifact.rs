@@ -1,0 +1,224 @@
+//! AOT artifact registry: `artifacts/manifest.json` + `*.hlo.txt` →
+//! compiled PJRT executables.
+//!
+//! The manifest is written by `python/compile/aot.py` and maps each
+//! exported function to its HLO file, input arity/shapes, and output
+//! arity. All entries are lowered with `return_tuple=True`, so execution
+//! always unwraps a tuple.
+
+use super::Runtime;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    /// Input tensor shapes (row-major dims; empty dims = scalar).
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Number of outputs in the result tuple.
+    pub num_outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading manifest in {}: {e}", dir.display()))?;
+        let root = Json::parse(&text)?;
+        let mut entries = BTreeMap::new();
+        let arr = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts' array"))?;
+        for item in arr {
+            let name = item
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .to_string();
+            let file = item
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("artifact {name} missing file"))?;
+            let input_shapes = item
+                .get("input_shapes")
+                .and_then(|v| v.as_arr())
+                .map(|shapes| {
+                    shapes
+                        .iter()
+                        .map(|s| {
+                            s.as_arr()
+                                .map(|dims| {
+                                    dims.iter().filter_map(|d| d.as_u64()).map(|d| d as usize).collect()
+                                })
+                                .unwrap_or_default()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            let num_outputs = item
+                .get("num_outputs")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(1) as usize;
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name,
+                    file: dir.join(file),
+                    input_shapes,
+                    num_outputs,
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// A compiled, ready-to-run executable.
+pub struct LoadedExec {
+    pub name: String,
+    pub num_outputs: usize,
+    exec: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExec {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let bufs = self.exec.execute::<xla::Literal>(inputs)?;
+        let result = bufs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True — always a tuple.
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute and return the single output (asserts arity 1).
+    pub fn run1(&self, inputs: &[xla::Literal]) -> anyhow::Result<xla::Literal> {
+        let mut outs = self.run(inputs)?;
+        anyhow::ensure!(outs.len() == 1, "{}: expected 1 output, got {}", self.name, outs.len());
+        Ok(outs.pop().unwrap())
+    }
+}
+
+/// Registry of compiled executables, loaded lazily from a manifest.
+pub struct ArtifactRegistry {
+    runtime: Runtime,
+    manifest: Manifest,
+    cache: std::sync::Mutex<BTreeMap<String, Arc<LoadedExec>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open `dir` (default: `$BAECHI_ARTIFACTS` or `artifacts/`).
+    pub fn open(runtime: Runtime, dir: &Path) -> anyhow::Result<ArtifactRegistry> {
+        let manifest = Manifest::load(dir)?;
+        Ok(ArtifactRegistry {
+            runtime,
+            manifest,
+            cache: std::sync::Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Resolve the artifacts directory from the environment.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("BAECHI_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load (compile) an executable by name, caching the result.
+    pub fn load(&self, name: &str) -> anyhow::Result<Arc<LoadedExec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?;
+        let path = entry
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exec = self.runtime.client().compile(&comp)?;
+        let loaded = Arc::new(LoadedExec {
+            name: name.to_string(),
+            num_outputs: entry.num_outputs,
+            exec,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+}
+
+/// Convenience: build an f32 literal from data + shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(numel as usize == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Convenience: extract f32 data from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join(format!("baechi_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [
+                {"name": "matmul", "file": "matmul.hlo.txt",
+                 "input_shapes": [[2,3],[3,4]], "num_outputs": 1},
+                {"name": "train_step", "file": "train_step.hlo.txt",
+                 "input_shapes": [[8,8]], "num_outputs": 3}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.names(), vec!["matmul", "train_step"]);
+        let e = &m.entries["matmul"];
+        assert_eq!(e.input_shapes, vec![vec![2, 3], vec![3, 4]]);
+        assert_eq!(m.entries["train_step"].num_outputs, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("baechi_no_such_dir_xyz");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(literal_f32(&[1.0], &[2, 2]).is_err());
+    }
+}

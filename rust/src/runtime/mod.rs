@@ -1,0 +1,55 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched. The compile path
+//! (python/jax/pallas) emits HLO **text** — not serialized protos, which
+//! xla_extension 0.5.1 rejects for jax ≥ 0.5 (64-bit instruction ids).
+//! `HloModuleProto::from_text_file` reassigns ids and round-trips cleanly
+//! (see /opt/xla-example/README.md).
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + `manifest.json` once; this module loads them.
+
+pub mod artifact;
+
+use std::sync::Arc;
+
+/// Shared PJRT CPU client. Creating a client is expensive; executables
+/// hold an `Arc` so device workers can share one.
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    /// Construct a CPU PJRT client.
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client: Arc::new(client),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    pub(crate) fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_constructs() {
+        let rt = Runtime::cpu().expect("pjrt cpu client");
+        assert_eq!(rt.platform().to_lowercase(), "cpu".to_string());
+        assert!(rt.device_count() >= 1);
+    }
+}

@@ -1,0 +1,606 @@
+//! Event-driven execution simulator (paper §4.2).
+//!
+//! Replays a placed graph on the simulated cluster:
+//!
+//! * each device runs its ops **in topological order** (the order
+//!   Baechi's ES prescribes; Baechi-PY enforces it at runtime, §4.4),
+//!   one at a time, waiting for input tensors;
+//! * outputs are pushed greedily to consumer devices as soon as they are
+//!   produced (the Baechi-PY communication protocol, §3.2.2), with one
+//!   transfer engine per device in sequential-comm mode (§3.1.4) and
+//!   per-destination caching (§4.2);
+//! * with `overlap_comm = false` (Table 7's "without protocol" baseline,
+//!   the blocking `.to()` call) a transfer additionally occupies both
+//!   endpoints' compute engines;
+//! * memory follows the dynamic model of [`super::memory`], with
+//!   TensorFlow semantics (outputs freed when consumers finish) or
+//!   PyTorch semantics (forward outputs additionally held until the
+//!   matching backward finishes).
+
+use super::memory::{DeviceMem, OomError};
+use crate::graph::{DeviceId, NodeId, OpGraph};
+use crate::profile::Cluster;
+use std::collections::{BTreeMap, BinaryHeap};
+
+/// Which framework's memory semantics to model (paper Table 2 / §4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Framework {
+    TensorFlow,
+    PyTorch,
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub framework: Framework,
+    /// Overlap communication with compute (Baechi-PY protocol). When
+    /// false, transfers block both endpoint devices (naive `.to()`).
+    pub overlap_comm: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            framework: Framework::TensorFlow,
+            overlap_comm: true,
+        }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Step time (seconds); meaningful only when `oom.is_none()`.
+    pub makespan: f64,
+    pub peak_memory: Vec<u64>,
+    pub oom: Option<OomError>,
+    pub transfers: usize,
+    pub transfer_bytes: u64,
+    /// Per-device compute busy time, seconds.
+    pub busy: Vec<f64>,
+    pub events: usize,
+}
+
+impl SimResult {
+    pub fn ok(&self) -> bool {
+        self.oom.is_none()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    ComputeDone { dev: usize, node: NodeId },
+    TransferDone { idx: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Timed {
+    t: f64,
+    seq: u64,
+    ev: Event,
+}
+impl Eq for Timed {}
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Transfer {
+    node: NodeId,
+    src: usize,
+    dst: usize,
+    bytes: u64,
+    started: bool,
+    done: bool,
+}
+
+/// Simulate one training step of `graph` under `placement`.
+pub fn simulate(
+    graph: &OpGraph,
+    cluster: &Cluster,
+    placement: &BTreeMap<NodeId, DeviceId>,
+    cfg: SimConfig,
+) -> SimResult {
+    let n = cluster.n();
+    let cap = graph.capacity();
+    let dev_of = |id: NodeId| placement[&id].0;
+
+    // Each device runs the lowest-topo-rank *ready* op among its
+    // assigned ops (the paper's global ready queue, partitioned by
+    // placement). Readiness feeds per-device heaps.
+    let ranks = graph.topo_ranks();
+    let mut ready: Vec<BinaryHeap<std::cmp::Reverse<(usize, NodeId)>>> =
+        (0..n).map(|_| BinaryHeap::new()).collect();
+
+    // Consumers of each tensor, grouped by device (small linear maps —
+    // the cluster has a handful of devices; §Perf iteration 4 replaced
+    // BTreeMaps on the per-event path).
+    let mut consumers: Vec<Vec<(usize, Vec<NodeId>)>> = vec![Vec::new(); cap];
+    for id in graph.node_ids() {
+        for &(s, _) in graph.successors(id) {
+            let d = dev_of(s);
+            let slot = &mut consumers[id.0];
+            match slot.iter_mut().find(|(dd, _)| *dd == d) {
+                Some((_, v)) => v.push(s),
+                None => slot.push((d, vec![s])),
+            }
+        }
+    }
+    let find = |m: &Vec<(usize, Vec<NodeId>)>, d: usize| -> Option<usize> {
+        m.iter().position(|(dd, _)| *dd == d)
+    };
+    // Max bytes needed per (tensor, destination device).
+    let mut edge_bytes: Vec<Vec<(usize, u64)>> = vec![Vec::new(); cap];
+    for e in graph.edges() {
+        let d = dev_of(e.dst);
+        let slot = &mut edge_bytes[e.src.0];
+        match slot.iter_mut().find(|(dd, _)| *dd == d) {
+            Some((_, b)) => *b = (*b).max(e.bytes),
+            None => slot.push((d, e.bytes)),
+        }
+    }
+    // PyTorch: backward holds per forward node.
+    let mut bwd_holds: Vec<usize> = vec![0; cap];
+    if cfg.framework == Framework::PyTorch {
+        for nd in graph.iter_nodes() {
+            if nd.is_backward {
+                if let Some(f) = nd.forward_of {
+                    bwd_holds[f.0] += 1;
+                }
+            }
+        }
+    }
+
+    // Missing inputs per node (distinct producer tensors on my device).
+    let mut missing: Vec<usize> = vec![0; cap];
+    for id in graph.node_ids() {
+        missing[id.0] = graph.predecessors(id).len();
+    }
+
+    let mut mem: Vec<DeviceMem> = cluster.devices.iter().map(|d| DeviceMem::new(d.memory)).collect();
+    let mut result = SimResult {
+        makespan: 0.0,
+        peak_memory: vec![0; n],
+        oom: None,
+        transfers: 0,
+        transfer_bytes: 0,
+        busy: vec![0.0; n],
+        events: 0,
+    };
+    let finish_with = |mut r: SimResult, mem: &[DeviceMem], oom: Option<OomError>| -> SimResult {
+        r.peak_memory = mem.iter().map(|m| m.peak).collect();
+        r.oom = oom;
+        r
+    };
+
+    // Pre-allocate permanent memory (params + grads) at t = 0.
+    for id in graph.node_ids() {
+        let nd = graph.node(id);
+        let perm = nd.mem.params + nd.mem.param_grad;
+        if perm > 0 {
+            if let Err(e) = mem[dev_of(id)].alloc_permanent(perm, dev_of(id), 0.0, &nd.name) {
+                return finish_with(result, &mem, Some(e));
+            }
+        }
+    }
+
+    let mut heap: BinaryHeap<Timed> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut compute_busy_until: Vec<f64> = vec![0.0; n]; // for bookkeeping only
+    let mut compute_idle: Vec<bool> = vec![true; n];
+    let mut comm_idle: Vec<bool> = vec![true; n];
+    let mut transfers: Vec<Transfer> = Vec::new();
+    // Un-started transfers indexed under BOTH endpoint devices, so an
+    // engine freeing only rescans its own queue (§Perf iteration 3 —
+    // the global pending scan was the ES's top hot spot).
+    let mut pend: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut done_ops = 0usize;
+    let total_ops = graph.len();
+
+    // Seed the ready queues with source ops.
+    for id in graph.node_ids() {
+        if missing[id.0] == 0 {
+            ready[dev_of(id)].push(std::cmp::Reverse((ranks[id.0], id)));
+        }
+    }
+
+    macro_rules! push_ev {
+        ($t:expr, $ev:expr) => {{
+            seq += 1;
+            heap.push(Timed {
+                t: $t,
+                seq,
+                ev: $ev,
+            });
+        }};
+    }
+
+    // Try to start transfers/ops on the given dirty devices at `now`.
+    // Only devices whose engine state or queues changed need a rescan.
+    macro_rules! advance {
+        ($now:expr, $dirty:expr) => {{
+            let now = $now;
+            for &d in $dirty.iter() {
+                // Transfers touching device d (listed under both ends).
+                let mut i = 0;
+                while i < pend[d].len() {
+                    let idx = pend[d][i];
+                    if transfers[idx].started {
+                        pend[d].swap_remove(i); // twin entry, already gone
+                        continue;
+                    }
+                    let (src, dst) = (transfers[idx].src, transfers[idx].dst);
+                    let engines_free = if cluster.sequential_comm {
+                        comm_idle[src] && comm_idle[dst]
+                    } else {
+                        true
+                    };
+                    let compute_ok =
+                        cfg.overlap_comm || (compute_idle[src] && compute_idle[dst]);
+                    if engines_free && compute_ok {
+                        pend[d].swap_remove(i);
+                        transfers[idx].started = true;
+                        let dt = cluster.comm.time(transfers[idx].bytes);
+                        if cluster.sequential_comm {
+                            comm_idle[src] = false;
+                            comm_idle[dst] = false;
+                        }
+                        if !cfg.overlap_comm {
+                            compute_idle[src] = false;
+                            compute_idle[dst] = false;
+                        }
+                        push_ev!(now + dt, Event::TransferDone { idx });
+                    } else {
+                        i += 1;
+                    }
+                }
+                // Next ready op on d.
+                if compute_idle[d] {
+                    if let Some(std::cmp::Reverse((_, op))) = ready[d].pop() {
+                        let nd = graph.node(op);
+                        let tmp = nd.mem.temporary_training();
+                        if tmp > 0 {
+                            if let Err(e) = mem[d].alloc_temp(tmp, d, now, &nd.name) {
+                                return finish_with(result, &mem, Some(e));
+                            }
+                        }
+                        compute_idle[d] = false;
+                        let dt = nd.compute / cluster.devices[d].speed;
+                        result.busy[d] += dt;
+                        compute_busy_until[d] = now + dt;
+                        push_ev!(now + dt, Event::ComputeDone { dev: d, node: op });
+                    }
+                }
+            }
+        }};
+    }
+
+    {
+        let all: Vec<usize> = (0..n).collect();
+        advance!(0.0, all);
+    }
+
+    while let Some(Timed { t, ev, .. }) = heap.pop() {
+        result.events += 1;
+        result.makespan = result.makespan.max(t);
+        match ev {
+            Event::ComputeDone { dev, node } => {
+                compute_idle[dev] = true;
+                let nd = graph.node(node);
+                let tmp = nd.mem.temporary_training();
+                if tmp > 0 {
+                    mem[dev].free_temp(tmp);
+                }
+                done_ops += 1;
+                // Materialize the output tensor.
+                let local_consumers = find(&consumers[node.0], dev)
+                    .map(|k| consumers[node.0][k].1.len())
+                    .unwrap_or(0);
+                let n_remote = consumers[node.0].iter().filter(|(d, _)| *d != dev).count();
+                let refs = local_consumers + n_remote + bwd_holds[node.0];
+                if nd.mem.output > 0 && refs > 0 {
+                    if let Err(e) = mem[dev].alloc_tensor(node, nd.mem.output, refs, dev, t) {
+                        return finish_with(result, &mem, Some(e));
+                    }
+                }
+                // Local consumers become one input closer to ready.
+                if let Some(k) = find(&consumers[node.0], dev) {
+                    for i in 0..consumers[node.0][k].1.len() {
+                        let c = consumers[node.0][k].1[i];
+                        missing[c.0] -= 1;
+                        if missing[c.0] == 0 {
+                            ready[dev].push(std::cmp::Reverse((ranks[c.0], c)));
+                        }
+                    }
+                }
+                // Greedy push to each remote consumer device (§3.2.2).
+                let mut dirty: Vec<usize> = vec![dev];
+                let remote_devs: Vec<usize> = consumers[node.0]
+                    .iter()
+                    .map(|(d, _)| *d)
+                    .filter(|&d| d != dev)
+                    .collect();
+                for d in remote_devs {
+                    let bytes = edge_bytes[node.0]
+                        .iter()
+                        .find(|(dd, _)| *dd == d)
+                        .map(|(_, b)| *b)
+                        .unwrap_or(0);
+                    transfers.push(Transfer {
+                        node,
+                        src: dev,
+                        dst: d,
+                        bytes,
+                        started: false,
+                        done: false,
+                    });
+                    let idx = transfers.len() - 1;
+                    pend[dev].push(idx);
+                    pend[d].push(idx);
+                    if !dirty.contains(&d) {
+                        dirty.push(d);
+                    }
+                    result.transfers += 1;
+                    result.transfer_bytes += bytes;
+                }
+                // PyTorch: this backward op releases its forward's output.
+                if cfg.framework == Framework::PyTorch && nd.is_backward {
+                    if let Some(f) = nd.forward_of {
+                        mem[dev_of(f)].release_tensor(f);
+                    }
+                }
+                // Release this op's input tensors on this device.
+                for &(p, _) in graph.predecessors(node) {
+                    mem[dev].release_tensor(p);
+                }
+                advance!(t, dirty);
+            }
+            Event::TransferDone { idx } => {
+                let tr = transfers[idx].clone();
+                transfers[idx].done = true;
+                if cluster.sequential_comm {
+                    comm_idle[tr.src] = true;
+                    comm_idle[tr.dst] = true;
+                }
+                if !cfg.overlap_comm {
+                    // Compute engines unblock unless still running an op
+                    // (they were idle when the transfer started).
+                    compute_idle[tr.src] = compute_busy_until[tr.src] <= t;
+                    compute_idle[tr.dst] = compute_busy_until[tr.dst] <= t;
+                }
+                // Source side: drop the outgoing-transfer reference.
+                mem[tr.src].release_tensor(tr.node);
+                // Destination: cache the tensor for its consumers.
+                let dst_consumers = find(&consumers[tr.node.0], tr.dst)
+                    .map(|k| consumers[tr.node.0][k].1.len())
+                    .unwrap_or(0);
+                if tr.bytes > 0 && dst_consumers > 0 {
+                    if let Err(e) =
+                        mem[tr.dst].alloc_tensor(tr.node, tr.bytes, dst_consumers, tr.dst, t)
+                    {
+                        return finish_with(result, &mem, Some(e));
+                    }
+                }
+                if let Some(k) = find(&consumers[tr.node.0], tr.dst) {
+                    for i in 0..consumers[tr.node.0][k].1.len() {
+                        let c = consumers[tr.node.0][k].1[i];
+                        missing[c.0] -= 1;
+                        if missing[c.0] == 0 {
+                            ready[tr.dst].push(std::cmp::Reverse((ranks[c.0], c)));
+                        }
+                    }
+                }
+                let dirty = [tr.src, tr.dst];
+                advance!(t, dirty);
+            }
+        }
+    }
+
+    debug_assert_eq!(done_ops, total_ops, "not all ops executed");
+    finish_with(result, &mem, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{MemorySpec, OpKind};
+    use crate::profile::CommModel;
+
+    fn place_all(graph: &OpGraph, devs: &[usize]) -> BTreeMap<NodeId, DeviceId> {
+        graph
+            .node_ids()
+            .zip(devs.iter())
+            .map(|(id, &d)| (id, DeviceId(d)))
+            .collect()
+    }
+
+    fn chain3() -> OpGraph {
+        let mut g = OpGraph::new("c");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        for (id, t) in [(a, 1.0), (b, 2.0), (c, 3.0)] {
+            g.node_mut(id).compute = t;
+            g.node_mut(id).mem = MemorySpec {
+                output: 10,
+                ..Default::default()
+            };
+            g.node_mut(id).output_bytes = 10;
+        }
+        g.add_edge(a, b, 10);
+        g.add_edge(b, c, 10);
+        g
+    }
+
+    #[test]
+    fn single_device_serializes() {
+        let g = chain3();
+        let cluster = Cluster::homogeneous(1, 1000, CommModel::new(0.0, 1.0));
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 0, 0]), SimConfig::default());
+        assert!(r.ok());
+        assert!((r.makespan - 6.0).abs() < 1e-9);
+        assert_eq!(r.transfers, 0);
+        assert!((r.busy[0] - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_device_pays_comm() {
+        let g = chain3();
+        // bandwidth 1 byte/s → 10 s per hop
+        let cluster = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0));
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 2]), SimConfig::default());
+        assert!(r.ok());
+        // 1 + 10 + 2 + 10 + 3 = 26
+        assert!((r.makespan - 26.0).abs() < 1e-9, "{}", r.makespan);
+        assert_eq!(r.transfers, 2);
+        assert_eq!(r.transfer_bytes, 20);
+    }
+
+    #[test]
+    fn parallel_branches_overlap() {
+        // a → b, a → c with b,c on different devices.
+        let mut g = OpGraph::new("d");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        for (id, t) in [(a, 1.0), (b, 5.0), (c, 5.0)] {
+            g.node_mut(id).compute = t;
+        }
+        g.add_edge(a, b, 0);
+        g.add_edge(a, c, 0);
+        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1e9));
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 0, 1]), SimConfig::default());
+        assert!(r.ok());
+        assert!((r.makespan - 6.0).abs() < 1e-6, "{}", r.makespan);
+    }
+
+    #[test]
+    fn oom_on_too_small_device() {
+        let mut g = chain3();
+        let first = g.node_ids().next().unwrap();
+        g.node_mut(first).mem.params = 5000;
+        let cluster = Cluster::homogeneous(1, 1000, CommModel::new(0.0, 1.0));
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 0, 0]), SimConfig::default());
+        assert!(!r.ok());
+        assert_eq!(r.oom.unwrap().device, 0);
+    }
+
+    #[test]
+    fn blocking_transfers_slower_than_overlapped() {
+        // Two independent chains on two devices plus a cross transfer:
+        // with blocking comm the unrelated device stalls too.
+        let mut g = OpGraph::new("t7");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul); // consumer of a, other dev
+        let x = g.add_node("x", OpKind::MatMul); // independent work on dev1
+        for (id, t) in [(a, 1.0), (b, 1.0), (x, 8.0)] {
+            g.node_mut(id).compute = t;
+        }
+        g.add_edge(a, b, 10); // 10 s transfer
+        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0));
+        let placement = place_all(&g, &[0, 1, 1]);
+        let overlapped = simulate(&g, &cluster, &placement, SimConfig::default());
+        let blocking = simulate(
+            &g,
+            &cluster,
+            &placement,
+            SimConfig {
+                overlap_comm: false,
+                ..Default::default()
+            },
+        );
+        assert!(overlapped.ok() && blocking.ok());
+        assert!(
+            blocking.makespan > overlapped.makespan,
+            "blocking {} vs overlapped {}",
+            blocking.makespan,
+            overlapped.makespan
+        );
+    }
+
+    #[test]
+    fn pytorch_holds_forward_outputs() {
+        // fwd(out 100) → bwd; PyTorch holds fwd output until bwd done →
+        // peak must include it; TF frees it after its consumer (bwd) runs
+        // — in this tiny graph both end up equal at peak, so instead we
+        // check the tensor is held during an intermediate op.
+        let mut g = OpGraph::new("pt");
+        let f = g.add_node("f", OpKind::MatMul);
+        let m = g.add_node("m", OpKind::MatMul); // consumes f
+        let b = g.add_node("b", OpKind::MatMul); // backward of f, after m
+        g.node_mut(f).compute = 1.0;
+        g.node_mut(f).mem.output = 100;
+        g.node_mut(m).compute = 1.0;
+        g.node_mut(m).mem.output = 10;
+        g.node_mut(b).compute = 1.0;
+        g.node_mut(b).is_backward = true;
+        g.node_mut(b).forward_of = Some(f);
+        g.add_edge(f, m, 100);
+        g.add_edge(m, b, 10);
+        let cluster = Cluster::homogeneous(1, 1000, CommModel::new(0.0, 1e9));
+        let placement = place_all(&g, &[0, 0, 0]);
+        let tf = simulate(&g, &cluster, &placement, SimConfig::default());
+        let pt = simulate(
+            &g,
+            &cluster,
+            &placement,
+            SimConfig {
+                framework: Framework::PyTorch,
+                ..Default::default()
+            },
+        );
+        assert!(tf.ok() && pt.ok());
+        // TF: f's output freed after m; peak = 100 + 10 = 110.
+        // PyTorch: f's output lives until b; peak = 100 + 10 = same here,
+        // but b sees f still alive: pt peak ≥ tf peak.
+        assert!(pt.peak_memory[0] >= tf.peak_memory[0]);
+    }
+
+    #[test]
+    fn tensor_cached_per_destination() {
+        // a feeds two consumers on the same remote device → one transfer.
+        let mut g = OpGraph::new("cache");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        g.node_mut(a).compute = 1.0;
+        g.node_mut(a).mem.output = 10;
+        g.node_mut(b).compute = 1.0;
+        g.node_mut(c).compute = 1.0;
+        g.add_edge(a, b, 10);
+        g.add_edge(a, c, 10);
+        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0));
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 1]), SimConfig::default());
+        assert!(r.ok());
+        assert_eq!(r.transfers, 1, "cached second consumer");
+    }
+
+    #[test]
+    fn makespan_at_least_critical_path_and_work_bound() {
+        let g = crate::models::mlp::mlp(&crate::models::mlp::MlpConfig::default());
+        let cluster = Cluster::homogeneous(2, 64 << 30, CommModel::pcie_via_host());
+        let placement: BTreeMap<NodeId, DeviceId> = g
+            .node_ids()
+            .enumerate()
+            .map(|(i, id)| (id, DeviceId(i % 2)))
+            .collect();
+        let r = simulate(&g, &cluster, &placement, SimConfig::default());
+        assert!(r.ok());
+        let cp = g.critical_path(|_| 0.0);
+        let work_bound = g.total_compute() / 2.0;
+        assert!(r.makespan >= cp - 1e-9);
+        assert!(r.makespan >= work_bound - 1e-9);
+    }
+}

@@ -1,0 +1,216 @@
+//! Dynamic per-device memory tracker for the execution simulator
+//! (paper §4.2 "Dynamic Memory Allocation").
+//!
+//! Models the frameworks' allocators: permanent blocks (parameters and
+//! their gradients) live for the whole step; temporary blocks live for an
+//! op's execution window; output tensors are reference-counted — held
+//! until every consumer (local ops, outgoing transfers, and in PyTorch
+//! mode the matching backward op) releases them.
+
+use crate::graph::NodeId;
+
+/// Allocation failure → simulated OOM.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OomError {
+    pub device: usize,
+    pub needed: u64,
+    pub capacity: u64,
+    pub in_use: u64,
+    pub at_time: f64,
+    pub what: String,
+}
+
+impl std::fmt::Display for OomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "OOM on gpu{} at t={:.4}s allocating {} for {} (in use {Used} of {Cap})",
+            self.device,
+            self.at_time,
+            crate::util::table::fmt_bytes(self.needed),
+            self.what,
+            Used = crate::util::table::fmt_bytes(self.in_use),
+            Cap = crate::util::table::fmt_bytes(self.capacity),
+        )
+    }
+}
+
+/// Memory state of one simulated device.
+#[derive(Debug, Clone)]
+pub struct DeviceMem {
+    pub capacity: u64,
+    permanent: u64,
+    temp: u64,
+    /// Dense per-node-slot tensor table: (bytes, refs). refs == 0 means
+    /// absent (§Perf iteration 5 — replaced a BTreeMap on the per-event
+    /// path; grows on demand).
+    tensors: Vec<(u64, u32)>,
+    tensor_bytes: u64,
+    pub peak: u64,
+}
+
+impl DeviceMem {
+    pub fn new(capacity: u64) -> DeviceMem {
+        DeviceMem {
+            capacity,
+            permanent: 0,
+            temp: 0,
+            tensors: Vec::new(),
+            tensor_bytes: 0,
+            peak: 0,
+        }
+    }
+
+    #[inline]
+    fn slot(&mut self, node: NodeId) -> &mut (u64, u32) {
+        if node.0 >= self.tensors.len() {
+            self.tensors.resize(node.0 + 1, (0, 0));
+        }
+        &mut self.tensors[node.0]
+    }
+
+    pub fn in_use(&self) -> u64 {
+        self.permanent + self.temp + self.tensor_bytes
+    }
+
+    fn check(&mut self, bytes: u64, dev: usize, t: f64, what: &str) -> Result<(), OomError> {
+        if self.in_use() + bytes > self.capacity {
+            return Err(OomError {
+                device: dev,
+                needed: bytes,
+                capacity: self.capacity,
+                in_use: self.in_use(),
+                at_time: t,
+                what: what.to_string(),
+            });
+        }
+        Ok(())
+    }
+
+    fn bump(&mut self) {
+        self.peak = self.peak.max(self.in_use());
+    }
+
+    /// Permanent allocation (params + grads); never freed.
+    pub fn alloc_permanent(
+        &mut self,
+        bytes: u64,
+        dev: usize,
+        t: f64,
+        what: &str,
+    ) -> Result<(), OomError> {
+        self.check(bytes, dev, t, what)?;
+        self.permanent += bytes;
+        self.bump();
+        Ok(())
+    }
+
+    /// Temporary allocation for an op's execution window.
+    pub fn alloc_temp(&mut self, bytes: u64, dev: usize, t: f64, what: &str) -> Result<(), OomError> {
+        self.check(bytes, dev, t, what)?;
+        self.temp += bytes;
+        self.bump();
+        Ok(())
+    }
+
+    pub fn free_temp(&mut self, bytes: u64) {
+        debug_assert!(self.temp >= bytes);
+        self.temp -= bytes;
+    }
+
+    /// Reference-counted tensor (an op output or a received copy).
+    pub fn alloc_tensor(
+        &mut self,
+        node: NodeId,
+        bytes: u64,
+        refs: usize,
+        dev: usize,
+        t: f64,
+    ) -> Result<(), OomError> {
+        if refs == 0 || bytes == 0 {
+            return Ok(());
+        }
+        debug_assert!(self.slot(node).1 == 0, "tensor {node} exists");
+        self.check(bytes, dev, t, &format!("output of {node}"))?;
+        *self.slot(node) = (bytes, refs as u32);
+        self.tensor_bytes += bytes;
+        self.bump();
+        Ok(())
+    }
+
+    /// Add references to an existing tensor (e.g. PyTorch backward hold).
+    pub fn retain_tensor(&mut self, node: NodeId, extra: usize) {
+        let s = self.slot(node);
+        if s.1 > 0 {
+            s.1 += extra as u32;
+        }
+    }
+
+    /// Drop one reference; frees at zero.
+    pub fn release_tensor(&mut self, node: NodeId) {
+        let s = self.slot(node);
+        if s.1 > 0 {
+            s.1 -= 1;
+            if s.1 == 0 {
+                let bytes = s.0;
+                s.0 = 0;
+                self.tensor_bytes -= bytes;
+            }
+        }
+    }
+
+    pub fn has_tensor(&mut self, node: NodeId) -> bool {
+        self.slot(node).1 > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut m = DeviceMem::new(1000);
+        m.alloc_permanent(300, 0, 0.0, "params").unwrap();
+        m.alloc_temp(200, 0, 0.0, "scratch").unwrap();
+        m.alloc_tensor(NodeId(1), 400, 2, 0, 0.0).unwrap();
+        assert_eq!(m.in_use(), 900);
+        assert_eq!(m.peak, 900);
+        m.free_temp(200);
+        m.release_tensor(NodeId(1));
+        assert_eq!(m.in_use(), 700, "one ref left");
+        m.release_tensor(NodeId(1));
+        assert_eq!(m.in_use(), 300);
+        assert_eq!(m.peak, 900, "peak sticks");
+    }
+
+    #[test]
+    fn oom_detected() {
+        let mut m = DeviceMem::new(1000);
+        m.alloc_permanent(900, 0, 0.0, "params").unwrap();
+        let err = m.alloc_tensor(NodeId(0), 200, 1, 0, 1.5).unwrap_err();
+        assert_eq!(err.device, 0);
+        assert_eq!(err.needed, 200);
+        assert_eq!(err.in_use, 900);
+        assert!((err.at_time - 1.5).abs() < 1e-12);
+        assert!(err.to_string().contains("OOM"));
+    }
+
+    #[test]
+    fn zero_ref_tensor_is_noop() {
+        let mut m = DeviceMem::new(100);
+        m.alloc_tensor(NodeId(0), 1000, 0, 0, 0.0).unwrap();
+        assert_eq!(m.in_use(), 0);
+    }
+
+    #[test]
+    fn retain_extends_lifetime() {
+        let mut m = DeviceMem::new(1000);
+        m.alloc_tensor(NodeId(0), 100, 1, 0, 0.0).unwrap();
+        m.retain_tensor(NodeId(0), 1);
+        m.release_tensor(NodeId(0));
+        assert!(m.has_tensor(NodeId(0)));
+        m.release_tensor(NodeId(0));
+        assert!(!m.has_tensor(NodeId(0)));
+    }
+}

@@ -1,0 +1,11 @@
+//! The Execution Simulator (paper §4.2): evaluates a placement's step
+//! time, memory behaviour, and communication profile on the simulated
+//! cluster. The placers embed a lighter schedule (placer::sched); this
+//! module is the richer evaluation engine used for Tables 4–7 and
+//! Figures 7–8.
+
+pub mod engine;
+pub mod memory;
+
+pub use engine::{simulate, Framework, SimConfig, SimResult};
+pub use memory::OomError;

@@ -1,0 +1,163 @@
+//! Minimal benchmark harness (replaces `criterion`, unavailable offline).
+//!
+//! Usage inside a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("table3");
+//! b.run("m-sct/inception", || place(&graph));
+//! b.finish();
+//! ```
+//!
+//! Each measurement does a warmup phase, then timed iterations until a
+//! minimum wall-clock budget (or max iteration count) is reached, and
+//! reports mean/p50/p90 with outlier-robust statistics.
+
+use super::stats::Summary;
+use super::table::{fmt_secs, Table};
+use std::time::{Duration, Instant};
+
+/// One measured benchmark entry.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    pub iters: usize,
+}
+
+/// Benchmark group collecting measurements and printing a table at the end.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    budget: Duration,
+    max_iters: usize,
+    min_iters: usize,
+    measurements: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        Bench {
+            group: group.to_string(),
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(1000),
+            max_iters: 1000,
+            min_iters: 5,
+            measurements: Vec::new(),
+        }
+    }
+
+    /// Configure the per-benchmark time budget.
+    pub fn budget(mut self, warmup: Duration, measure: Duration) -> Bench {
+        self.warmup = warmup;
+        self.budget = measure;
+        self
+    }
+
+    /// Configure iteration bounds.
+    pub fn iters(mut self, min: usize, max: usize) -> Bench {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    /// Run and record a benchmark. The closure's return value is passed
+    /// through `black_box` to keep the optimizer honest.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            iters: samples.len(),
+        });
+        self.measurements.last().unwrap()
+    }
+
+    /// Record an externally-measured sample set (for one-shot expensive runs).
+    pub fn record(&mut self, name: &str, samples: &[f64]) -> &Measurement {
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            summary: Summary::of(samples),
+            iters: samples.len(),
+        });
+        self.measurements.last().unwrap()
+    }
+
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.measurements
+    }
+
+    /// Print the results table.
+    pub fn finish(&self) {
+        let mut t = Table::new(
+            &format!("bench group: {}", self.group),
+            &["benchmark", "iters", "mean", "p50", "p90", "stddev"],
+        );
+        for m in &self.measurements {
+            t.row(&[
+                m.name.clone(),
+                m.iters.to_string(),
+                fmt_secs(m.summary.mean),
+                fmt_secs(m.summary.p50),
+                fmt_secs(m.summary.p90),
+                fmt_secs(m.summary.std_dev),
+            ]);
+        }
+        t.print();
+    }
+}
+
+/// Opaque value sink to prevent the optimizer from eliding benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test").budget(
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+        );
+        let m = b.run("sum", || (0..1000u64).sum::<u64>());
+        assert!(m.iters >= 5);
+        assert!(m.summary.mean > 0.0);
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut b = Bench::new("test");
+        let m = b.record("oneshot", &[1.0, 2.0, 3.0]);
+        assert_eq!(m.iters, 3);
+        assert!((m.summary.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finish_renders() {
+        let mut b = Bench::new("g").budget(
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+        );
+        b.run("noop", || 1u32);
+        b.finish(); // should not panic
+        assert_eq!(b.measurements().len(), 1);
+    }
+}

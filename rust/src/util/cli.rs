@@ -1,0 +1,207 @@
+//! Tiny command-line argument parser (replaces `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and generated usage text. The main binary and all examples/benches use
+//! this.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+    program: String,
+}
+
+impl Args {
+    /// Build a parser with the given option specs and parse `argv[1..]`.
+    pub fn parse(specs: &[OptSpec]) -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse_from(specs, &argv)
+    }
+
+    /// Parse from an explicit argv (first element is the program name).
+    pub fn parse_from(specs: &[OptSpec], argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args {
+            specs: specs.to_vec(),
+            program: argv.first().cloned().unwrap_or_default(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if key == "help" {
+                    eprintln!("{}", args.usage());
+                    std::process::exit(0);
+                }
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", args.usage()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                        }
+                    };
+                    args.opts.insert(key, val);
+                } else {
+                    if inline_val.is_some() {
+                        anyhow::bail!("--{key} takes no value");
+                    }
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Usage text derived from the specs.
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: {} [options] [args]\noptions:\n", self.program);
+        for spec in &self.specs {
+            let arg = if spec.takes_value { " <value>" } else { "" };
+            let default = spec
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!(
+                "  --{}{arg}\n      {}{default}\n",
+                spec.name, spec.help
+            ));
+        }
+        s.push_str("  --help\n      show this message\n");
+        s
+    }
+
+    /// String option with spec default fallback.
+    pub fn get(&self, name: &str) -> Option<String> {
+        self.opts.get(name).cloned().or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .and_then(|s| s.default.map(str::to_string))
+        })
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "model",
+                help: "model name",
+                takes_value: true,
+                default: Some("inception"),
+            },
+            OptSpec {
+                name: "devices",
+                help: "device count",
+                takes_value: true,
+                default: Some("4"),
+            },
+            OptSpec {
+                name: "verbose",
+                help: "chatty output",
+                takes_value: false,
+                default: None,
+            },
+        ]
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        std::iter::once("prog")
+            .chain(parts.iter().copied())
+            .map(str::to_string)
+            .collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = Args::parse_from(&specs(), &argv(&["--model", "gnmt", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("model").unwrap(), "gnmt");
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse_from(&specs(), &argv(&["--devices=8"])).unwrap();
+        assert_eq!(a.get_usize("devices", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from(&specs(), &argv(&[])).unwrap();
+        assert_eq!(a.get("model").unwrap(), "inception");
+        assert_eq!(a.get_usize("devices", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(Args::parse_from(&specs(), &argv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse_from(&specs(), &argv(&["--model"])).is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! Leveled stderr logger controlled by `BAECHI_LOG` (error|warn|info|debug).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Log verbosity level.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static INIT: OnceLock<()> = OnceLock::new();
+
+/// Initialize from the `BAECHI_LOG` environment variable (idempotent).
+pub fn init() {
+    INIT.get_or_init(|| {
+        if let Ok(v) = std::env::var("BAECHI_LOG") {
+            let lvl = match v.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "debug" => Level::Debug,
+                _ => Level::Info,
+            };
+            LEVEL.store(lvl as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Set the level programmatically.
+pub fn set_level(level: Level) {
+    INIT.get_or_init(|| ());
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether the given level is enabled.
+pub fn enabled(level: Level) -> bool {
+    init();
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a log line.
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[baechi {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

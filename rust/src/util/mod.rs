@@ -1,0 +1,23 @@
+//! In-repo substrates for crates unavailable in the offline registry.
+//!
+//! The image's cargo mirror only carries the `xla` crate's dependency
+//! closure, so this module provides the small, well-tested pieces a
+//! production repo would normally pull from crates.io:
+//!
+//! * [`rng`] — PCG-64 pseudo-random generator (replaces `rand`).
+//! * [`json`] — minimal JSON value, parser and writer (replaces `serde_json`).
+//! * [`cli`] — flag/option argument parser (replaces `clap`).
+//! * [`stats`] — summary statistics for measurements.
+//! * [`table`] — ASCII table rendering for bench/report output.
+//! * [`bench`] — warmup+iteration measurement harness (replaces `criterion`).
+//! * [`prop`] — seeded property-testing harness (replaces `proptest`).
+//! * [`log`] — leveled stderr logger.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,100 @@
+//! Seeded property-testing harness (replaces `proptest`, unavailable
+//! offline).
+//!
+//! A property is a closure taking a [`Pcg`] it can draw arbitrary inputs
+//! from; the harness runs it for `cases` distinct seeds and reports the
+//! first failing seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! prop_check("fusion_acyclic", 200, |rng| {
+//!     let g = random_dag(rng, 50);
+//!     let fused = fuse(&g);
+//!     assert!(fused.is_acyclic());
+//! });
+//! ```
+
+use super::rng::Pcg;
+
+/// Run `cases` property checks with deterministic per-case seeds derived
+/// from `name`. Panics (with the failing seed) on the first failure.
+pub fn prop_check(name: &str, cases: u64, prop: impl Fn(&mut Pcg) + std::panic::RefUnwindSafe) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ case.wrapping_mul(0x9e3779b97f4a7c15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg::seed(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (replay seed: {seed:#x}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn prop_replay(seed: u64, prop: impl Fn(&mut Pcg)) {
+    let mut rng = Pcg::seed(seed);
+    prop(&mut rng);
+}
+
+/// FNV-1a hash for seed derivation.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::sync::atomic::AtomicU64::new(0);
+        prop_check("always_true", 50, |rng| {
+            let _ = rng.next_u32();
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            prop_check("sometimes_false", 100, |rng| {
+                // fail roughly half the time
+                assert!(rng.f64() < 0.5, "drew a large value");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "got: {msg}");
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        // Both runs must see identical draws for case 0.
+        let mut first = None;
+        for _ in 0..2 {
+            let cell = std::sync::Mutex::new(Vec::new());
+            prop_check("det", 1, |rng| {
+                cell.lock().unwrap().push(rng.next_u64());
+            });
+            let v = cell.into_inner().unwrap();
+            match &first {
+                None => first = Some(v),
+                Some(f) => assert_eq!(f, &v),
+            }
+        }
+    }
+}

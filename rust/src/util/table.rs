@@ -1,0 +1,168 @@
+//! ASCII table rendering for benchmark and report output.
+//!
+//! Every `cargo bench` target prints the paper's table/figure rows through
+//! this so EXPERIMENTS.md can paste output verbatim.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Table {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Render the table to a string.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let pad = widths[i] - cells[i].chars().count();
+                match aligns[i] {
+                    Align::Left => s.push_str(&format!(" {}{} |", cells[i], " ".repeat(pad))),
+                    Align::Right => s.push_str(&format!(" {}{} |", " ".repeat(pad), cells[i])),
+                }
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers, &vec![Align::Left; ncols]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.3} s", s)
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["model", "time"]);
+        t.row_strs(&["inception", "1.0"]);
+        t.row_strs(&["gnmt", "12.5"]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("| inception |"));
+        // right alignment on numeric column
+        assert!(r.contains("|  1.0 |"));
+    }
+
+    #[test]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row_strs(&["only-one"]);
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_secs(0.5).contains("ms"));
+        assert!(fmt_secs(2.0).contains("s"));
+        assert!(fmt_secs(2e-7).contains("ns"));
+    }
+}

@@ -1,0 +1,199 @@
+//! Integration tests over the full coordinator pipeline: every benchmark
+//! × every placer × both memory regimes, checking the paper's
+//! qualitative claims end to end.
+
+use baechi::coordinator::{run, BaechiConfig, PlacerKind};
+use baechi::models::Benchmark;
+use baechi::optimizer::{expand_placement, optimize, OptConfig};
+use baechi::profile::{Cluster, CommModel};
+use baechi::sim::{simulate, Framework, SimConfig};
+
+const ALL_PLACERS: [PlacerKind; 5] = [
+    PlacerKind::Single,
+    PlacerKind::Expert,
+    PlacerKind::MTopo,
+    PlacerKind::MEtf,
+    PlacerKind::MSct,
+];
+
+fn small_benchmarks() -> Vec<Benchmark> {
+    vec![
+        Benchmark::Transformer { batch: 64 },
+        Benchmark::InceptionV3 { batch: 32 },
+        Benchmark::Mlp,
+        Benchmark::LinReg,
+    ]
+}
+
+#[test]
+fn sufficient_memory_all_place_and_run() {
+    for b in small_benchmarks() {
+        for placer in ALL_PLACERS {
+            let cfg = BaechiConfig::paper_default(b, placer);
+            let r = run(&cfg).unwrap_or_else(|e| panic!("{placer:?} on {}: {e}", b.name()));
+            assert!(
+                r.sim.ok(),
+                "{placer:?} on {} OOM: {:?}",
+                b.name(),
+                r.sim.oom
+            );
+            assert!(r.sim.makespan > 0.0);
+            assert!(r.placement_time >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn gnmt_table4_ordering() {
+    // The paper's qualitative Table-4 ordering on GNMT:
+    // m-ETF and m-SCT beat single GPU; m-TOPO is the slowest algorithmic
+    // placer; m-ETF within a modest factor of the expert.
+    let b = Benchmark::Gnmt {
+        batch: 128,
+        seq_len: 40,
+    };
+    let step = |placer| {
+        run(&BaechiConfig::paper_default(b, placer))
+            .unwrap()
+            .step_time()
+            .expect("no OOM at full memory")
+    };
+    let single = step(PlacerKind::Single);
+    let expert = step(PlacerKind::Expert);
+    let mtopo = step(PlacerKind::MTopo);
+    let metf = step(PlacerKind::MEtf);
+    let msct = step(PlacerKind::MSct);
+    assert!(metf < single, "m-etf {metf} !< single {single}");
+    assert!(msct < single, "m-sct {msct} !< single {single}");
+    assert!(mtopo > metf, "m-topo {mtopo} !> m-etf {metf}");
+    assert!(
+        metf < expert * 1.5,
+        "m-etf {metf} not in the expert's ballpark {expert}"
+    );
+}
+
+#[test]
+fn inception_insufficient_memory_table5() {
+    // Table 5 row: Inception bs32 at 30% — single and expert OOM; all
+    // three m-* placers succeed.
+    let b = Benchmark::InceptionV3 { batch: 32 };
+    let fraction = 0.3;
+    for placer in [PlacerKind::Single, PlacerKind::Expert] {
+        let r = run(&BaechiConfig::paper_default(b, placer).with_memory_fraction(fraction))
+            .unwrap();
+        assert!(!r.sim.ok(), "{placer:?} should OOM at 30%");
+    }
+    for placer in [PlacerKind::MTopo, PlacerKind::MEtf, PlacerKind::MSct] {
+        let r = run(&BaechiConfig::paper_default(b, placer).with_memory_fraction(fraction))
+            .unwrap_or_else(|e| panic!("{placer:?} placement failed: {e}"));
+        assert!(r.sim.ok(), "{placer:?} OOM at 30%: {:?}", r.sim.oom);
+        assert!(r.devices_used >= 2, "{placer:?} must split the model");
+        // Peak memory within the cap on every device.
+        for (i, &p) in r.peak_memory.iter().enumerate() {
+            assert!(p <= r.device_capacity, "gpu{i} over cap");
+        }
+    }
+}
+
+#[test]
+fn optimizer_ablation_table6_direction() {
+    // Optimized placement must be faster to compute and give a step time
+    // at least as good (Table 6 direction).
+    let b = Benchmark::Gnmt {
+        batch: 128,
+        seq_len: 40,
+    };
+    let unopt =
+        run(&BaechiConfig::paper_default(b, PlacerKind::MSct).with_opt(OptConfig::none()))
+            .unwrap();
+    let opt = run(&BaechiConfig::paper_default(b, PlacerKind::MSct)).unwrap();
+    assert!(opt.placed_ops * 5 < unopt.placed_ops);
+    assert!(opt.placement_time < unopt.placement_time);
+    let (su, so) = (
+        unopt.step_time().unwrap_or(f64::INFINITY),
+        opt.step_time().unwrap(),
+    );
+    assert!(so <= su * 1.05, "optimized step {so} worse than unopt {su}");
+}
+
+#[test]
+fn comm_protocol_table7_direction() {
+    // Overlapped comm never loses to blocking comm.
+    for b in [
+        Benchmark::InceptionV3 { batch: 32 },
+        Benchmark::Transformer { batch: 64 },
+    ] {
+        let base = BaechiConfig::paper_default(b, PlacerKind::MEtf).with_memory_fraction(0.4);
+        let mut blocking = base.clone();
+        blocking.sim = SimConfig {
+            overlap_comm: false,
+            ..base.sim
+        };
+        let with = run(&base).unwrap();
+        let without = run(&blocking).unwrap();
+        if let (Some(w), Some(wo)) = (with.step_time(), without.step_time()) {
+            assert!(w <= wo * 1.001, "overlap {w} worse than blocking {wo}");
+        }
+    }
+}
+
+#[test]
+fn frameworks_memory_semantics_differ() {
+    // PyTorch semantics (outputs held until backward) peak ≥ TF semantics.
+    let b = Benchmark::Transformer { batch: 64 };
+    let graph = b.graph();
+    let cluster = Cluster::homogeneous(4, 64 << 30, CommModel::pcie_via_host());
+    let opt = optimize(&graph, &OptConfig::default());
+    let p = PlacerKind::MEtf
+        .build(b)
+        .place(&opt.graph, &cluster)
+        .unwrap();
+    let full = expand_placement(&graph, &opt, &p.device_of);
+    let tf = simulate(&graph, &cluster, &full, SimConfig::default());
+    let pt = simulate(
+        &graph,
+        &cluster,
+        &full,
+        SimConfig {
+            framework: Framework::PyTorch,
+            ..Default::default()
+        },
+    );
+    assert!(tf.ok() && pt.ok());
+    let tf_total: u64 = tf.peak_memory.iter().sum();
+    let pt_total: u64 = pt.peak_memory.iter().sum();
+    assert!(pt_total >= tf_total, "pytorch {pt_total} < tf {tf_total}");
+}
+
+#[test]
+fn rl_baseline_finds_feasible_but_pays_steps() {
+    let b = Benchmark::Transformer { batch: 64 };
+    let cfg = BaechiConfig::paper_default(b, PlacerKind::Rl { episodes: 60 });
+    let r = run(&cfg).unwrap();
+    assert!(r.sim.ok());
+    // The RL placer's cost is dominated by step evaluations: its
+    // placement_time must exceed m-ETF's by a wide margin (Table 3's
+    // orders-of-magnitude gap, shrunk to a 60-episode budget).
+    let metf = run(&BaechiConfig::paper_default(b, PlacerKind::MEtf)).unwrap();
+    assert!(
+        r.placement_time > metf.placement_time * 3.0,
+        "rl {} vs m-etf {}",
+        r.placement_time,
+        metf.placement_time
+    );
+}
+
+#[test]
+fn nvlink_ablation_helps_msct() {
+    // Footnote 4: faster interconnect shrinks m-SCT's gap (ρ drops).
+    let b = Benchmark::Gnmt {
+        batch: 128,
+        seq_len: 40,
+    };
+    let slow = BaechiConfig::paper_default(b, PlacerKind::MSct);
+    let mut fast = slow.clone();
+    fast.comm = CommModel::nvlink_like();
+    let s = run(&slow).unwrap().step_time().unwrap();
+    let f = run(&fast).unwrap().step_time().unwrap();
+    assert!(f < s, "nvlink {f} not faster than pcie {s}");
+}

@@ -1,0 +1,240 @@
+//! Property-based invariants over random DAGs (DESIGN.md §7), via the
+//! in-repo `util::prop` harness (proptest substitute).
+//!
+//! Each property draws a random layered DAG with random costs/memory and
+//! asserts structural invariants of the optimizer, placers, simulator,
+//! LP solver, and the Appendix A/B bound proxies.
+
+use baechi::graph::{MemorySpec, NodeId, OpGraph, OpKind};
+use baechi::optimizer::{optimize, OptConfig};
+use baechi::placer::{metf::MEtf, msct::MSct, mtopo::MTopo, Placer};
+use baechi::profile::{Cluster, CommModel};
+use baechi::sim::{simulate, SimConfig};
+use baechi::util::prop::prop_check;
+use baechi::util::rng::Pcg;
+
+/// Random layered DAG: every node has ≥1 parent in an earlier layer
+/// (except sources), so the graph is connected-ish and acyclic by
+/// construction.
+fn random_dag(rng: &mut Pcg, max_nodes: usize) -> OpGraph {
+    let n = rng.range(4, max_nodes.max(5));
+    let mut g = OpGraph::new("rand");
+    let mut ids: Vec<NodeId> = Vec::new();
+    for i in 0..n {
+        let id = g.add_node(&format!("op{i}"), OpKind::Generic(0));
+        {
+            let node = g.node_mut(id);
+            node.compute = rng.uniform(0.5, 3.0);
+            node.mem = MemorySpec {
+                params: rng.below(50) + 1,
+                output: rng.below(20) + 1,
+                param_grad: rng.below(50),
+                upstream_grad: rng.below(10),
+                temp: rng.below(10),
+            };
+            node.output_bytes = node.mem.output;
+        }
+        if !ids.is_empty() {
+            let parents = 1 + rng.below(3.min(ids.len() as u64)) as usize;
+            for _ in 0..parents {
+                let p = *rng.choose(&ids);
+                if p != id {
+                    let bytes = g.node(id).mem.output.max(1);
+                    g.add_edge(p, id, bytes);
+                }
+            }
+        }
+        // Random co-placement groups to exercise fusion.
+        if rng.chance(0.3) {
+            let grp = format!("g{}", rng.below(6));
+            g.node_mut(id).coplacement_group = Some(grp);
+        }
+        ids.push(id);
+    }
+    g
+}
+
+fn unit_cluster(n: usize, mem: u64) -> Cluster {
+    Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0))
+}
+
+#[test]
+fn prop_random_dags_are_acyclic_and_topo_valid() {
+    prop_check("dag_topo", 200, |rng| {
+        let g = random_dag(rng, 60);
+        let order = g.topo_order().expect("acyclic by construction");
+        let rank = g.topo_ranks();
+        for e in g.edges() {
+            assert!(rank[e.src.0] < rank[e.dst.0]);
+        }
+        assert_eq!(order.len(), g.len());
+    });
+}
+
+#[test]
+fn prop_fusion_never_creates_cycles_and_conserves_compute() {
+    prop_check("fusion_acyclic", 200, |rng| {
+        let g = random_dag(rng, 60);
+        let opt = optimize(&g, &OptConfig::default());
+        assert!(opt.graph.is_acyclic(), "fusion created a cycle");
+        // Compute time is conserved by fusion (no forward-only here).
+        let before = g.total_compute();
+        let after = opt.graph.total_compute();
+        assert!((before - after).abs() < 1e-9 * before.max(1.0));
+        // Every live original node has a live anchor.
+        for id in g.node_ids() {
+            let a = opt.anchor[id.0].expect("anchor exists");
+            assert!(opt.graph.is_alive(a));
+        }
+    });
+}
+
+#[test]
+fn prop_placers_respect_memory_and_cover_all_ops() {
+    prop_check("placer_memory", 120, |rng| {
+        let g = random_dag(rng, 40);
+        let total: u64 = g
+            .iter_nodes()
+            .map(|n| n.mem.params + n.mem.param_grad + n.mem.output)
+            .sum();
+        let n_dev = rng.range(2, 5);
+        // Enough aggregate headroom that a feasible placement exists.
+        let mem = (total / n_dev as u64) * 3 + 200;
+        let cluster = unit_cluster(n_dev, mem);
+        for placer in [&MEtf as &dyn Placer, &MTopo, &MSct::with_heuristic()] {
+            match placer.place(&g, &cluster) {
+                Ok(p) => {
+                    assert_eq!(p.device_of.len(), g.len(), "{} coverage", placer.name());
+                    for (i, &peak) in p.peak_memory.iter().enumerate() {
+                        assert!(
+                            peak <= mem,
+                            "{}: device {i} peak {peak} > {mem}",
+                            placer.name()
+                        );
+                    }
+                }
+                Err(_) => {
+                    // Greedy placers may dead-end on tight instances;
+                    // that is a valid outcome, not an invariant breach.
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sim_makespan_lower_bounds() {
+    prop_check("sim_bounds", 120, |rng| {
+        let g = random_dag(rng, 40);
+        let n_dev = rng.range(1, 5);
+        let cluster = unit_cluster(n_dev, u64::MAX / 4);
+        let placement: std::collections::BTreeMap<_, _> = g
+            .node_ids()
+            .map(|id| (id, baechi::graph::DeviceId(rng.range(0, n_dev))))
+            .collect();
+        let r = simulate(&g, &cluster, &placement, SimConfig::default());
+        assert!(r.ok());
+        let cp = g.critical_path(|_| 0.0);
+        let work = g.total_compute() / n_dev as f64;
+        assert!(r.makespan >= cp - 1e-9, "makespan below critical path");
+        assert!(r.makespan >= work - 1e-9, "makespan below work bound");
+        // And the trivial upper bound: fully serialized + every edge paid.
+        let upper = g.total_compute()
+            + g.edges().iter().map(|e| e.bytes as f64).sum::<f64>();
+        assert!(r.makespan <= upper + 1e-6);
+    });
+}
+
+#[test]
+fn prop_metf_within_appendix_a_bound_proxy() {
+    // Appendix A: ω_m-etf ≤ (1 + n/R + ρ)·ω_opt. With generous memory
+    // R = n, and ω_opt ≥ max(work/n, critical path), so we check
+    // makespan ≤ (2 + ρ) · max(work/n, cp) — a slightly looser but
+    // placement-independent proxy.
+    prop_check("metf_bound", 80, |rng| {
+        let g = random_dag(rng, 40);
+        let n_dev = rng.range(2, 5);
+        let cluster = unit_cluster(n_dev, u64::MAX / 4);
+        let p = MEtf.place(&g, &cluster).expect("ample memory");
+        let rho = g.rho(|b| cluster.comm.time(b));
+        let opt_lb = (g.total_compute() / n_dev as f64).max(g.critical_path(|_| 0.0));
+        let bound = (2.0 + rho.max(1.0)) * opt_lb;
+        assert!(
+            p.predicted_makespan <= bound + 1e-6,
+            "makespan {} > bound {bound} (rho {rho})",
+            p.predicted_makespan
+        );
+    });
+}
+
+#[test]
+fn prop_expand_placement_respects_colocation() {
+    prop_check("expand_colocation", 100, |rng| {
+        let mut g = random_dag(rng, 40);
+        // Random colocation pairs.
+        let ids: Vec<_> = g.node_ids().collect();
+        for _ in 0..rng.range(1, 4) {
+            let a = *rng.choose(&ids);
+            let b = *rng.choose(&ids);
+            let grp = format!("colo{}", rng.below(3));
+            g.node_mut(a).colocation_group = Some(grp.clone());
+            g.node_mut(b).colocation_group = Some(grp);
+        }
+        let cluster = unit_cluster(3, u64::MAX / 4);
+        let opt = optimize(&g, &OptConfig::default());
+        if let Ok(p) = MEtf.place(&opt.graph, &cluster) {
+            let full = baechi::optimizer::expand_placement(&g, &opt, &p.device_of);
+            for (_, members) in g.colocation_groups() {
+                let d0 = full[&members[0]];
+                for &m in &members[1..] {
+                    assert_eq!(full[&m], d0, "colocation group split after expand");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_perturbation_keeps_placement_feasible() {
+    // Fig. 8 machinery: perturbed graphs still simulate fine under the
+    // placement computed from unperturbed profiles.
+    prop_check("perturb_feasible", 60, |rng| {
+        let g = random_dag(rng, 30);
+        let cluster = unit_cluster(3, u64::MAX / 4);
+        let p = match MEtf.place(&g, &cluster) {
+            Ok(p) => p,
+            Err(_) => return,
+        };
+        let perturbed = baechi::profile::perturb::perturb_graph(&g, 0.2, rng);
+        let r = simulate(&perturbed, &cluster, &p.device_of, SimConfig::default());
+        assert!(r.ok());
+        // ±20 % cost noise cannot change makespan by more than ~±20 %
+        // plus scheduling slack; sanity: within 2×.
+        let base = simulate(&g, &cluster, &p.device_of, SimConfig::default());
+        let ratio = r.makespan / base.makespan;
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    });
+}
+
+#[test]
+fn prop_lp_favorites_unique_and_consistent() {
+    prop_check("lp_favorites", 40, |rng| {
+        let g = random_dag(rng, 20);
+        let comm = CommModel::new(0.0, 1.0);
+        let fav = baechi::lp::favorites(&g, &comm, baechi::lp::FavoriteMethod::Lp);
+        let mut child_of = std::collections::BTreeMap::new();
+        for i in g.node_ids() {
+            if let Some(j) = fav.fav_child[i.0] {
+                assert_eq!(fav.fav_parent[j.0], Some(i), "inverse mapping");
+                assert!(
+                    child_of.insert(j, i).is_none(),
+                    "node is favorite child of two parents"
+                );
+                assert!(
+                    g.edge_bytes(i, j).is_some(),
+                    "favorite child without an edge"
+                );
+            }
+        }
+    });
+}
