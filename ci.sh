@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CI gate: build, tests, formatting, lints. Run from anywhere.
+#
+#   ./ci.sh          # full gate (what the repo considers green)
+#   ./ci.sh --fast   # build + tests only (skip fmt/clippy)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+fast=0
+[[ "${1:-}" == "--fast" ]] && fast=1
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [[ "$fast" == 0 ]]; then
+    echo "==> cargo fmt --check"
+    cargo fmt --check
+
+    echo "==> cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "CI green."

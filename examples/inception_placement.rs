@@ -12,7 +12,7 @@ use baechi::models::Benchmark;
 use baechi::util::cli::{Args, OptSpec};
 use baechi::util::table::{fmt_bytes, fmt_secs, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> baechi::Result<()> {
     let specs = [
         OptSpec {
             name: "batch",

@@ -1,96 +1,123 @@
-//! Quickstart: place the paper's two didactic graphs and reproduce the
-//! Figure-1 story — classical SCT (no memory awareness) OOMs on
-//! memory-capped devices while m-SCT succeeds with a slightly longer
-//! makespan.
+//! Quickstart for the `PlacementEngine` service API: build an engine
+//! with the builder, serve typed request → response placements, batch
+//! across threads, hit the placement cache, and branch on structured
+//! errors — all on the paper's two didactic graphs.
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 
-use baechi::graph::DeviceId;
+use baechi::engine::{PlacementEngine, PlacementRequest};
 use baechi::models::linreg::{fig1_graph, linreg_graph, FIG1_MEM_UNIT};
-use baechi::placer::{msct::MSct, Placer};
+use baechi::optimizer::OptConfig;
 use baechi::profile::{Cluster, CommModel};
-use baechi::sim::{simulate, SimConfig};
 use baechi::util::table::Table;
+use baechi::BaechiError;
 
-fn main() -> anyhow::Result<()> {
-    // ---- Figure 1: SCT vs m-SCT under a memory cap -------------------
-    let g = fig1_graph();
+fn main() -> baechi::Result<()> {
     // Abstract units: 1 byte moves in 1 time-unit.
     let unit_comm = CommModel::new(0.0, 1.0);
 
-    // "Classical SCT": memory-oblivious — place with effectively infinite
-    // memory, then *run* it on capped devices. The cap is 4 memory units
-    // plus a few bytes of transfer-buffer headroom (paper §4.2: "usually
-    // a device has at least a few bytes left").
+    // ---- build one long-lived engine per target cluster ---------------
+    // Figure-1 setting: 3 devices × 4 memory units (+ transfer-buffer
+    // headroom, paper §4.2: "usually a device has a few bytes left").
     let cap = 4 * FIG1_MEM_UNIT + 12;
-    let free_cluster = Cluster::homogeneous(3, 1_000_000 * FIG1_MEM_UNIT, unit_comm);
-    let capped_cluster = Cluster::homogeneous(3, cap, unit_comm);
-    let sct_placement = MSct::with_lp().place(&g, &free_cluster)?;
-    let sct_on_capped = simulate(&g, &capped_cluster, &sct_placement.device_of, SimConfig::default());
+    let engine = PlacementEngine::builder()
+        .cluster(Cluster::homogeneous(3, cap, unit_comm))
+        .build()?;
+    println!("registered placers: {}", engine.registry().names().join(", "));
 
-    // m-SCT: memory-aware placement on the capped devices.
-    let msct_placement = MSct::with_lp().place(&g, &capped_cluster)?;
-    let msct_run = simulate(&g, &capped_cluster, &msct_placement.device_of, SimConfig::default());
-
-    let mut t = Table::new(
-        "Figure 1: classical SCT vs m-SCT (per-device memory = 4 units)",
-        &["schedule", "makespan", "outcome"],
-    );
-    t.row(&[
-        "SCT (memory-oblivious)".into(),
-        format!("{:.0}", sct_placement.predicted_makespan),
-        match &sct_on_capped.oom {
-            Some(o) => format!("OOM (gpu{})", o.device),
-            None => "fits (lucky layout)".into(),
-        },
-    ]);
-    t.row(&[
-        "m-SCT (memory-aware)".into(),
-        format!("{:.0}", msct_run.makespan),
-        "succeeds".into(),
-    ]);
-    t.print();
-    assert!(msct_run.ok(), "m-SCT must run within the cap");
-    for (i, &p) in msct_run.peak_memory.iter().enumerate() {
-        println!(
-            "  gpu{i} peak memory: {:.2} / 4 units",
-            p as f64 / FIG1_MEM_UNIT as f64
-        );
-        assert!(p <= cap);
-    }
-
-    // ---- Figure 2: the linear-regression working example --------------
-    println!();
+    // ---- one request/response -----------------------------------------
+    // Figure 2: the linear-regression working example placed by m-SCT.
+    // The didactic graphs ship pre-reduced, so skip the optimizer.
+    let lr_req = PlacementRequest::new(linreg_graph(), "m-sct").with_opt(OptConfig::none());
+    let resp = engine.place(&lr_req)?;
     let lr = linreg_graph();
-    let cluster = Cluster::homogeneous(2, 100, unit_comm);
-    let placement = MSct::with_lp().place(&lr, &cluster)?;
     let mut t = Table::new(
-        "Figure 2: linear regression placed by m-SCT on 2 devices",
+        "Figure 2: linear regression placed by m-SCT (request/response)",
         &["operator", "device"],
     );
     for n in lr.iter_nodes() {
-        t.row(&[n.name.clone(), placement.device(n.id).to_string()]);
+        t.row(&[n.name.clone(), resp.placement.device(n.id).to_string()]);
     }
     t.print();
     // TF colocation constraints hold:
     for (grp, members) in lr.colocation_groups() {
-        let d0 = placement.device(members[0]);
+        let d0 = resp.placement.device(members[0]);
         for &m in &members[1..] {
-            assert_eq!(placement.device(m), d0, "group {grp} split");
+            assert_eq!(resp.placement.device(m), d0, "group {grp} split");
         }
-        println!("colocation group '{grp}' intact on {}", d0);
+        println!("colocation group '{grp}' intact on {d0}");
     }
-    // DOT export for inspection.
-    let dot = lr.to_dot(Some(
-        &placement
-            .device_of
-            .iter()
-            .map(|(&k, &v)| (k, v))
-            .collect::<std::collections::BTreeMap<_, DeviceId>>(),
-    ));
-    std::fs::write("/tmp/baechi_linreg.dot", dot)?;
-    println!("wrote /tmp/baechi_linreg.dot");
+
+    // ---- a batch fanned across threads --------------------------------
+    println!();
+    let reqs: Vec<PlacementRequest> = ["m-topo", "m-etf", "m-sct"]
+        .iter()
+        .map(|p| PlacementRequest::new(fig1_graph(), p).with_opt(OptConfig::none()))
+        .collect();
+    let mut t = Table::new(
+        "Figure 1 graph on 3 × 4-unit devices (place_batch)",
+        &["placer", "makespan (time units)", "devices", "outcome"],
+    );
+    for result in engine.place_batch(&reqs) {
+        let r = result?;
+        let outcome = match &r.sim {
+            Some(s) if s.ok() => "runs within the cap".to_string(),
+            Some(s) => format!("{:?}", s.oom),
+            None => "-".into(),
+        };
+        t.row(&[
+            r.placer.clone(),
+            format!("{:.0}", r.placement.predicted_makespan),
+            r.devices_used.to_string(),
+            outcome,
+        ]);
+        if let Some(s) = r.sim.as_ref().filter(|s| s.ok()) {
+            for (i, &p) in s.peak_memory.iter().enumerate() {
+                assert!(p <= cap, "gpu{i} over the cap");
+            }
+        }
+    }
+    t.print();
+
+    // ---- the cache: identical requests are memoized -------------------
+    let again = engine.place(&lr_req)?;
+    let stats = engine.cache_stats();
+    println!(
+        "\ncache: {} hits / {} misses ({} responses memoized)",
+        stats.hits,
+        stats.misses,
+        engine.cache_len()
+    );
+    assert!(stats.hits >= 1, "second identical request must hit");
+    assert_eq!(again.placement.device_of, resp.placement.device_of);
+
+    // ---- typed errors: branch on the failure mode, not on strings -----
+    // A cluster too small for the Fig. 1 graph (6 < 11 memory units).
+    let tight = PlacementEngine::builder()
+        .cluster(Cluster::homogeneous(3, 2 * FIG1_MEM_UNIT, unit_comm))
+        .build()?;
+    match tight.place(&PlacementRequest::new(fig1_graph(), "m-etf").with_opt(OptConfig::none())) {
+        Err(BaechiError::Oom {
+            op,
+            best_device,
+            deficit,
+        }) => println!(
+            "typed OOM: operator '{op}' does not fit; closest device {best_device:?} \
+             is {deficit} bytes short"
+        ),
+        Ok(_) => panic!("11-unit graph cannot fit a 6-unit cluster"),
+        Err(e) => panic!("expected Oom, got {e}"),
+    }
+    match tight.place(&PlacementRequest::new(fig1_graph(), "not-a-placer")) {
+        Err(BaechiError::UnknownPlacer { name, known }) => {
+            println!("typed UnknownPlacer: '{name}' (known: {})", known.join("|"))
+        }
+        Ok(_) => panic!("bogus placer resolved"),
+        Err(e) => panic!("expected UnknownPlacer, got {e}"),
+    }
+
+    println!("\nOK: engine served requests, batches, cache hits, and typed errors.");
     Ok(())
 }

@@ -19,7 +19,7 @@ use baechi::profile::{Cluster, CommModel};
 use baechi::runtime::artifact::ArtifactRegistry;
 use baechi::util::cli::{Args, OptSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> baechi::Result<()> {
     let specs = [
         OptSpec {
             name: "steps",
@@ -46,11 +46,12 @@ fn main() -> anyhow::Result<()> {
     let lr = args.get_f64("lr", 0.1)? as f32;
 
     let dir = ArtifactRegistry::default_dir();
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "no artifacts at {} — run `make artifacts` first",
-        dir.display()
-    );
+    if !dir.join("manifest.json").exists() {
+        return Err(baechi::BaechiError::io(format!(
+            "no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        )));
+    }
     let meta = ModelMeta::load(&dir)?;
     println!(
         "model: {}-layer MLP, batch {}, dims {:?}",
@@ -121,8 +122,14 @@ fn main() -> anyhow::Result<()> {
     println!(
         "oracle check over {oracle_steps} steps: max relative loss deviation {max_err:.2e}"
     );
-    anyhow::ensure!(max_err < 1e-3, "distributed run diverged from oracle");
-    anyhow::ensure!(tail < head, "loss did not decrease");
+    if max_err >= 1e-3 {
+        return Err(baechi::BaechiError::runtime(
+            "distributed run diverged from oracle",
+        ));
+    }
+    if tail >= head {
+        return Err(baechi::BaechiError::runtime("loss did not decrease"));
+    }
     println!("OK: distributed placed training matches the fused oracle and learns.");
     Ok(())
 }

@@ -3,12 +3,18 @@
 //! baseline (RL episodes × per-episode step-evaluation cost, the
 //! normalized metric the paper uses for HierarchicalRL/Placeto).
 //!
+//! The algorithmic placers are served through the `PlacementEngine`
+//! (one engine per benchmark, one request per placer, served
+//! sequentially for measurement isolation), so the numbers measure
+//! exactly the serving path the crate exposes.
+//!
 //! Expected shape: Baechi in milliseconds-to-seconds; learning-based
 //! placement orders of magnitude slower because every sample requires a
 //! full step execution on the target cluster.
 
 use baechi::baselines::rl::{RlConfig, RlPlacer};
-use baechi::coordinator::{run, BaechiConfig, PlacerKind};
+use baechi::coordinator::{engine_for, BaechiConfig, PlacerKind};
+use baechi::engine::PlacementRequest;
 use baechi::models::Benchmark;
 use baechi::optimizer::{optimize, OptConfig};
 use baechi::util::table::{fmt_secs, Table};
@@ -48,17 +54,20 @@ fn main() {
     for b in benchmarks {
         let mut row = vec![b.name()];
         let mut msct_time = f64::NAN;
-        for placer in [PlacerKind::MTopo, PlacerKind::MEtf, PlacerKind::MSct] {
-            let cfg = BaechiConfig::paper_default(b, placer);
-            let r = run(&cfg).expect("placement");
-            // Placement time = algorithm + the optimizer pass it needs.
-            row.push(fmt_secs(r.placement_time));
-            if placer == PlacerKind::MSct {
-                msct_time = r.placement_time;
+        let cfg = BaechiConfig::paper_default(b, PlacerKind::MSct);
+        let engine = engine_for(&cfg).expect("engine");
+        // Serve each placer sequentially through the engine: the table
+        // reports self-timed placement wall-clock, which concurrent
+        // batch members would inflate through CPU contention.
+        for placer in ["m-topo", "m-etf", "m-sct"] {
+            let req = PlacementRequest::for_benchmark(b, placer).without_simulation();
+            let r = engine.place(&req).expect("placement");
+            row.push(fmt_secs(r.placement.placement_time));
+            if placer == "m-sct" {
+                msct_time = r.placement.placement_time;
             }
         }
         // RL baseline on the optimized graph (sane action space).
-        let cfg = BaechiConfig::paper_default(b, PlacerKind::MEtf);
         let g = b.graph();
         let opt = optimize(&g, &OptConfig::default());
         let cluster = cfg.cluster();

@@ -86,7 +86,7 @@ impl Placer for Expert {
         format!("expert({})", self.benchmark.name())
     }
 
-    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement> {
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> crate::Result<Placement> {
         place_fixed(&self.name(), graph, cluster, |id| {
             self.assign(graph, id, cluster.n())
         })

@@ -23,7 +23,7 @@ pub(crate) fn place_fixed(
     graph: &OpGraph,
     cluster: &Cluster,
     assign: impl Fn(NodeId) -> DeviceId,
-) -> anyhow::Result<Placement> {
+) -> crate::Result<Placement> {
     let t0 = std::time::Instant::now();
     let mut uncapped = cluster.clone();
     for d in &mut uncapped.devices {
@@ -32,12 +32,17 @@ pub(crate) fn place_fixed(
     let mut st = SchedState::new(graph, &uncapped);
     let order = graph
         .topo_order()
-        .ok_or(crate::placer::PlaceError::Cyclic)?;
+        .ok_or(crate::BaechiError::Cyclic)?;
     for id in order {
         // TF colocation constraints (§3.1.1) override the assignment:
         // once a group member lands somewhere, the rest follow.
         let dev = st.ledger.pinned_device(graph, id).unwrap_or_else(|| assign(id));
-        anyhow::ensure!(dev.0 < cluster.n(), "device {dev} out of range");
+        if dev.0 >= cluster.n() {
+            return Err(crate::BaechiError::invalid(format!(
+                "device {dev} out of range (cluster has {})",
+                cluster.n()
+            )));
+        }
         st.commit(id, dev);
     }
     crate::placer::finish_placement(name, graph, st, t0)

@@ -66,7 +66,7 @@ impl RlPlacer {
         &self,
         graph: &OpGraph,
         cluster: &Cluster,
-    ) -> anyhow::Result<(Placement, RlStats)> {
+    ) -> crate::Result<(Placement, RlStats)> {
         let t0 = std::time::Instant::now();
         let n = cluster.n();
         let ids: Vec<NodeId> = graph.node_ids().collect();
@@ -123,7 +123,10 @@ impl RlPlacer {
         }
 
         let (best_cost, best_choice) = best.ok_or_else(|| {
-            anyhow::anyhow!("RL placer found no feasible placement in {} episodes", self.cfg.episodes)
+            crate::BaechiError::Infeasible(format!(
+                "RL placer found no feasible placement in {} episodes",
+                self.cfg.episodes
+            ))
         })?;
         let device_of: BTreeMap<NodeId, DeviceId> = ids
             .iter()
@@ -151,7 +154,7 @@ impl Placer for RlPlacer {
         "rl-reinforce".to_string()
     }
 
-    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement> {
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> crate::Result<Placement> {
         self.place_with_stats(graph, cluster).map(|(p, _)| p)
     }
 }

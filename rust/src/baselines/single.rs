@@ -15,7 +15,7 @@ impl Placer for SingleDevice {
         "single-gpu".to_string()
     }
 
-    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement> {
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> crate::Result<Placement> {
         place_fixed(&self.name(), graph, cluster, |_| DeviceId(0))
     }
 }

@@ -1,14 +1,21 @@
 //! Coordinator configuration: which benchmark, cluster, optimizer and
 //! placement algorithm to run.
+//!
+//! [`PlacerKind`] is kept as a thin compatibility shim over the
+//! [`PlacerRegistry`](crate::engine::PlacerRegistry): it enumerates the
+//! built-in placers for CLI parsing and table iteration, and `build`
+//! delegates to the registry. New placement strategies should register
+//! with the engine directly instead of growing this enum.
 
-use crate::baselines::{expert::Expert, rl::RlPlacer, single::SingleDevice};
+use crate::engine::PlacerRegistry;
+use crate::error::BaechiError;
 use crate::models::Benchmark;
 use crate::optimizer::OptConfig;
-use crate::placer::{metf::MEtf, msct::MSct, mtopo::MTopo, Placer};
+use crate::placer::Placer;
 use crate::profile::{Cluster, CommModel};
 use crate::sim::{Framework, SimConfig};
 
-/// Selection of a placement algorithm.
+/// Selection of a built-in placement algorithm.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PlacerKind {
     Single,
@@ -18,12 +25,14 @@ pub enum PlacerKind {
     MSct,
     /// m-SCT with the greedy favorite-child heuristic (ablation).
     MSctHeuristic,
+    /// m-SCT forced onto the LP favorite-child path (ablation).
+    MSctLp,
     /// REINFORCE baseline with this many episodes.
     Rl { episodes: usize },
 }
 
 impl PlacerKind {
-    pub fn parse(s: &str) -> anyhow::Result<PlacerKind> {
+    pub fn parse(s: &str) -> crate::Result<PlacerKind> {
         Ok(match s {
             "single" => PlacerKind::Single,
             "expert" => PlacerKind::Expert,
@@ -31,6 +40,7 @@ impl PlacerKind {
             "m-etf" | "metf" => PlacerKind::MEtf,
             "m-sct" | "msct" => PlacerKind::MSct,
             "m-sct-heur" => PlacerKind::MSctHeuristic,
+            "m-sct-lp" => PlacerKind::MSctLp,
             s if s.starts_with("rl") => {
                 let episodes = s
                     .strip_prefix("rl:")
@@ -38,9 +48,12 @@ impl PlacerKind {
                     .unwrap_or(200);
                 PlacerKind::Rl { episodes }
             }
-            other => anyhow::bail!(
-                "unknown placer '{other}' (single|expert|m-topo|m-etf|m-sct|m-sct-heur|rl[:N])"
-            ),
+            other => {
+                return Err(BaechiError::UnknownPlacer {
+                    name: other.to_string(),
+                    known: PlacerRegistry::with_builtins().names(),
+                })
+            }
         })
     }
 
@@ -52,24 +65,32 @@ impl PlacerKind {
             PlacerKind::MEtf => "m-etf",
             PlacerKind::MSct => "m-sct",
             PlacerKind::MSctHeuristic => "m-sct-heur",
+            PlacerKind::MSctLp => "m-sct-lp",
             PlacerKind::Rl { .. } => "rl",
         }
     }
 
-    /// Instantiate the placer (the expert needs the benchmark identity).
-    pub fn build(&self, benchmark: Benchmark) -> Box<dyn Placer> {
-        match *self {
-            PlacerKind::Single => Box::new(SingleDevice),
-            PlacerKind::Expert => Box::new(Expert::new(benchmark)),
-            PlacerKind::MTopo => Box::new(MTopo),
-            PlacerKind::MEtf => Box::new(MEtf),
-            PlacerKind::MSct => Box::new(MSct::default()),
-            PlacerKind::MSctHeuristic => Box::new(MSct::with_heuristic()),
-            PlacerKind::Rl { episodes } => Box::new(RlPlacer::new(crate::baselines::rl::RlConfig {
-                episodes,
-                ..Default::default()
-            })),
+    /// The registry spec this kind resolves through (e.g. `"rl:200"`).
+    pub fn spec(&self) -> String {
+        match self {
+            PlacerKind::Single => "single".to_string(),
+            PlacerKind::Expert => "expert".to_string(),
+            PlacerKind::MTopo => "m-topo".to_string(),
+            PlacerKind::MEtf => "m-etf".to_string(),
+            PlacerKind::MSct => "m-sct".to_string(),
+            PlacerKind::MSctHeuristic => "m-sct-heur".to_string(),
+            PlacerKind::MSctLp => "m-sct-lp".to_string(),
+            PlacerKind::Rl { episodes } => format!("rl:{episodes}"),
         }
+    }
+
+    /// Instantiate the placer through the built-in registry (the expert
+    /// needs the benchmark identity).
+    pub fn build(&self, benchmark: Benchmark) -> Box<dyn Placer> {
+        PlacerRegistry::with_builtins()
+            .resolve(&self.spec(), Some(benchmark))
+            .expect("built-in placers always resolve")
+            .placer
     }
 }
 
@@ -157,6 +178,39 @@ mod tests {
             PlacerKind::Rl { episodes: 50 }
         );
         assert!(PlacerKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_with_typed_error() {
+        match PlacerKind::parse("nope") {
+            Err(BaechiError::UnknownPlacer { name, known }) => {
+                assert_eq!(name, "nope");
+                assert!(known.contains(&"m-etf".to_string()));
+            }
+            other => panic!("expected UnknownPlacer, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_through_registry() {
+        let registry = PlacerRegistry::with_builtins();
+        for kind in [
+            PlacerKind::Single,
+            PlacerKind::Expert,
+            PlacerKind::MTopo,
+            PlacerKind::MEtf,
+            PlacerKind::MSct,
+            PlacerKind::MSctHeuristic,
+            PlacerKind::MSctLp,
+            PlacerKind::Rl { episodes: 5 },
+        ] {
+            let resolved = registry
+                .resolve(&kind.spec(), Some(Benchmark::Mlp))
+                .unwrap_or_else(|e| panic!("{}: {e}", kind.spec()));
+            // The shim and the registry agree on the algorithm.
+            let built = kind.build(Benchmark::Mlp);
+            assert_eq!(resolved.placer.name(), built.name(), "{}", kind.spec());
+        }
     }
 
     #[test]

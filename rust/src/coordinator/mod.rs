@@ -1,9 +1,10 @@
 //! The Baechi coordinator: the full profile → optimize → place →
 //! evaluate pipeline behind the CLI, examples, and benches (paper Fig. 6
-//! system architecture).
+//! system architecture). A thin wrapper over
+//! [`crate::engine::PlacementEngine`] since the service-API redesign.
 
 pub mod config;
 pub mod pipeline;
 
 pub use config::{BaechiConfig, PlacerKind};
-pub use pipeline::{run, RunReport};
+pub use pipeline::{engine_for, run, RunReport};

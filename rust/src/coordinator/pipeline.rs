@@ -1,10 +1,17 @@
 //! The end-to-end placement pipeline (paper Fig. 6):
 //! graph generation → graph optimizer → placement algorithm → placement
 //! expansion → execution-simulator evaluation.
+//!
+//! Since the `PlacementEngine` redesign this module is a thin wrapper:
+//! [`run`] builds an engine for the config's cluster, issues one
+//! [`PlacementRequest`](crate::engine::PlacementRequest), and reshapes
+//! the response into the table-oriented [`RunReport`]. Anything that
+//! needs more control (batching, caching, custom placers, observers)
+//! should talk to [`crate::engine`] directly.
 
-use super::config::{BaechiConfig, PlacerKind};
-use crate::optimizer;
-use crate::sim::{self, SimResult};
+use super::config::BaechiConfig;
+use crate::engine::{PlacementEngine, PlacementRequest};
+use crate::sim::SimResult;
 use crate::util::json::Json;
 
 /// Everything a run produces (one row of the paper's tables).
@@ -56,57 +63,50 @@ impl RunReport {
     }
 }
 
-/// Run the full pipeline. `Err` only for infrastructure failures;
-/// placement OOM surfaces as `Err` too (the paper's m-* OOM rows), while
+/// Build the [`PlacementEngine`] a config describes (without serving any
+/// request). The CLI shares this so every entrypoint routes through one
+/// engine construction path.
+pub fn engine_for(cfg: &BaechiConfig) -> crate::Result<PlacementEngine> {
+    PlacementEngine::builder()
+        .cluster(cfg.cluster())
+        .optimizer(cfg.opt)
+        .sim(cfg.sim)
+        .build()
+}
+
+/// Run the full pipeline through the engine. `Err` only for
+/// infrastructure failures; placement OOM surfaces as
+/// `Err(BaechiError::Oom { .. })` (the paper's m-* OOM rows), while
 /// *runtime* OOM of a successful placement is reported in `sim.oom`.
-pub fn run(cfg: &BaechiConfig) -> anyhow::Result<RunReport> {
-    let graph = cfg.benchmark.graph();
-    let cluster = cfg.cluster();
-
-    // Graph optimizer (§3.1). Baselines place the raw graph the way the
-    // paper's baselines do (single/expert don't need reduction), but the
-    // RL baseline uses the optimized graph to keep its action space sane.
-    let use_optimizer = !matches!(cfg.placer, PlacerKind::Single | PlacerKind::Expert);
-    let opt = if use_optimizer {
-        let mut ocfg = cfg.opt;
-        if ocfg.fusion && ocfg.latency_equiv_bytes == 0 {
-            // Price multi-tensor fused edges consistently with the ES.
-            ocfg.latency_equiv_bytes = (cfg.comm.latency * cfg.comm.bandwidth) as u64;
-        }
-        optimizer::optimize(&graph, &ocfg)
-    } else {
-        optimizer::optimize(&graph, &optimizer::OptConfig::none())
-    };
-
-    let placer = cfg.placer.build(cfg.benchmark);
-    let placement = placer.place(&opt.graph, &cluster)?;
-    let full = optimizer::expand_placement(&graph, &opt, &placement.device_of);
-
-    // Evaluate the *full* graph placement in the ES.
-    let sim = sim::simulate(&graph, &cluster, &full, cfg.sim);
-
-    let devices_used = {
-        let set: std::collections::BTreeSet<_> = full.values().collect();
-        set.len()
-    };
+pub fn run(cfg: &BaechiConfig) -> crate::Result<RunReport> {
+    let engine = engine_for(cfg)?;
+    let resp = engine.place(&PlacementRequest::for_benchmark(
+        cfg.benchmark,
+        &cfg.placer.spec(),
+    ))?;
+    let sim = resp
+        .sim
+        .clone()
+        .expect("pipeline requests always simulate");
     Ok(RunReport {
         benchmark: cfg.benchmark.name(),
-        placer: placement.algorithm.clone(),
-        original_ops: opt.stats.original_ops,
-        placed_ops: opt.stats.placed_ops,
-        placement_time: placement.placement_time,
-        predicted_makespan: placement.predicted_makespan,
+        placer: resp.placer.clone(),
+        original_ops: resp.stats.original_ops,
+        placed_ops: resp.stats.placed_ops,
+        placement_time: resp.placement.placement_time,
+        predicted_makespan: resp.placement.predicted_makespan,
         peak_memory: sim.peak_memory.clone(),
-        devices_used,
+        devices_used: resp.devices_used,
         sim,
         devices: cfg.devices,
-        device_capacity: cluster.devices[0].memory,
+        device_capacity: engine.cluster().devices[0].memory,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::PlacerKind;
     use crate::models::Benchmark;
 
     #[test]

@@ -1,0 +1,174 @@
+//! Structural fingerprints for the engine's placement cache.
+//!
+//! FNV-1a over every field that influences a placement: the graph
+//! (nodes, costs, memory, groups, edges), the cluster spec, the
+//! optimizer config, and the simulator config. Two requests with equal
+//! fingerprints produce identical placements (all placers are
+//! deterministic for a fixed input), so the cache can serve the memoized
+//! response.
+
+use crate::graph::OpGraph;
+use crate::optimizer::OptConfig;
+use crate::profile::Cluster;
+use crate::sim::{Framework, SimConfig};
+
+/// Incremental FNV-1a 64-bit hasher.
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write_bytes(&[v as u8]);
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write_bytes(s.as_bytes());
+        // Separator so ("ab","c") and ("a","bc") differ.
+        self.write_bytes(&[0xff]);
+    }
+
+    pub fn write_opt_str(&mut self, s: Option<&str>) {
+        match s {
+            Some(s) => {
+                self.write_bool(true);
+                self.write_str(s);
+            }
+            None => self.write_bool(false),
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Fnv {
+        Fnv::new()
+    }
+}
+
+/// Fingerprint of an operator graph's placement-relevant structure.
+pub fn graph_fingerprint(g: &OpGraph) -> u64 {
+    let mut h = Fnv::new();
+    h.write_str(&g.name);
+    h.write_usize(g.len());
+    for n in g.iter_nodes() {
+        h.write_usize(n.id.0);
+        h.write_str(&n.name);
+        h.write_str(&n.kind.name());
+        h.write_f64(n.compute);
+        for v in [
+            n.mem.params,
+            n.mem.output,
+            n.mem.param_grad,
+            n.mem.upstream_grad,
+            n.mem.temp,
+            n.output_bytes,
+        ] {
+            h.write_u64(v);
+        }
+        h.write_opt_str(n.colocation_group.as_deref());
+        h.write_opt_str(n.coplacement_group.as_deref());
+        h.write_bool(n.is_backward);
+        h.write_usize(n.forward_of.map(|f| f.0 + 1).unwrap_or(0));
+    }
+    for e in g.edges() {
+        h.write_usize(e.src.0);
+        h.write_usize(e.dst.0);
+        h.write_u64(e.bytes);
+    }
+    h.finish()
+}
+
+/// Fingerprint of the cluster spec (devices + comm model).
+pub fn cluster_fingerprint(c: &Cluster) -> u64 {
+    let mut h = Fnv::new();
+    h.write_usize(c.n());
+    for d in &c.devices {
+        h.write_u64(d.memory);
+        h.write_f64(d.speed);
+    }
+    h.write_f64(c.comm.latency);
+    h.write_f64(c.comm.bandwidth);
+    h.write_bool(c.sequential_comm);
+    h.finish()
+}
+
+/// Fingerprint of the effective optimizer configuration.
+pub fn opt_fingerprint(o: &OptConfig) -> u64 {
+    let mut h = Fnv::new();
+    h.write_bool(o.coplacement);
+    h.write_bool(o.fusion);
+    h.write_bool(o.forward_only);
+    h.write_u64(o.latency_equiv_bytes);
+    h.finish()
+}
+
+/// Fingerprint of the simulator configuration.
+pub fn sim_fingerprint(s: &SimConfig) -> u64 {
+    let mut h = Fnv::new();
+    h.write_bool(matches!(s.framework, Framework::PyTorch));
+    h.write_bool(s.overlap_comm);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+    use crate::profile::CommModel;
+
+    #[test]
+    fn graph_fingerprint_sensitive_to_structure() {
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        g.add_edge(a, b, 10);
+        let f1 = graph_fingerprint(&g);
+        assert_eq!(f1, graph_fingerprint(&g.clone()), "deterministic");
+        g.node_mut(a).compute = 1.5;
+        let f2 = graph_fingerprint(&g);
+        assert_ne!(f1, f2, "compute change must alter the fingerprint");
+        g.add_edge(a, b, 20);
+        assert_ne!(f2, graph_fingerprint(&g), "edge bytes alter it too");
+    }
+
+    #[test]
+    fn cluster_fingerprint_sensitive_to_memory() {
+        let c1 = Cluster::homogeneous(4, 1000, CommModel::new(0.0, 1.0));
+        let c2 = Cluster::homogeneous(4, 2000, CommModel::new(0.0, 1.0));
+        assert_ne!(cluster_fingerprint(&c1), cluster_fingerprint(&c2));
+        assert_eq!(cluster_fingerprint(&c1), cluster_fingerprint(&c1.clone()));
+    }
+
+    #[test]
+    fn opt_fingerprint_distinguishes_configs() {
+        assert_ne!(
+            opt_fingerprint(&OptConfig::default()),
+            opt_fingerprint(&OptConfig::none())
+        );
+    }
+}

@@ -1,0 +1,501 @@
+//! The `PlacementEngine`: a long-lived, service-grade placement API.
+//!
+//! The paper's headline result — algorithmic placement is 654×–206,000×
+//! faster than learning-based planners — makes placement viable as an
+//! *online service*. This module is that service surface: construct one
+//! engine per target cluster via the builder, then serve typed
+//! [`PlacementRequest`] → [`PlacementResponse`] calls:
+//!
+//! ```no_run
+//! use baechi::engine::{PlacementEngine, PlacementRequest};
+//! use baechi::profile::{Cluster, CommModel};
+//!
+//! let engine = PlacementEngine::builder()
+//!     .cluster(Cluster::homogeneous(4, 8 << 30, CommModel::pcie_via_host()))
+//!     .build()?;
+//! let resp = engine.place(&PlacementRequest::new(
+//!     baechi::models::linreg::linreg_graph(),
+//!     "m-sct",
+//! ))?;
+//! assert!(resp.devices_used >= 1);
+//! # Ok::<(), baechi::BaechiError>(())
+//! ```
+//!
+//! * **Registry** — placers resolve by name through [`PlacerRegistry`];
+//!   register your own with [`PlacementEngineBuilder::register_placer`].
+//! * **Cache** — responses are memoized by (graph, cluster, optimizer,
+//!   placer) fingerprint; repeated requests (the serving scenario)
+//!   return the cached `Arc` without re-running the placer.
+//! * **Batching** — [`PlacementEngine::place_batch`] fans a slice of
+//!   requests across OS threads via `std::thread::scope`.
+//! * **Observability** — [`PlacementObserver`] hooks receive per-stage
+//!   timings (optimize / place / expand / simulate).
+//! * **Typed errors** — every failure is a [`BaechiError`] variant.
+
+pub mod fingerprint;
+pub mod observer;
+pub mod registry;
+
+pub use observer::{LogObserver, PlacementObserver, RecordingObserver, Stage, StageStats};
+pub use registry::{PlacerContext, PlacerRegistration, PlacerRegistry, ResolvedPlacer};
+
+use crate::error::BaechiError;
+use crate::graph::OpGraph;
+use crate::models::Benchmark;
+use crate::optimizer::{self, OptConfig, OptStats};
+use crate::placer::Placement;
+use crate::profile::Cluster;
+use crate::sim::{self, SimConfig, SimResult};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One placement request: the graph to place and how to place it.
+#[derive(Debug, Clone)]
+pub struct PlacementRequest {
+    /// The operator graph to place.
+    pub graph: OpGraph,
+    /// Placer spec resolved against the registry (`"m-sct"`, `"rl:500"`).
+    pub placer: String,
+    /// Benchmark identity, required by model-keyed placers (the expert).
+    pub benchmark: Option<Benchmark>,
+    /// Per-request optimizer override (None = the engine's default).
+    pub opt: Option<OptConfig>,
+    /// Evaluate the expanded placement in the execution simulator.
+    pub simulate: bool,
+}
+
+impl PlacementRequest {
+    pub fn new(graph: OpGraph, placer: &str) -> PlacementRequest {
+        PlacementRequest {
+            graph,
+            placer: placer.to_string(),
+            benchmark: None,
+            opt: None,
+            simulate: true,
+        }
+    }
+
+    /// Request over a paper benchmark (generates the graph and carries
+    /// the identity for the expert placer).
+    pub fn for_benchmark(benchmark: Benchmark, placer: &str) -> PlacementRequest {
+        PlacementRequest {
+            benchmark: Some(benchmark),
+            ..PlacementRequest::new(benchmark.graph(), placer)
+        }
+    }
+
+    /// Override the optimizer configuration for this request.
+    pub fn with_opt(mut self, opt: OptConfig) -> PlacementRequest {
+        self.opt = Some(opt);
+        self
+    }
+
+    /// Skip the execution-simulator evaluation.
+    pub fn without_simulation(mut self) -> PlacementRequest {
+        self.simulate = false;
+        self
+    }
+}
+
+/// Everything one placement request produces.
+#[derive(Debug, Clone)]
+pub struct PlacementResponse {
+    /// The resolved algorithm name (e.g. `"m-sct(lp)"`).
+    pub placer: String,
+    /// The placement, expanded onto the *original* request graph.
+    /// `predicted_makespan` / `placement_time` / `peak_memory` come from
+    /// the placement-time schedule on the optimized meta-graph.
+    pub placement: Placement,
+    /// Optimizer reduction statistics (Table 6 columns).
+    pub stats: OptStats,
+    /// Execution-simulator verdict (None when the request skipped it).
+    pub sim: Option<SimResult>,
+    /// Distinct devices used by the expanded placement.
+    pub devices_used: usize,
+}
+
+/// Placement-cache hit/miss counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct CacheKey {
+    graph: u64,
+    cluster: u64,
+    opt: u64,
+    sim: u64,
+    placer: String,
+    /// Benchmark identity — part of the key because benchmark-keyed
+    /// placers (the expert) produce different placements for the same
+    /// graph under different identities.
+    benchmark: Option<String>,
+}
+
+/// Builder for [`PlacementEngine`]. `cluster` is mandatory; everything
+/// else defaults (paper optimizer config, TF-semantics simulator, the
+/// built-in placer registry, no observers).
+pub struct PlacementEngineBuilder {
+    cluster: Option<Cluster>,
+    opt: OptConfig,
+    sim: SimConfig,
+    registry: PlacerRegistry,
+    observers: Vec<Arc<dyn PlacementObserver>>,
+}
+
+impl PlacementEngineBuilder {
+    fn new() -> PlacementEngineBuilder {
+        PlacementEngineBuilder {
+            cluster: None,
+            opt: OptConfig::default(),
+            sim: SimConfig::default(),
+            registry: PlacerRegistry::with_builtins(),
+            observers: Vec::new(),
+        }
+    }
+
+    /// Target cluster the engine serves placements for (required).
+    pub fn cluster(mut self, cluster: Cluster) -> PlacementEngineBuilder {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    /// Default optimizer configuration (overridable per request).
+    pub fn optimizer(mut self, opt: OptConfig) -> PlacementEngineBuilder {
+        self.opt = opt;
+        self
+    }
+
+    /// Execution-simulator configuration.
+    pub fn sim(mut self, sim: SimConfig) -> PlacementEngineBuilder {
+        self.sim = sim;
+        self
+    }
+
+    /// Replace the registry wholesale (e.g. [`PlacerRegistry::empty`]).
+    pub fn registry(mut self, registry: PlacerRegistry) -> PlacementEngineBuilder {
+        self.registry = registry;
+        self
+    }
+
+    /// Register an additional placer by name.
+    pub fn register_placer(
+        mut self,
+        name: &str,
+        registration: PlacerRegistration,
+    ) -> PlacementEngineBuilder {
+        self.registry.register(name, registration);
+        self
+    }
+
+    /// Attach a stage observer.
+    pub fn observer(mut self, observer: Arc<dyn PlacementObserver>) -> PlacementEngineBuilder {
+        self.observers.push(observer);
+        self
+    }
+
+    pub fn build(self) -> crate::Result<PlacementEngine> {
+        let cluster = self.cluster.ok_or_else(|| {
+            BaechiError::invalid("PlacementEngine::builder(): a cluster is required")
+        })?;
+        if cluster.n() == 0 {
+            return Err(BaechiError::invalid(
+                "PlacementEngine::builder(): cluster has no devices",
+            ));
+        }
+        Ok(PlacementEngine {
+            cluster_fp: fingerprint::cluster_fingerprint(&cluster),
+            sim_fp: fingerprint::sim_fingerprint(&self.sim),
+            cluster,
+            opt: self.opt,
+            sim: self.sim,
+            registry: self.registry,
+            observers: self.observers,
+            cache: Mutex::new(BTreeMap::new()),
+            stats: Mutex::new(CacheStats::default()),
+        })
+    }
+}
+
+/// The long-lived placement service. Thread-safe: share it by reference
+/// (or `Arc`) and call [`PlacementEngine::place`] from many threads.
+pub struct PlacementEngine {
+    cluster: Cluster,
+    opt: OptConfig,
+    sim: SimConfig,
+    registry: PlacerRegistry,
+    observers: Vec<Arc<dyn PlacementObserver>>,
+    cache: Mutex<BTreeMap<CacheKey, Arc<PlacementResponse>>>,
+    stats: Mutex<CacheStats>,
+    cluster_fp: u64,
+    sim_fp: u64,
+}
+
+impl PlacementEngine {
+    pub fn builder() -> PlacementEngineBuilder {
+        PlacementEngineBuilder::new()
+    }
+
+    /// The cluster this engine places onto.
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// The placer registry (for name listing / introspection).
+    pub fn registry(&self) -> &PlacerRegistry {
+        &self.registry
+    }
+
+    /// Cache hit/miss counters so far.
+    pub fn cache_stats(&self) -> CacheStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Number of memoized responses.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Drop every memoized response (e.g. after profile refresh).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    fn notify(&self, stage: Stage, stats: &StageStats) {
+        for obs in &self.observers {
+            obs.on_stage(stage, stats);
+        }
+    }
+
+    /// The optimizer config a request resolves to.
+    fn effective_opt(&self, req: &PlacementRequest, optimize_graph: bool) -> OptConfig {
+        if !optimize_graph {
+            return OptConfig::none();
+        }
+        let mut o = req.opt.unwrap_or(self.opt);
+        if o.fusion && o.latency_equiv_bytes == 0 {
+            // Price multi-tensor fused edges consistently with the ES.
+            o.latency_equiv_bytes =
+                (self.cluster.comm.latency * self.cluster.comm.bandwidth) as u64;
+        }
+        o
+    }
+
+    /// Serve one request. Identical requests (same graph, cluster,
+    /// optimizer config, and placer spec) are answered from the cache.
+    pub fn place(&self, req: &PlacementRequest) -> crate::Result<Arc<PlacementResponse>> {
+        let resolved = self.registry.resolve(&req.placer, req.benchmark)?;
+        let ocfg = self.effective_opt(req, resolved.optimize_graph);
+        let key = CacheKey {
+            graph: fingerprint::graph_fingerprint(&req.graph),
+            cluster: self.cluster_fp,
+            opt: fingerprint::opt_fingerprint(&ocfg),
+            sim: if req.simulate { self.sim_fp } else { 0 },
+            placer: req.placer.clone(),
+            benchmark: req.benchmark.map(|b| b.name()),
+        };
+        if let Some(hit) = self.cache.lock().unwrap().get(&key).cloned() {
+            self.stats.lock().unwrap().hits += 1;
+            return Ok(hit);
+        }
+        self.stats.lock().unwrap().misses += 1;
+
+        // Optimize (§3.1).
+        let t0 = Instant::now();
+        let opt = optimizer::optimize(&req.graph, &ocfg);
+        self.notify(
+            Stage::Optimize,
+            &StageStats {
+                placer: req.placer.clone(),
+                duration: t0.elapsed().as_secs_f64(),
+                ops_in: opt.stats.original_ops,
+                ops_out: opt.stats.placed_ops,
+            },
+        );
+
+        // Place.
+        let t0 = Instant::now();
+        let meta = resolved.placer.place(&opt.graph, &self.cluster)?;
+        self.notify(
+            Stage::Place,
+            &StageStats {
+                placer: req.placer.clone(),
+                duration: t0.elapsed().as_secs_f64(),
+                ops_in: opt.stats.placed_ops,
+                ops_out: meta.device_of.len(),
+            },
+        );
+
+        // Expand onto the original graph.
+        let t0 = Instant::now();
+        let full = optimizer::expand_placement(&req.graph, &opt, &meta.device_of);
+        let placement = Placement {
+            device_of: full,
+            ..meta
+        };
+        self.notify(
+            Stage::Expand,
+            &StageStats {
+                placer: req.placer.clone(),
+                duration: t0.elapsed().as_secs_f64(),
+                ops_in: opt.stats.placed_ops,
+                ops_out: placement.device_of.len(),
+            },
+        );
+
+        // Simulate (optional).
+        let sim = if req.simulate {
+            let t0 = Instant::now();
+            let s = sim::simulate(&req.graph, &self.cluster, &placement.device_of, self.sim);
+            self.notify(
+                Stage::Simulate,
+                &StageStats {
+                    placer: req.placer.clone(),
+                    duration: t0.elapsed().as_secs_f64(),
+                    ops_in: placement.device_of.len(),
+                    ops_out: placement.device_of.len(),
+                },
+            );
+            Some(s)
+        } else {
+            None
+        };
+
+        let devices_used = placement.devices_used();
+        let resp = Arc::new(PlacementResponse {
+            placer: placement.algorithm.clone(),
+            placement,
+            stats: opt.stats,
+            sim,
+            devices_used,
+        });
+        self.cache.lock().unwrap().insert(key, resp.clone());
+        Ok(resp)
+    }
+
+    /// Serve a batch, fanning requests across OS threads. Results are in
+    /// request order; each entry fails independently. Concurrency is
+    /// bounded by the machine's available parallelism so an arbitrarily
+    /// large batch cannot exhaust threads or memory.
+    pub fn place_batch(
+        &self,
+        reqs: &[PlacementRequest],
+    ) -> Vec<crate::Result<Arc<PlacementResponse>>> {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .max(1);
+        let mut results = Vec::with_capacity(reqs.len());
+        for chunk in reqs.chunks(workers) {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = chunk
+                    .iter()
+                    .map(|req| s.spawn(move || self.place(req)))
+                    .collect();
+                results.extend(handles.into_iter().map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(BaechiError::runtime("placement worker panicked")))
+                }));
+            });
+        }
+        results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::CommModel;
+
+    fn engine(n: usize, mem: u64) -> PlacementEngine {
+        PlacementEngine::builder()
+            .cluster(Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0)))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_requires_cluster() {
+        assert!(matches!(
+            PlacementEngine::builder().build(),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn place_covers_graph_and_simulates() {
+        let e = engine(2, 1 << 20);
+        let g = crate::models::linreg::linreg_graph();
+        let n_ops = g.len();
+        let resp = e.place(&PlacementRequest::new(g, "m-etf")).unwrap();
+        assert_eq!(resp.placement.device_of.len(), n_ops);
+        assert!(resp.sim.as_ref().unwrap().ok());
+        assert_eq!(e.cache_stats(), CacheStats { hits: 0, misses: 1 });
+    }
+
+    #[test]
+    fn cache_serves_identical_request() {
+        let e = engine(2, 1 << 20);
+        let g = crate::models::linreg::linreg_graph();
+        let req = PlacementRequest::new(g, "m-sct");
+        let a = e.place(&req).unwrap();
+        let b = e.place(&req).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second response must be the cached Arc");
+        assert_eq!(e.cache_stats(), CacheStats { hits: 1, misses: 1 });
+        // A different placer misses.
+        let c = e.place(&PlacementRequest::new(
+            crate::models::linreg::linreg_graph(),
+            "m-topo",
+        ));
+        assert!(c.is_ok());
+        assert_eq!(e.cache_stats().misses, 2);
+        assert_eq!(e.cache_len(), 2);
+        e.clear_cache();
+        assert_eq!(e.cache_len(), 0);
+    }
+
+    #[test]
+    fn cache_distinguishes_benchmark_identity() {
+        // Same graph + same placer, different benchmark identity: the
+        // expert places per-benchmark, so these must not share a cache
+        // entry.
+        let e = engine(2, 1 << 20);
+        let g = crate::models::linreg::linreg_graph();
+        let mut r1 = PlacementRequest::new(g.clone(), "expert");
+        r1.benchmark = Some(Benchmark::Mlp);
+        let mut r2 = PlacementRequest::new(g, "expert");
+        r2.benchmark = Some(Benchmark::Gnmt {
+            batch: 8,
+            seq_len: 4,
+        });
+        let a = e.place(&r1).unwrap();
+        let b = e.place(&r2).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "benchmark must be part of the key");
+        assert_eq!(e.cache_stats(), CacheStats { hits: 0, misses: 2 });
+    }
+
+    #[test]
+    fn per_request_opt_override_changes_key() {
+        let e = engine(2, 1 << 20);
+        let g = crate::models::linreg::linreg_graph();
+        let a = e.place(&PlacementRequest::new(g.clone(), "m-etf")).unwrap();
+        let b = e
+            .place(&PlacementRequest::new(g, "m-etf").with_opt(OptConfig::none()))
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(e.cache_stats().misses, 2);
+    }
+
+    #[test]
+    fn without_simulation_skips_sim() {
+        let e = engine(2, 1 << 20);
+        let g = crate::models::linreg::linreg_graph();
+        let resp = e
+            .place(&PlacementRequest::new(g, "m-etf").without_simulation())
+            .unwrap();
+        assert!(resp.sim.is_none());
+    }
+}

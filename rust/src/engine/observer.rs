@@ -1,0 +1,120 @@
+//! Stage observers: per-stage timing hooks for instrumenting the engine
+//! (metrics export, tracing, progress display).
+
+use std::sync::{Arc, Mutex};
+
+/// A pipeline stage the engine reports on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Graph optimizer (§3.1): coplacement + fusion + projection.
+    Optimize,
+    /// The placement algorithm itself.
+    Place,
+    /// Expansion of the meta-graph placement onto the original graph.
+    Expand,
+    /// Execution-simulator evaluation of the expanded placement.
+    Simulate,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Optimize => "optimize",
+            Stage::Place => "place",
+            Stage::Expand => "expand",
+            Stage::Simulate => "simulate",
+        }
+    }
+}
+
+/// Measurements for one stage of one request.
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    /// The request's placer spec (e.g. `"m-sct"`, `"rl:50"`).
+    pub placer: String,
+    /// Wall-clock duration of the stage, seconds.
+    pub duration: f64,
+    /// Ops entering the stage.
+    pub ops_in: usize,
+    /// Ops leaving the stage (post-fusion count for `Optimize`).
+    pub ops_out: usize,
+}
+
+/// Observer hook invoked by the engine after each stage completes.
+/// Implementations must be `Send + Sync`: `place_batch` fans requests
+/// across threads and every thread reports through the same observers.
+pub trait PlacementObserver: Send + Sync {
+    fn on_stage(&self, stage: Stage, stats: &StageStats);
+}
+
+/// Observer that records every event — introspection and tests.
+#[derive(Default)]
+pub struct RecordingObserver {
+    events: Mutex<Vec<(Stage, StageStats)>>,
+}
+
+impl RecordingObserver {
+    pub fn new() -> Arc<RecordingObserver> {
+        Arc::new(RecordingObserver::default())
+    }
+
+    /// Snapshot of the events recorded so far.
+    pub fn events(&self) -> Vec<(Stage, StageStats)> {
+        self.events.lock().unwrap().clone()
+    }
+}
+
+impl PlacementObserver for RecordingObserver {
+    fn on_stage(&self, stage: Stage, stats: &StageStats) {
+        self.events.lock().unwrap().push((stage, stats.clone()));
+    }
+}
+
+/// Observer that logs stage timings through [`crate::util::log`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LogObserver;
+
+impl PlacementObserver for LogObserver {
+    fn on_stage(&self, stage: Stage, stats: &StageStats) {
+        crate::util::log::log(
+            crate::util::log::Level::Debug,
+            format_args!(
+                "engine[{}] {}: {:.3} ms ({} -> {} ops)",
+                stats.placer,
+                stage.name(),
+                stats.duration * 1e3,
+                stats.ops_in,
+                stats.ops_out,
+            ),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recording_observer_collects() {
+        let obs = RecordingObserver::new();
+        obs.on_stage(
+            Stage::Place,
+            &StageStats {
+                placer: "m-etf".into(),
+                duration: 0.5,
+                ops_in: 10,
+                ops_out: 10,
+            },
+        );
+        let ev = obs.events();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].0, Stage::Place);
+        assert_eq!(ev[0].1.placer, "m-etf");
+    }
+
+    #[test]
+    fn stage_names() {
+        assert_eq!(Stage::Optimize.name(), "optimize");
+        assert_eq!(Stage::Simulate.name(), "simulate");
+    }
+}

@@ -1,0 +1,254 @@
+//! The placer registry: name → factory of `Box<dyn Placer>`.
+//!
+//! Replaces the hard-coded `PlacerKind` match arms so baselines, the m-*
+//! algorithms, and external strategies (an RL planner à la Placeto, an
+//! optimal-partitioning solver à la Tarnawski et al.) register through
+//! one mechanism. A spec string `"name"` or `"name:arg"` resolves to a
+//! fresh placer instance; the colon suffix is handed to the factory
+//! (e.g. `"rl:500"` → 500 episodes).
+
+use crate::baselines::{expert::Expert, rl::RlConfig, rl::RlPlacer, single::SingleDevice};
+use crate::error::BaechiError;
+use crate::models::Benchmark;
+use crate::placer::{metf::MEtf, msct::MSct, mtopo::MTopo, Placer};
+use std::collections::BTreeMap;
+
+/// Context handed to placer factories at resolution time.
+#[derive(Debug, Clone, Copy)]
+pub struct PlacerContext<'a> {
+    /// The part of the spec after `:`, if any (`"rl:500"` → `Some("500")`).
+    pub arg: Option<&'a str>,
+    /// Benchmark identity, for placers keyed to a model (the expert).
+    pub benchmark: Option<Benchmark>,
+}
+
+/// Factory producing a fresh placer per request. `Send + Sync` because
+/// `place_batch` resolves placers from worker threads.
+pub type PlacerFactory =
+    Box<dyn Fn(&PlacerContext<'_>) -> crate::Result<Box<dyn Placer>> + Send + Sync>;
+
+/// A registry entry: the factory plus pipeline policy.
+pub struct PlacerRegistration {
+    factory: PlacerFactory,
+    /// Run the §3.1 graph optimizer before placement. The m-* algorithms
+    /// and the RL baseline want the reduced meta-graph; the single/expert
+    /// baselines place the raw graph (the paper's baseline protocol).
+    pub optimize_graph: bool,
+}
+
+impl PlacerRegistration {
+    /// Registration that places the optimizer-reduced graph (the default
+    /// for real placement algorithms).
+    pub fn new(
+        factory: impl Fn(&PlacerContext<'_>) -> crate::Result<Box<dyn Placer>>
+            + Send
+            + Sync
+            + 'static,
+    ) -> PlacerRegistration {
+        PlacerRegistration {
+            factory: Box::new(factory),
+            optimize_graph: true,
+        }
+    }
+
+    /// Registration that places the raw, un-optimized graph (baselines).
+    pub fn raw(
+        factory: impl Fn(&PlacerContext<'_>) -> crate::Result<Box<dyn Placer>>
+            + Send
+            + Sync
+            + 'static,
+    ) -> PlacerRegistration {
+        PlacerRegistration {
+            optimize_graph: false,
+            ..PlacerRegistration::new(factory)
+        }
+    }
+}
+
+/// A resolved spec: the placer instance plus its pipeline policy.
+pub struct ResolvedPlacer {
+    pub placer: Box<dyn Placer>,
+    pub optimize_graph: bool,
+}
+
+/// Name → registration map with alias support.
+pub struct PlacerRegistry {
+    entries: BTreeMap<String, PlacerRegistration>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl PlacerRegistry {
+    /// An empty registry (no built-ins).
+    pub fn empty() -> PlacerRegistry {
+        PlacerRegistry {
+            entries: BTreeMap::new(),
+            aliases: BTreeMap::new(),
+        }
+    }
+
+    /// Registry pre-populated with every built-in placer:
+    /// `single`, `expert`, `m-topo`, `m-etf`, `m-sct`, `m-sct-heur`,
+    /// `m-sct-lp`, and `rl[:episodes]` (plus dash-less aliases).
+    pub fn with_builtins() -> PlacerRegistry {
+        let mut r = PlacerRegistry::empty();
+        r.register(
+            "single",
+            PlacerRegistration::raw(|_| Ok(Box::new(SingleDevice))),
+        );
+        r.register(
+            "expert",
+            PlacerRegistration::raw(|ctx| match ctx.benchmark {
+                Some(b) => Ok(Box::new(Expert::new(b))),
+                None => Err(BaechiError::invalid(
+                    "placer 'expert' needs the request's benchmark identity",
+                )),
+            }),
+        );
+        r.register("m-topo", PlacerRegistration::new(|_| Ok(Box::new(MTopo))));
+        r.register("m-etf", PlacerRegistration::new(|_| Ok(Box::new(MEtf))));
+        r.register(
+            "m-sct",
+            PlacerRegistration::new(|_| Ok(Box::new(MSct::default()))),
+        );
+        r.register(
+            "m-sct-heur",
+            PlacerRegistration::new(|_| Ok(Box::new(MSct::with_heuristic()))),
+        );
+        r.register(
+            "m-sct-lp",
+            PlacerRegistration::new(|_| Ok(Box::new(MSct::with_lp()))),
+        );
+        r.register(
+            "rl",
+            PlacerRegistration::new(|ctx| {
+                let episodes = match ctx.arg {
+                    None => 200,
+                    Some(a) => a.parse().map_err(|_| {
+                        BaechiError::invalid(format!("rl episodes must be an integer, got '{a}'"))
+                    })?,
+                };
+                Ok(Box::new(RlPlacer::new(RlConfig {
+                    episodes,
+                    ..Default::default()
+                })))
+            }),
+        );
+        r.alias("mtopo", "m-topo");
+        r.alias("metf", "m-etf");
+        r.alias("msct", "m-sct");
+        r
+    }
+
+    /// Register (or replace) a placer under `name`.
+    pub fn register(&mut self, name: &str, registration: PlacerRegistration) {
+        self.entries.insert(name.to_string(), registration);
+    }
+
+    /// Register `alias` as another spelling of `target`.
+    pub fn alias(&mut self, alias: &str, target: &str) {
+        self.aliases.insert(alias.to_string(), target.to_string());
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name) || self.aliases.contains_key(name)
+    }
+
+    /// Registered placer names, sorted (aliases excluded).
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// Resolve a spec (`"m-sct"`, `"rl:500"`) to a fresh placer.
+    pub fn resolve(
+        &self,
+        spec: &str,
+        benchmark: Option<Benchmark>,
+    ) -> crate::Result<ResolvedPlacer> {
+        let (name, arg) = match spec.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (spec, None),
+        };
+        let name = self.aliases.get(name).map(String::as_str).unwrap_or(name);
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| BaechiError::UnknownPlacer {
+                name: spec.to_string(),
+                known: self.names(),
+            })?;
+        let ctx = PlacerContext { arg, benchmark };
+        Ok(ResolvedPlacer {
+            placer: (entry.factory)(&ctx)?,
+            optimize_graph: entry.optimize_graph,
+        })
+    }
+}
+
+impl Default for PlacerRegistry {
+    fn default() -> PlacerRegistry {
+        PlacerRegistry::with_builtins()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve() {
+        let r = PlacerRegistry::with_builtins();
+        for name in ["single", "m-topo", "m-etf", "m-sct", "m-sct-heur", "rl"] {
+            let resolved = r.resolve(name, None).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!resolved.placer.name().is_empty());
+        }
+        // Baselines skip the optimizer, algorithms use it.
+        assert!(!r.resolve("single", None).unwrap().optimize_graph);
+        assert!(r.resolve("m-sct", None).unwrap().optimize_graph);
+    }
+
+    #[test]
+    fn aliases_and_args() {
+        let r = PlacerRegistry::with_builtins();
+        assert!(r.contains("metf"));
+        assert_eq!(r.resolve("metf", None).unwrap().placer.name(), "m-etf");
+        // rl takes an episode-count argument.
+        assert!(r.resolve("rl:50", None).is_ok());
+        assert!(matches!(
+            r.resolve("rl:xx", None),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_placer_is_typed() {
+        let r = PlacerRegistry::with_builtins();
+        match r.resolve("nope", None) {
+            Err(BaechiError::UnknownPlacer { name, known }) => {
+                assert_eq!(name, "nope");
+                assert!(known.contains(&"m-sct".to_string()));
+            }
+            Err(e) => panic!("expected UnknownPlacer, got {e}"),
+            Ok(_) => panic!("'nope' resolved unexpectedly"),
+        }
+    }
+
+    #[test]
+    fn expert_requires_benchmark() {
+        let r = PlacerRegistry::with_builtins();
+        assert!(matches!(
+            r.resolve("expert", None),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+        assert!(r
+            .resolve("expert", Some(Benchmark::Mlp))
+            .is_ok());
+    }
+
+    #[test]
+    fn custom_registration_round_trips() {
+        let mut r = PlacerRegistry::empty();
+        r.register("mine", PlacerRegistration::new(|_| Ok(Box::new(MTopo))));
+        assert_eq!(r.names(), vec!["mine".to_string()]);
+        assert_eq!(r.resolve("mine", None).unwrap().placer.name(), "m-topo");
+    }
+}

@@ -1,0 +1,159 @@
+//! The typed error surface of the crate.
+//!
+//! Every public fallible API returns [`crate::Result`], whose error type
+//! is [`BaechiError`], so callers branch on failure modes — placement
+//! OOM vs unknown placer vs malformed request — instead of parsing
+//! strings:
+//!
+//! ```no_run
+//! use baechi::engine::{PlacementEngine, PlacementRequest};
+//! use baechi::profile::{Cluster, CommModel};
+//! use baechi::BaechiError;
+//!
+//! let engine = PlacementEngine::builder()
+//!     .cluster(Cluster::homogeneous(4, 8 << 30, CommModel::pcie_via_host()))
+//!     .build()?;
+//! let graph = baechi::models::linreg::linreg_graph();
+//! match engine.place(&PlacementRequest::new(graph, "m-sct")) {
+//!     Ok(resp) => println!("{} devices", resp.devices_used),
+//!     Err(BaechiError::Oom { op, best_device, deficit }) => {
+//!         eprintln!("{op} needs {deficit} more bytes (closest: {best_device:?})")
+//!     }
+//!     Err(e) => eprintln!("{e}"),
+//! }
+//! # Ok::<(), BaechiError>(())
+//! ```
+
+use crate::graph::DeviceId;
+use crate::util::json::JsonError;
+
+/// Structured failure of any Baechi operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BaechiError {
+    /// Placement-time OOM: no device can host `op`. `best_device` is the
+    /// device that came closest and `deficit` how many bytes it fell
+    /// short (0 when no device was even a candidate).
+    Oom {
+        op: String,
+        best_device: Option<DeviceId>,
+        deficit: u64,
+    },
+    /// The graph to place contains a cycle.
+    Cyclic,
+    /// Placer name absent from the [`crate::engine::PlacerRegistry`].
+    UnknownPlacer { name: String, known: Vec<String> },
+    /// Malformed request, configuration, or CLI input.
+    InvalidRequest(String),
+    /// A placer ran to completion without finding a feasible placement
+    /// (e.g. the RL baseline exhausting its episode budget).
+    Infeasible(String),
+    /// LP substrate failure (shape mismatch, non-PD normal matrix, …).
+    Lp(String),
+    /// JSON parse failure.
+    Json(JsonError),
+    /// Filesystem failure, with path context where available.
+    Io(String),
+    /// Runtime/executor failure (PJRT backend, device worker threads).
+    Runtime(String),
+}
+
+impl BaechiError {
+    pub fn invalid(msg: impl Into<String>) -> BaechiError {
+        BaechiError::InvalidRequest(msg.into())
+    }
+
+    pub fn runtime(msg: impl Into<String>) -> BaechiError {
+        BaechiError::Runtime(msg.into())
+    }
+
+    pub fn io(msg: impl Into<String>) -> BaechiError {
+        BaechiError::Io(msg.into())
+    }
+
+    pub fn lp(msg: impl Into<String>) -> BaechiError {
+        BaechiError::Lp(msg.into())
+    }
+}
+
+impl std::fmt::Display for BaechiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BaechiError::Oom {
+                op,
+                best_device,
+                deficit,
+            } => {
+                write!(f, "out of memory: operator {op} does not fit on any device")?;
+                if let Some(dev) = best_device {
+                    write!(f, " (closest: {dev}, {deficit} bytes short)")?;
+                }
+                Ok(())
+            }
+            BaechiError::Cyclic => write!(f, "graph is not a DAG"),
+            BaechiError::UnknownPlacer { name, known } => {
+                write!(f, "unknown placer '{name}' (known: {})", known.join("|"))
+            }
+            BaechiError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            BaechiError::Infeasible(msg) => write!(f, "no feasible placement: {msg}"),
+            BaechiError::Lp(msg) => write!(f, "lp: {msg}"),
+            BaechiError::Json(e) => write!(f, "{e}"),
+            BaechiError::Io(msg) => write!(f, "io: {msg}"),
+            BaechiError::Runtime(msg) => write!(f, "runtime: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for BaechiError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BaechiError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<JsonError> for BaechiError {
+    fn from(e: JsonError) -> BaechiError {
+        BaechiError::Json(e)
+    }
+}
+
+impl From<std::io::Error> for BaechiError {
+    fn from(e: std::io::Error) -> BaechiError {
+        BaechiError::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_oom_phrase() {
+        let e = BaechiError::Oom {
+            op: "conv5".into(),
+            best_device: Some(DeviceId(2)),
+            deficit: 1024,
+        };
+        let s = e.to_string();
+        assert!(s.contains("out of memory"), "{s}");
+        assert!(s.contains("gpu2"), "{s}");
+        assert!(s.contains("1024"), "{s}");
+    }
+
+    #[test]
+    fn unknown_placer_lists_known() {
+        let e = BaechiError::UnknownPlacer {
+            name: "nope".into(),
+            known: vec!["m-etf".into(), "m-sct".into()],
+        };
+        assert!(e.to_string().contains("m-etf|m-sct"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: BaechiError = io.into();
+        assert!(matches!(e, BaechiError::Io(_)));
+    }
+}

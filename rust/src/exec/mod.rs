@@ -19,6 +19,9 @@ pub mod plan;
 pub mod trainer;
 pub mod worker;
 
+use crate::error::BaechiError;
+use crate::runtime::xla;
+
 /// A host-side tensor (f32, row-major) — the wire format between device
 /// threads. PJRT literals are not `Send`, so transfers materialize
 /// through host memory exactly like the paper's no-P2P testbed (§5.1).
@@ -45,7 +48,7 @@ impl HostTensor {
         4 * self.data.len() as u64
     }
 
-    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+    pub fn to_literal(&self) -> crate::Result<xla::Literal> {
         if self.dims.is_empty() {
             // rank-0 scalar
             let lit = xla::Literal::vec1(&self.data);
@@ -54,11 +57,11 @@ impl HostTensor {
         Ok(xla::Literal::vec1(&self.data).reshape(&self.dims)?)
     }
 
-    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
+    pub fn from_literal(lit: &xla::Literal) -> crate::Result<HostTensor> {
         let shape = lit.shape()?;
         let dims: Vec<i64> = match &shape {
             xla::Shape::Array(a) => a.dims().to_vec(),
-            _ => anyhow::bail!("non-array literal"),
+            _ => return Err(BaechiError::runtime("non-array literal")),
         };
         Ok(HostTensor {
             data: lit.to_vec::<f32>()?,

@@ -6,6 +6,7 @@
 //! paper's fwd/bwd co-placement, which our optimizer guarantees via the
 //! shared co-placement group).
 
+use crate::error::BaechiError;
 use crate::graph::OpGraph;
 use crate::placer::Placement;
 
@@ -26,13 +27,21 @@ impl MlpPlan {
         placement: &Placement,
         n_devices: usize,
         n_layers: usize,
-    ) -> anyhow::Result<MlpPlan> {
-        let dev_of_prefix = |prefix: &str| -> anyhow::Result<usize> {
+    ) -> crate::Result<MlpPlan> {
+        let dev_of_prefix = |prefix: &str| -> crate::Result<usize> {
             let node = graph
                 .iter_nodes()
                 .find(|n| n.name.starts_with(prefix))
-                .ok_or_else(|| anyhow::anyhow!("no node with prefix '{prefix}'"))?;
-            Ok(placement.device(node.id).0)
+                .ok_or_else(|| BaechiError::invalid(format!("no node with prefix '{prefix}'")))?;
+            placement
+                .try_device(node.id)
+                .map(|d| d.0)
+                .ok_or_else(|| {
+                    BaechiError::invalid(format!(
+                        "node '{}' missing from placement '{}'",
+                        node.name, placement.algorithm
+                    ))
+                })
         };
         let mut layer_dev = Vec::with_capacity(n_layers);
         for i in 0..n_layers {

@@ -5,6 +5,7 @@
 use super::plan::MlpPlan;
 use super::worker::{run_worker, Msg, WorkerCfg};
 use super::HostTensor;
+use crate::error::BaechiError;
 use crate::profile::CommModel;
 use crate::runtime::artifact::ArtifactRegistry;
 use crate::runtime::Runtime;
@@ -45,22 +46,22 @@ pub struct ModelMeta {
 }
 
 impl ModelMeta {
-    pub fn load(dir: &std::path::Path) -> anyhow::Result<ModelMeta> {
+    pub fn load(dir: &std::path::Path) -> crate::Result<ModelMeta> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
         let root = crate::util::json::Json::parse(&text)?;
         let batch = root
             .get("batch")
             .and_then(|v| v.as_u64())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing batch"))? as usize;
+            .ok_or_else(|| BaechiError::invalid("manifest missing batch"))? as usize;
         let classes = root
             .get("classes")
             .and_then(|v| v.as_u64())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing classes"))?
+            .ok_or_else(|| BaechiError::invalid("manifest missing classes"))?
             as usize;
         let layer_dims = root
             .get("layer_dims")
             .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing layer_dims"))?
+            .ok_or_else(|| BaechiError::invalid("manifest missing layer_dims"))?
             .iter()
             .map(|d| {
                 let a = d.as_arr().unwrap();
@@ -141,15 +142,16 @@ pub fn synthetic_batch(meta: &ModelMeta, step: usize, seed: u64) -> (HostTensor,
 
 /// Run distributed training per the plan. Spawns one worker thread per
 /// device, streams batches in, and collects the loss curve.
-pub fn train_distributed(plan: &MlpPlan, cfg: &TrainConfig) -> anyhow::Result<TrainReport> {
+pub fn train_distributed(plan: &MlpPlan, cfg: &TrainConfig) -> crate::Result<TrainReport> {
     let meta = ModelMeta::load(&cfg.artifacts_dir)?;
     let n_layers = meta.n_layers();
-    anyhow::ensure!(
-        plan.layer_dev.len() == n_layers,
-        "plan layers {} != artifact layers {}",
-        plan.layer_dev.len(),
-        n_layers
-    );
+    if plan.layer_dev.len() != n_layers {
+        return Err(BaechiError::invalid(format!(
+            "plan layers {} != artifact layers {}",
+            plan.layer_dev.len(),
+            n_layers
+        )));
+    }
     let params = init_params(&meta, cfg.seed);
 
     // Channels: one inbox per device + the main inbox.
@@ -198,13 +200,13 @@ pub fn train_distributed(plan: &MlpPlan, cfg: &TrainConfig) -> anyhow::Result<Tr
                 key: format!("a0/{step}"),
                 t: x,
             })
-            .map_err(|_| anyhow::anyhow!("worker died"))?;
+            .map_err(|_| BaechiError::runtime("worker died"))?;
         senders[plan.loss_dev]
             .send(Msg::Tensor {
                 key: format!("onehot/{step}"),
                 t: onehot,
             })
-            .map_err(|_| anyhow::anyhow!("worker died"))?;
+            .map_err(|_| BaechiError::runtime("worker died"))?;
     }
 
     // Collect losses.
@@ -216,14 +218,18 @@ pub fn train_distributed(plan: &MlpPlan, cfg: &TrainConfig) -> anyhow::Result<Tr
                 losses[step] = value;
                 got += 1;
             }
-            Ok(Msg::Error(e)) => anyhow::bail!("worker error: {e}"),
+            Ok(Msg::Error(e)) => return Err(BaechiError::runtime(format!("worker error: {e}"))),
             Ok(_) => {}
-            Err(_) => anyhow::bail!("workers exited before producing all losses"),
+            Err(_) => {
+                return Err(BaechiError::runtime(
+                    "workers exited before producing all losses",
+                ))
+            }
         }
     }
     drop(senders);
     for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        h.join().map_err(|_| BaechiError::runtime("worker panicked"))?;
     }
     let wall_time = t0.elapsed().as_secs_f64();
     Ok(TrainReport {
@@ -236,7 +242,7 @@ pub fn train_distributed(plan: &MlpPlan, cfg: &TrainConfig) -> anyhow::Result<Tr
 
 /// Oracle: run the fused `train_step` artifact single-device with the
 /// same data and initial parameters.
-pub fn train_oracle(cfg: &TrainConfig) -> anyhow::Result<Vec<f32>> {
+pub fn train_oracle(cfg: &TrainConfig) -> crate::Result<Vec<f32>> {
     let meta = ModelMeta::load(&cfg.artifacts_dir)?;
     let runtime = Runtime::cpu()?;
     let registry = ArtifactRegistry::open(runtime, &cfg.artifacts_dir)?;

@@ -10,6 +10,7 @@
 
 use super::plan::MlpPlan;
 use super::HostTensor;
+use crate::error::BaechiError;
 use crate::profile::CommModel;
 use crate::runtime::artifact::ArtifactRegistry;
 use crate::runtime::Runtime;
@@ -73,7 +74,7 @@ pub fn run_worker(
     inbox: Receiver<Msg>,
     peers: Vec<Sender<Msg>>,
     main_tx: Sender<Msg>,
-) -> anyhow::Result<Vec<(usize, HostTensor, HostTensor)>> {
+) -> crate::Result<Vec<(usize, HostTensor, HostTensor)>> {
     let runtime = Runtime::cpu()?;
     let registry = ArtifactRegistry::open(runtime, &cfg.artifacts_dir)?;
     let n_layers = cfg.plan.layer_dev.len();
@@ -90,7 +91,7 @@ pub fn run_worker(
     // Per-step local tensor store.
     let mut store: HashMap<String, HostTensor> = HashMap::new();
     let recv_into =
-        |store: &mut HashMap<String, HostTensor>, key: &str| -> anyhow::Result<HostTensor> {
+        |store: &mut HashMap<String, HostTensor>, key: &str| -> crate::Result<HostTensor> {
             if let Some(t) = store.remove(key) {
                 return Ok(t);
             }
@@ -102,8 +103,16 @@ pub fn run_worker(
                         }
                         store.insert(k, t);
                     }
-                    Ok(other) => anyhow::bail!("unexpected message {other:?}"),
-                    Err(_) => anyhow::bail!("inbox closed waiting for {key}"),
+                    Ok(other) => {
+                        return Err(BaechiError::runtime(format!(
+                            "unexpected message {other:?}"
+                        )))
+                    }
+                    Err(_) => {
+                        return Err(BaechiError::runtime(format!(
+                            "inbox closed waiting for {key}"
+                        )))
+                    }
                 }
             }
         };

@@ -3,10 +3,48 @@
 //! Rust + JAX + Pallas reproduction of *"Baechi: Fast Device Placement of
 //! Machine Learning Graphs"* (Jeon et al., CS.DC 2023 / SoCC '20).
 //!
+//! ## Placement API
+//!
+//! Placement is served by a long-lived [`engine::PlacementEngine`]:
+//! build one per target cluster, then issue typed
+//! [`engine::PlacementRequest`] → [`engine::PlacementResponse`] calls.
+//! Algorithms are looked up by name in a [`engine::PlacerRegistry`]
+//! (the built-ins plus anything you register), repeated requests are
+//! served from an internal placement cache, `place_batch` fans a slice
+//! of requests across threads, and failures surface as the structured
+//! [`BaechiError`] enum rather than strings:
+//!
+//! ```no_run
+//! use baechi::engine::{PlacementEngine, PlacementRequest};
+//! use baechi::models::Benchmark;
+//! use baechi::profile::{Cluster, CommModel};
+//!
+//! let engine = PlacementEngine::builder()
+//!     .cluster(Cluster::homogeneous(4, 8 << 30, CommModel::pcie_via_host()))
+//!     .build()?;
+//! let req = PlacementRequest::for_benchmark(Benchmark::Transformer { batch: 64 }, "m-sct");
+//! let resp = engine.place(&req)?;
+//! println!(
+//!     "{} ops on {} devices in {:.1} ms",
+//!     resp.placement.device_of.len(),
+//!     resp.devices_used,
+//!     resp.placement.placement_time * 1e3,
+//! );
+//! # Ok::<(), baechi::BaechiError>(())
+//! ```
+//!
+//! The CLI, the [`coordinator`] pipeline, the examples, and the benches
+//! all route through the engine; see `examples/quickstart.rs` for the
+//! registry / cache / typed-error walkthrough and README.md for the
+//! full API tour.
+//!
+//! ## Layers
+//!
 //! The library is organized bottom-up:
 //!
 //! * [`util`] — in-repo substrates (RNG, JSON, CLI, stats, bench & property
 //!   harnesses) that replace crates unavailable in the offline registry.
+//! * [`error`] — the [`BaechiError`] enum behind [`Result`].
 //! * [`graph`] — the annotated operator DAG that every stage consumes.
 //! * [`models`] — synthetic profiled-graph generators matching the paper's
 //!   benchmarks (Inception-V3, GNMT, Transformer) plus small real models.
@@ -17,14 +55,18 @@
 //! * [`placer`] — m-TOPO, m-ETF, m-SCT (paper §2).
 //! * [`sim`] — the event-driven Execution Simulator (paper §4.2).
 //! * [`baselines`] — single-device, expert, and RL placers (paper §5).
-//! * [`runtime`] — PJRT client + AOT HLO artifact registry.
+//! * [`engine`] — the `PlacementEngine` service layer: placer registry,
+//!   request/response sessions, placement cache, stage observers.
+//! * [`runtime`] — PJRT client + AOT HLO artifact registry (stubbed
+//!   offline; see `runtime::xla`).
 //! * [`exec`] — real multi-device executor + trainer (end-to-end example).
-//! * [`coordinator`] — the full profile→optimize→place→evaluate pipeline.
-//!
-//! See `DESIGN.md` for the per-experiment index and substitution notes.
+//! * [`coordinator`] — the profile→optimize→place→evaluate pipeline, a
+//!   thin wrapper over the engine.
 
 pub mod baselines;
 pub mod coordinator;
+pub mod engine;
+pub mod error;
 pub mod exec;
 pub mod graph;
 pub mod lp;
@@ -36,5 +78,7 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub use error::BaechiError;
+
+/// Crate-wide result alias over [`BaechiError`].
+pub type Result<T, E = BaechiError> = std::result::Result<T, E>;

@@ -51,11 +51,15 @@ impl Default for IpmOptions {
 
 /// Solve a standard-form LP. Assumes the problem is feasible and bounded
 /// (the SCT LP always is: x = rounding of any valid schedule).
-pub fn solve(lp: &StandardLp, opts: IpmOptions) -> anyhow::Result<LpSolution> {
+pub fn solve(lp: &StandardLp, opts: IpmOptions) -> crate::Result<LpSolution> {
     let m = lp.a.rows;
     let n = lp.a.cols;
-    anyhow::ensure!(lp.b.len() == m && lp.c.len() == n, "lp shape mismatch");
-    anyhow::ensure!(n > 0 && m > 0, "empty lp");
+    if lp.b.len() != m || lp.c.len() != n {
+        return Err(crate::BaechiError::lp("lp shape mismatch"));
+    }
+    if n == 0 || m == 0 {
+        return Err(crate::BaechiError::lp("empty lp"));
+    }
 
     // --- Initial point (Mehrotra's heuristic) ---------------------------
     // x0 = Aᵀ(AAᵀ)⁻¹ b (min-norm primal), y0 = (AAᵀ)⁻¹ A c, s0 = c - Aᵀy0,

@@ -112,7 +112,7 @@ pub struct Cholesky {
 }
 
 impl Cholesky {
-    pub fn factor(mut a: Mat, reg: f64) -> anyhow::Result<Cholesky> {
+    pub fn factor(mut a: Mat, reg: f64) -> crate::Result<Cholesky> {
         assert_eq!(a.rows, a.cols);
         let n = a.rows;
         for k in 0..n {
@@ -124,7 +124,9 @@ impl Cholesky {
             if akk < reg {
                 akk += reg.max(1e-12) * (1.0 + a.at(k, k).abs());
                 if akk <= 0.0 {
-                    anyhow::bail!("cholesky: non-PD pivot at {k}: {akk}");
+                    return Err(crate::BaechiError::lp(format!(
+                        "cholesky: non-PD pivot at {k}: {akk}"
+                    )));
                 }
             }
             let lkk = akk.sqrt();

@@ -101,15 +101,19 @@ pub fn heuristic_favorites(graph: &OpGraph, comm: &CommModel) -> Favorites {
 /// 3. fav child:   Σ_j x_ij ≥ out(i) − 1               (rows where out ≥ 2)
 /// 4. fav parent:  Σ_i x_ij ≥ in(j) − 1                (rows where in ≥ 2)
 /// 5. bound:       x_ij ≤ 1                            (E rows)
-pub fn lp_favorites(graph: &OpGraph, comm: &CommModel) -> anyhow::Result<Favorites> {
+pub fn lp_favorites(graph: &OpGraph, comm: &CommModel) -> crate::Result<Favorites> {
     let ids: Vec<NodeId> = graph.node_ids().collect();
-    anyhow::ensure!(!ids.is_empty(), "empty graph");
+    if ids.is_empty() {
+        return Err(crate::BaechiError::lp("empty graph"));
+    }
     let node_col: std::collections::BTreeMap<NodeId, usize> =
         ids.iter().enumerate().map(|(k, &id)| (id, k)).collect();
     let nv = ids.len();
     let edges = graph.edges();
     let ne = edges.len();
-    anyhow::ensure!(ne > 0, "no edges");
+    if ne == 0 {
+        return Err(crate::BaechiError::lp("no edges"));
+    }
 
     let w_col = nv;
     let x_col = |e: usize| nv + 1 + e;

@@ -6,11 +6,17 @@
 //! baechi e2e     --steps 200 --devices 2 [--placer m-sct]
 //! baechi info    --model inception:32
 //! ```
+//!
+//! Every command routes through the [`baechi::engine::PlacementEngine`]:
+//! `place` issues one request, `compare` serves a batch across placers
+//! (fanned over threads, with typed per-row error handling).
 
-use baechi::coordinator::{run, BaechiConfig, PlacerKind};
+use baechi::coordinator::{engine_for, run, BaechiConfig, PlacerKind};
+use baechi::engine::PlacementRequest;
 use baechi::models::Benchmark;
 use baechi::util::cli::{Args, OptSpec};
 use baechi::util::table::{fmt_bytes, fmt_secs, Table};
+use baechi::BaechiError;
 
 fn specs() -> Vec<OptSpec> {
     vec![
@@ -22,7 +28,7 @@ fn specs() -> Vec<OptSpec> {
         },
         OptSpec {
             name: "placer",
-            help: "single | expert | m-topo | m-etf | m-sct | m-sct-heur | rl[:episodes]",
+            help: "single | expert | m-topo | m-etf | m-sct | m-sct-heur | m-sct-lp | rl[:episodes]",
             takes_value: true,
             default: Some("m-sct"),
         },
@@ -73,12 +79,12 @@ fn specs() -> Vec<OptSpec> {
 
 fn main() {
     if let Err(e) = real_main() {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
 
-fn real_main() -> anyhow::Result<()> {
+fn real_main() -> baechi::Result<()> {
     let args = Args::parse(&specs())?;
     let cmd = args
         .positional()
@@ -90,14 +96,14 @@ fn real_main() -> anyhow::Result<()> {
         "compare" => cmd_compare(&args),
         "e2e" => cmd_e2e(&args),
         "info" => cmd_info(&args),
-        other => anyhow::bail!(
+        other => Err(BaechiError::invalid(format!(
             "unknown command '{other}' (place|compare|e2e|info)\n{}",
             args.usage()
-        ),
+        ))),
     }
 }
 
-fn config_from(args: &Args) -> anyhow::Result<BaechiConfig> {
+fn config_from(args: &Args) -> baechi::Result<BaechiConfig> {
     let benchmark = Benchmark::parse(&args.get_or("model", "transformer:64"))?;
     let placer = PlacerKind::parse(&args.get_or("placer", "m-sct"))?;
     let mut cfg = BaechiConfig::paper_default(benchmark, placer);
@@ -110,7 +116,7 @@ fn config_from(args: &Args) -> anyhow::Result<BaechiConfig> {
     Ok(cfg)
 }
 
-fn cmd_place(args: &Args) -> anyhow::Result<()> {
+fn cmd_place(args: &Args) -> baechi::Result<()> {
     let cfg = config_from(args)?;
     let report = run(&cfg)?;
     if args.has("json") {
@@ -140,8 +146,23 @@ fn cmd_place(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+fn cmd_compare(args: &Args) -> baechi::Result<()> {
     let base = config_from(args)?;
+    // One engine, one batch request per placer — the serving path.
+    let engine = engine_for(&base)?;
+    let kinds = [
+        PlacerKind::Single,
+        PlacerKind::Expert,
+        PlacerKind::MTopo,
+        PlacerKind::MEtf,
+        PlacerKind::MSct,
+    ];
+    let reqs: Vec<PlacementRequest> = kinds
+        .iter()
+        .map(|k| PlacementRequest::for_benchmark(base.benchmark, &k.spec()))
+        .collect();
+    let results = engine.place_batch(&reqs);
+
     let mut t = Table::new(
         &format!(
             "compare: {} on {} devices ({} each, fraction {})",
@@ -152,29 +173,36 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
         ),
         &["placer", "placement time", "step time", "devices used"],
     );
-    for placer in [
-        PlacerKind::Single,
-        PlacerKind::Expert,
-        PlacerKind::MTopo,
-        PlacerKind::MEtf,
-        PlacerKind::MSct,
-    ] {
-        let cfg = BaechiConfig {
-            placer,
-            ..base.clone()
-        };
-        match run(&cfg) {
+    for (kind, result) in kinds.iter().zip(results) {
+        match result {
             Ok(r) => {
+                let step = r
+                    .sim
+                    .as_ref()
+                    .filter(|s| s.ok())
+                    .map(|s| fmt_secs(s.makespan))
+                    .unwrap_or_else(|| "OOM".into());
                 t.row(&[
                     r.placer.clone(),
-                    fmt_secs(r.placement_time),
-                    r.step_time().map(fmt_secs).unwrap_or_else(|| "OOM".into()),
+                    fmt_secs(r.placement.placement_time),
+                    step,
                     r.devices_used.to_string(),
                 ]);
             }
+            Err(BaechiError::Oom {
+                op,
+                best_device,
+                deficit,
+            }) => {
+                let detail = match best_device {
+                    Some(d) => format!("OOM at {op} ({d} short {})", fmt_bytes(deficit)),
+                    None => format!("OOM at {op}"),
+                };
+                t.row(&[kind.name().to_string(), "-".into(), detail, "-".into()]);
+            }
             Err(e) => {
                 t.row(&[
-                    placer.name().to_string(),
+                    kind.name().to_string(),
                     "-".into(),
                     format!("placement failed: {e}"),
                     "-".into(),
@@ -186,7 +214,7 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
+fn cmd_e2e(args: &Args) -> baechi::Result<()> {
     use baechi::exec::plan::MlpPlan;
     use baechi::exec::trainer::{train_distributed, train_oracle, ModelMeta, TrainConfig};
 
@@ -204,18 +232,17 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
         320 << 10, // tight: the model cannot fit one device
         baechi::profile::CommModel::pcie_via_host(),
     );
-    let opt = baechi::optimizer::optimize(&graph, &baechi::optimizer::OptConfig::default());
-    let placement = placer.build(benchmark).place(&opt.graph, &cluster)?;
-    let full = baechi::optimizer::expand_placement(&graph, &opt, &placement.device_of);
-    let placement = baechi::placer::Placement {
-        device_of: full,
-        ..placement
-    };
+    let engine = baechi::engine::PlacementEngine::builder()
+        .cluster(cluster)
+        .build()?;
+    let resp = engine.place(
+        &PlacementRequest::for_benchmark(benchmark, &placer.spec()).without_simulation(),
+    )?;
     let meta = ModelMeta::load(&baechi::runtime::artifact::ArtifactRegistry::default_dir())?;
-    let plan = MlpPlan::from_placement(&graph, &placement, devices, meta.n_layers())?;
+    let plan = MlpPlan::from_placement(&graph, &resp.placement, devices, meta.n_layers())?;
     println!(
         "placement ({}): layers → {:?}, loss → gpu{}",
-        placement.algorithm, plan.layer_dev, plan.loss_dev
+        resp.placer, plan.layer_dev, plan.loss_dev
     );
 
     let cfg = TrainConfig {
@@ -241,10 +268,11 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     };
     let oracle = train_oracle(&oracle_cfg)?;
     for (s, (a, b)) in report.losses.iter().zip(&oracle).enumerate() {
-        anyhow::ensure!(
-            (a - b).abs() < 1e-3 * (1.0 + b.abs()),
-            "divergence at step {s}: {a} vs oracle {b}"
-        );
+        if (a - b).abs() >= 1e-3 * (1.0 + b.abs()) {
+            return Err(BaechiError::runtime(format!(
+                "divergence at step {s}: {a} vs oracle {b}"
+            )));
+        }
     }
     println!(
         "oracle check: first {} steps match the fused train_step",
@@ -253,7 +281,7 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info(args: &Args) -> anyhow::Result<()> {
+fn cmd_info(args: &Args) -> baechi::Result<()> {
     let cfg = config_from(args)?;
     let g = cfg.benchmark.graph();
     let opt = baechi::optimizer::optimize(&g, &cfg.opt);

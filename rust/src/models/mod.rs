@@ -33,7 +33,7 @@ pub enum Benchmark {
 impl Benchmark {
     /// Parse `inception:32`, `gnmt:128:40`, `transformer:64`, `linreg`,
     /// `mlp`.
-    pub fn parse(s: &str) -> anyhow::Result<Benchmark> {
+    pub fn parse(s: &str) -> crate::Result<Benchmark> {
         let parts: Vec<&str> = s.split(':').collect();
         let num = |i: usize, d: usize| -> usize {
             parts.get(i).and_then(|p| p.parse().ok()).unwrap_or(d)
@@ -47,7 +47,9 @@ impl Benchmark {
             "transformer" => Ok(Benchmark::Transformer { batch: num(1, 64) }),
             "linreg" => Ok(Benchmark::LinReg),
             "mlp" => Ok(Benchmark::Mlp),
-            other => anyhow::bail!("unknown benchmark '{other}'"),
+            other => Err(crate::BaechiError::invalid(format!(
+                "unknown benchmark '{other}'"
+            ))),
         }
     }
 

@@ -117,17 +117,18 @@ impl MemoryLedger {
             .and_then(|g| self.group_device.get(g).copied())
     }
 
-    /// Whether `node` can be scheduled on `dev` without exceeding memory.
-    pub fn fits(&self, graph: &OpGraph, node: NodeId, dev: DeviceId) -> bool {
+    /// Bytes `node` would charge if placed on `dev` right now: the whole
+    /// group reservation for a first group member, the individual budget
+    /// otherwise. `None` when colocation pins the node elsewhere.
+    pub fn required_on(&self, graph: &OpGraph, node: NodeId, dev: DeviceId) -> Option<u64> {
         // Colocation pinning dominates.
         if let Some(p) = self.pinned_device(graph, node) {
             if p != dev {
-                return false;
+                return None;
             }
         }
         let n = graph.node(node);
-        let led = &self.devices[dev.0];
-        let need = match &n.colocation_group {
+        Some(match &n.colocation_group {
             Some(g) if !self.group_device.contains_key(g) => {
                 // First member: the whole group's lasting memory (plus
                 // its worst transient) must fit.
@@ -136,8 +137,15 @@ impl MemoryLedger {
             // Group reservation already covers perm + output + max temp.
             Some(_) => 0,
             None => n.mem.params + n.mem.param_grad + n.mem.output + n.mem.temporary_training(),
-        };
-        need <= led.free()
+        })
+    }
+
+    /// Whether `node` can be scheduled on `dev` without exceeding memory.
+    pub fn fits(&self, graph: &OpGraph, node: NodeId, dev: DeviceId) -> bool {
+        match self.required_on(graph, node, dev) {
+            Some(need) => need <= self.devices[dev.0].free(),
+            None => false,
+        }
     }
 
     /// Commit `node` to `dev`. Panics if `fits` would be false (callers

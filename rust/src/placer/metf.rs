@@ -11,7 +11,8 @@
 //! recomputed time regressed.
 
 use super::sched::SchedState;
-use super::{finish_placement, Placement, Placer, QueueEntry};
+use super::{finish_placement, oom_error, Placement, Placer, QueueEntry};
+use crate::error::BaechiError;
 use crate::graph::{DeviceId, OpGraph};
 use crate::profile::Cluster;
 use std::cmp::Reverse;
@@ -28,10 +29,10 @@ impl Placer for MEtf {
         "m-etf".to_string()
     }
 
-    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement> {
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> crate::Result<Placement> {
         let t0 = std::time::Instant::now();
         if !graph.is_acyclic() {
-            return Err(super::PlaceError::Cyclic.into());
+            return Err(BaechiError::Cyclic);
         }
         let mut st = SchedState::new(graph, cluster);
         let mut heap: BinaryHeap<Reverse<QueueEntry>> = BinaryHeap::new();
@@ -91,10 +92,7 @@ impl Placer for MEtf {
                 .node_ids()
                 .find(|&id| st.device_of[id.0].is_none())
                 .unwrap();
-            return Err(super::PlaceError::Oom {
-                op: graph.node(unplaced).name.clone(),
-            }
-            .into());
+            return Err(oom_error(graph, unplaced, &st.ledger));
         }
         finish_placement(&self.name(), graph, st, t0)
     }

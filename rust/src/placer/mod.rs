@@ -1,6 +1,12 @@
 //! The memory-constrained placement algorithms (paper §2): m-TOPO,
 //! m-ETF and m-SCT, plus the shared [`Placement`] result type and the
 //! [`Placer`] trait implemented by the baselines as well.
+//!
+//! Placers report failures through the crate-wide
+//! [`BaechiError`](crate::BaechiError) enum — OOM carries the failing
+//! operator together with the closest device and its byte deficit, so a
+//! serving layer can react (shed load, grow the cluster, pick another
+//! placer) without string matching.
 
 pub mod ledger;
 pub mod metf;
@@ -8,6 +14,7 @@ pub mod msct;
 pub mod mtopo;
 pub mod sched;
 
+use crate::error::BaechiError;
 use crate::graph::{DeviceId, NodeId, OpGraph};
 use crate::profile::Cluster;
 use std::collections::BTreeMap;
@@ -26,8 +33,22 @@ pub struct Placement {
 }
 
 impl Placement {
+    /// Device of `id`, if the placement covers it.
+    pub fn try_device(&self, id: NodeId) -> Option<DeviceId> {
+        self.device_of.get(&id).copied()
+    }
+
+    /// Device of `id`. Panics with a descriptive message when the node
+    /// is not covered — use [`Placement::try_device`] to handle that
+    /// case gracefully.
     pub fn device(&self, id: NodeId) -> DeviceId {
-        self.device_of[&id]
+        self.try_device(id).unwrap_or_else(|| {
+            panic!(
+                "placement '{}' ({} ops) has no device for node {id}",
+                self.algorithm,
+                self.device_of.len()
+            )
+        })
     }
 
     /// Ops per device.
@@ -46,19 +67,34 @@ impl Placement {
     }
 }
 
-/// Placement failure.
-#[derive(Debug, thiserror::Error)]
-pub enum PlaceError {
-    #[error("out of memory: operator {op} does not fit on any device")]
-    Oom { op: String },
-    #[error("graph is not a DAG")]
-    Cyclic,
-}
-
 /// A placement algorithm.
 pub trait Placer {
     fn name(&self) -> String;
-    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement>;
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> crate::Result<Placement>;
+}
+
+/// Build the OOM error for an op no device can host: scans the ledger
+/// for the closest device and its byte deficit.
+pub(crate) fn oom_error(
+    graph: &OpGraph,
+    node: NodeId,
+    ledger: &ledger::MemoryLedger,
+) -> BaechiError {
+    let mut best: Option<(DeviceId, u64)> = None;
+    for d in 0..ledger.devices.len() {
+        let dev = DeviceId(d);
+        if let Some(need) = ledger.required_on(graph, node, dev) {
+            let deficit = need.saturating_sub(ledger.devices[d].free());
+            if best.map_or(true, |(_, b)| deficit < b) {
+                best = Some((dev, deficit));
+            }
+        }
+    }
+    BaechiError::Oom {
+        op: graph.node(node).name.clone(),
+        best_device: best.map(|(d, _)| d),
+        deficit: best.map(|(_, x)| x).unwrap_or(0),
+    }
 }
 
 /// Helper shared by placers: verify the result covers every live op.
@@ -67,19 +103,14 @@ pub(crate) fn finish_placement(
     graph: &OpGraph,
     st: sched::SchedState<'_>,
     t0: std::time::Instant,
-) -> anyhow::Result<Placement> {
+) -> crate::Result<Placement> {
     let mut device_of = BTreeMap::new();
     for id in graph.node_ids() {
         match st.device_of[id.0] {
             Some(d) => {
                 device_of.insert(id, d);
             }
-            None => {
-                return Err(PlaceError::Oom {
-                    op: graph.node(id).name.clone(),
-                }
-                .into())
-            }
+            None => return Err(oom_error(graph, id, &st.ledger)),
         }
     }
     Ok(Placement {
@@ -106,9 +137,19 @@ impl Eq for QueueEntry {}
 
 impl Ord for QueueEntry {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.est
-            .partial_cmp(&other.est)
-            .unwrap_or(std::cmp::Ordering::Equal)
+        // NaN `est` (corrupted profile) sorts strictly last — greater
+        // than every finite value and equal to other NaNs — so the heap
+        // keeps a consistent total order instead of silently treating
+        // NaN as a tie with everything, which breaks transitivity.
+        let est_ord = match self.est.partial_cmp(&other.est) {
+            Some(o) => o,
+            None => match (self.est.is_nan(), other.est.is_nan()) {
+                (true, false) => std::cmp::Ordering::Greater,
+                (false, true) => std::cmp::Ordering::Less,
+                _ => std::cmp::Ordering::Equal,
+            },
+        };
+        est_ord
             .then_with(|| other.prefer.cmp(&self.prefer)) // prefer=true first
             .then_with(|| self.node.cmp(&other.node))
             .then_with(|| self.dev.cmp(&other.dev))
@@ -124,6 +165,7 @@ impl PartialOrd for QueueEntry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::cmp::Ordering;
 
     #[test]
     fn queue_entry_ordering() {
@@ -142,5 +184,65 @@ mod tests {
         assert!(a < b, "earlier est wins regardless of preference");
         let c = QueueEntry { prefer: true, ..a };
         assert!(c < a, "preference breaks ties");
+    }
+
+    #[test]
+    fn nan_est_schedules_last() {
+        let finite = QueueEntry {
+            est: 1e12,
+            prefer: true,
+            node: NodeId(7),
+            dev: DeviceId(3),
+        };
+        let nan = QueueEntry {
+            est: f64::NAN,
+            prefer: true,
+            node: NodeId(0),
+            dev: DeviceId(0),
+        };
+        assert_eq!(nan.cmp(&finite), Ordering::Greater, "NaN after finite");
+        assert_eq!(finite.cmp(&nan), Ordering::Less, "finite before NaN");
+        // NaN vs NaN falls through to the deterministic tie-breaks.
+        let nan2 = QueueEntry {
+            node: NodeId(1),
+            ..nan
+        };
+        assert_eq!(nan.cmp(&nan2), Ordering::Less);
+        assert_eq!(nan.cmp(&nan), Ordering::Equal);
+    }
+
+    #[test]
+    fn nan_never_preempts_in_min_heap() {
+        // A min-heap (Reverse) over entries with one NaN must pop every
+        // finite entry first regardless of insertion order.
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mk = |est: f64, n: usize| QueueEntry {
+            est,
+            prefer: false,
+            node: NodeId(n),
+            dev: DeviceId(0),
+        };
+        let mut heap = BinaryHeap::new();
+        for e in [mk(f64::NAN, 9), mk(3.0, 1), mk(1.0, 2), mk(2.0, 3)] {
+            heap.push(Reverse(e));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| heap.pop().map(|Reverse(e)| e.node.0))
+            .collect();
+        assert_eq!(order, vec![2, 3, 1, 9], "NaN entry pops last");
+    }
+
+    #[test]
+    fn try_device_on_missing_node() {
+        let p = Placement {
+            algorithm: "test".into(),
+            device_of: [(NodeId(0), DeviceId(1))].into_iter().collect(),
+            predicted_makespan: 0.0,
+            placement_time: 0.0,
+            peak_memory: vec![0, 0],
+        };
+        assert_eq!(p.try_device(NodeId(0)), Some(DeviceId(1)));
+        assert_eq!(p.try_device(NodeId(42)), None);
+        assert_eq!(p.device(NodeId(0)), DeviceId(1));
     }
 }

@@ -13,7 +13,8 @@
 //!   (pairs popped against it are dropped, as in m-ETF).
 
 use super::sched::SchedState;
-use super::{finish_placement, Placement, Placer, QueueEntry};
+use super::{finish_placement, oom_error, Placement, Placer, QueueEntry};
+use crate::error::BaechiError;
 use crate::graph::{DeviceId, NodeId, OpGraph};
 use crate::lp::{favorites, FavoriteMethod, Favorites};
 use crate::profile::Cluster;
@@ -70,10 +71,10 @@ impl Placer for MSct {
         }
     }
 
-    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement> {
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> crate::Result<Placement> {
         let t0 = std::time::Instant::now();
         if !graph.is_acyclic() {
-            return Err(super::PlaceError::Cyclic.into());
+            return Err(BaechiError::Cyclic);
         }
         let fav: Favorites = favorites(graph, &cluster.comm, self.method);
         let mut st = SchedState::new(graph, cluster);
@@ -171,10 +172,7 @@ impl Placer for MSct {
                 .node_ids()
                 .find(|&id| st.device_of[id.0].is_none())
                 .unwrap();
-            return Err(super::PlaceError::Oom {
-                op: graph.node(unplaced).name.clone(),
-            }
-            .into());
+            return Err(oom_error(graph, unplaced, &st.ledger));
         }
         finish_placement(&self.name(), graph, st, t0)
     }

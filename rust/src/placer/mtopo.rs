@@ -7,7 +7,8 @@
 //! group to the device of its first-placed member.
 
 use super::sched::SchedState;
-use super::{finish_placement, Placement, Placer};
+use super::{finish_placement, oom_error, Placement, Placer};
+use crate::error::BaechiError;
 use crate::graph::{DeviceId, OpGraph};
 use crate::profile::Cluster;
 
@@ -20,9 +21,9 @@ impl Placer for MTopo {
         "m-topo".to_string()
     }
 
-    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> anyhow::Result<Placement> {
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> crate::Result<Placement> {
         let t0 = std::time::Instant::now();
-        let order = graph.topo_order().ok_or(super::PlaceError::Cyclic)?;
+        let order = graph.topo_order().ok_or(BaechiError::Cyclic)?;
         // Memory requirement dᵢ: what the op permanently holds.
         let d = |id: crate::graph::NodeId| graph.node(id).mem.permanent_training();
         let total: u64 = order.iter().map(|&i| d(i)).sum();
@@ -65,9 +66,7 @@ impl Placer for MTopo {
                     }
                 }
             }
-            let chosen = chosen.ok_or_else(|| super::PlaceError::Oom {
-                op: graph.node(id).name.clone(),
-            })?;
+            let chosen = chosen.ok_or_else(|| oom_error(graph, id, &st.ledger))?;
             st.commit(id, chosen);
             if pinned.is_none() && chosen.0 == dev {
                 filled += d(id);

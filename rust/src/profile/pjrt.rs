@@ -7,6 +7,7 @@
 //! benchmarks use the analytic cost model in [`crate::models`] instead.
 
 use crate::runtime::artifact::LoadedExec;
+use crate::runtime::xla;
 use crate::util::stats::Summary;
 use std::time::Instant;
 
@@ -28,7 +29,7 @@ pub fn profile_exec(
     inputs: &[xla::Literal],
     warmup: usize,
     iters: usize,
-) -> anyhow::Result<OpProfile> {
+) -> crate::Result<OpProfile> {
     for _ in 0..warmup {
         exec.run(inputs)?;
     }

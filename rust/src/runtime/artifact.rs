@@ -6,7 +6,8 @@
 //! arity. All entries are lowered with `return_tuple=True`, so execution
 //! always unwraps a tuple.
 
-use super::Runtime;
+use super::{xla, Runtime};
+use crate::error::BaechiError;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -31,25 +32,25 @@ pub struct Manifest {
 
 impl Manifest {
     /// Load `<dir>/manifest.json`.
-    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .map_err(|e| anyhow::anyhow!("reading manifest in {}: {e}", dir.display()))?;
+            .map_err(|e| BaechiError::io(format!("reading manifest in {}: {e}", dir.display())))?;
         let root = Json::parse(&text)?;
         let mut entries = BTreeMap::new();
         let arr = root
             .get("artifacts")
             .and_then(|a| a.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts' array"))?;
+            .ok_or_else(|| BaechiError::invalid("manifest missing 'artifacts' array"))?;
         for item in arr {
             let name = item
                 .get("name")
                 .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .ok_or_else(|| BaechiError::invalid("artifact missing name"))?
                 .to_string();
             let file = item
                 .get("file")
                 .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow::anyhow!("artifact {name} missing file"))?;
+                .ok_or_else(|| BaechiError::invalid(format!("artifact {name} missing file")))?;
             let input_shapes = item
                 .get("input_shapes")
                 .and_then(|v| v.as_arr())
@@ -97,7 +98,7 @@ pub struct LoadedExec {
 
 impl LoadedExec {
     /// Execute with literal inputs; returns the flattened output tuple.
-    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
         let bufs = self.exec.execute::<xla::Literal>(inputs)?;
         let result = bufs[0][0].to_literal_sync()?;
         // aot.py lowers with return_tuple=True — always a tuple.
@@ -105,9 +106,15 @@ impl LoadedExec {
     }
 
     /// Execute and return the single output (asserts arity 1).
-    pub fn run1(&self, inputs: &[xla::Literal]) -> anyhow::Result<xla::Literal> {
+    pub fn run1(&self, inputs: &[xla::Literal]) -> crate::Result<xla::Literal> {
         let mut outs = self.run(inputs)?;
-        anyhow::ensure!(outs.len() == 1, "{}: expected 1 output, got {}", self.name, outs.len());
+        if outs.len() != 1 {
+            return Err(BaechiError::runtime(format!(
+                "{}: expected 1 output, got {}",
+                self.name,
+                outs.len()
+            )));
+        }
         Ok(outs.pop().unwrap())
     }
 }
@@ -121,7 +128,7 @@ pub struct ArtifactRegistry {
 
 impl ArtifactRegistry {
     /// Open `dir` (default: `$BAECHI_ARTIFACTS` or `artifacts/`).
-    pub fn open(runtime: Runtime, dir: &Path) -> anyhow::Result<ArtifactRegistry> {
+    pub fn open(runtime: Runtime, dir: &Path) -> crate::Result<ArtifactRegistry> {
         let manifest = Manifest::load(dir)?;
         Ok(ArtifactRegistry {
             runtime,
@@ -142,7 +149,7 @@ impl ArtifactRegistry {
     }
 
     /// Load (compile) an executable by name, caching the result.
-    pub fn load(&self, name: &str) -> anyhow::Result<Arc<LoadedExec>> {
+    pub fn load(&self, name: &str) -> crate::Result<Arc<LoadedExec>> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
@@ -150,11 +157,11 @@ impl ArtifactRegistry {
             .manifest
             .entries
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?;
+            .ok_or_else(|| BaechiError::invalid(format!("unknown artifact '{name}'")))?;
         let path = entry
             .file
             .to_str()
-            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?;
+            .ok_or_else(|| BaechiError::invalid("non-utf8 artifact path"))?;
         let proto = xla::HloModuleProto::from_text_file(path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exec = self.runtime.client().compile(&comp)?;
@@ -172,14 +179,16 @@ impl ArtifactRegistry {
 }
 
 /// Convenience: build an f32 literal from data + shape.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
     let numel: i64 = dims.iter().product();
-    anyhow::ensure!(numel as usize == data.len(), "shape/data mismatch");
+    if numel as usize != data.len() {
+        return Err(BaechiError::invalid("shape/data mismatch"));
+    }
     Ok(xla::Literal::vec1(data).reshape(dims)?)
 }
 
 /// Convenience: extract f32 data from a literal.
-pub fn to_vec_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+pub fn to_vec_f32(lit: &xla::Literal) -> crate::Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 

@@ -1,15 +1,18 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
 //!
-//! This is the only place the `xla` crate is touched. The compile path
-//! (python/jax/pallas) emits HLO **text** — not serialized protos, which
-//! xla_extension 0.5.1 rejects for jax ≥ 0.5 (64-bit instruction ids).
-//! `HloModuleProto::from_text_file` reassigns ids and round-trips cleanly
-//! (see /opt/xla-example/README.md).
+//! All `xla` types come from [`xla`], the in-repo API-compatible stub of
+//! the xla_extension bindings (the offline build cannot link the native
+//! runtime — swap that module for the real crate to execute artifacts).
+//! The compile path (python/jax/pallas) emits HLO **text** — not
+//! serialized protos, which xla_extension 0.5.1 rejects for jax ≥ 0.5
+//! (64-bit instruction ids); `HloModuleProto::from_text_file` reassigns
+//! ids and round-trips cleanly.
 //!
 //! Python never runs on the request path: `make artifacts` produces
 //! `artifacts/*.hlo.txt` + `manifest.json` once; this module loads them.
 
 pub mod artifact;
+pub mod xla;
 
 use std::sync::Arc;
 
@@ -22,7 +25,7 @@ pub struct Runtime {
 
 impl Runtime {
     /// Construct a CPU PJRT client.
-    pub fn cpu() -> anyhow::Result<Runtime> {
+    pub fn cpu() -> crate::Result<Runtime> {
         let client = xla::PjRtClient::cpu()?;
         Ok(Runtime {
             client: Arc::new(client),

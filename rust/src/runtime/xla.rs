@@ -1,0 +1,240 @@
+//! API-compatible stand-in for the `xla` (xla_extension) PJRT bindings.
+//!
+//! The offline build cannot link the native XLA runtime, so this module
+//! mirrors the handful of types and methods the crate touches:
+//!
+//! * [`Literal`] is **fully functional** host-side (f32 data + dims) —
+//!   it backs [`crate::exec::HostTensor`] round-trips and the literal
+//!   helpers in [`crate::runtime::artifact`].
+//! * [`PjRtClient::cpu`] constructs (so clients/registries can be built
+//!   and manifests validated), but [`PjRtClient::compile`] reports
+//!   [`XlaError`]: executing AOT HLO artifacts needs the real backend.
+//!
+//! To light up the PJRT path, delete this module and add the real `xla`
+//! crate as a dependency — every call site uses the same names and
+//! signatures.
+
+/// Error raised by the (stubbed) XLA layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct XlaError(pub String);
+
+impl XlaError {
+    fn backend_unavailable(what: &str) -> XlaError {
+        XlaError(format!(
+            "{what} requires the native XLA runtime, which this offline build stubs \
+             (see runtime::xla module docs)"
+        ))
+    }
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+impl From<XlaError> for crate::BaechiError {
+    fn from(e: XlaError) -> crate::BaechiError {
+        crate::BaechiError::Runtime(e.to_string())
+    }
+}
+
+/// Element types a [`Literal`] can be read back as (f32 only — the wire
+/// format of every artifact in this repo).
+pub trait Element: Sized {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl Element for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// Array shape (row-major dims).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Literal shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple,
+}
+
+/// Host-side tensor literal (f32, row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reshape; errors when the element count does not match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.data.len() {
+            return Err(XlaError(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn shape(&self) -> Result<Shape, XlaError> {
+        Ok(Shape::Array(ArrayShape {
+            dims: self.dims.clone(),
+        }))
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, XlaError> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Flatten a tuple literal. Only produced by executions, which the
+    /// stub cannot perform.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(XlaError::backend_unavailable("tuple literals"))
+    }
+}
+
+/// Parsed HLO module (text retained verbatim; the real crate reassigns
+/// instruction ids here).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, XlaError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(module: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _module: module.clone(),
+        }
+    }
+}
+
+/// Device buffer handle (only ever produced by real executions).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(XlaError::backend_unavailable("device buffers"))
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError::backend_unavailable("executing HLO"))
+    }
+}
+
+/// PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient { platform: "cpu" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError::backend_unavailable("compiling HLO"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_and_readback() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let m = lit.reshape(&[2, 2]).unwrap();
+        match m.shape().unwrap() {
+            Shape::Array(a) => assert_eq!(a.dims(), &[2, 2]),
+            other => panic!("unexpected shape {other:?}"),
+        }
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let lit = Literal::vec1(&[7.5]).reshape(&[]).unwrap();
+        match lit.shape().unwrap() {
+            Shape::Array(a) => assert!(a.dims().is_empty()),
+            other => panic!("unexpected shape {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compile_reports_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu");
+        let proto = HloModuleProto {
+            text: "HloModule m".into(),
+        };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("native XLA runtime"), "{err}");
+    }
+}

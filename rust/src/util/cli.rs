@@ -4,6 +4,7 @@
 //! and generated usage text. The main binary and all examples/benches use
 //! this.
 
+use crate::error::BaechiError;
 use std::collections::BTreeMap;
 
 /// Declarative option spec used for usage text and validation.
@@ -27,13 +28,13 @@ pub struct Args {
 
 impl Args {
     /// Build a parser with the given option specs and parse `argv[1..]`.
-    pub fn parse(specs: &[OptSpec]) -> anyhow::Result<Args> {
+    pub fn parse(specs: &[OptSpec]) -> crate::Result<Args> {
         let argv: Vec<String> = std::env::args().collect();
         Self::parse_from(specs, &argv)
     }
 
     /// Parse from an explicit argv (first element is the program name).
-    pub fn parse_from(specs: &[OptSpec], argv: &[String]) -> anyhow::Result<Args> {
+    pub fn parse_from(specs: &[OptSpec], argv: &[String]) -> crate::Result<Args> {
         let mut args = Args {
             specs: specs.to_vec(),
             program: argv.first().cloned().unwrap_or_default(),
@@ -54,7 +55,9 @@ impl Args {
                 let spec = specs
                     .iter()
                     .find(|s| s.name == key)
-                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", args.usage()))?;
+                    .ok_or_else(|| {
+                        BaechiError::invalid(format!("unknown option --{key}\n{}", args.usage()))
+                    })?;
                 if spec.takes_value {
                     let val = match inline_val {
                         Some(v) => v,
@@ -62,13 +65,13 @@ impl Args {
                             i += 1;
                             argv.get(i)
                                 .cloned()
-                                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                                .ok_or_else(|| BaechiError::invalid(format!("--{key} needs a value")))?
                         }
                     };
                     args.opts.insert(key, val);
                 } else {
                     if inline_val.is_some() {
-                        anyhow::bail!("--{key} takes no value");
+                        return Err(BaechiError::invalid(format!("--{key} takes no value")));
                     }
                     args.flags.push(key);
                 }
@@ -112,20 +115,20 @@ impl Args {
         self.get(name).unwrap_or_else(|| default.to_string())
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+    pub fn get_usize(&self, name: &str, default: usize) -> crate::Result<usize> {
         match self.get(name) {
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+                .map_err(|_| BaechiError::invalid(format!("--{name} expects an integer, got '{v}'"))),
             None => Ok(default),
         }
     }
 
-    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+    pub fn get_f64(&self, name: &str, default: f64) -> crate::Result<f64> {
         match self.get(name) {
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+                .map_err(|_| BaechiError::invalid(format!("--{name} expects a number, got '{v}'"))),
             None => Ok(default),
         }
     }

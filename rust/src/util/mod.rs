@@ -1,8 +1,10 @@
 //! In-repo substrates for crates unavailable in the offline registry.
 //!
-//! The image's cargo mirror only carries the `xla` crate's dependency
-//! closure, so this module provides the small, well-tested pieces a
-//! production repo would normally pull from crates.io:
+//! The build is fully dependency-free (no registry access in the build
+//! image; even the `xla` PJRT bindings are stubbed in
+//! [`crate::runtime::xla`]), so this module provides the small,
+//! well-tested pieces a production repo would normally pull from
+//! crates.io:
 //!
 //! * [`rng`] — PCG-64 pseudo-random generator (replaces `rand`).
 //! * [`json`] — minimal JSON value, parser and writer (replaces `serde_json`).

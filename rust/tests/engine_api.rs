@@ -1,0 +1,348 @@
+//! Integration tests for the `PlacementEngine` service API: registry
+//! round-trips (including a custom placer registered by name), typed
+//! `BaechiError` handling, cache hit/miss behavior, batched serving, and
+//! stage observers.
+
+use baechi::engine::{
+    PlacementEngine, PlacementRequest, PlacerRegistration, RecordingObserver, Stage,
+};
+use baechi::graph::{DeviceId, MemorySpec, NodeId, OpGraph, OpKind};
+use baechi::models::Benchmark;
+use baechi::placer::{Placement, Placer};
+use baechi::profile::{Cluster, CommModel};
+use baechi::BaechiError;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn unit_cluster(n: usize, mem: u64) -> Cluster {
+    Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0))
+}
+
+/// A graph that cannot fit the 2×1000-byte cluster (3 × 800-byte ops,
+/// no edges, no groups — the optimizer leaves it untouched).
+fn oom_graph() -> OpGraph {
+    let mut g = OpGraph::new("big");
+    for i in 0..3 {
+        let id = g.add_node(&format!("op{i}"), OpKind::MatMul);
+        g.node_mut(id).mem = MemorySpec {
+            params: 800,
+            ..Default::default()
+        };
+    }
+    g
+}
+
+/// Trivial custom placer: round-robin by node index, counting every
+/// invocation so tests can prove the cache skipped it.
+struct CountingRoundRobin {
+    calls: Arc<AtomicUsize>,
+}
+
+impl Placer for CountingRoundRobin {
+    fn name(&self) -> String {
+        "round-robin".to_string()
+    }
+
+    fn place(&self, graph: &OpGraph, cluster: &Cluster) -> baechi::Result<Placement> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        let t0 = std::time::Instant::now();
+        let device_of: BTreeMap<NodeId, DeviceId> = graph
+            .node_ids()
+            .enumerate()
+            .map(|(k, id)| (id, DeviceId(k % cluster.n())))
+            .collect();
+        Ok(Placement {
+            algorithm: self.name(),
+            predicted_makespan: graph.total_compute(),
+            placement_time: t0.elapsed().as_secs_f64(),
+            peak_memory: vec![0; cluster.n()],
+            device_of,
+        })
+    }
+}
+
+#[test]
+fn registry_round_trip_register_resolve_place() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let factory_calls = calls.clone();
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 20))
+        .register_placer(
+            "round-robin",
+            PlacerRegistration::new(move |_| {
+                Ok(Box::new(CountingRoundRobin {
+                    calls: factory_calls.clone(),
+                }))
+            }),
+        )
+        .build()
+        .unwrap();
+
+    assert!(engine.registry().contains("round-robin"));
+    assert!(engine.registry().contains("m-sct"), "builtins still there");
+
+    let g = baechi::models::linreg::linreg_graph();
+    let n_ops = g.len();
+    let resp = engine
+        .place(&PlacementRequest::new(g, "round-robin").without_simulation())
+        .unwrap();
+    assert_eq!(resp.placer, "round-robin");
+    assert_eq!(resp.placement.device_of.len(), n_ops, "expanded coverage");
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn typed_oom_error_carries_deficit() {
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1000))
+        .build()
+        .unwrap();
+    match engine.place(&PlacementRequest::new(oom_graph(), "m-etf")) {
+        Err(BaechiError::Oom {
+            op,
+            best_device,
+            deficit,
+        }) => {
+            assert!(op.starts_with("op"), "failing op name, got '{op}'");
+            assert!(best_device.is_some(), "closest device reported");
+            // Both devices hold one 800-byte op; the third needs 800
+            // against 200 free.
+            assert_eq!(deficit, 600);
+        }
+        Ok(_) => panic!("2400 bytes cannot fit a 2000-byte cluster"),
+        Err(e) => panic!("expected Oom, got {e}"),
+    }
+    // The typed error still renders the paper's phrasing.
+    let err = engine
+        .place(&PlacementRequest::new(oom_graph(), "m-etf"))
+        .unwrap_err();
+    assert!(err.to_string().contains("out of memory"), "{err}");
+}
+
+#[test]
+fn typed_unknown_placer_error() {
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 20))
+        .build()
+        .unwrap();
+    let g = baechi::models::linreg::linreg_graph();
+    match engine.place(&PlacementRequest::new(g, "placeto")) {
+        Err(BaechiError::UnknownPlacer { name, known }) => {
+            assert_eq!(name, "placeto");
+            assert!(known.contains(&"m-sct".to_string()));
+            assert!(known.contains(&"single".to_string()));
+        }
+        Ok(_) => panic!("'placeto' is not registered"),
+        Err(e) => panic!("expected UnknownPlacer, got {e}"),
+    }
+}
+
+#[test]
+fn cache_hit_returns_same_placement_without_rerunning() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let factory_calls = calls.clone();
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 20))
+        .register_placer(
+            "counting",
+            PlacerRegistration::new(move |_| {
+                Ok(Box::new(CountingRoundRobin {
+                    calls: factory_calls.clone(),
+                }))
+            }),
+        )
+        .build()
+        .unwrap();
+
+    let req = PlacementRequest::new(baechi::models::linreg::linreg_graph(), "counting");
+    let first = engine.place(&req).unwrap();
+    let second = engine.place(&req).unwrap();
+    assert!(Arc::ptr_eq(&first, &second), "cached Arc re-served");
+    assert_eq!(first.placement.device_of, second.placement.device_of);
+    assert_eq!(
+        calls.load(Ordering::SeqCst),
+        1,
+        "placer must not re-run on a cache hit"
+    );
+    let stats = engine.cache_stats();
+    assert_eq!((stats.hits, stats.misses), (1, 1));
+}
+
+#[test]
+fn cache_distinguishes_graph_changes() {
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 20))
+        .build()
+        .unwrap();
+    let g1 = baechi::models::linreg::linreg_graph();
+    let mut g2 = baechi::models::linreg::linreg_graph();
+    // Perturb one profile value: must be a distinct cache entry.
+    let id = g2.node_ids().next().unwrap();
+    g2.node_mut(id).compute += 1.0;
+    engine.place(&PlacementRequest::new(g1, "m-etf")).unwrap();
+    engine.place(&PlacementRequest::new(g2, "m-etf")).unwrap();
+    let stats = engine.cache_stats();
+    assert_eq!((stats.hits, stats.misses), (0, 2));
+    assert_eq!(engine.cache_len(), 2);
+}
+
+#[test]
+fn place_batch_matches_sequential() {
+    let specs = ["m-topo", "m-etf", "m-sct", "single"];
+    let mk_reqs = || -> Vec<PlacementRequest> {
+        specs
+            .iter()
+            .map(|p| PlacementRequest::for_benchmark(Benchmark::Mlp, p).without_simulation())
+            .collect()
+    };
+
+    let batch_engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 30))
+        .build()
+        .unwrap();
+    let batch = batch_engine.place_batch(&mk_reqs());
+
+    let seq_engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 30))
+        .build()
+        .unwrap();
+    for (spec, b) in specs.iter().zip(batch) {
+        let b = b.unwrap_or_else(|e| panic!("{spec} in batch: {e}"));
+        let s = seq_engine
+            .place(&PlacementRequest::for_benchmark(Benchmark::Mlp, spec).without_simulation())
+            .unwrap_or_else(|e| panic!("{spec} sequential: {e}"));
+        assert_eq!(
+            b.placement.device_of, s.placement.device_of,
+            "{spec}: batch and sequential placements must agree"
+        );
+    }
+}
+
+/// Acceptance scenario: a custom placer registered by name serves a
+/// cached batch of ≥3 requests, with typed-error handling for an
+/// OOM-inducing request in the same batch.
+#[test]
+fn serves_cached_batch_with_typed_oom_handling() {
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1000))
+        .register_placer(
+            "round-robin",
+            PlacerRegistration::new(|_| {
+                Ok(Box::new(CountingRoundRobin {
+                    calls: Arc::new(AtomicUsize::new(0)),
+                }))
+            }),
+        )
+        .build()
+        .unwrap();
+
+    let small = || {
+        let mut g = OpGraph::new("small");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        for id in [a, b] {
+            g.node_mut(id).mem = MemorySpec {
+                params: 100,
+                ..Default::default()
+            };
+            g.node_mut(id).compute = 1.0;
+        }
+        g.add_edge(a, b, 10);
+        g
+    };
+
+    // Warm the cache with the first request.
+    let warm_req = PlacementRequest::new(small(), "m-etf").without_simulation();
+    let warm = engine.place(&warm_req).unwrap();
+
+    let reqs = vec![
+        warm_req.clone(),
+        PlacementRequest::new(small(), "round-robin").without_simulation(),
+        PlacementRequest::new(small(), "m-topo").without_simulation(),
+        // OOM-inducing member of the same batch.
+        PlacementRequest::new(oom_graph(), "m-etf").without_simulation(),
+    ];
+    let results = engine.place_batch(&reqs);
+    assert_eq!(results.len(), 4);
+
+    // Request 0 is served from the cache (same Arc as the warm-up).
+    let r0 = results[0].as_ref().unwrap();
+    assert!(Arc::ptr_eq(r0, &warm), "batch must reuse the cached response");
+
+    // Requests 1–2 succeed with full coverage.
+    for r in &results[1..3] {
+        let r = r.as_ref().unwrap();
+        assert_eq!(r.placement.device_of.len(), 2);
+    }
+
+    // Request 3 fails with the typed OOM, not a stringly error.
+    match &results[3] {
+        Err(BaechiError::Oom { op, deficit, .. }) => {
+            assert!(op.starts_with("op"));
+            assert!(*deficit > 0);
+        }
+        Err(e) => panic!("expected Oom, got {e}"),
+        Ok(_) => panic!("oversized graph placed unexpectedly"),
+    }
+
+    let stats = engine.cache_stats();
+    assert!(stats.hits >= 1, "cached batch member must hit: {stats:?}");
+}
+
+#[test]
+fn observer_sees_all_stages_in_order() {
+    let obs = RecordingObserver::new();
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 20))
+        .observer(obs.clone())
+        .build()
+        .unwrap();
+    engine
+        .place(&PlacementRequest::new(
+            baechi::models::linreg::linreg_graph(),
+            "m-etf",
+        ))
+        .unwrap();
+    let stages: Vec<Stage> = obs.events().iter().map(|(s, _)| *s).collect();
+    assert_eq!(
+        stages,
+        vec![Stage::Optimize, Stage::Place, Stage::Expand, Stage::Simulate]
+    );
+    for (_, st) in obs.events() {
+        assert!(st.duration >= 0.0);
+        assert_eq!(st.placer, "m-etf");
+        assert!(st.ops_in > 0);
+    }
+    // A cache hit emits no further stage events.
+    engine
+        .place(&PlacementRequest::new(
+            baechi::models::linreg::linreg_graph(),
+            "m-etf",
+        ))
+        .unwrap();
+    assert_eq!(obs.events().len(), 4, "hit must not re-run stages");
+}
+
+#[test]
+fn expert_benchmark_flows_through_requests() {
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(4, 64 << 30))
+        .build()
+        .unwrap();
+    // for_benchmark carries the identity the expert needs.
+    let ok = engine.place(&PlacementRequest::for_benchmark(
+        Benchmark::Transformer { batch: 8 },
+        "expert",
+    ));
+    assert!(ok.is_ok(), "{:?}", ok.err());
+    // A bare graph request without the identity is a typed error.
+    let g = Benchmark::Transformer { batch: 8 }.graph();
+    match engine.place(&PlacementRequest::new(g, "expert")) {
+        Err(BaechiError::InvalidRequest(msg)) => {
+            assert!(msg.contains("benchmark"), "{msg}")
+        }
+        Ok(_) => panic!("expert without benchmark must fail"),
+        Err(e) => panic!("expected InvalidRequest, got {e}"),
+    }
+}

@@ -9,7 +9,7 @@ use baechi::exec::trainer::{
 };
 use baechi::exec::HostTensor;
 use baechi::runtime::artifact::{literal_f32, ArtifactRegistry};
-use baechi::runtime::Runtime;
+use baechi::runtime::{xla, Runtime};
 
 fn registry() -> Option<ArtifactRegistry> {
     let dir = ArtifactRegistry::default_dir();
