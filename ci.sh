@@ -15,6 +15,9 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> cargo bench --no-run"
+cargo bench --no-run
+
 if [[ "$fast" == 0 ]]; then
     echo "==> cargo fmt --check"
     cargo fmt --check

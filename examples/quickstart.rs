@@ -16,7 +16,7 @@ use baechi::BaechiError;
 
 fn main() -> baechi::Result<()> {
     // Abstract units: 1 byte moves in 1 time-unit.
-    let unit_comm = CommModel::new(0.0, 1.0);
+    let unit_comm = CommModel::new(0.0, 1.0).unwrap();
 
     // ---- build one long-lived engine per target cluster ---------------
     // Figure-1 setting: 3 devices × 4 memory units (+ transfer-buffer

@@ -10,7 +10,7 @@ use baechi::util::table::Table;
 
 fn main() {
     let g = fig1_graph();
-    let unit_comm = CommModel::new(0.0, 1.0);
+    let unit_comm = CommModel::new(0.0, 1.0).unwrap();
     let cap = 4 * FIG1_MEM_UNIT + 12; // 4 units + transfer-buffer headroom
     let free = Cluster::homogeneous(3, 1_000_000 * FIG1_MEM_UNIT, unit_comm);
     let capped = Cluster::homogeneous(3, cap, unit_comm);

@@ -43,7 +43,7 @@ fn main() {
         for placer in [PlacerKind::MEtf, PlacerKind::MSct] {
             let cfg = BaechiConfig::paper_default(b, placer).with_memory_fraction(fraction);
             let graph = b.graph();
-            let cluster = cfg.cluster();
+            let cluster = cfg.cluster().expect("cluster");
             let opt = optimize(&graph, &cfg.opt);
             let p = placer
                 .build(b)

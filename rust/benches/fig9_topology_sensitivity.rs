@@ -1,0 +1,121 @@
+//! Figure 9 (extension): topology sensitivity — sweep the intra-island /
+//! inter-island bandwidth ratio of a 2×2 NVLink-islands cluster and
+//! watch the placers shift cut edges onto the fast links.
+//!
+//! For each model × placer the uniform-PCIe placement is the baseline;
+//! each ratio re-places against `nvlink_islands(4, 2)` whose intra
+//! links are `ratio`× the PCIe bandwidth (and `1/ratio`× the latency).
+//! Reported per row: simulated step time under the uniform placement vs
+//! the topology-aware one, how many ops moved relative to the uniform
+//! placement, and the fraction of cut (cross-device) traffic that stays
+//! on fast intra-island links.
+//!
+//! Expected shape: at ratio 1 the islands cluster is cost-equivalent to
+//! uniform and placements barely move; from a ≥4× gap m-SCT visibly
+//! re-places onto islands and the cross-island traffic fraction drops.
+
+use baechi::engine::{PlacementEngine, PlacementRequest};
+use baechi::models::Benchmark;
+use baechi::profile::{Cluster, CommModel};
+use baechi::topology::Topology;
+use baechi::util::table::Table;
+
+fn main() {
+    let inter = CommModel::pcie_via_host();
+    let benchmarks = [
+        Benchmark::Transformer { batch: 8 },
+        Benchmark::Gnmt {
+            batch: 32,
+            seq_len: 10,
+        },
+    ];
+    let placers = ["m-etf", "m-sct"];
+    let ratios = [1.0, 2.0, 4.0, 8.0, 16.0];
+    let mem = 8u64 << 30;
+
+    let mut t = Table::new(
+        "Fig. 9 — m-ETF/m-SCT vs intra/inter island bandwidth ratio (4 devices, islands of 2)",
+        &[
+            "model",
+            "placer",
+            "ratio",
+            "step (uniform)",
+            "step (islands)",
+            "ops moved",
+            "intra-island cut",
+        ],
+    );
+    let mut msct_moved_at_gap = false;
+    for b in benchmarks {
+        let engine = PlacementEngine::builder()
+            .cluster(Cluster::homogeneous(4, mem, inter))
+            .build()
+            .expect("engine");
+        let graph = b.graph();
+        for placer in placers {
+            let base = engine
+                .place(&PlacementRequest::for_benchmark(b, placer))
+                .expect("uniform placement");
+            let base_step = base.sim.as_ref().expect("sim").makespan;
+            for ratio in ratios {
+                let intra =
+                    CommModel::new(inter.latency / ratio, inter.bandwidth * ratio)
+                        .expect("intra model");
+                let topo = Topology::nvlink_islands(4, 2, intra, inter).expect("topology");
+                let resp = engine
+                    .place(
+                        &PlacementRequest::for_benchmark(b, placer)
+                            .with_topology(topo.clone()),
+                    )
+                    .expect("islands placement");
+                let moved = resp
+                    .placement
+                    .device_of
+                    .iter()
+                    .filter(|&(id, d)| base.placement.device_of.get(id) != Some(d))
+                    .count();
+                let (mut cut_intra, mut cut_cross) = (0u64, 0u64);
+                for e in graph.edges() {
+                    let ds = resp.placement.device_of[&e.src];
+                    let dd = resp.placement.device_of[&e.dst];
+                    if ds != dd {
+                        if topo.is_cross_island(ds.0, dd.0) {
+                            cut_cross += e.bytes;
+                        } else {
+                            cut_intra += e.bytes;
+                        }
+                    }
+                }
+                let cut = cut_intra + cut_cross;
+                let intra_frac = if cut > 0 {
+                    cut_intra as f64 / cut as f64
+                } else {
+                    1.0
+                };
+                if placer == "m-sct" && ratio >= 4.0 && moved > 0 {
+                    msct_moved_at_gap = true;
+                }
+                t.row(&[
+                    b.name(),
+                    placer.to_string(),
+                    format!("{ratio}x"),
+                    format!("{:.4}", base_step),
+                    format!(
+                        "{:.4}",
+                        resp.sim.as_ref().expect("sim").makespan
+                    ),
+                    moved.to_string(),
+                    format!("{:.0}%", intra_frac * 100.0),
+                ]);
+            }
+        }
+    }
+    t.print();
+    assert!(
+        msct_moved_at_gap,
+        "m-SCT should re-place at a ≥4x inter-island bandwidth gap"
+    );
+    println!(
+        "takeaway: a >=4x island bandwidth gap re-routes m-SCT's cut edges onto NVLink."
+    );
+}

@@ -70,7 +70,7 @@ fn main() {
         // RL baseline on the optimized graph (sane action space).
         let g = b.graph();
         let opt = optimize(&g, &OptConfig::default());
-        let cluster = cfg.cluster();
+        let cluster = cfg.cluster().expect("cluster");
         let t0 = std::time::Instant::now();
         let rl = RlPlacer::new(RlConfig {
             episodes: MEASURED_EPISODES,

@@ -56,7 +56,7 @@ mod tests {
     #[test]
     fn place_fixed_roundrobin() {
         let g = crate::models::linreg::linreg_graph();
-        let cluster = Cluster::homogeneous(2, 10, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(2, 10, CommModel::new(0.0, 1.0).unwrap());
         let p = place_fixed("rr", &g, &cluster, |id| DeviceId(id.0 % 2)).unwrap();
         assert_eq!(p.device_of.len(), g.len());
         assert!(p.predicted_makespan > 0.0);

@@ -183,7 +183,7 @@ mod tests {
         // Cluster where a random placement usually works; RL must return
         // a feasible (non-OOM) placement.
         let g = crate::models::linreg::linreg_graph();
-        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0).unwrap());
         let rl = RlPlacer::new(RlConfig {
             episodes: 30,
             ..Default::default()
@@ -196,7 +196,7 @@ mod tests {
     #[test]
     fn placement_cost_scales_with_episodes() {
         let g = crate::models::linreg::linreg_graph();
-        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0).unwrap());
         let short = RlPlacer::new(RlConfig {
             episodes: 10,
             ..Default::default()

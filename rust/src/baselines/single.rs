@@ -29,7 +29,7 @@ mod tests {
     #[test]
     fn makespan_equals_total_compute() {
         let g = crate::models::linreg::linreg_graph();
-        let cluster = Cluster::homogeneous(4, 1_000, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(4, 1_000, CommModel::new(0.0, 1.0).unwrap());
         let p = SingleDevice.place(&g, &cluster).unwrap();
         assert_eq!(p.devices_used(), 1);
         assert!((p.predicted_makespan - g.total_compute()).abs() < 1e-9);
@@ -38,7 +38,7 @@ mod tests {
     #[test]
     fn sim_agrees_no_transfers() {
         let g = crate::models::linreg::linreg_graph();
-        let cluster = Cluster::homogeneous(4, 1_000, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(4, 1_000, CommModel::new(0.0, 1.0).unwrap());
         let p = SingleDevice.place(&g, &cluster).unwrap();
         let r = simulate(&g, &cluster, &p.device_of, SimConfig::default());
         assert!(r.ok());

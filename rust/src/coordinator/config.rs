@@ -14,6 +14,7 @@ use crate::optimizer::OptConfig;
 use crate::placer::Placer;
 use crate::profile::{Cluster, CommModel};
 use crate::sim::{Framework, SimConfig};
+use crate::topology::{json as topo_json, Topology};
 
 /// Selection of a built-in placement algorithm.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -94,6 +95,113 @@ impl PlacerKind {
     }
 }
 
+/// How the run's interconnect topology is obtained (`--topology`).
+///
+/// * `uniform` — the paper's single-model cluster (default);
+/// * `nvlink-islands:<island>[:<ratio>]` — NVLink islands of `<island>`
+///   devices over the configured PCIe model, intra-island bandwidth
+///   `<ratio>`× the inter model (default 8×);
+/// * `two-tier:<nodes>[:<ratio>]` — `<nodes>` machines whose NIC trunks
+///   run at `1/<ratio>` of the intra model (default 4×);
+/// * `<path>.json` — arbitrary link graph, schema in
+///   [`crate::topology::json`].
+///
+/// Malformed specs are [`BaechiError::InvalidRequest`], never panics.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopologySpec {
+    Uniform,
+    NvlinkIslands { island: usize, ratio: f64 },
+    TwoTier { nodes: usize, ratio: f64 },
+    File(String),
+}
+
+impl TopologySpec {
+    pub fn parse(s: &str) -> crate::Result<TopologySpec> {
+        fn tail(s: &str, what: &str) -> crate::Result<(usize, f64)> {
+            let mut parts = s.split(':');
+            let count: usize = parts
+                .next()
+                .and_then(|p| p.parse().ok())
+                .filter(|&c| c > 0)
+                .ok_or_else(|| {
+                    BaechiError::invalid(format!("topology: '{s}' needs a positive {what}"))
+                })?;
+            let ratio: f64 = match parts.next() {
+                None => return Ok((count, 0.0)), // caller's default
+                Some(r) => r.parse().ok().filter(|r| *r >= 1.0).ok_or_else(|| {
+                    BaechiError::invalid(format!("topology: ratio in '{s}' must be ≥ 1"))
+                })?,
+            };
+            if parts.next().is_some() {
+                return Err(BaechiError::invalid(format!(
+                    "topology: too many ':' fields in '{s}'"
+                )));
+            }
+            Ok((count, ratio))
+        }
+        match s {
+            "uniform" => Ok(TopologySpec::Uniform),
+            _ if s.ends_with(".json") => Ok(TopologySpec::File(s.to_string())),
+            _ => {
+                if let Some(rest) = s.strip_prefix("nvlink-islands:") {
+                    let (island, ratio) = tail(rest, "island size")?;
+                    Ok(TopologySpec::NvlinkIslands {
+                        island,
+                        ratio: if ratio == 0.0 { 8.0 } else { ratio },
+                    })
+                } else if let Some(rest) = s.strip_prefix("two-tier:") {
+                    let (nodes, ratio) = tail(rest, "machine count")?;
+                    Ok(TopologySpec::TwoTier {
+                        nodes,
+                        ratio: if ratio == 0.0 { 4.0 } else { ratio },
+                    })
+                } else {
+                    Err(BaechiError::invalid(format!(
+                        "unknown topology '{s}' \
+                         (uniform | nvlink-islands:<island>[:<ratio>] | \
+                         two-tier:<nodes>[:<ratio>] | <path>.json)"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Build the topology for an `n`-device cluster whose baseline
+    /// interconnect is `comm`. `Ok(None)` keeps the cluster's default
+    /// uniform topology.
+    pub fn build(&self, n: usize, comm: CommModel) -> crate::Result<Option<Topology>> {
+        match self {
+            TopologySpec::Uniform => Ok(None),
+            TopologySpec::NvlinkIslands { island, ratio } => {
+                let intra = CommModel::new(comm.latency / ratio, comm.bandwidth * ratio)?;
+                Topology::nvlink_islands(n, *island, intra, comm).map(Some)
+            }
+            TopologySpec::TwoTier { nodes, ratio } => {
+                if n % nodes != 0 {
+                    return Err(BaechiError::invalid(format!(
+                        "two-tier topology: {n} devices do not split into {nodes} machines"
+                    )));
+                }
+                let inter = CommModel::new(comm.latency * ratio, comm.bandwidth / ratio)?;
+                Topology::two_tier(*nodes, n / nodes, comm, inter).map(Some)
+            }
+            TopologySpec::File(path) => {
+                let text = std::fs::read_to_string(path).map_err(|e| {
+                    BaechiError::invalid(format!("topology file {path}: {e}"))
+                })?;
+                let t = topo_json::from_json_str(&text)?;
+                if t.n() != n {
+                    return Err(BaechiError::invalid(format!(
+                        "topology file {path} describes {} devices, the run uses {n}",
+                        t.n()
+                    )));
+                }
+                Ok(Some(t))
+            }
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Debug, Clone)]
 pub struct BaechiConfig {
@@ -108,6 +216,9 @@ pub struct BaechiConfig {
     pub comm: CommModel,
     pub sequential_comm: bool,
     pub sim: SimConfig,
+    /// Interconnect topology (`TopologySpec::Uniform` = the paper's
+    /// single-model cluster).
+    pub topology: TopologySpec,
 }
 
 impl BaechiConfig {
@@ -138,6 +249,7 @@ impl BaechiConfig {
                 framework,
                 overlap_comm: true,
             },
+            topology: TopologySpec::Uniform,
         }
     }
 
@@ -151,10 +263,17 @@ impl BaechiConfig {
         self
     }
 
-    pub fn cluster(&self) -> Cluster {
-        Cluster::homogeneous(self.devices, self.device_memory, self.comm)
+    /// Build the cluster this config describes. Fails with a typed
+    /// [`BaechiError::InvalidRequest`] when the topology spec is
+    /// malformed or does not match the device count.
+    pub fn cluster(&self) -> crate::Result<Cluster> {
+        let base = Cluster::homogeneous(self.devices, self.device_memory, self.comm)
             .with_memory_fraction(self.memory_fraction)
-            .with_sequential_comm(self.sequential_comm)
+            .with_sequential_comm(self.sequential_comm);
+        match self.topology.build(self.devices, self.comm)? {
+            Some(t) => base.with_topology(t),
+            None => Ok(base),
+        }
     }
 }
 
@@ -217,9 +336,74 @@ mod tests {
     fn paper_default_cluster() {
         let c = BaechiConfig::paper_default(Benchmark::LinReg, PlacerKind::MEtf)
             .with_memory_fraction(0.3)
-            .cluster();
+            .cluster()
+            .unwrap();
         assert_eq!(c.n(), 4);
         assert_eq!(c.devices[0].memory, (8u64 << 30) * 3 / 10);
         assert!(c.sequential_comm);
+        assert!(c.topology().is_uniform());
+    }
+
+    #[test]
+    fn topology_spec_parse_and_build() {
+        assert_eq!(TopologySpec::parse("uniform").unwrap(), TopologySpec::Uniform);
+        assert_eq!(
+            TopologySpec::parse("nvlink-islands:2").unwrap(),
+            TopologySpec::NvlinkIslands { island: 2, ratio: 8.0 }
+        );
+        assert_eq!(
+            TopologySpec::parse("nvlink-islands:2:16").unwrap(),
+            TopologySpec::NvlinkIslands { island: 2, ratio: 16.0 }
+        );
+        assert_eq!(
+            TopologySpec::parse("two-tier:2").unwrap(),
+            TopologySpec::TwoTier { nodes: 2, ratio: 4.0 }
+        );
+        assert_eq!(
+            TopologySpec::parse("cluster.json").unwrap(),
+            TopologySpec::File("cluster.json".into())
+        );
+        for bad in ["mesh", "nvlink-islands:0", "nvlink-islands:2:0.5", "two-tier:2:1:9"] {
+            assert!(
+                matches!(TopologySpec::parse(bad), Err(BaechiError::InvalidRequest(_))),
+                "{bad}"
+            );
+        }
+
+        let comm = CommModel::pcie_via_host();
+        let t = TopologySpec::parse("nvlink-islands:2")
+            .unwrap()
+            .build(4, comm)
+            .unwrap()
+            .unwrap();
+        assert_eq!(t.n_islands(), 2);
+        // Intra-island is 8× the inter bandwidth.
+        assert!((t.pair(0, 1).bandwidth - comm.bandwidth * 8.0).abs() < 1.0);
+        assert!(TopologySpec::Uniform.build(4, comm).unwrap().is_none());
+        // Two-tier device count must divide.
+        assert!(matches!(
+            TopologySpec::TwoTier { nodes: 3, ratio: 4.0 }.build(4, comm),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+        // Missing file is typed, not a panic.
+        assert!(matches!(
+            TopologySpec::File("/nonexistent/topo.json".into()).build(4, comm),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn config_cluster_applies_topology() {
+        let mut cfg = BaechiConfig::paper_default(Benchmark::LinReg, PlacerKind::MEtf);
+        cfg.topology = TopologySpec::NvlinkIslands { island: 2, ratio: 8.0 };
+        let c = cfg.cluster().unwrap();
+        assert!(!c.topology().is_uniform());
+        assert_eq!(c.topology().n_islands(), 2);
+        // 6 devices split into 3 machines; 4 do not.
+        cfg.devices = 6;
+        cfg.topology = TopologySpec::TwoTier { nodes: 3, ratio: 4.0 };
+        assert!(cfg.cluster().is_ok());
+        cfg.devices = 4;
+        assert!(matches!(cfg.cluster(), Err(BaechiError::InvalidRequest(_))));
     }
 }

@@ -11,8 +11,10 @@
 
 use super::config::BaechiConfig;
 use crate::engine::{PlacementEngine, PlacementRequest};
+use crate::graph::{DeviceId, NodeId};
 use crate::sim::SimResult;
 use crate::util::json::Json;
+use std::collections::BTreeMap;
 
 /// Everything a run produces (one row of the paper's tables).
 #[derive(Debug, Clone)]
@@ -34,6 +36,10 @@ pub struct RunReport {
     pub peak_memory: Vec<u64>,
     pub devices: usize,
     pub device_capacity: u64,
+    /// The expanded placement itself (for DOT export and auditing).
+    pub device_of: BTreeMap<NodeId, DeviceId>,
+    /// Human summary of the cluster topology the run placed against.
+    pub topology: String,
 }
 
 impl RunReport {
@@ -45,6 +51,7 @@ impl RunReport {
         let mut j = Json::obj();
         j.set("benchmark", self.benchmark.as_str())
             .set("placer", self.placer.as_str())
+            .set("topology", self.topology.as_str())
             .set("original_ops", self.original_ops)
             .set("placed_ops", self.placed_ops)
             .set("placement_time_s", self.placement_time)
@@ -68,7 +75,7 @@ impl RunReport {
 /// engine construction path.
 pub fn engine_for(cfg: &BaechiConfig) -> crate::Result<PlacementEngine> {
     PlacementEngine::builder()
-        .cluster(cfg.cluster())
+        .cluster(cfg.cluster()?)
         .optimizer(cfg.opt)
         .sim(cfg.sim)
         .build()
@@ -100,6 +107,8 @@ pub fn run(cfg: &BaechiConfig) -> crate::Result<RunReport> {
         sim,
         devices: cfg.devices,
         device_capacity: engine.cluster().devices[0].memory,
+        device_of: resp.placement.device_of.clone(),
+        topology: engine.cluster().effective_topology().describe(),
     })
 }
 

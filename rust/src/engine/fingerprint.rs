@@ -11,6 +11,7 @@ use crate::graph::OpGraph;
 use crate::optimizer::OptConfig;
 use crate::profile::Cluster;
 use crate::sim::{Framework, SimConfig};
+use crate::topology::Topology;
 
 /// Incremental FNV-1a 64-bit hasher.
 pub struct Fnv(u64);
@@ -103,7 +104,7 @@ pub fn graph_fingerprint(g: &OpGraph) -> u64 {
     h.finish()
 }
 
-/// Fingerprint of the cluster spec (devices + comm model).
+/// Fingerprint of the cluster spec (devices + comm model + topology).
 pub fn cluster_fingerprint(c: &Cluster) -> u64 {
     let mut h = Fnv::new();
     h.write_usize(c.n());
@@ -114,7 +115,38 @@ pub fn cluster_fingerprint(c: &Cluster) -> u64 {
     h.write_f64(c.comm.latency);
     h.write_f64(c.comm.bandwidth);
     h.write_bool(c.sequential_comm);
+    write_topology(&mut h, &c.effective_topology());
     h.finish()
+}
+
+/// Fingerprint of a topology alone (links, islands, speeds determine the
+/// pair matrix and contention paths, so hashing them covers everything
+/// placement-relevant).
+pub fn topology_fingerprint(t: &Topology) -> u64 {
+    let mut h = Fnv::new();
+    write_topology(&mut h, t);
+    h.finish()
+}
+
+fn write_topology(h: &mut Fnv, t: &Topology) {
+    h.write_usize(t.n());
+    h.write_bool(t.is_uniform());
+    if let Some(m) = t.uniform_model() {
+        h.write_f64(m.latency);
+        h.write_f64(m.bandwidth);
+    }
+    for d in 0..t.n() {
+        h.write_f64(t.speed(d));
+        h.write_usize(t.island_of(d));
+    }
+    h.write_usize(t.links().len());
+    for l in t.links() {
+        h.write_usize(l.a);
+        h.write_usize(l.b);
+        h.write_str(l.kind.name());
+        h.write_f64(l.comm.latency);
+        h.write_f64(l.comm.bandwidth);
+    }
 }
 
 /// Fingerprint of the effective optimizer configuration.
@@ -158,10 +190,41 @@ mod tests {
 
     #[test]
     fn cluster_fingerprint_sensitive_to_memory() {
-        let c1 = Cluster::homogeneous(4, 1000, CommModel::new(0.0, 1.0));
-        let c2 = Cluster::homogeneous(4, 2000, CommModel::new(0.0, 1.0));
+        let c1 = Cluster::homogeneous(4, 1000, CommModel::new(0.0, 1.0).unwrap());
+        let c2 = Cluster::homogeneous(4, 2000, CommModel::new(0.0, 1.0).unwrap());
         assert_ne!(cluster_fingerprint(&c1), cluster_fingerprint(&c2));
         assert_eq!(cluster_fingerprint(&c1), cluster_fingerprint(&c1.clone()));
+    }
+
+    #[test]
+    fn cluster_fingerprint_sensitive_to_topology() {
+        let comm = CommModel::pcie_via_host();
+        let uniform = Cluster::homogeneous(4, 1000, comm);
+        let islands = Cluster::homogeneous(4, 1000, comm)
+            .with_topology(
+                Topology::nvlink_islands(4, 2, CommModel::nvlink_like(), comm).unwrap(),
+            )
+            .unwrap();
+        assert_ne!(cluster_fingerprint(&uniform), cluster_fingerprint(&islands));
+        // Same topology → same fingerprint.
+        let islands2 = Cluster::homogeneous(4, 1000, comm)
+            .with_topology(
+                Topology::nvlink_islands(4, 2, CommModel::nvlink_like(), comm).unwrap(),
+            )
+            .unwrap();
+        assert_eq!(cluster_fingerprint(&islands), cluster_fingerprint(&islands2));
+        // Bandwidth of one link matters.
+        let slower = Cluster::homogeneous(4, 1000, comm)
+            .with_topology(
+                Topology::nvlink_islands(4, 2, CommModel::new(5e-6, 25e9).unwrap(), comm)
+                    .unwrap(),
+            )
+            .unwrap();
+        assert_ne!(cluster_fingerprint(&islands), cluster_fingerprint(&slower));
+        assert_ne!(
+            topology_fingerprint(islands.topology()),
+            topology_fingerprint(uniform.topology())
+        );
     }
 
     #[test]

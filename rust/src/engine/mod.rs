@@ -46,6 +46,8 @@ use crate::optimizer::{self, OptConfig, OptStats};
 use crate::placer::Placement;
 use crate::profile::Cluster;
 use crate::sim::{self, SimConfig, SimResult};
+use crate::topology::Topology;
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -61,6 +63,10 @@ pub struct PlacementRequest {
     pub benchmark: Option<Benchmark>,
     /// Per-request optimizer override (None = the engine's default).
     pub opt: Option<OptConfig>,
+    /// Per-request interconnect-topology override (None = the engine
+    /// cluster's own topology). Part of the cache fingerprint: requests
+    /// differing only in topology never share a cached plan.
+    pub topology: Option<Topology>,
     /// Evaluate the expanded placement in the execution simulator.
     pub simulate: bool,
 }
@@ -72,6 +78,7 @@ impl PlacementRequest {
             placer: placer.to_string(),
             benchmark: None,
             opt: None,
+            topology: None,
             simulate: true,
         }
     }
@@ -88,6 +95,13 @@ impl PlacementRequest {
     /// Override the optimizer configuration for this request.
     pub fn with_opt(mut self, opt: OptConfig) -> PlacementRequest {
         self.opt = Some(opt);
+        self
+    }
+
+    /// Place against an explicit interconnect topology instead of the
+    /// engine cluster's (must cover the same device count).
+    pub fn with_topology(mut self, topology: Topology) -> PlacementRequest {
+        self.topology = Some(topology);
         self
     }
 
@@ -208,6 +222,7 @@ impl PlacementEngineBuilder {
         }
         Ok(PlacementEngine {
             cluster_fp: fingerprint::cluster_fingerprint(&cluster),
+            topo_fp: fingerprint::topology_fingerprint(&cluster.effective_topology()),
             sim_fp: fingerprint::sim_fingerprint(&self.sim),
             cluster,
             opt: self.opt,
@@ -231,6 +246,9 @@ pub struct PlacementEngine {
     cache: Mutex<BTreeMap<CacheKey, Arc<PlacementResponse>>>,
     stats: Mutex<CacheStats>,
     cluster_fp: u64,
+    /// Fingerprint of the engine cluster's own topology, to recognize
+    /// per-request overrides that change nothing.
+    topo_fp: u64,
     sim_fp: u64,
 }
 
@@ -270,28 +288,54 @@ impl PlacementEngine {
         }
     }
 
-    /// The optimizer config a request resolves to.
-    fn effective_opt(&self, req: &PlacementRequest, optimize_graph: bool) -> OptConfig {
+    /// The optimizer config a request resolves to. `comm` is the
+    /// representative model of the cluster the request will be served
+    /// against (the topology override's, when present).
+    fn effective_opt(
+        &self,
+        req: &PlacementRequest,
+        comm: crate::profile::CommModel,
+        optimize_graph: bool,
+    ) -> OptConfig {
         if !optimize_graph {
             return OptConfig::none();
         }
         let mut o = req.opt.unwrap_or(self.opt);
         if o.fusion && o.latency_equiv_bytes == 0 {
             // Price multi-tensor fused edges consistently with the ES.
-            o.latency_equiv_bytes =
-                (self.cluster.comm.latency * self.cluster.comm.bandwidth) as u64;
+            o.latency_equiv_bytes = (comm.latency * comm.bandwidth) as u64;
         }
         o
     }
 
     /// Serve one request. Identical requests (same graph, cluster,
-    /// optimizer config, and placer spec) are answered from the cache.
+    /// topology, optimizer config, and placer spec) are answered from
+    /// the cache.
     pub fn place(&self, req: &PlacementRequest) -> crate::Result<Arc<PlacementResponse>> {
         let resolved = self.registry.resolve(&req.placer, req.benchmark)?;
-        let ocfg = self.effective_opt(req, resolved.optimize_graph);
+        // Per-request topology override: fold the topology into the
+        // cluster fingerprint so the cache cannot serve a stale plan.
+        // An override identical to the engine's own topology is served
+        // exactly like a plain request (same cache entry), and the
+        // cluster is only rebuilt on a miss — a mismatched override can
+        // never be cached, so hits need no re-validation.
+        let override_t: Option<(&Topology, u64)> = req.topology.as_ref().and_then(|t| {
+            let fp = fingerprint::topology_fingerprint(t);
+            (fp != self.topo_fp).then_some((t, fp))
+        });
+        let (cluster_fp, comm) = match override_t {
+            Some((t, fp)) => {
+                let mut h = fingerprint::Fnv::new();
+                h.write_u64(self.cluster_fp);
+                h.write_u64(fp);
+                (h.finish(), t.representative())
+            }
+            None => (self.cluster_fp, self.cluster.comm),
+        };
+        let ocfg = self.effective_opt(req, comm, resolved.optimize_graph);
         let key = CacheKey {
             graph: fingerprint::graph_fingerprint(&req.graph),
-            cluster: self.cluster_fp,
+            cluster: cluster_fp,
             opt: fingerprint::opt_fingerprint(&ocfg),
             sim: if req.simulate { self.sim_fp } else { 0 },
             placer: req.placer.clone(),
@@ -302,6 +346,10 @@ impl PlacementEngine {
             return Ok(hit);
         }
         self.stats.lock().unwrap().misses += 1;
+        let cluster: Cow<'_, Cluster> = match override_t {
+            Some((t, _)) => Cow::Owned(self.cluster.clone().with_topology(t.clone())?),
+            None => Cow::Borrowed(&self.cluster),
+        };
 
         // Optimize (§3.1).
         let t0 = Instant::now();
@@ -318,7 +366,7 @@ impl PlacementEngine {
 
         // Place.
         let t0 = Instant::now();
-        let meta = resolved.placer.place(&opt.graph, &self.cluster)?;
+        let meta = resolved.placer.place(&opt.graph, &cluster)?;
         self.notify(
             Stage::Place,
             &StageStats {
@@ -349,7 +397,7 @@ impl PlacementEngine {
         // Simulate (optional).
         let sim = if req.simulate {
             let t0 = Instant::now();
-            let s = sim::simulate(&req.graph, &self.cluster, &placement.device_of, self.sim);
+            let s = sim::simulate(&req.graph, &cluster, &placement.device_of, self.sim);
             self.notify(
                 Stage::Simulate,
                 &StageStats {
@@ -412,7 +460,7 @@ mod tests {
 
     fn engine(n: usize, mem: u64) -> PlacementEngine {
         PlacementEngine::builder()
-            .cluster(Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0)))
+            .cluster(Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0).unwrap()))
             .build()
             .unwrap()
     }

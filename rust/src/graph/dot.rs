@@ -1,6 +1,13 @@
 //! Graphviz DOT export for debugging placements.
+//!
+//! [`OpGraph::to_dot`] colors nodes by device;
+//! [`OpGraph::to_dot_topology`] additionally groups devices into their
+//! topology islands (dashed subgraph boxes) and highlights cross-island
+//! edges in red, so a placement's expensive cut edges are visually
+//! auditable.
 
 use super::{DeviceId, NodeId, OpGraph};
+use crate::topology::Topology;
 use std::collections::BTreeMap;
 
 /// Color palette cycled per device.
@@ -34,6 +41,74 @@ impl OpGraph {
         s.push_str("}\n");
         s
     }
+
+    /// Render a placed graph with device clusters grouped by topology
+    /// island and cross-island edges highlighted.
+    pub fn to_dot_topology(
+        &self,
+        placement: &BTreeMap<NodeId, DeviceId>,
+        topo: &Topology,
+    ) -> String {
+        let island_of = |id: NodeId| -> Option<usize> {
+            placement
+                .get(&id)
+                .filter(|d| d.0 < topo.n())
+                .map(|d| topo.island_of(d.0))
+        };
+        let mut s = String::from(
+            "digraph G {\n  rankdir=TB;\n  node [shape=box, style=filled];\n",
+        );
+        for isl in 0..topo.n_islands() {
+            s.push_str(&format!(
+                "  subgraph cluster_{isl} {{\n    label=\"island {isl}\";\n    style=dashed;\n"
+            ));
+            for n in self.iter_nodes() {
+                if island_of(n.id) != Some(isl) {
+                    continue;
+                }
+                let d = placement[&n.id];
+                s.push_str(&format!(
+                    "    {} [label=\"{}\\n{} · {:.2}ms\", fillcolor={}];\n",
+                    n.id.0,
+                    n.name.replace('"', "'"),
+                    d,
+                    n.compute * 1e3,
+                    COLORS[d.0 % COLORS.len()]
+                ));
+            }
+            s.push_str("  }\n");
+        }
+        // Unplaced (or out-of-range) nodes sit outside every island.
+        for n in self.iter_nodes() {
+            if island_of(n.id).is_none() {
+                s.push_str(&format!(
+                    "  {} [label=\"{}\\n{:.2}ms\", fillcolor=white];\n",
+                    n.id.0,
+                    n.name.replace('"', "'"),
+                    n.compute * 1e3
+                ));
+            }
+        }
+        for e in self.edges() {
+            let cross = match (island_of(e.src), island_of(e.dst)) {
+                (Some(a), Some(b)) => a != b,
+                _ => false,
+            };
+            if cross {
+                s.push_str(&format!(
+                    "  {} -> {} [label=\"{}\", color=red, penwidth=2];\n",
+                    e.src.0, e.dst.0, e.bytes
+                ));
+            } else {
+                s.push_str(&format!(
+                    "  {} -> {} [label=\"{}\"];\n",
+                    e.src.0, e.dst.0, e.bytes
+                ));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
 }
 
 #[cfg(test)]
@@ -56,5 +131,39 @@ mod tests {
         assert!(dot.contains("lightblue"));
         assert!(dot.contains("lightsalmon"));
         assert!(dot.contains("label=\"42\""));
+    }
+
+    #[test]
+    fn topology_dot_groups_islands_and_flags_cut_edges() {
+        use crate::profile::CommModel;
+        use crate::topology::Topology;
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("alpha", OpKind::Input);
+        let b = g.add_node("beta", OpKind::MatMul);
+        let c = g.add_node("gamma", OpKind::MatMul);
+        g.add_edge(a, b, 7); // intra-island
+        g.add_edge(b, c, 42); // cross-island
+        let topo = Topology::nvlink_islands(
+            4,
+            2,
+            CommModel::nvlink_like(),
+            CommModel::pcie_via_host(),
+        )
+        .unwrap();
+        let mut p = BTreeMap::new();
+        p.insert(a, DeviceId(0));
+        p.insert(b, DeviceId(1));
+        p.insert(c, DeviceId(2));
+        let dot = g.to_dot_topology(&p, &topo);
+        assert!(dot.contains("subgraph cluster_0"));
+        assert!(dot.contains("subgraph cluster_1"));
+        assert!(dot.contains("label=\"island 1\""));
+        // The cross-island edge is highlighted; the intra one is not.
+        assert!(dot.contains("1 -> 2 [label=\"42\", color=red, penwidth=2]"));
+        assert!(dot.contains("0 -> 1 [label=\"7\"]"));
+        // Unplaced nodes render outside the clusters.
+        let partial: BTreeMap<_, _> = [(a, DeviceId(0))].into_iter().collect();
+        let dot2 = g.to_dot_topology(&partial, &topo);
+        assert!(dot2.contains("fillcolor=white"));
     }
 }

@@ -49,6 +49,10 @@
 //! * [`models`] — synthetic profiled-graph generators matching the paper's
 //!   benchmarks (Inception-V3, GNMT, Transformer) plus small real models.
 //! * [`profile`] — device specs, communication cost model, perturbation.
+//! * [`topology`] — heterogeneous clusters: typed interconnect links
+//!   (NVLink / PCIe / NIC), all-pairs effective comm costs, per-link
+//!   contention queues, island partitions, JSON specs. Uniform
+//!   topologies reproduce the paper's single-model cluster exactly.
 //! * [`optimizer`] — colocation / co-placement / cycle-safe fusion /
 //!   forward-only placement (paper §3.1).
 //! * [`lp`] — dense interior-point LP solver + the SCT favorite-child LP.
@@ -76,6 +80,7 @@ pub mod placer;
 pub mod profile;
 pub mod runtime;
 pub mod sim;
+pub mod topology;
 pub mod util;
 
 pub use error::BaechiError;

@@ -242,7 +242,7 @@ mod tests {
         }
         g.add_edge(a, b, 1000);
         g.add_edge(b, c, 1000);
-        let comm = CommModel::new(0.0, 1e3); // 1 s per edge (SCT-ish ρ=1)
+        let comm = CommModel::new(0.0, 1e3).unwrap(); // 1 s per edge (SCT-ish ρ=1)
         let fav = lp_favorites(&g, &comm).unwrap();
         assert!(fav.used_lp);
         assert_eq!(fav.fav_child[a.0], Some(b));
@@ -263,7 +263,7 @@ mod tests {
         g.node_mut(c).compute = 1.0;
         g.add_edge(a, b, 1000);
         g.add_edge(a, c, 1000);
-        let comm = CommModel::new(0.0, 1e3);
+        let comm = CommModel::new(0.0, 1e3).unwrap();
         let fav = lp_favorites(&g, &comm).unwrap();
         let chosen = fav.fav_child[a.0].expect("one favorite");
         assert_eq!(chosen, b, "LP should favor the critical-path child");
@@ -285,7 +285,7 @@ mod tests {
         g.add_edge(a, c, 100);
         g.add_edge(b, c, 200);
         g.add_edge(a, d, 50);
-        let comm = CommModel::new(0.0, 1e3);
+        let comm = CommModel::new(0.0, 1e3).unwrap();
         let fav = heuristic_favorites(&g, &comm);
         // b→c is heaviest: b's favorite child = c; then a can't take c,
         // falls back to d.
@@ -302,7 +302,7 @@ mod tests {
         g.node_mut(a).compute = 1.0;
         g.node_mut(b).compute = 1.0;
         g.add_edge(a, b, 100);
-        let comm = CommModel::new(0.0, 1e3);
+        let comm = CommModel::new(0.0, 1e3).unwrap();
         let lp = favorites(&g, &comm, FavoriteMethod::Auto { edge_limit: 10 });
         assert!(lp.used_lp);
         let heur = favorites(&g, &comm, FavoriteMethod::Auto { edge_limit: 0 });

@@ -11,7 +11,7 @@
 //! `place` issues one request, `compare` serves a batch across placers
 //! (fanned over threads, with typed per-row error handling).
 
-use baechi::coordinator::{engine_for, run, BaechiConfig, PlacerKind};
+use baechi::coordinator::{engine_for, run, BaechiConfig, PlacerKind, TopologySpec};
 use baechi::engine::PlacementRequest;
 use baechi::models::Benchmark;
 use baechi::util::cli::{Args, OptSpec};
@@ -63,6 +63,20 @@ fn specs() -> Vec<OptSpec> {
             default: Some("0.05"),
         },
         OptSpec {
+            name: "topology",
+            help: "cluster interconnect: uniform | nvlink-islands:<island>[:<ratio>] | \
+                   two-tier:<nodes>[:<ratio>] | <path>.json",
+            takes_value: true,
+            default: Some("uniform"),
+        },
+        OptSpec {
+            name: "dot",
+            help: "place: write the placed graph as Graphviz DOT (islands grouped, \
+                   cross-island edges highlighted)",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
             name: "json",
             help: "emit the report as JSON",
             takes_value: false,
@@ -110,6 +124,7 @@ fn config_from(args: &Args) -> baechi::Result<BaechiConfig> {
     cfg.devices = args.get_usize("devices", 4)?;
     cfg.device_memory = (args.get_f64("memory-gb", 8.0)? * (1u64 << 30) as f64) as u64;
     cfg.memory_fraction = args.get_f64("memory-fraction", 1.0)?;
+    cfg.topology = TopologySpec::parse(&args.get_or("topology", "uniform"))?;
     if args.has("no-opt") {
         cfg.opt = baechi::optimizer::OptConfig::none();
     }
@@ -119,6 +134,16 @@ fn config_from(args: &Args) -> baechi::Result<BaechiConfig> {
 fn cmd_place(args: &Args) -> baechi::Result<()> {
     let cfg = config_from(args)?;
     let report = run(&cfg)?;
+    if let Some(path) = args.get("dot") {
+        // Only an explicit --dot pays for rebuilding the cluster (the
+        // topology's link paths) and the benchmark graph.
+        let cluster = cfg.cluster()?;
+        let graph = cfg.benchmark.graph();
+        let dot = graph.to_dot_topology(&report.device_of, cluster.effective_topology().as_ref());
+        std::fs::write(&path, dot)
+            .map_err(|e| BaechiError::io(format!("writing {path}: {e}")))?;
+        eprintln!("wrote {path}");
+    }
     if args.has("json") {
         println!("{}", report.to_json().pretty());
         return Ok(());
@@ -127,6 +152,7 @@ fn cmd_place(args: &Args) -> baechi::Result<()> {
         &format!("placement: {} via {}", report.benchmark, report.placer),
         &["metric", "value"],
     );
+    t.row_strs(&["topology", &report.topology]);
     t.row_strs(&["ops (original)", &report.original_ops.to_string()]);
     t.row_strs(&["ops (placed)", &report.placed_ops.to_string()]);
     t.row_strs(&["placement time", &fmt_secs(report.placement_time)]);

@@ -128,7 +128,7 @@ mod tests {
         };
         let a = mk_chain("a");
         let b = mk_chain("b");
-        let cluster = Cluster::homogeneous(2, 1_000, CommModel::new(0.0, 1e6));
+        let cluster = Cluster::homogeneous(2, 1_000, CommModel::new(0.0, 1e6).unwrap());
         let p = MEtf.place(&g, &cluster).unwrap();
         // both chains can't be faster than 3 s; parallel ≈ 3.1 s, serial 6.1 s
         assert!(p.predicted_makespan < 4.0, "{}", p.predicted_makespan);
@@ -155,7 +155,7 @@ mod tests {
             }
             prev = Some(id);
         }
-        let cluster = Cluster::homogeneous(4, 1_000, CommModel::new(0.0, 1e9));
+        let cluster = Cluster::homogeneous(4, 1_000, CommModel::new(0.0, 1e9).unwrap());
         let p = MEtf.place(&g, &cluster).unwrap();
         assert_eq!(p.devices_used(), 1);
         assert!((p.predicted_makespan - 4.0).abs() < 1e-9);
@@ -179,7 +179,7 @@ mod tests {
             prev = Some(id);
         }
         // each device fits one 600-byte op only
-        let cluster = Cluster::homogeneous(4, 1_000, CommModel::new(0.0, 1e9));
+        let cluster = Cluster::homogeneous(4, 1_000, CommModel::new(0.0, 1e9).unwrap());
         let p = MEtf.place(&g, &cluster).unwrap();
         assert_eq!(p.devices_used(), 4);
     }
@@ -195,7 +195,7 @@ mod tests {
                 ..Default::default()
             };
         }
-        let cluster = Cluster::homogeneous(2, 1_000, CommModel::new(0.0, 1e9));
+        let cluster = Cluster::homogeneous(2, 1_000, CommModel::new(0.0, 1e9).unwrap());
         let err = MEtf.place(&g, &cluster).unwrap_err();
         assert!(err.to_string().contains("out of memory"), "{err}");
     }
@@ -204,7 +204,7 @@ mod tests {
     #[test]
     fn colocation_respected() {
         let g = crate::models::linreg::linreg_graph();
-        let cluster = Cluster::homogeneous(2, 100, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(2, 100, CommModel::new(0.0, 1.0).unwrap());
         let p = MEtf.place(&g, &cluster).unwrap();
         for (_, members) in g.colocation_groups() {
             let d0 = p.device(members[0]);

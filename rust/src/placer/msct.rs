@@ -153,9 +153,12 @@ impl Placer for MSct {
             if let Some(child) = fav.fav_child[node.0] {
                 if !st.is_scheduled(child) && st.unscheduled_preds[child.0] == 0 {
                     let expiry = st.est(child, dev).unwrap_or(st.finish[node.0]);
+                    // The communication avoided by keeping the child
+                    // local: the cheapest link out of this device (the
+                    // full uniform model on homogeneous clusters).
                     let saved = graph
                         .edge_bytes(node, child)
-                        .map(|b| cluster.comm.time(b))
+                        .map(|b| st.topology().min_time_from(dev.0, b))
                         .unwrap_or(0.0);
                     if expiry - st.device_free[dev.0] <= saved {
                         awake[dev.0] = Some(Awake { child, expiry });
@@ -186,7 +189,55 @@ mod tests {
 
     fn unit_cluster(n: usize, mem: u64) -> Cluster {
         // bytes == seconds at unit bandwidth
-        Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0))
+        Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0).unwrap())
+    }
+
+    /// m-SCT keeps the favorite child local even on a heterogeneous
+    /// topology, and prefers the intra-island device for the other child
+    /// when inter-island links are slow.
+    #[test]
+    fn islands_shift_cut_edges_onto_fast_links() {
+        use crate::topology::Topology;
+        let mut g = OpGraph::new("isl");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        g.node_mut(a).compute = 1.0;
+        g.node_mut(b).compute = 2.0;
+        g.node_mut(c).compute = 2.0;
+        for id in [a, b, c] {
+            g.node_mut(id).mem = MemorySpec {
+                params: 1,
+                ..Default::default()
+            };
+        }
+        g.add_edge(a, b, 2);
+        g.add_edge(a, c, 2);
+        let intra = CommModel::new(0.0, 10.0).unwrap(); // 0.2 s per edge
+        let inter = CommModel::new(0.0, 0.5).unwrap(); // 4 s per edge
+        let cluster = Cluster::homogeneous(4, 100, inter)
+            .with_topology(Topology::nvlink_islands(4, 2, intra, inter).unwrap())
+            .unwrap();
+        let p = MSct::with_lp().place(&g, &cluster).unwrap();
+        // Everything stays inside one island: a cross-island hop costs
+        // 4 s while the off-device child pays only 0.2 s intra-island.
+        let topo = cluster.effective_topology();
+        for (x, y) in [(a, b), (a, c)] {
+            assert!(
+                !topo.is_cross_island(p.device(x).0, p.device(y).0),
+                "edge {x}->{y} crosses islands: {:?}",
+                p.device_of
+            );
+        }
+        assert!(p.predicted_makespan <= 3.2 + 1e-9, "{}", p.predicted_makespan);
+        // Acceptance: the ≥4× intra/inter gap measurably changes the
+        // m-SCT placement vs the uniform cluster, where the 4 s hop
+        // keeps both children serialized on a's device (makespan 5).
+        let uniform = Cluster::homogeneous(4, 100, inter);
+        let pu = MSct::with_lp().place(&g, &uniform).unwrap();
+        assert_ne!(pu.device_of, p.device_of, "island gap must re-place");
+        assert_eq!(pu.devices_used(), 1, "uniform: transfers too expensive");
+        assert!(p.devices_used() >= 2, "islands: fast links get used");
     }
 
     /// Favorite child stays on the parent's device even when another

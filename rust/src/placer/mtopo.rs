@@ -104,7 +104,7 @@ mod tests {
     fn splits_by_cap() {
         // 8 ops × 100 bytes on 4 devices: cap = 200 + 100 = 300 → 3,3,2.
         let g = chain_graph(8, 100);
-        let cluster = Cluster::homogeneous(4, 10_000, CommModel::new(0.0, 1e9));
+        let cluster = Cluster::homogeneous(4, 10_000, CommModel::new(0.0, 1e9).unwrap());
         let p = MTopo.place(&g, &cluster).unwrap();
         let hist = p.device_histogram(4);
         assert_eq!(hist.iter().sum::<usize>(), 8);
@@ -115,7 +115,7 @@ mod tests {
     #[test]
     fn topo_order_preserved_per_device() {
         let g = chain_graph(6, 10);
-        let cluster = Cluster::homogeneous(2, 10_000, CommModel::new(0.0, 1e9));
+        let cluster = Cluster::homogeneous(2, 10_000, CommModel::new(0.0, 1e9).unwrap());
         let p = MTopo.place(&g, &cluster).unwrap();
         // chain: placement must be a prefix on dev0 and suffix on dev1
         let mut seen_dev1 = false;
@@ -132,7 +132,7 @@ mod tests {
     #[test]
     fn oom_when_cluster_too_small() {
         let g = chain_graph(4, 1000);
-        let cluster = Cluster::homogeneous(2, 1500, CommModel::new(0.0, 1e9));
+        let cluster = Cluster::homogeneous(2, 1500, CommModel::new(0.0, 1e9).unwrap());
         assert!(MTopo.place(&g, &cluster).is_err());
     }
 
@@ -147,7 +147,7 @@ mod tests {
         };
         let first = g.node_ids().next().unwrap();
         g.add_edge(first, big, 1);
-        let cluster = Cluster::homogeneous(2, 2000, CommModel::new(0.0, 1e9));
+        let cluster = Cluster::homogeneous(2, 2000, CommModel::new(0.0, 1e9).unwrap());
         let p = MTopo.place(&g, &cluster).unwrap();
         assert_eq!(p.device_of.len(), 4);
     }
@@ -155,7 +155,7 @@ mod tests {
     #[test]
     fn makespan_positive_and_covers_compute() {
         let g = chain_graph(5, 10);
-        let cluster = Cluster::homogeneous(2, 10_000, CommModel::new(0.0, 1e9));
+        let cluster = Cluster::homogeneous(2, 10_000, CommModel::new(0.0, 1e9).unwrap());
         let p = MTopo.place(&g, &cluster).unwrap();
         assert!(p.predicted_makespan >= 5.0, "{}", p.predicted_makespan);
     }

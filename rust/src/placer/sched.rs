@@ -1,10 +1,20 @@
 //! Shared scheduling state for m-ETF and m-SCT: earliest-schedulable-time
 //! computation (paper Eq. 1), sequential communication queues (§3.1.4),
 //! per-destination tensor caching (§4.2), and the memory ledger.
+//!
+//! Communication costs are pairwise: every transfer is priced by the
+//! cluster topology's effective model for its device pair and reserves
+//! every interconnect link on its path
+//! ([`crate::topology::contention::LinkTimes`]). Under a uniform
+//! topology this reduces bit-for-bit to the paper's single `CommModel`
+//! plus one transfer engine per device.
 
 use super::ledger::MemoryLedger;
 use crate::graph::{DeviceId, NodeId, OpGraph};
 use crate::profile::Cluster;
+use crate::topology::contention::LinkTimes;
+use crate::topology::Topology;
+use std::borrow::Cow;
 
 const INF: f64 = f64::INFINITY;
 
@@ -12,15 +22,17 @@ const INF: f64 = f64::INFINITY;
 pub struct SchedState<'a> {
     pub graph: &'a OpGraph,
     pub cluster: &'a Cluster,
+    topo: Cow<'a, Topology>,
     pub ledger: MemoryLedger,
     pub start: Vec<f64>,
     pub finish: Vec<f64>,
     pub device_of: Vec<Option<DeviceId>>,
     /// Earliest time each device's compute queue is free.
     pub device_free: Vec<f64>,
-    /// Earliest time each device's transfer engine is free (§3.1.4:
-    /// one transfer at a time, shared by in- and out-bound).
-    pub comm_free: Vec<f64>,
+    /// Earliest time each interconnect link is free (§3.1.4 generalized:
+    /// one transfer at a time per link; uniform topologies make links
+    /// exactly the per-device transfer engines).
+    comm_free: LinkTimes,
     /// arrival[node][device]: when the node's output tensor is available
     /// on that device (INF = not transferred). The home device is set at
     /// schedule time.
@@ -34,6 +46,7 @@ impl<'a> SchedState<'a> {
     pub fn new(graph: &'a OpGraph, cluster: &'a Cluster) -> SchedState<'a> {
         let cap = graph.capacity();
         let n = cluster.n();
+        let topo = cluster.effective_topology();
         let capacities: Vec<u64> = cluster.devices.iter().map(|d| d.memory).collect();
         let mut unscheduled_preds = vec![usize::MAX; cap];
         for id in graph.node_ids() {
@@ -47,11 +60,22 @@ impl<'a> SchedState<'a> {
             finish: vec![0.0; cap],
             device_of: vec![None; cap],
             device_free: vec![0.0; n],
-            comm_free: vec![0.0; n],
+            comm_free: LinkTimes::new(topo.n_links()),
             arrival: vec![vec![INF; n]; cap],
             unscheduled_preds,
             scheduled_count: 0,
+            topo,
         }
+    }
+
+    /// The topology this schedule prices communication against.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Earliest free instant of one interconnect link.
+    pub fn comm_free_at(&self, link: usize) -> f64 {
+        self.comm_free.free_at(link)
     }
 
     /// Ops with no unscheduled predecessors and not yet scheduled.
@@ -89,11 +113,11 @@ impl<'a> SchedState<'a> {
         if cached.is_finite() {
             return cached;
         }
-        let t = self.cluster.comm.time(bytes);
+        let t = self.topo.time(src.0, p.0, bytes);
         if self.cluster.sequential_comm {
-            let start = self.finish[i.0]
-                .max(self.comm_free[src.0])
-                .max(self.comm_free[p.0]);
+            let start = self
+                .comm_free
+                .earliest(self.finish[i.0], self.topo.path(src.0, p.0));
             start + t
         } else {
             self.finish[i.0] + t
@@ -115,10 +139,13 @@ impl<'a> SchedState<'a> {
 
     /// Urgent time of `j`: the earliest `j` could start on *any* device,
     /// charging full communication from every predecessor (paper App. B).
+    /// Heterogeneous topologies charge each predecessor's cheapest
+    /// outbound link.
     pub fn urgent_time(&self, j: NodeId) -> f64 {
         let mut u = 0.0f64;
         for &(i, bytes) in self.graph.predecessors(j) {
-            u = u.max(self.finish[i.0] + self.cluster.comm.time(bytes));
+            let src = self.device_of[i.0].expect("pred must be scheduled");
+            u = u.max(self.finish[i.0] + self.topo.min_time_from(src.0, bytes));
         }
         u
     }
@@ -144,14 +171,12 @@ impl<'a> SchedState<'a> {
             } else if self.arrival[i.0][p.0].is_finite() {
                 self.arrival[i.0][p.0] // cached — no new transfer
             } else {
-                let t = self.cluster.comm.time(bytes);
+                let t = self.topo.time(src.0, p.0, bytes);
                 let arr = if self.cluster.sequential_comm {
-                    let start = self.finish[i.0]
-                        .max(self.comm_free[src.0])
-                        .max(self.comm_free[p.0]);
+                    let path = self.topo.path(src.0, p.0);
+                    let start = self.comm_free.earliest(self.finish[i.0], path);
                     let end = start + t;
-                    self.comm_free[src.0] = end;
-                    self.comm_free[p.0] = end;
+                    self.comm_free.reserve(path, end);
                     end
                 } else {
                     self.finish[i.0] + t
@@ -192,7 +217,7 @@ mod tests {
 
     fn two_device_cluster() -> Cluster {
         // 1 byte/s bandwidth, zero latency: bytes == seconds.
-        Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0))
+        Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0).unwrap())
     }
 
     fn simple_graph() -> (OpGraph, NodeId, NodeId, NodeId) {
@@ -237,8 +262,8 @@ mod tests {
         assert_eq!(st.start[b.0], 6.0);
         // c on dev1 reuses the cached tensor: est = max(free(dev1)=8, 6) = 8
         assert_eq!(st.est(c, DeviceId(1)), Some(8.0));
-        // comm queues were consumed once
-        assert_eq!(st.comm_free[0], 6.0);
+        // comm queues were consumed once (uniform: link 0 = dev0's engine)
+        assert_eq!(st.comm_free_at(0), 6.0);
     }
 
     #[test]
@@ -246,12 +271,7 @@ mod tests {
         // a → b and a → c, b and c on different devices: the two
         // transfers out of a's device must serialize (§3.1.4).
         let (g, a, b, c) = simple_graph();
-        let mut cluster = two_device_cluster();
-        cluster.devices.push(crate::profile::DeviceSpec {
-            memory: 1000,
-            speed: 1.0,
-        });
-        cluster.comm = CommModel::new(0.0, 1.0);
+        let cluster = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap());
         let mut st = SchedState::new(&g, &cluster);
         st.commit(a, DeviceId(0));
         st.commit(b, DeviceId(1)); // transfer occupies [1, 6] on dev0+dev1
@@ -263,11 +283,8 @@ mod tests {
     #[test]
     fn parallel_comm_overlaps() {
         let (g, a, b, c) = simple_graph();
-        let mut cluster = two_device_cluster().with_sequential_comm(false);
-        cluster.devices.push(crate::profile::DeviceSpec {
-            memory: 1000,
-            speed: 1.0,
-        });
+        let cluster = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap())
+            .with_sequential_comm(false);
         let mut st = SchedState::new(&g, &cluster);
         st.commit(a, DeviceId(0));
         st.commit(b, DeviceId(1));
@@ -295,5 +312,81 @@ mod tests {
         st.commit(c, DeviceId(0));
         assert!(st.done());
         assert_eq!(st.makespan(), 4.0); // 1 + 2 + 1 sequential
+    }
+
+    #[test]
+    fn pairwise_costs_prefer_fast_links() {
+        // Islands of 2 at 10 bytes/s intra, 1 byte/s inter: the same
+        // 5-byte edge costs 0.5 s within an island, 5 s across.
+        use crate::topology::Topology;
+        let (g, a, b, _c) = simple_graph();
+        let intra = CommModel::new(0.0, 10.0).unwrap();
+        let inter = CommModel::new(0.0, 1.0).unwrap();
+        let topo = Topology::nvlink_islands(4, 2, intra, inter).unwrap();
+        let cluster = Cluster::homogeneous(4, 1000, inter)
+            .with_topology(topo)
+            .unwrap();
+        let mut st = SchedState::new(&g, &cluster);
+        st.commit(a, DeviceId(0));
+        // Device 1 shares a's island: 1 + 0.5; device 2 is across: 1 + 5.
+        assert_eq!(st.est(b, DeviceId(1)), Some(1.5));
+        assert_eq!(st.est(b, DeviceId(2)), Some(6.0));
+    }
+
+    #[test]
+    fn shared_trunk_serializes_cross_machine_transfers() {
+        // Two-tier: transfers 0→2 and 1→3 both cross the shared NIC
+        // trunks and must queue, unlike the islands topology where the
+        // endpoint host-links are disjoint.
+        use crate::topology::Topology;
+        let mut g = OpGraph::new("trunk");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::MatMul);
+        for id in [a, b, c, d] {
+            g.node_mut(id).compute = 1.0;
+        }
+        g.add_edge(a, c, 5);
+        g.add_edge(b, d, 5);
+        let intra = CommModel::new(0.0, 100.0).unwrap();
+        let inter = CommModel::new(0.0, 1.0).unwrap();
+        let cluster = Cluster::homogeneous(4, 1000, inter)
+            .with_topology(Topology::two_tier(2, 2, intra, inter).unwrap())
+            .unwrap();
+        let mut st = SchedState::new(&g, &cluster);
+        st.commit(a, DeviceId(0));
+        st.commit(b, DeviceId(1));
+        st.commit(c, DeviceId(2)); // transfer [1, 6] on the trunk
+        st.commit(d, DeviceId(3)); // queued: [6, 11]
+        assert_eq!(st.start[c.0], 6.0);
+        assert_eq!(st.start[d.0], 11.0);
+
+        let islands = Cluster::homogeneous(4, 1000, inter)
+            .with_topology(Topology::nvlink_islands(4, 2, intra, inter).unwrap())
+            .unwrap();
+        let mut st2 = SchedState::new(&g, &islands);
+        st2.commit(a, DeviceId(0));
+        st2.commit(b, DeviceId(1));
+        st2.commit(c, DeviceId(2));
+        st2.commit(d, DeviceId(3)); // disjoint host-links: no queueing
+        assert_eq!(st2.start[c.0], 6.0);
+        assert_eq!(st2.start[d.0], 6.0);
+    }
+
+    #[test]
+    fn device_speed_scales_compute() {
+        use crate::topology::Topology;
+        let (g, a, _b, _c) = simple_graph();
+        let comm = CommModel::new(0.0, 1.0).unwrap();
+        let topo = Topology::uniform(2, comm)
+            .with_speeds(vec![1.0, 2.0])
+            .unwrap();
+        let cluster = Cluster::homogeneous(2, 1000, comm)
+            .with_topology(topo)
+            .unwrap();
+        let mut st = SchedState::new(&g, &cluster);
+        st.commit(a, DeviceId(1)); // 1 s of work at 2× speed
+        assert_eq!(st.finish[a.0], 0.5);
     }
 }

@@ -5,11 +5,21 @@
 //! communication-cost model `t(bytes) = a + b·bytes` from a microbenchmark.
 //! We reproduce both: [`CommModel::fit`] performs the least-squares fit,
 //! and [`pjrt`] measures real per-op wall times of the AOT HLO kernels.
+//!
+//! Since the topology subsystem, a [`Cluster`] also carries a
+//! [`Topology`] describing its interconnect. [`Cluster::homogeneous`]
+//! keeps the paper's uniform single-model behavior (bit-for-bit);
+//! [`Cluster::with_topology`] attaches NVLink islands, two-tier
+//! machines, or a JSON-loaded link graph, which the placers and the
+//! execution simulator then consult pair-by-pair.
 
 pub mod perturb;
 pub mod pjrt;
 
+use crate::error::BaechiError;
+use crate::topology::Topology;
 use crate::util::stats::linear_fit;
+use std::borrow::Cow;
 
 /// Static description of one device in the cluster.
 #[derive(Debug, Clone, PartialEq)]
@@ -24,10 +34,21 @@ pub struct DeviceSpec {
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub devices: Vec<DeviceSpec>,
+    /// Representative communication model: the fitted model for uniform
+    /// clusters, a pair-averaged model under an explicit topology. Used
+    /// where a single device-pair-agnostic cost is needed (the SCT LP,
+    /// fused-edge pricing, ρ reporting); scheduling and simulation use
+    /// the pairwise costs of [`Cluster::effective_topology`].
     pub comm: CommModel,
-    /// If true, each device performs at most one transfer at a time and
-    /// transfers queue up (paper §3.1.4 — the PCIe-through-host testbed).
+    /// If true, each interconnect link performs at most one transfer at
+    /// a time and transfers queue up (paper §3.1.4 — the
+    /// PCIe-through-host testbed; uniform topologies make this exactly
+    /// the paper's per-device transfer engine).
     pub sequential_comm: bool,
+    /// Interconnect description (uniform star by default). Kept private
+    /// so it cannot drift out of sync with `devices`; mutate via
+    /// [`Cluster::with_topology`].
+    topology: Topology,
 }
 
 impl Cluster {
@@ -37,7 +58,56 @@ impl Cluster {
             devices: vec![DeviceSpec { memory, speed: 1.0 }; n],
             comm,
             sequential_comm: true,
+            topology: Topology::uniform(n, comm),
         }
+    }
+
+    /// Attach an explicit interconnect topology. The topology must cover
+    /// exactly this cluster's devices; declared speed factors (if any)
+    /// are applied to the device specs and `comm` becomes the topology's
+    /// representative model.
+    pub fn with_topology(mut self, topology: Topology) -> crate::Result<Cluster> {
+        if topology.n() != self.devices.len() {
+            return Err(BaechiError::invalid(format!(
+                "topology covers {} devices but the cluster has {}",
+                topology.n(),
+                self.devices.len()
+            )));
+        }
+        if let Some(speeds) = topology.speeds() {
+            for (d, &s) in self.devices.iter_mut().zip(speeds) {
+                d.speed = s;
+            }
+        }
+        self.comm = topology.representative();
+        self.topology = topology;
+        Ok(self)
+    }
+
+    /// The topology consulted by placement and simulation. Legacy code
+    /// edits `devices` or `comm` in place; a uniform topology that no
+    /// longer matches either is rebuilt from the current `comm` — so
+    /// `cluster.comm = CommModel::nvlink_like()` keeps re-pricing every
+    /// transfer exactly as before the topology subsystem. (An explicit
+    /// non-uniform topology keeps its pairwise models; there `comm` is
+    /// only the derived representative.)
+    pub fn effective_topology(&self) -> Cow<'_, Topology> {
+        let stale_n = self.topology.n() != self.devices.len();
+        let stale_model = self
+            .topology
+            .uniform_model()
+            .map_or(false, |m| m != self.comm);
+        if stale_n || stale_model {
+            Cow::Owned(Topology::uniform(self.devices.len(), self.comm))
+        } else {
+            Cow::Borrowed(&self.topology)
+        }
+    }
+
+    /// The stored topology (may be stale after hand-editing `devices`;
+    /// prefer [`Cluster::effective_topology`] for cost resolution).
+    pub fn topology(&self) -> &Topology {
+        &self.topology
     }
 
     /// Cap every device's memory to `fraction` of its current value
@@ -76,21 +146,40 @@ pub struct CommModel {
 }
 
 impl CommModel {
-    pub fn new(latency: f64, bandwidth: f64) -> CommModel {
-        assert!(bandwidth > 0.0);
-        CommModel { latency, bandwidth }
+    /// Validated constructor: returns
+    /// [`BaechiError::InvalidRequest`] for non-positive or non-finite
+    /// bandwidth and negative or non-finite latency (malformed profile
+    /// or topology specs must not panic).
+    pub fn new(latency: f64, bandwidth: f64) -> crate::Result<CommModel> {
+        if !bandwidth.is_finite() || bandwidth <= 0.0 {
+            return Err(BaechiError::invalid(format!(
+                "comm model: bandwidth must be positive and finite, got {bandwidth}"
+            )));
+        }
+        if !latency.is_finite() || latency < 0.0 {
+            return Err(BaechiError::invalid(format!(
+                "comm model: latency must be non-negative and finite, got {latency}"
+            )));
+        }
+        Ok(CommModel { latency, bandwidth })
     }
 
     /// The paper's testbed: GPUs on PCIe 3.0 x16 through host memory, no
     /// P2P — effective ~6 GB/s with high (~50 µs) per-transfer latency.
     /// (Paper §5.3 reports a 4-byte transfer costs 50–200 µs.)
     pub fn pcie_via_host() -> CommModel {
-        CommModel::new(50e-6, 6e9)
+        CommModel {
+            latency: 50e-6,
+            bandwidth: 6e9,
+        }
     }
 
     /// A fast NVLink-like interconnect (ablation; paper footnote 4).
     pub fn nvlink_like() -> CommModel {
-        CommModel::new(5e-6, 50e9)
+        CommModel {
+            latency: 5e-6,
+            bandwidth: 50e9,
+        }
     }
 
     /// Transfer time for a payload, seconds. Zero-byte transfers are free
@@ -121,15 +210,32 @@ mod tests {
 
     #[test]
     fn comm_model_linear() {
-        let m = CommModel::new(1e-4, 1e9);
+        let m = CommModel::new(1e-4, 1e9).unwrap();
         assert_eq!(m.time(0), 0.0);
         assert!((m.time(1_000_000) - (1e-4 + 1e-3)).abs() < 1e-12);
         assert!(m.time(2_000_000) > m.time(1_000_000));
     }
 
     #[test]
+    fn comm_model_rejects_malformed() {
+        for (lat, bw) in [
+            (0.0, 0.0),
+            (0.0, -1.0),
+            (0.0, f64::NAN),
+            (0.0, f64::INFINITY),
+            (-1.0, 1e9),
+            (f64::NAN, 1e9),
+        ] {
+            match CommModel::new(lat, bw) {
+                Err(BaechiError::InvalidRequest(_)) => {}
+                other => panic!("({lat}, {bw}): expected InvalidRequest, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn fit_recovers_parameters() {
-        let truth = CommModel::new(5e-5, 2e9);
+        let truth = CommModel::new(5e-5, 2e9).unwrap();
         let samples: Vec<(u64, f64)> = (1..20)
             .map(|i| {
                 let b = i * 500_000;
@@ -148,5 +254,58 @@ mod tests {
         assert_eq!(c.n(), 4);
         assert_eq!(c.devices[0].memory, 2_400_000_000);
         assert_eq!(c.total_memory(), 4 * 2_400_000_000);
+    }
+
+    #[test]
+    fn homogeneous_carries_uniform_topology() {
+        let comm = CommModel::pcie_via_host();
+        let c = Cluster::homogeneous(4, 1000, comm);
+        assert!(c.topology().is_uniform());
+        assert_eq!(c.topology().uniform_model(), Some(comm));
+        assert!(matches!(c.effective_topology(), Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn with_topology_checks_device_count_and_applies_speeds() {
+        let comm = CommModel::pcie_via_host();
+        let t = Topology::uniform(2, comm).with_speeds(vec![1.0, 2.0]).unwrap();
+        let c = Cluster::homogeneous(2, 1000, comm).with_topology(t).unwrap();
+        assert_eq!(c.devices[1].speed, 2.0);
+        assert_eq!(c.comm, comm, "uniform representative is the model itself");
+        let t3 = Topology::uniform(3, comm);
+        assert!(matches!(
+            Cluster::homogeneous(2, 1000, comm).with_topology(t3),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn stale_topology_falls_back_to_uniform() {
+        // Legacy tests push devices by hand; cost resolution must then
+        // behave as a uniform cluster over `comm`.
+        let mut c = Cluster::homogeneous(2, 1000, CommModel::pcie_via_host());
+        c.devices.push(DeviceSpec {
+            memory: 1000,
+            speed: 1.0,
+        });
+        c.comm = CommModel::nvlink_like();
+        let eff = c.effective_topology();
+        assert_eq!(eff.n(), 3);
+        assert_eq!(eff.uniform_model(), Some(CommModel::nvlink_like()));
+        assert!(matches!(eff, Cow::Owned(_)));
+    }
+
+    #[test]
+    fn mutated_comm_reprices_uniform_topology() {
+        // The legacy ablation pattern: mutate `comm` in place on a
+        // homogeneous cluster. The effective topology must follow.
+        let mut c = Cluster::homogeneous(4, 1000, CommModel::pcie_via_host());
+        c.comm = CommModel::nvlink_like();
+        let eff = c.effective_topology();
+        assert_eq!(eff.uniform_model(), Some(CommModel::nvlink_like()));
+        assert_eq!(
+            eff.time(0, 1, 1 << 20).to_bits(),
+            CommModel::nvlink_like().time(1 << 20).to_bits()
+        );
     }
 }

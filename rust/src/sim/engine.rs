@@ -6,9 +6,13 @@
 //!   Baechi's ES prescribes; Baechi-PY enforces it at runtime, §4.4),
 //!   one at a time, waiting for input tensors;
 //! * outputs are pushed greedily to consumer devices as soon as they are
-//!   produced (the Baechi-PY communication protocol, §3.2.2), with one
-//!   transfer engine per device in sequential-comm mode (§3.1.4) and
-//!   per-destination caching (§4.2);
+//!   produced (the Baechi-PY communication protocol, §3.2.2), with
+//!   per-destination caching (§4.2); in sequential-comm mode (§3.1.4) a
+//!   transfer occupies every interconnect link on its topology path —
+//!   one transfer at a time **per link**, so transfers sharing a NIC
+//!   trunk queue while disjoint NVLink pairs overlap. Under a uniform
+//!   topology the links are exactly the per-device transfer engines of
+//!   the paper's testbed, bit-for-bit;
 //! * with `overlap_comm = false` (Table 7's "without protocol" baseline,
 //!   the blocking `.to()` call) a transfer additionally occupies both
 //!   endpoints' compute engines;
@@ -20,6 +24,7 @@
 use super::memory::{DeviceMem, OomError};
 use crate::graph::{DeviceId, NodeId, OpGraph};
 use crate::profile::Cluster;
+use crate::topology::contention::LinkQueues;
 use std::collections::{BTreeMap, BinaryHeap};
 
 /// Which framework's memory semantics to model (paper Table 2 / §4.2).
@@ -114,6 +119,7 @@ pub fn simulate(
     cfg: SimConfig,
 ) -> SimResult {
     let n = cluster.n();
+    let topo = cluster.effective_topology();
     let cap = graph.capacity();
     let dev_of = |id: NodeId| placement[&id].0;
 
@@ -200,7 +206,9 @@ pub fn simulate(
     let mut seq = 0u64;
     let mut compute_busy_until: Vec<f64> = vec![0.0; n]; // for bookkeeping only
     let mut compute_idle: Vec<bool> = vec![true; n];
-    let mut comm_idle: Vec<bool> = vec![true; n];
+    // Per-link contention state: busy flags plus waiter queues (§3.1.4
+    // generalized from per-device engines to topology links).
+    let mut links = LinkQueues::new(topo.n_links());
     let mut transfers: Vec<Transfer> = Vec::new();
     // Un-started transfers indexed under BOTH endpoint devices, so an
     // engine freeing only rescans its own queue (§Perf iteration 3 —
@@ -242,8 +250,9 @@ pub fn simulate(
                         continue;
                     }
                     let (src, dst) = (transfers[idx].src, transfers[idx].dst);
+                    let path = topo.path(src, dst);
                     let engines_free = if cluster.sequential_comm {
-                        comm_idle[src] && comm_idle[dst]
+                        links.all_free(path)
                     } else {
                         true
                     };
@@ -252,10 +261,9 @@ pub fn simulate(
                     if engines_free && compute_ok {
                         pend[d].swap_remove(i);
                         transfers[idx].started = true;
-                        let dt = cluster.comm.time(transfers[idx].bytes);
+                        let dt = topo.time(src, dst, transfers[idx].bytes);
                         if cluster.sequential_comm {
-                            comm_idle[src] = false;
-                            comm_idle[dst] = false;
+                            links.acquire(path);
                         }
                         if !cfg.overlap_comm {
                             compute_idle[src] = false;
@@ -349,6 +357,9 @@ pub fn simulate(
                     let idx = transfers.len() - 1;
                     pend[dev].push(idx);
                     pend[d].push(idx);
+                    if cluster.sequential_comm {
+                        links.enqueue(topo.path(dev, d), idx);
+                    }
                     if !dirty.contains(&d) {
                         dirty.push(d);
                     }
@@ -371,8 +382,7 @@ pub fn simulate(
                 let tr = transfers[idx].clone();
                 transfers[idx].done = true;
                 if cluster.sequential_comm {
-                    comm_idle[tr.src] = true;
-                    comm_idle[tr.dst] = true;
+                    links.release(topo.path(tr.src, tr.dst));
                 }
                 if !cfg.overlap_comm {
                     // Compute engines unblock unless still running an op
@@ -402,7 +412,35 @@ pub fn simulate(
                         }
                     }
                 }
-                let dirty = [tr.src, tr.dst];
+                // Rescan the endpoints, plus one endpoint of any pending
+                // transfer that waits on a link this one just released
+                // but touches neither endpoint — a freed NIC trunk can
+                // unblock pairs elsewhere in the cluster. A transfer is
+                // rescanned when either of its endpoints is dirty, so on
+                // uniform topologies (path = the two endpoint engines,
+                // every waiter shares an endpoint) the dirty set stays
+                // exactly [src, dst] and the legacy schedule is
+                // reproduced bit-for-bit.
+                let mut dirty: Vec<usize> = vec![tr.src, tr.dst];
+                if cluster.sequential_comm {
+                    for &l in topo.path(tr.src, tr.dst) {
+                        let waiters = links.waiters_mut(l);
+                        let mut k = 0;
+                        while k < waiters.len() {
+                            let w = waiters[k];
+                            if transfers[w].started {
+                                waiters.swap_remove(k); // lazy prune
+                                continue;
+                            }
+                            if !dirty.contains(&transfers[w].src)
+                                && !dirty.contains(&transfers[w].dst)
+                            {
+                                dirty.push(transfers[w].src);
+                            }
+                            k += 1;
+                        }
+                    }
+                }
                 advance!(t, dirty);
             }
         }
@@ -447,7 +485,7 @@ mod tests {
     #[test]
     fn single_device_serializes() {
         let g = chain3();
-        let cluster = Cluster::homogeneous(1, 1000, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(1, 1000, CommModel::new(0.0, 1.0).unwrap());
         let r = simulate(&g, &cluster, &place_all(&g, &[0, 0, 0]), SimConfig::default());
         assert!(r.ok());
         assert!((r.makespan - 6.0).abs() < 1e-9);
@@ -459,7 +497,7 @@ mod tests {
     fn cross_device_pays_comm() {
         let g = chain3();
         // bandwidth 1 byte/s → 10 s per hop
-        let cluster = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap());
         let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 2]), SimConfig::default());
         assert!(r.ok());
         // 1 + 10 + 2 + 10 + 3 = 26
@@ -480,7 +518,7 @@ mod tests {
         }
         g.add_edge(a, b, 0);
         g.add_edge(a, c, 0);
-        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1e9));
+        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1e9).unwrap());
         let r = simulate(&g, &cluster, &place_all(&g, &[0, 0, 1]), SimConfig::default());
         assert!(r.ok());
         assert!((r.makespan - 6.0).abs() < 1e-6, "{}", r.makespan);
@@ -491,7 +529,7 @@ mod tests {
         let mut g = chain3();
         let first = g.node_ids().next().unwrap();
         g.node_mut(first).mem.params = 5000;
-        let cluster = Cluster::homogeneous(1, 1000, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(1, 1000, CommModel::new(0.0, 1.0).unwrap());
         let r = simulate(&g, &cluster, &place_all(&g, &[0, 0, 0]), SimConfig::default());
         assert!(!r.ok());
         assert_eq!(r.oom.unwrap().device, 0);
@@ -509,7 +547,7 @@ mod tests {
             g.node_mut(id).compute = t;
         }
         g.add_edge(a, b, 10); // 10 s transfer
-        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0).unwrap());
         let placement = place_all(&g, &[0, 1, 1]);
         let overlapped = simulate(&g, &cluster, &placement, SimConfig::default());
         let blocking = simulate(
@@ -549,7 +587,7 @@ mod tests {
         g.node_mut(b).forward_of = Some(f);
         g.add_edge(f, m, 100);
         g.add_edge(m, b, 10);
-        let cluster = Cluster::homogeneous(1, 1000, CommModel::new(0.0, 1e9));
+        let cluster = Cluster::homogeneous(1, 1000, CommModel::new(0.0, 1e9).unwrap());
         let placement = place_all(&g, &[0, 0, 0]);
         let tf = simulate(&g, &cluster, &placement, SimConfig::default());
         let pt = simulate(
@@ -581,10 +619,87 @@ mod tests {
         g.node_mut(c).compute = 1.0;
         g.add_edge(a, b, 10);
         g.add_edge(a, c, 10);
-        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0));
+        let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0).unwrap());
         let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 1]), SimConfig::default());
         assert!(r.ok());
         assert_eq!(r.transfers, 1, "cached second consumer");
+    }
+
+    #[test]
+    fn islands_cross_transfer_pays_inter_cost() {
+        use crate::topology::Topology;
+        let g = chain3(); // a(1s) → b(2s) → c(3s), 10-byte edges
+        let intra = CommModel::new(0.0, 10.0).unwrap(); // 1 s per edge
+        let inter = CommModel::new(0.0, 1.0).unwrap(); // 10 s per edge
+        let cluster = Cluster::homogeneous(4, 1000, inter)
+            .with_topology(Topology::nvlink_islands(4, 2, intra, inter).unwrap())
+            .unwrap();
+        // a,b share island 0; c sits across the PCIe boundary.
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 2]), SimConfig::default());
+        assert!(r.ok());
+        // 1 + 1 (intra) + 2 + 10 (inter) + 3 = 17
+        assert!((r.makespan - 17.0).abs() < 1e-9, "{}", r.makespan);
+        assert_eq!(r.transfers, 2);
+    }
+
+    #[test]
+    fn two_tier_trunk_serializes_but_islands_overlap() {
+        use crate::topology::Topology;
+        // Two cross-boundary transfers from distinct devices: a(0)→c(2)
+        // and b(1)→d(3), 10 s each at the inter rate.
+        let mut g = OpGraph::new("trunk");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::MatMul);
+        for id in [a, b, c, d] {
+            g.node_mut(id).compute = 1.0;
+        }
+        g.add_edge(a, c, 10);
+        g.add_edge(b, d, 10);
+        let intra = CommModel::new(0.0, 100.0).unwrap();
+        let inter = CommModel::new(0.0, 1.0).unwrap();
+        let placement = place_all(&g, &[0, 1, 2, 3]);
+
+        // Two-tier: both transfers queue on the shared NIC trunks.
+        let two_tier = Cluster::homogeneous(4, 1000, inter)
+            .with_topology(Topology::two_tier(2, 2, intra, inter).unwrap())
+            .unwrap();
+        let rt = simulate(&g, &two_tier, &placement, SimConfig::default());
+        assert!(rt.ok());
+        // first transfer [1, 11], second queued [11, 21], then 1 s compute
+        assert!((rt.makespan - 22.0).abs() < 1e-9, "{}", rt.makespan);
+
+        // NVLink islands: disjoint host-links, transfers overlap.
+        let islands = Cluster::homogeneous(4, 1000, inter)
+            .with_topology(Topology::nvlink_islands(4, 2, intra, inter).unwrap())
+            .unwrap();
+        let ri = simulate(&g, &islands, &placement, SimConfig::default());
+        assert!(ri.ok());
+        assert!((ri.makespan - 12.0).abs() < 1e-9, "{}", ri.makespan);
+    }
+
+    #[test]
+    fn explicit_uniform_topology_is_bit_identical() {
+        use crate::topology::Topology;
+        let g = crate::models::mlp::mlp(&crate::models::mlp::MlpConfig::default());
+        let comm = CommModel::pcie_via_host();
+        let base = Cluster::homogeneous(2, 64 << 30, comm);
+        let explicit = Cluster::homogeneous(2, 64 << 30, comm)
+            .with_topology(Topology::uniform(2, comm))
+            .unwrap();
+        let placement: BTreeMap<NodeId, DeviceId> = g
+            .node_ids()
+            .enumerate()
+            .map(|(i, id)| (id, DeviceId(i % 2)))
+            .collect();
+        let ra = simulate(&g, &base, &placement, SimConfig::default());
+        let rb = simulate(&g, &explicit, &placement, SimConfig::default());
+        assert!(ra.ok() && rb.ok());
+        assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+        assert_eq!(ra.transfers, rb.transfers);
+        assert_eq!(ra.peak_memory, rb.peak_memory);
+        assert_eq!(ra.events, rb.events);
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! Per-link transfer contention state (paper §3.1.4, generalized).
+//!
+//! The paper's testbed moves tensors through host memory, so each device
+//! performs one transfer at a time; with a [`Topology`](super::Topology)
+//! the unit of contention becomes the **link**: a transfer occupies every
+//! link on its path, disjoint NVLink pairs proceed in parallel, and
+//! transfers sharing a NIC trunk queue behind each other. Two views of
+//! the same model:
+//!
+//! * [`LinkTimes`] — placement-time: the earliest instant each link is
+//!   free, consumed by the m-ETF/m-SCT scheduler when it reserves
+//!   hypothetical transfers;
+//! * [`LinkQueues`] — simulation-time: which links are mid-transfer plus
+//!   the pending transfers waiting on each link, consumed by the
+//!   event-driven execution simulator.
+
+/// Placement-time contention: earliest free instant per link.
+#[derive(Debug, Clone)]
+pub struct LinkTimes {
+    free_at: Vec<f64>,
+}
+
+impl LinkTimes {
+    pub fn new(n_links: usize) -> LinkTimes {
+        LinkTimes {
+            free_at: vec![0.0; n_links],
+        }
+    }
+
+    /// Earliest instant ≥ `after` at which every link of `path` is free.
+    pub fn earliest(&self, after: f64, path: &[usize]) -> f64 {
+        let mut t = after;
+        for &l in path {
+            t = t.max(self.free_at[l]);
+        }
+        t
+    }
+
+    /// Reserve every link of `path` until `until`.
+    pub fn reserve(&mut self, path: &[usize], until: f64) {
+        for &l in path {
+            self.free_at[l] = until;
+        }
+    }
+
+    pub fn free_at(&self, link: usize) -> f64 {
+        self.free_at[link]
+    }
+}
+
+/// Simulation-time contention: busy flags plus per-link waiter queues.
+#[derive(Debug, Clone)]
+pub struct LinkQueues {
+    busy: Vec<bool>,
+    /// Pending transfer indices registered under each link they cross.
+    waiters: Vec<Vec<usize>>,
+}
+
+impl LinkQueues {
+    pub fn new(n_links: usize) -> LinkQueues {
+        LinkQueues {
+            busy: vec![false; n_links],
+            waiters: vec![Vec::new(); n_links],
+        }
+    }
+
+    /// True when no link of `path` is mid-transfer.
+    pub fn all_free(&self, path: &[usize]) -> bool {
+        path.iter().all(|&l| !self.busy[l])
+    }
+
+    /// Mark every link of `path` mid-transfer.
+    pub fn acquire(&mut self, path: &[usize]) {
+        for &l in path {
+            self.busy[l] = true;
+        }
+    }
+
+    /// Release every link of `path`.
+    pub fn release(&mut self, path: &[usize]) {
+        for &l in path {
+            self.busy[l] = false;
+        }
+    }
+
+    /// Register a pending transfer under every link of its path.
+    pub fn enqueue(&mut self, path: &[usize], transfer: usize) {
+        for &l in path {
+            self.waiters[l].push(transfer);
+        }
+    }
+
+    /// The queue of transfers registered under `link`. Callers prune
+    /// entries that have already started (lazy twin removal, mirroring
+    /// the simulator's per-device pending lists).
+    pub fn waiters_mut(&mut self, link: usize) -> &mut Vec<usize> {
+        &mut self.waiters[link]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_times_fold_in_path_order() {
+        let mut lt = LinkTimes::new(3);
+        lt.reserve(&[0, 2], 5.0);
+        assert_eq!(lt.earliest(1.0, &[0, 1]), 5.0);
+        assert_eq!(lt.earliest(1.0, &[1]), 1.0);
+        assert_eq!(lt.earliest(9.0, &[0, 2]), 9.0);
+        assert_eq!(lt.free_at(1), 0.0);
+        assert_eq!(lt.free_at(2), 5.0);
+    }
+
+    #[test]
+    fn link_queues_acquire_release() {
+        let mut lq = LinkQueues::new(3);
+        assert!(lq.all_free(&[0, 1, 2]));
+        lq.acquire(&[0, 2]);
+        assert!(!lq.all_free(&[0, 1]));
+        assert!(lq.all_free(&[1]));
+        lq.release(&[0, 2]);
+        assert!(lq.all_free(&[0, 1, 2]));
+    }
+
+    #[test]
+    fn waiters_register_under_every_link() {
+        let mut lq = LinkQueues::new(2);
+        lq.enqueue(&[0, 1], 7);
+        lq.enqueue(&[1], 9);
+        assert_eq!(lq.waiters_mut(0).as_slice(), &[7]);
+        assert_eq!(lq.waiters_mut(1).as_slice(), &[7, 9]);
+    }
+}

@@ -1,0 +1,338 @@
+//! JSON load/save for arbitrary cluster topologies.
+//!
+//! Schema (all costs in seconds / bytes-per-second):
+//!
+//! ```json
+//! {
+//!   "devices": 4,                      // or [{"speed": 1.0}, ...]
+//!   "switches": 1,                     // internal vertices, default 0
+//!   "islands": [0, 0, 1, 1],           // optional; default: NVLink components
+//!   "uniform": {"latency": 5e-5, "bandwidth": 6e9},   // shorthand, OR:
+//!   "links": [
+//!     {"a": 0, "b": 1, "kind": "nvlink", "latency": 5e-6, "bandwidth": 5e10},
+//!     {"a": 0, "b": 4, "kind": "pcie",  "latency": 2.5e-5, "bandwidth": 1.2e10}
+//!   ]
+//! }
+//! ```
+//!
+//! Link endpoints index devices (`0..devices`) then switches
+//! (`devices..devices+switches`). The `"uniform"` shorthand builds
+//! [`Topology::uniform`] — the bit-exact single-model cluster — and
+//! ignores `links`/`switches`. Malformed specs produce
+//! [`BaechiError::InvalidRequest`], never panics.
+
+use super::{Link, LinkKind, Topology};
+use crate::error::BaechiError;
+use crate::profile::CommModel;
+use crate::util::json::Json;
+
+/// Upper bounds on untrusted spec sizes: the pair matrix is dense
+/// (`devices²`), so an absurd count must be a typed error, not an
+/// allocator abort. 1024 devices ≈ 25 MB of pair models — far beyond
+/// any small-cluster placement target.
+const MAX_DEVICES: usize = 1024;
+const MAX_SWITCHES: usize = 1024;
+const MAX_LINKS: usize = 1 << 16;
+
+fn invalid(msg: impl Into<String>) -> BaechiError {
+    BaechiError::invalid(format!("topology spec: {}", msg.into()))
+}
+
+fn get_f64(obj: &Json, key: &str, ctx: &str) -> crate::Result<f64> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| invalid(format!("{ctx}: missing numeric field '{key}'")))
+}
+
+fn get_usize(obj: &Json, key: &str, ctx: &str) -> crate::Result<usize> {
+    let v = get_f64(obj, key, ctx)?;
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(invalid(format!("{ctx}: '{key}' must be a non-negative integer")));
+    }
+    Ok(v as usize)
+}
+
+fn comm_from(obj: &Json, ctx: &str) -> crate::Result<CommModel> {
+    let latency = get_f64(obj, "latency", ctx)?;
+    // An absent (or null) bandwidth means an infinite-bandwidth wiring
+    // link (e.g. a two-tier NIC trunk whose cost sits on the device
+    // hops) — `f64::INFINITY` cannot itself appear in JSON.
+    match obj.get("bandwidth") {
+        None | Some(Json::Null) => {
+            if !latency.is_finite() || latency < 0.0 {
+                return Err(invalid(format!(
+                    "{ctx}: latency must be non-negative and finite, got {latency}"
+                )));
+            }
+            Ok(CommModel {
+                latency,
+                bandwidth: f64::INFINITY,
+            })
+        }
+        Some(_) => {
+            let bandwidth = get_f64(obj, "bandwidth", ctx)?;
+            CommModel::new(latency, bandwidth).map_err(|e| invalid(format!("{ctx}: {e}")))
+        }
+    }
+}
+
+/// Parse a topology from JSON text.
+pub fn from_json_str(text: &str) -> crate::Result<Topology> {
+    let doc = Json::parse(text).map_err(|e| invalid(e.to_string()))?;
+    from_json(&doc)
+}
+
+/// Parse a topology from a JSON document.
+pub fn from_json(doc: &Json) -> crate::Result<Topology> {
+    let devices = doc
+        .get("devices")
+        .ok_or_else(|| invalid("missing 'devices'"))?;
+    let (n, speeds): (usize, Option<Vec<f64>>) = match devices {
+        Json::Num(_) => (get_usize(doc, "devices", "topology")?, None),
+        Json::Arr(arr) => {
+            let mut speeds = Vec::with_capacity(arr.len());
+            for (i, d) in arr.iter().enumerate() {
+                if d.as_obj().is_none() {
+                    return Err(invalid(format!(
+                        "device {i} must be an object like {{\"speed\": 1.0}}"
+                    )));
+                }
+                let s = match d.get("speed") {
+                    Some(v) => v
+                        .as_f64()
+                        .ok_or_else(|| invalid(format!("device {i}: 'speed' must be a number")))?,
+                    None => 1.0,
+                };
+                speeds.push(s);
+            }
+            (arr.len(), Some(speeds))
+        }
+        _ => return Err(invalid("'devices' must be a count or an array")),
+    };
+    if n == 0 {
+        return Err(invalid("need at least one device"));
+    }
+    if n > MAX_DEVICES {
+        return Err(invalid(format!("{n} devices exceeds the {MAX_DEVICES} limit")));
+    }
+
+    let islands = match doc.get("islands") {
+        None => None,
+        Some(Json::Arr(arr)) => {
+            let mut v = Vec::with_capacity(arr.len());
+            for (i, x) in arr.iter().enumerate() {
+                let id = x
+                    .as_f64()
+                    .filter(|f| *f >= 0.0 && f.fract() == 0.0)
+                    .ok_or_else(|| invalid(format!("islands[{i}] must be a non-negative integer")))?;
+                v.push(id as usize);
+            }
+            Some(v)
+        }
+        Some(_) => return Err(invalid("'islands' must be an array of integers")),
+    };
+
+    // Uniform shorthand: the bit-exact single-model topology.
+    if let Some(u) = doc.get("uniform") {
+        let comm = comm_from(u, "uniform")?;
+        let mut t = Topology::uniform(n, comm);
+        if let Some(s) = speeds {
+            t = t.with_speeds(s)?;
+        }
+        if let Some(i) = islands {
+            if i.len() != n {
+                return Err(invalid(format!("{} island ids for {n} devices", i.len())));
+            }
+            if let Some(bad) = i.iter().find(|&&id| id >= n) {
+                return Err(invalid(format!(
+                    "island id {bad} out of range for {n} devices"
+                )));
+            }
+            t.island = i;
+        }
+        return Ok(t);
+    }
+
+    let n_switches = match doc.get("switches") {
+        None => 0,
+        Some(_) => get_usize(doc, "switches", "topology")?,
+    };
+    if n_switches > MAX_SWITCHES {
+        return Err(invalid(format!(
+            "{n_switches} switches exceeds the {MAX_SWITCHES} limit"
+        )));
+    }
+    let raw_links = doc
+        .get("links")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| invalid("missing 'links' array (or a 'uniform' shorthand)"))?;
+    if raw_links.len() > MAX_LINKS {
+        return Err(invalid(format!(
+            "{} links exceeds the {MAX_LINKS} limit",
+            raw_links.len()
+        )));
+    }
+    let mut links = Vec::with_capacity(raw_links.len());
+    for (i, l) in raw_links.iter().enumerate() {
+        let ctx = format!("link {i}");
+        let kind = l
+            .get("kind")
+            .and_then(Json::as_str)
+            .map(LinkKind::parse)
+            .transpose()
+            .map_err(|e| invalid(format!("{ctx}: {e}")))?
+            .unwrap_or(LinkKind::Pcie);
+        links.push(Link {
+            a: get_usize(l, "a", &ctx)?,
+            b: get_usize(l, "b", &ctx)?,
+            kind,
+            comm: comm_from(l, &ctx)?,
+        });
+    }
+    Topology::from_links(n, n_switches, links, islands, speeds)
+}
+
+/// Serialize a topology back to the schema above (round-trips through
+/// [`from_json`] to an equal topology).
+pub fn to_json(t: &Topology) -> Json {
+    let mut doc = Json::obj();
+    match t.speeds() {
+        Some(speeds) => {
+            let devs: Vec<Json> = speeds
+                .iter()
+                .map(|&s| {
+                    let mut d = Json::obj();
+                    d.set("speed", s);
+                    d
+                })
+                .collect();
+            doc.set("devices", Json::Arr(devs));
+        }
+        None => {
+            doc.set("devices", t.n());
+        }
+    }
+    doc.set(
+        "islands",
+        Json::Arr((0..t.n()).map(|d| Json::from(t.island_of(d))).collect()),
+    );
+    if let Some(m) = t.uniform_model() {
+        let mut u = Json::obj();
+        u.set("latency", m.latency);
+        if m.bandwidth.is_finite() {
+            u.set("bandwidth", m.bandwidth);
+        }
+        doc.set("uniform", u);
+        return doc;
+    }
+    doc.set("switches", t.n_switches());
+    let links: Vec<Json> = t
+        .links()
+        .iter()
+        .map(|l| {
+            let mut j = Json::obj();
+            j.set("a", l.a)
+                .set("b", l.b)
+                .set("kind", l.kind.name())
+                .set("latency", l.comm.latency);
+            if l.comm.bandwidth.is_finite() {
+                j.set("bandwidth", l.comm.bandwidth);
+            }
+            j
+        })
+        .collect();
+    doc.set("links", Json::Arr(links));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_shorthand_is_bit_exact() {
+        let t = from_json_str(
+            r#"{"devices": 4, "uniform": {"latency": 5e-5, "bandwidth": 6e9}}"#,
+        )
+        .unwrap();
+        assert!(t.is_uniform());
+        let m = t.uniform_model().unwrap();
+        assert_eq!(m.latency.to_bits(), 5e-5f64.to_bits());
+        assert_eq!(m.bandwidth.to_bits(), 6e9f64.to_bits());
+        assert_eq!(t.pair(0, 3).latency.to_bits(), m.latency.to_bits());
+    }
+
+    #[test]
+    fn explicit_links_round_trip() {
+        let spec = r#"{
+            "devices": [{"speed": 1.0}, {"speed": 1.0}, {"speed": 0.5}, {"speed": 0.5}],
+            "switches": 1,
+            "links": [
+                {"a": 0, "b": 1, "kind": "nvlink", "latency": 5e-6, "bandwidth": 5e10},
+                {"a": 2, "b": 3, "kind": "nvlink", "latency": 5e-6, "bandwidth": 5e10},
+                {"a": 0, "b": 4, "kind": "pcie", "latency": 2.5e-5, "bandwidth": 1.2e10},
+                {"a": 1, "b": 4, "kind": "pcie", "latency": 2.5e-5, "bandwidth": 1.2e10},
+                {"a": 2, "b": 4, "kind": "pcie", "latency": 2.5e-5, "bandwidth": 1.2e10},
+                {"a": 3, "b": 4, "kind": "pcie", "latency": 2.5e-5, "bandwidth": 1.2e10}
+            ]
+        }"#;
+        let t = from_json_str(spec).unwrap();
+        assert_eq!(t.n(), 4);
+        assert_eq!(t.n_islands(), 2, "NVLink components define islands");
+        assert_eq!(t.speed(2), 0.5);
+        // Round trip preserves everything placement-relevant.
+        let t2 = from_json(&to_json(&t)).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn malformed_specs_are_invalid_request() {
+        for bad in [
+            "{",                                              // syntax
+            r#"{"links": []}"#,                               // no devices
+            r#"{"devices": 0, "links": []}"#,                 // zero devices
+            r#"{"devices": 2}"#,                              // no links/uniform
+            r#"{"devices": 2, "links": [{"a": 0, "b": 1, "latency": 0.0, "bandwidth": -1.0}]}"#,
+            r#"{"devices": 2, "links": [{"a": 0, "b": 5, "latency": 0.0, "bandwidth": 1e9}]}"#,
+            r#"{"devices": 2, "islands": [0], "links": [{"a": 0, "b": 1, "latency": 0.0, "bandwidth": 1e9}]}"#,
+            // Absurd sizes are typed errors, never allocator aborts.
+            r#"{"devices": 200000, "uniform": {"latency": 5e-5, "bandwidth": 6e9}}"#,
+            r#"{"devices": 2, "switches": 99999999, "links": [{"a": 0, "b": 1, "latency": 0.0, "bandwidth": 1e9}]}"#,
+            // Island ids are bounded by the device count.
+            r#"{"devices": 2, "islands": [0, 1000000000000], "links": [{"a": 0, "b": 1, "latency": 0.0, "bandwidth": 1e9}]}"#,
+            // A devices *array* must hold objects, not a count.
+            r#"{"devices": [4], "uniform": {"latency": 5e-5, "bandwidth": 6e9}}"#,
+        ] {
+            match from_json_str(bad) {
+                Err(BaechiError::InvalidRequest(_)) => {}
+                other => panic!("spec {bad:?}: expected InvalidRequest, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn two_tier_round_trips_despite_infinite_trunk_bandwidth() {
+        use crate::topology::Topology;
+        let t = Topology::two_tier(
+            2,
+            2,
+            CommModel::new(1e-6, 10e9).unwrap(),
+            CommModel::new(100e-6, 1e9).unwrap(),
+        )
+        .unwrap();
+        // The zero-cost trunk (infinite bandwidth) must survive a full
+        // serialize → text → parse cycle.
+        let text = to_json(&t).pretty();
+        let t2 = from_json_str(&text).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn default_kind_is_pcie() {
+        let t = from_json_str(
+            r#"{"devices": 2, "links": [{"a": 0, "b": 1, "latency": 0.0, "bandwidth": 1e9}]}"#,
+        )
+        .unwrap();
+        assert_eq!(t.links()[0].kind, LinkKind::Pcie);
+    }
+}

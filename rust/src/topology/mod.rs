@@ -1,0 +1,795 @@
+//! Device-topology subsystem: heterogeneous devices and a per-link
+//! interconnect model.
+//!
+//! The paper fits one linear communication model `t(bytes) = a + b·bytes`
+//! (§4.1) and assumes a homogeneous cluster. Real small clusters — the
+//! paper's own target — have NVLink islands, PCIe hops through host
+//! memory, and NICs between machines, where a uniform model mispredicts
+//! both communication cost and makespan. A [`Topology`] describes the
+//! cluster as a graph of typed [`Link`]s (NVLink / PCIe / NIC, each with
+//! its own [`CommModel`]) between devices and internal switch vertices,
+//! plus optional per-device compute-speed factors.
+//!
+//! At construction every device pair is resolved to an **effective**
+//! communication model by shortest path over the link graph
+//! (store-and-forward: latencies add, inverse bandwidths add), cached in
+//! a dense pair matrix, together with the list of links the transfer
+//! occupies — the [`contention`] model: in sequential-communication mode
+//! (§3.1.4) each *link* carries one transfer at a time, so transfers
+//! sharing a NIC trunk queue behind each other while disjoint NVLink
+//! pairs proceed in parallel.
+//!
+//! [`Topology::uniform`] reproduces the pre-topology behavior exactly:
+//! the pair matrix stores the single fitted model bit-for-bit and every
+//! transfer occupies exactly its two endpoint host-links — the paper's
+//! per-device transfer engine. Placement and simulation under a uniform
+//! topology are therefore bit-identical to the legacy single-`CommModel`
+//! path (property-tested in `tests/prop_invariants.rs`).
+
+pub mod contention;
+pub mod json;
+
+use crate::error::BaechiError;
+use crate::profile::CommModel;
+
+/// Payload size used to weight links during shortest-path resolution.
+/// 1 MiB sits in the flat part of the latency/bandwidth trade-off for
+/// every interconnect we model; the *resulting* pair model is still an
+/// affine function of bytes, only the route is pinned at this size.
+pub const REF_BYTES: u64 = 1 << 20;
+
+/// Physical flavor of an interconnect link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Direct GPU↔GPU link (fast, point-to-point).
+    NvLink,
+    /// PCIe hop, typically through host memory.
+    Pcie,
+    /// Network interface between machines.
+    Nic,
+}
+
+impl LinkKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkKind::NvLink => "nvlink",
+            LinkKind::Pcie => "pcie",
+            LinkKind::Nic => "nic",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<LinkKind> {
+        match s {
+            "nvlink" => Ok(LinkKind::NvLink),
+            "pcie" => Ok(LinkKind::Pcie),
+            "nic" => Ok(LinkKind::Nic),
+            other => Err(BaechiError::invalid(format!(
+                "unknown link kind '{other}' (nvlink|pcie|nic)"
+            ))),
+        }
+    }
+
+}
+
+/// One bidirectional link of the interconnect graph. Endpoints `a`/`b`
+/// index devices (`0..n`) or internal switch vertices (`n..n+switches`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub a: usize,
+    pub b: usize,
+    pub kind: LinkKind,
+    /// Cost of crossing this link alone.
+    pub comm: CommModel,
+}
+
+/// Immutable description of a cluster's interconnect: typed links, the
+/// all-pairs effective communication models they induce, per-device
+/// compute-speed factors, and an island partition for visualization and
+/// reporting. Construct via [`Topology::uniform`],
+/// [`Topology::nvlink_islands`], [`Topology::two_tier`],
+/// [`Topology::from_links`], or [`json::from_json`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    n: usize,
+    n_switches: usize,
+    links: Vec<Link>,
+    /// Per-device speed factors (None = inherit the cluster's).
+    speeds: Option<Vec<f64>>,
+    /// Island id per device (NVLink-connected components by default).
+    island: Vec<usize>,
+    /// `Some(model)`: single-model cluster; the pair matrix holds this
+    /// exact model so the legacy uniform path is reproduced bit-for-bit.
+    uniform: Option<CommModel>,
+    /// Dense `n×n` effective models, row-major `src*n + dst`.
+    pair: Vec<CommModel>,
+    /// Link indices a `src→dst` transfer occupies, row-major.
+    paths: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Homogeneous single-model topology: every device pair costs exactly
+    /// `comm`, and a transfer occupies its two endpoints' host-links —
+    /// the paper's one-transfer-at-a-time-per-device engine (§3.1.4).
+    /// This reproduces `Cluster::homogeneous` behavior bit-for-bit.
+    pub fn uniform(n: usize, comm: CommModel) -> Topology {
+        // Physically a star through host memory: device d — host switch.
+        // Each spoke carries half the end-to-end model so the generic
+        // two-hop composition agrees with `comm`; the pair matrix stores
+        // `comm` itself so the reduction is exact, not merely close.
+        let host = n;
+        let links: Vec<Link> = (0..n)
+            .map(|d| Link {
+                a: d,
+                b: host,
+                kind: LinkKind::Pcie,
+                comm: CommModel {
+                    latency: comm.latency / 2.0,
+                    bandwidth: comm.bandwidth * 2.0,
+                },
+            })
+            .collect();
+        let mut paths = vec![Vec::new(); n * n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    paths[i * n + j] = vec![i, j];
+                }
+            }
+        }
+        Topology {
+            n,
+            n_switches: 1,
+            links,
+            speeds: None,
+            island: vec![0; n],
+            uniform: Some(comm),
+            pair: vec![comm; n * n],
+            paths,
+        }
+    }
+
+    /// Islands of `island` devices joined by all-pairs NVLink (`intra`),
+    /// with every device also hanging off a shared host switch over PCIe
+    /// so that cross-island traffic costs `inter` end-to-end and
+    /// serializes on each endpoint's host-link. The last island may be
+    /// smaller when `island` does not divide `n`.
+    pub fn nvlink_islands(
+        n: usize,
+        island: usize,
+        intra: CommModel,
+        inter: CommModel,
+    ) -> crate::Result<Topology> {
+        if n == 0 || island == 0 {
+            return Err(BaechiError::invalid(format!(
+                "nvlink_islands: need n ≥ 1 and island ≥ 1 (got n={n}, island={island})"
+            )));
+        }
+        let host = n;
+        let mut links = Vec::new();
+        let groups = (n + island - 1) / island;
+        for g in 0..groups {
+            let lo = g * island;
+            let hi = ((g + 1) * island).min(n);
+            for i in lo..hi {
+                for j in (i + 1)..hi {
+                    links.push(Link {
+                        a: i,
+                        b: j,
+                        kind: LinkKind::NvLink,
+                        comm: intra,
+                    });
+                }
+            }
+        }
+        let half = CommModel {
+            latency: inter.latency / 2.0,
+            bandwidth: inter.bandwidth * 2.0,
+        };
+        for d in 0..n {
+            links.push(Link {
+                a: d,
+                b: host,
+                kind: LinkKind::Pcie,
+                comm: half,
+            });
+        }
+        let islands: Vec<usize> = (0..n).map(|d| d / island).collect();
+        Topology::from_links(n, 1, links, Some(islands), None)
+    }
+
+    /// `nodes` machines of `per_node` devices: all-pairs `intra` links
+    /// within a machine, and one NIC trunk per machine to a core switch
+    /// so that cross-machine traffic costs `inter` end-to-end and **all
+    /// transfers leaving or entering a machine queue on its NIC**.
+    pub fn two_tier(
+        nodes: usize,
+        per_node: usize,
+        intra: CommModel,
+        inter: CommModel,
+    ) -> crate::Result<Topology> {
+        if nodes == 0 || per_node == 0 {
+            return Err(BaechiError::invalid(format!(
+                "two_tier: need nodes ≥ 1 and per_node ≥ 1 (got {nodes}, {per_node})"
+            )));
+        }
+        let n = nodes.checked_mul(per_node).ok_or_else(|| {
+            BaechiError::invalid(format!("two_tier: {nodes} × {per_node} devices overflows"))
+        })?;
+        let nic = |m: usize| n + m; // per-machine NIC switch
+        let core = n + nodes;
+        let mut links = Vec::new();
+        for m in 0..nodes {
+            let lo = m * per_node;
+            let hi = lo + per_node;
+            for i in lo..hi {
+                for j in (i + 1)..hi {
+                    links.push(Link {
+                        a: i,
+                        b: j,
+                        kind: LinkKind::Pcie,
+                        comm: intra,
+                    });
+                }
+            }
+            // Each device pays half the end-to-end NIC cost reaching its
+            // machine's NIC, so two half-hops compose to `inter` and the
+            // NIC switch is not a free intra-machine shortcut. The trunk
+            // itself is the zero-cost shared resource: it is held for the
+            // whole transfer, which is what serializes a machine's
+            // cross-machine traffic.
+            for d in lo..hi {
+                links.push(Link {
+                    a: d,
+                    b: nic(m),
+                    kind: LinkKind::Nic,
+                    comm: CommModel {
+                        latency: inter.latency / 2.0,
+                        bandwidth: inter.bandwidth * 2.0,
+                    },
+                });
+            }
+            links.push(Link {
+                a: nic(m),
+                b: core,
+                kind: LinkKind::Nic,
+                comm: CommModel {
+                    latency: 0.0,
+                    bandwidth: f64::INFINITY,
+                },
+            });
+        }
+        let islands: Vec<usize> = (0..n).map(|d| d / per_node).collect();
+        Topology::from_links(n, nodes + 1, links, Some(islands), None)
+    }
+
+    /// General constructor: resolve all device pairs by shortest path
+    /// (weighted by the cost of a [`REF_BYTES`] transfer) over the link
+    /// graph. `islands` defaults to NVLink-connected components; `speeds`
+    /// defaults to inheriting the cluster's device speeds. Errors with
+    /// [`BaechiError::InvalidRequest`] on malformed or disconnected
+    /// specs.
+    pub fn from_links(
+        n: usize,
+        n_switches: usize,
+        links: Vec<Link>,
+        islands: Option<Vec<usize>>,
+        speeds: Option<Vec<f64>>,
+    ) -> crate::Result<Topology> {
+        if n == 0 {
+            return Err(BaechiError::invalid("topology: need at least one device"));
+        }
+        let v = n + n_switches;
+        for (idx, l) in links.iter().enumerate() {
+            if l.a >= v || l.b >= v {
+                return Err(BaechiError::invalid(format!(
+                    "topology: link {idx} endpoint out of range (vertices 0..{v})"
+                )));
+            }
+            if l.a == l.b {
+                return Err(BaechiError::invalid(format!(
+                    "topology: link {idx} is a self-loop on vertex {}",
+                    l.a
+                )));
+            }
+        }
+        if let Some(s) = &speeds {
+            if s.len() != n {
+                return Err(BaechiError::invalid(format!(
+                    "topology: {} speeds for {n} devices",
+                    s.len()
+                )));
+            }
+            if let Some(bad) = s.iter().find(|x| !x.is_finite() || **x <= 0.0) {
+                return Err(BaechiError::invalid(format!(
+                    "topology: device speed must be positive and finite, got {bad}"
+                )));
+            }
+        }
+        let island = match islands {
+            Some(i) => {
+                if i.len() != n {
+                    return Err(BaechiError::invalid(format!(
+                        "topology: {} island ids for {n} devices",
+                        i.len()
+                    )));
+                }
+                // There cannot be more islands than devices; a huge id
+                // would also blow up every `0..n_islands()` loop.
+                if let Some(bad) = i.iter().find(|&&id| id >= n) {
+                    return Err(BaechiError::invalid(format!(
+                        "topology: island id {bad} out of range for {n} devices"
+                    )));
+                }
+                i
+            }
+            None => nvlink_components(n, v, &links),
+        };
+
+        // Adjacency over devices + switches.
+        let mut adj: Vec<Vec<(usize, usize)>> = vec![Vec::new(); v];
+        for (idx, l) in links.iter().enumerate() {
+            adj[l.a].push((l.b, idx));
+            adj[l.b].push((l.a, idx));
+        }
+
+        let mut pair = vec![
+            CommModel {
+                latency: 0.0,
+                bandwidth: f64::INFINITY,
+            };
+            n * n
+        ];
+        let mut paths = vec![Vec::new(); n * n];
+        for src in 0..n {
+            // O(V²) Dijkstra — clusters have a handful of vertices, and
+            // the scan-based argmin is deterministic under cost ties
+            // (lowest vertex id wins; first-found path kept).
+            let mut dist = vec![f64::INFINITY; v];
+            let mut prev_link = vec![usize::MAX; v];
+            let mut done = vec![false; v];
+            dist[src] = 0.0;
+            loop {
+                let mut u = usize::MAX;
+                let mut best = f64::INFINITY;
+                for x in 0..v {
+                    if !done[x] && dist[x] < best {
+                        best = dist[x];
+                        u = x;
+                    }
+                }
+                if u == usize::MAX {
+                    break;
+                }
+                done[u] = true;
+                for &(w, li) in &adj[u] {
+                    let nd = dist[u] + links[li].comm.time(REF_BYTES);
+                    if nd < dist[w] {
+                        dist[w] = nd;
+                        prev_link[w] = li;
+                    }
+                }
+            }
+            for dst in 0..n {
+                if dst == src {
+                    continue;
+                }
+                if !dist[dst].is_finite() {
+                    return Err(BaechiError::invalid(format!(
+                        "topology: no path between device {src} and device {dst}"
+                    )));
+                }
+                let mut path = Vec::new();
+                let mut cur = dst;
+                while cur != src {
+                    let li = prev_link[cur];
+                    path.push(li);
+                    cur = if links[li].a == cur {
+                        links[li].b
+                    } else {
+                        links[li].a
+                    };
+                    if path.len() > links.len() {
+                        return Err(BaechiError::invalid(
+                            "topology: shortest-path walk did not terminate",
+                        ));
+                    }
+                }
+                path.reverse();
+                let latency: f64 = path.iter().map(|&li| links[li].comm.latency).sum();
+                let inv_bw: f64 = path.iter().map(|&li| 1.0 / links[li].comm.bandwidth).sum();
+                pair[src * n + dst] = CommModel {
+                    latency,
+                    bandwidth: if inv_bw > 0.0 { 1.0 / inv_bw } else { f64::INFINITY },
+                };
+                paths[src * n + dst] = path;
+            }
+        }
+
+        Ok(Topology {
+            n,
+            n_switches,
+            links,
+            speeds,
+            island,
+            uniform: None,
+            pair,
+            paths,
+        })
+    }
+
+    /// Override per-device compute-speed factors.
+    pub fn with_speeds(mut self, speeds: Vec<f64>) -> crate::Result<Topology> {
+        if speeds.len() != self.n {
+            return Err(BaechiError::invalid(format!(
+                "topology: {} speeds for {} devices",
+                speeds.len(),
+                self.n
+            )));
+        }
+        if let Some(bad) = speeds.iter().find(|x| !x.is_finite() || **x <= 0.0) {
+            return Err(BaechiError::invalid(format!(
+                "topology: device speed must be positive and finite, got {bad}"
+            )));
+        }
+        self.speeds = Some(speeds);
+        Ok(self)
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn n_switches(&self) -> usize {
+        self.n_switches
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    /// Number of contention resources (one per link).
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// True for single-model topologies built via [`Topology::uniform`].
+    pub fn is_uniform(&self) -> bool {
+        self.uniform.is_some()
+    }
+
+    /// The single model of a uniform topology.
+    pub fn uniform_model(&self) -> Option<CommModel> {
+        self.uniform
+    }
+
+    /// Declared per-device speed factors (None = inherit the cluster's).
+    pub fn speeds(&self) -> Option<&[f64]> {
+        self.speeds.as_deref()
+    }
+
+    pub fn speed(&self, device: usize) -> f64 {
+        self.speeds.as_ref().map(|s| s[device]).unwrap_or(1.0)
+    }
+
+    pub fn island_of(&self, device: usize) -> usize {
+        self.island[device]
+    }
+
+    pub fn n_islands(&self) -> usize {
+        self.island.iter().copied().max().map(|m| m + 1).unwrap_or(0)
+    }
+
+    pub fn is_cross_island(&self, a: usize, b: usize) -> bool {
+        self.island[a] != self.island[b]
+    }
+
+    /// Effective model for an ordered device pair (`src != dst`).
+    pub fn pair(&self, src: usize, dst: usize) -> &CommModel {
+        &self.pair[src * self.n + dst]
+    }
+
+    /// Transfer time `src → dst`; 0 for same-device or empty payloads.
+    pub fn time(&self, src: usize, dst: usize, bytes: u64) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        self.pair[src * self.n + dst].time(bytes)
+    }
+
+    /// Links a `src → dst` transfer occupies (empty when `src == dst`).
+    pub fn path(&self, src: usize, dst: usize) -> &[usize] {
+        &self.paths[src * self.n + dst]
+    }
+
+    /// Cheapest transfer of `bytes` leaving `src` (the paper's "full
+    /// communication" charge in App. B, generalized: urgent times charge
+    /// the best-case link). Uniform topologies return the single model's
+    /// time exactly.
+    pub fn min_time_from(&self, src: usize, bytes: u64) -> f64 {
+        if let Some(m) = self.uniform {
+            return m.time(bytes);
+        }
+        let mut best = f64::INFINITY;
+        for dst in 0..self.n {
+            if dst != src {
+                best = best.min(self.time(src, dst, bytes));
+            }
+        }
+        if best.is_finite() {
+            best
+        } else {
+            0.0 // single-device topology: transfers never happen
+        }
+    }
+
+    /// A single representative model (for the SCT favorite-child LP and
+    /// fused-edge pricing, which are device-pair-agnostic): the uniform
+    /// model when there is one, otherwise the mean latency and harmonic
+    /// mean bandwidth over all ordered pairs.
+    pub fn representative(&self) -> CommModel {
+        if let Some(m) = self.uniform {
+            return m;
+        }
+        let mut latency = 0.0;
+        let mut inv_bw = 0.0;
+        let mut k = 0usize;
+        for src in 0..self.n {
+            for dst in 0..self.n {
+                if src != dst {
+                    let p = &self.pair[src * self.n + dst];
+                    latency += p.latency;
+                    inv_bw += 1.0 / p.bandwidth;
+                    k += 1;
+                }
+            }
+        }
+        if k == 0 {
+            return CommModel {
+                latency: 0.0,
+                bandwidth: f64::INFINITY,
+            };
+        }
+        CommModel {
+            latency: latency / k as f64,
+            bandwidth: if inv_bw > 0.0 {
+                k as f64 / inv_bw
+            } else {
+                f64::INFINITY
+            },
+        }
+    }
+
+    /// One-line human summary for tables and logs.
+    pub fn describe(&self) -> String {
+        if self.is_uniform() {
+            format!("uniform ({} devices)", self.n)
+        } else {
+            format!(
+                "{} devices, {} islands, {} links",
+                self.n,
+                self.n_islands(),
+                self.links.len()
+            )
+        }
+    }
+}
+
+/// Island partition = connected components over NVLink links (devices
+/// not on any NVLink each form their own island), renumbered densely in
+/// device order.
+fn nvlink_components(n: usize, v: usize, links: &[Link]) -> Vec<usize> {
+    let mut comp = vec![usize::MAX; v];
+    let mut next = 0usize;
+    for start in 0..v {
+        if comp[start] != usize::MAX {
+            continue;
+        }
+        comp[start] = next;
+        let mut stack = vec![start];
+        while let Some(u) = stack.pop() {
+            for l in links {
+                if l.kind != LinkKind::NvLink {
+                    continue;
+                }
+                let other = if l.a == u {
+                    l.b
+                } else if l.b == u {
+                    l.a
+                } else {
+                    continue;
+                };
+                if comp[other] == usize::MAX {
+                    comp[other] = comp[u];
+                    stack.push(other);
+                }
+            }
+        }
+        next += 1;
+    }
+    // Renumber by first appearance among devices.
+    let mut remap = std::collections::BTreeMap::new();
+    let mut island = Vec::with_capacity(n);
+    for d in 0..n {
+        let len = remap.len();
+        let id = *remap.entry(comp[d]).or_insert(len);
+        island.push(id);
+    }
+    island
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn comm(lat: f64, bw: f64) -> CommModel {
+        CommModel::new(lat, bw).unwrap()
+    }
+
+    #[test]
+    fn uniform_pairs_are_exactly_the_model() {
+        let m = comm(50e-6, 6e9);
+        let t = Topology::uniform(4, m);
+        assert!(t.is_uniform());
+        assert_eq!(t.n_links(), 4);
+        assert_eq!(t.n_islands(), 1);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i == j {
+                    assert_eq!(t.time(i, j, 123), 0.0);
+                } else {
+                    // Bit-exact: the pair matrix stores the model itself.
+                    assert_eq!(t.pair(i, j).latency.to_bits(), m.latency.to_bits());
+                    assert_eq!(t.pair(i, j).bandwidth.to_bits(), m.bandwidth.to_bits());
+                    assert_eq!(t.path(i, j), &[i, j], "endpoint host-links");
+                }
+            }
+        }
+        assert_eq!(t.min_time_from(0, 1 << 20).to_bits(), m.time(1 << 20).to_bits());
+        assert_eq!(t.representative(), m);
+    }
+
+    #[test]
+    fn nvlink_islands_cost_structure() {
+        let intra = comm(5e-6, 50e9);
+        let inter = comm(50e-6, 6e9);
+        let t = Topology::nvlink_islands(4, 2, intra, inter).unwrap();
+        assert!(!t.is_uniform());
+        assert_eq!(t.n_islands(), 2);
+        assert_eq!(t.island_of(0), 0);
+        assert_eq!(t.island_of(3), 1);
+        assert!(t.is_cross_island(1, 2));
+        // Intra-island: the direct NVLink, single hop, exact.
+        assert_eq!(t.pair(0, 1), &intra);
+        assert_eq!(t.path(0, 1).len(), 1);
+        // Cross-island: two PCIe half-hops composing to ≈ inter.
+        let p = t.pair(0, 2);
+        assert!((p.latency - inter.latency).abs() < 1e-12);
+        assert!((p.bandwidth - inter.bandwidth).abs() / inter.bandwidth < 1e-9);
+        assert_eq!(t.path(0, 2).len(), 2);
+        // Disjoint cross-island pairs use disjoint links.
+        let p02: Vec<usize> = t.path(0, 2).to_vec();
+        let p13: Vec<usize> = t.path(1, 3).to_vec();
+        assert!(p02.iter().all(|l| !p13.contains(l)));
+        // A big payload is much faster intra-island.
+        assert!(t.time(0, 1, 100 << 20) < t.time(0, 2, 100 << 20) / 4.0);
+    }
+
+    #[test]
+    fn two_tier_shares_the_nic_trunk() {
+        let intra = comm(1e-6, 10e9);
+        let inter = comm(100e-6, 1e9);
+        let t = Topology::two_tier(2, 2, intra, inter).unwrap();
+        assert_eq!(t.n(), 4);
+        assert_eq!(t.n_islands(), 2);
+        // Cross-machine transfers from the same machine share links.
+        let p02: Vec<usize> = t.path(0, 2).to_vec();
+        let p13: Vec<usize> = t.path(1, 3).to_vec();
+        assert!(
+            p02.iter().any(|l| p13.contains(l)),
+            "both cross-machine paths must cross the shared NIC trunks"
+        );
+        // End-to-end cost ≈ inter.
+        let p = t.pair(0, 2);
+        assert!((p.latency - inter.latency).abs() < 1e-12);
+        assert!((p.bandwidth - inter.bandwidth).abs() / inter.bandwidth < 1e-9);
+        // Intra-machine is the direct link.
+        assert_eq!(t.pair(0, 1), &intra);
+    }
+
+    #[test]
+    fn disconnected_topology_is_typed_error() {
+        let links = vec![Link {
+            a: 0,
+            b: 1,
+            kind: LinkKind::Pcie,
+            comm: comm(0.0, 1e9),
+        }];
+        let err = Topology::from_links(3, 0, links, None, None).unwrap_err();
+        assert!(matches!(err, BaechiError::InvalidRequest(_)), "{err}");
+        assert!(err.to_string().contains("no path"), "{err}");
+    }
+
+    #[test]
+    fn malformed_links_are_typed_errors() {
+        let self_loop = vec![Link {
+            a: 0,
+            b: 0,
+            kind: LinkKind::Pcie,
+            comm: comm(0.0, 1e9),
+        }];
+        assert!(matches!(
+            Topology::from_links(2, 0, self_loop, None, None),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+        let out_of_range = vec![Link {
+            a: 0,
+            b: 9,
+            kind: LinkKind::Pcie,
+            comm: comm(0.0, 1e9),
+        }];
+        assert!(matches!(
+            Topology::from_links(2, 0, out_of_range, None, None),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            Topology::uniform(2, comm(0.0, 1.0)).with_speeds(vec![1.0]),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            Topology::uniform(2, comm(0.0, 1.0)).with_speeds(vec![1.0, 0.0]),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn default_islands_follow_nvlink_components() {
+        // 0—1 NVLink, 2 alone, 3 alone: islands [0, 0, 1, 2].
+        let links = vec![
+            Link {
+                a: 0,
+                b: 1,
+                kind: LinkKind::NvLink,
+                comm: comm(1e-6, 50e9),
+            },
+            Link {
+                a: 0,
+                b: 4,
+                kind: LinkKind::Pcie,
+                comm: comm(1e-5, 6e9),
+            },
+            Link {
+                a: 1,
+                b: 4,
+                kind: LinkKind::Pcie,
+                comm: comm(1e-5, 6e9),
+            },
+            Link {
+                a: 2,
+                b: 4,
+                kind: LinkKind::Pcie,
+                comm: comm(1e-5, 6e9),
+            },
+            Link {
+                a: 3,
+                b: 4,
+                kind: LinkKind::Pcie,
+                comm: comm(1e-5, 6e9),
+            },
+        ];
+        let t = Topology::from_links(4, 1, links, None, None).unwrap();
+        assert_eq!(t.island_of(0), t.island_of(1));
+        assert_ne!(t.island_of(1), t.island_of(2));
+        assert_ne!(t.island_of(2), t.island_of(3));
+        assert_eq!(t.n_islands(), 3);
+    }
+
+    #[test]
+    fn speeds_validate_and_apply() {
+        let t = Topology::uniform(2, comm(0.0, 1.0))
+            .with_speeds(vec![1.0, 2.0])
+            .unwrap();
+        assert_eq!(t.speed(0), 1.0);
+        assert_eq!(t.speed(1), 2.0);
+        assert_eq!(t.speeds(), Some(&[1.0, 2.0][..]));
+    }
+}

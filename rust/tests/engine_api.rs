@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 fn unit_cluster(n: usize, mem: u64) -> Cluster {
-    Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0))
+    Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0).unwrap())
 }
 
 /// A graph that cannot fit the 2×1000-byte cluster (3 × 800-byte ops,
@@ -288,6 +288,79 @@ fn serves_cached_batch_with_typed_oom_handling() {
 
     let stats = engine.cache_stats();
     assert!(stats.hits >= 1, "cached batch member must hit: {stats:?}");
+}
+
+#[test]
+fn cache_distinguishes_topology() {
+    use baechi::topology::Topology;
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(4, 1 << 20))
+        .build()
+        .unwrap();
+    let islands = Topology::nvlink_islands(
+        4,
+        2,
+        CommModel::nvlink_like(),
+        CommModel::pcie_via_host(),
+    )
+    .unwrap();
+    let g = baechi::models::linreg::linreg_graph();
+
+    // Two requests differing only in topology must both miss.
+    let r_uniform = engine
+        .place(&PlacementRequest::new(g.clone(), "m-etf"))
+        .unwrap();
+    let r_islands = engine
+        .place(&PlacementRequest::new(g.clone(), "m-etf").with_topology(islands.clone()))
+        .unwrap();
+    assert!(
+        !Arc::ptr_eq(&r_uniform, &r_islands),
+        "topology must be part of the cache key"
+    );
+    let stats = engine.cache_stats();
+    assert_eq!((stats.hits, stats.misses), (0, 2));
+
+    // The same topology again must hit.
+    let r_again = engine
+        .place(&PlacementRequest::new(g, "m-etf").with_topology(islands))
+        .unwrap();
+    assert!(Arc::ptr_eq(&r_islands, &r_again), "same topology must hit");
+    let stats = engine.cache_stats();
+    assert_eq!((stats.hits, stats.misses), (1, 2));
+
+    // An override identical to the engine's own topology is served from
+    // the plain request's entry — no redundant placer run.
+    let same = Topology::uniform(4, CommModel::new(0.0, 1.0).unwrap());
+    let r_same = engine
+        .place(
+            &PlacementRequest::new(baechi::models::linreg::linreg_graph(), "m-etf")
+                .with_topology(same),
+        )
+        .unwrap();
+    assert!(
+        Arc::ptr_eq(&r_uniform, &r_same),
+        "no-op override must share the cache entry"
+    );
+    let stats = engine.cache_stats();
+    assert_eq!((stats.hits, stats.misses), (2, 2));
+}
+
+#[test]
+fn topology_override_with_wrong_device_count_is_typed() {
+    use baechi::topology::Topology;
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(4, 1 << 20))
+        .build()
+        .unwrap();
+    let g = baechi::models::linreg::linreg_graph();
+    let two_dev = Topology::uniform(2, CommModel::pcie_via_host());
+    match engine.place(&PlacementRequest::new(g, "m-etf").with_topology(two_dev)) {
+        Err(BaechiError::InvalidRequest(msg)) => {
+            assert!(msg.contains("devices"), "{msg}")
+        }
+        Ok(_) => panic!("2-device topology on a 4-device engine must fail"),
+        Err(e) => panic!("expected InvalidRequest, got {e}"),
+    }
 }
 
 #[test]

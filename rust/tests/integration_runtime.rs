@@ -176,7 +176,7 @@ fn modeled_comm_delay_slows_training() {
         &plan,
         &TrainConfig {
             steps: 6,
-            comm: Some(baechi::profile::CommModel::new(1e-3, 10e6)),
+            comm: Some(baechi::profile::CommModel::new(1e-3, 10e6).unwrap()),
             ..Default::default()
         },
     )

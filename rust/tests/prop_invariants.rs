@@ -55,7 +55,7 @@ fn random_dag(rng: &mut Pcg, max_nodes: usize) -> OpGraph {
 }
 
 fn unit_cluster(n: usize, mem: u64) -> Cluster {
-    Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0))
+    Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0).unwrap())
 }
 
 #[test]
@@ -217,10 +217,69 @@ fn prop_perturbation_keeps_placement_feasible() {
 }
 
 #[test]
+fn prop_uniform_topology_bit_identical_to_single_comm_model() {
+    // Backward compatibility of the topology subsystem: a cluster with
+    // an explicitly-attached `Topology::uniform` (directly or through a
+    // JSON round-trip) must produce bit-identical placements and
+    // simulated makespans to the plain single-`CommModel` cluster.
+    use baechi::topology::{json as topo_json, Topology};
+    prop_check("uniform_topology_identity", 60, |rng| {
+        let g = random_dag(rng, 40);
+        let n_dev = rng.range(2, 5);
+        let total: u64 = g
+            .iter_nodes()
+            .map(|n| n.mem.params + n.mem.param_grad + n.mem.output)
+            .sum();
+        let mem = (total / n_dev as u64) * 3 + 200;
+        let comm = CommModel::new(rng.uniform(0.0, 1e-4), rng.uniform(0.5, 1e9)).unwrap();
+        let base = Cluster::homogeneous(n_dev, mem, comm);
+        let explicit = Cluster::homogeneous(n_dev, mem, comm)
+            .with_topology(Topology::uniform(n_dev, comm))
+            .unwrap();
+        let json_topo =
+            topo_json::from_json(&topo_json::to_json(&Topology::uniform(n_dev, comm))).unwrap();
+        let from_json = Cluster::homogeneous(n_dev, mem, comm)
+            .with_topology(json_topo)
+            .unwrap();
+        for placer in [&MEtf as &dyn Placer, &MTopo, &MSct::with_heuristic()] {
+            let a = placer.place(&g, &base);
+            let b = placer.place(&g, &explicit);
+            let c = placer.place(&g, &from_json);
+            match (a, b, c) {
+                (Ok(a), Ok(b), Ok(c)) => {
+                    assert_eq!(a.device_of, b.device_of, "{} placement", placer.name());
+                    assert_eq!(a.device_of, c.device_of, "{} via json", placer.name());
+                    assert_eq!(
+                        a.predicted_makespan.to_bits(),
+                        b.predicted_makespan.to_bits(),
+                        "{} predicted makespan",
+                        placer.name()
+                    );
+                    assert_eq!(
+                        a.predicted_makespan.to_bits(),
+                        c.predicted_makespan.to_bits()
+                    );
+                    let sa = simulate(&g, &base, &a.device_of, SimConfig::default());
+                    let sb = simulate(&g, &explicit, &a.device_of, SimConfig::default());
+                    let sc = simulate(&g, &from_json, &a.device_of, SimConfig::default());
+                    assert_eq!(sa.makespan.to_bits(), sb.makespan.to_bits());
+                    assert_eq!(sa.makespan.to_bits(), sc.makespan.to_bits());
+                    assert_eq!(sa.transfers, sb.transfers);
+                    assert_eq!(sa.peak_memory, sb.peak_memory);
+                    assert_eq!(sa.events, sb.events);
+                }
+                (Err(_), Err(_), Err(_)) => {} // identically infeasible
+                other => panic!("{}: divergent feasibility: {other:?}", placer.name()),
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_lp_favorites_unique_and_consistent() {
     prop_check("lp_favorites", 40, |rng| {
         let g = random_dag(rng, 20);
-        let comm = CommModel::new(0.0, 1.0);
+        let comm = CommModel::new(0.0, 1.0).unwrap();
         let fav = baechi::lp::favorites(&g, &comm, baechi::lp::FavoriteMethod::Lp);
         let mut child_of = std::collections::BTreeMap::new();
         for i in g.node_ids() {
