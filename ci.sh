@@ -1,29 +1,39 @@
 #!/usr/bin/env bash
-# CI gate: build, tests, formatting, lints. Run from anywhere.
+# CI gate: build, tests, formatting, lints, docs. Run from anywhere.
 #
 #   ./ci.sh          # full gate (what the repo considers green)
-#   ./ci.sh --fast   # build + tests only (skip fmt/clippy)
+#   ./ci.sh --fast   # build + tests only (skip fmt/clippy/doc)
+#
+# Each stage prints its wall-clock time; .github/workflows/ci.yml runs
+# both modes on every push/PR.
 set -euo pipefail
 cd "$(dirname "$0")"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: 'cargo' not found on PATH." >&2
+    echo "Install a Rust toolchain (see rust-version in Cargo.toml, e.g." >&2
+    echo "via https://rustup.rs) and re-run ./ci.sh." >&2
+    exit 1
+fi
 
 fast=0
 [[ "${1:-}" == "--fast" ]] && fast=1
 
-echo "==> cargo build --release"
-cargo build --release
+stage() {
+    echo "==> $*"
+    local t0=$SECONDS
+    "$@"
+    echo "    [$* took $((SECONDS - t0))s]"
+}
 
-echo "==> cargo test -q"
-cargo test -q
-
-echo "==> cargo bench --no-run"
-cargo bench --no-run
+stage cargo build --release
+stage cargo test -q
+stage cargo bench --no-run
 
 if [[ "$fast" == 0 ]]; then
-    echo "==> cargo fmt --check"
-    cargo fmt --check
-
-    echo "==> cargo clippy --all-targets -- -D warnings"
-    cargo clippy --all-targets -- -D warnings
+    stage cargo fmt --check
+    stage cargo clippy --all-targets -- -D warnings
+    stage cargo doc --no-deps
 fi
 
 echo "CI green."

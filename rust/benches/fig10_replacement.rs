@@ -1,0 +1,154 @@
+//! Figure 10 (extension): contention-driven dynamic re-placement.
+//!
+//! The ROADMAP's "dynamic re-placement under contention" payoff, made
+//! measurable: on a two-tier cluster (2 machines × 2 GPUs behind shared
+//! NIC trunks) a single-shot placement commits cross-machine transfers
+//! one at a time and never sees the aggregate trunk queueing — nor, in
+//! blocking-communication mode (Table 7's "without protocol" baseline),
+//! the compute stalls — that its own decisions cause. The iterative
+//! loop (`PlacementEngine::place_iterative`) simulates, degrades the
+//! saturated links by the observed queueing delay, and re-places.
+//!
+//! Swept here: NIC trunk slowdown ratio × communication protocol ×
+//! placer, over a wide fan-out graph (the trunk worst case: every chain
+//! landing on the remote machine queues its input tensor behind the
+//! others) and GNMT. Reported per row: single-shot vs iterative
+//! simulated step time, rounds used, and the recovered makespan.
+//! Iterative keeps the best round, so it can never lose; the bench
+//! asserts it strictly wins somewhere in the sweep.
+
+use baechi::engine::{PlacementEngine, PlacementRequest};
+use baechi::feedback::ReplacementPolicy;
+use baechi::graph::{OpGraph, OpKind};
+use baechi::models::Benchmark;
+use baechi::profile::{Cluster, CommModel};
+use baechi::sim::SimConfig;
+use baechi::topology::Topology;
+use baechi::util::bench::maybe_write_json;
+use baechi::util::json::Json;
+use baechi::util::table::Table;
+
+/// `width` parallel chains of `len` ops fanning out of one source and
+/// joining at one sink, with `bytes`-sized tensors on every edge.
+fn fanout_graph(width: usize, len: usize, compute: f64, bytes: u64) -> OpGraph {
+    let mut g = OpGraph::new("fanout");
+    let src = g.add_node("src", OpKind::MatMul);
+    g.node_mut(src).compute = compute;
+    g.node_mut(src).mem.output = bytes;
+    g.node_mut(src).output_bytes = bytes;
+    let sink = g.add_node("sink", OpKind::MatMul);
+    g.node_mut(sink).compute = compute;
+    for c in 0..width {
+        let mut prev = src;
+        for l in 0..len {
+            let id = g.add_node(&format!("c{c}_{l}"), OpKind::MatMul);
+            g.node_mut(id).compute = compute;
+            g.node_mut(id).mem.output = bytes;
+            g.node_mut(id).output_bytes = bytes;
+            g.add_edge(prev, id, bytes);
+            prev = id;
+        }
+        g.add_edge(prev, sink, bytes);
+    }
+    g
+}
+
+/// 2 machines × 2 GPUs; the NIC trunk runs `ratio`× slower than the
+/// intra-machine PCIe links.
+fn two_tier_cluster(ratio: f64, mem: u64) -> Cluster {
+    let intra = CommModel::new(1e-5, 10e9).unwrap();
+    let inter = CommModel::new(1e-5 * ratio, 10e9 / ratio).unwrap();
+    Cluster::homogeneous(4, mem, inter)
+        .with_topology(Topology::two_tier(2, 2, intra, inter).unwrap())
+        .unwrap()
+}
+
+fn main() {
+    let policy = ReplacementPolicy::rounds(4).with_threshold(0.4);
+    let mem = 32u64 << 30;
+    let fanout = fanout_graph(12, 2, 0.3, 512 << 20);
+    let gnmt = Benchmark::Gnmt { batch: 32, seq_len: 10 }.graph();
+
+    // (label, graph, trunk ratios, overlap_comm)
+    let scenarios: Vec<(&str, &OpGraph, Vec<f64>, bool)> = vec![
+        ("fanout/overlap", &fanout, vec![4.0, 8.0, 16.0], true),
+        ("fanout/blocking", &fanout, vec![4.0, 16.0], false),
+        ("gnmt/overlap", &gnmt, vec![8.0, 16.0], true),
+        ("gnmt/blocking", &gnmt, vec![8.0], false),
+    ];
+
+    let mut t = Table::new(
+        "Fig. 10 — single-shot vs contention-driven iterative placement (two-tier 2×2)",
+        &[
+            "scenario",
+            "placer",
+            "trunk ratio",
+            "step (single)",
+            "step (iterative)",
+            "rounds",
+            "recovered",
+        ],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut best_gain = 0.0f64;
+    for (label, graph, ratios, overlap) in &scenarios {
+        for &ratio in ratios {
+            let engine = PlacementEngine::builder()
+                .cluster(two_tier_cluster(ratio, mem))
+                .sim(SimConfig {
+                    overlap_comm: *overlap,
+                    ..SimConfig::default()
+                })
+                .build()
+                .expect("engine");
+            for placer in ["m-etf", "m-sct"] {
+                let req = PlacementRequest::new((*graph).clone(), placer);
+                let single = engine.place(&req).expect("single-shot placement");
+                let single_step = single.sim.as_ref().expect("sim").makespan;
+                let it = engine.place_iterative(&req, &policy).expect("iterative");
+                let iter_step = it.final_makespan();
+                assert!(
+                    iter_step <= single_step + 1e-9,
+                    "{label} {placer} {ratio}x: iterative (best-of-rounds) regressed \
+                     {iter_step} vs {single_step}"
+                );
+                let gain = it.improvement();
+                best_gain = best_gain.max(gain);
+                t.row(&[
+                    label.to_string(),
+                    placer.to_string(),
+                    format!("{ratio}x"),
+                    format!("{single_step:.4}"),
+                    format!("{iter_step:.4}"),
+                    format!("{}", it.rounds.len().saturating_sub(1)),
+                    format!("{:.1}%", gain * 100.0),
+                ]);
+                let mut row = Json::obj();
+                row.set("scenario", *label)
+                    .set("placer", placer)
+                    .set("trunk_ratio", ratio)
+                    .set("overlap_comm", *overlap)
+                    .set("step_single_s", single_step)
+                    .set("step_iterative_s", iter_step)
+                    .set("rounds", it.rounds.len().saturating_sub(1))
+                    .set("gain", gain);
+                json_rows.push(row);
+            }
+        }
+    }
+    t.print();
+    let mut summary = Json::obj();
+    summary.set("best_gain", best_gain);
+    maybe_write_json("fig10_replacement", json_rows, Some(summary));
+    assert!(
+        best_gain > 0.005,
+        "iterative re-placement should recover makespan in at least one contended \
+         two-tier scenario (best gain: {:.2}%)",
+        best_gain * 100.0
+    );
+    println!(
+        "takeaway: feeding observed trunk queueing back into the placer recovers \
+         up to {:.1}% of the simulated step time that single-shot placement loses.",
+        best_gain * 100.0
+    );
+}

@@ -18,6 +18,8 @@ use baechi::engine::{PlacementEngine, PlacementRequest};
 use baechi::models::Benchmark;
 use baechi::profile::{Cluster, CommModel};
 use baechi::topology::Topology;
+use baechi::util::bench::maybe_write_json;
+use baechi::util::json::Json;
 use baechi::util::table::Table;
 
 fn main() {
@@ -46,6 +48,7 @@ fn main() {
         ],
     );
     let mut msct_moved_at_gap = false;
+    let mut json_rows: Vec<Json> = Vec::new();
     for b in benchmarks {
         let engine = PlacementEngine::builder()
             .cluster(Cluster::homogeneous(4, mem, inter))
@@ -95,22 +98,32 @@ fn main() {
                 if placer == "m-sct" && ratio >= 4.0 && moved > 0 {
                     msct_moved_at_gap = true;
                 }
+                let islands_step = resp.sim.as_ref().expect("sim").makespan;
                 t.row(&[
                     b.name(),
                     placer.to_string(),
                     format!("{ratio}x"),
                     format!("{:.4}", base_step),
-                    format!(
-                        "{:.4}",
-                        resp.sim.as_ref().expect("sim").makespan
-                    ),
+                    format!("{:.4}", islands_step),
                     moved.to_string(),
                     format!("{:.0}%", intra_frac * 100.0),
                 ]);
+                let mut row = Json::obj();
+                row.set("model", b.name())
+                    .set("placer", placer)
+                    .set("ratio", ratio)
+                    .set("step_uniform_s", base_step)
+                    .set("step_islands_s", islands_step)
+                    .set("ops_moved", moved)
+                    .set("intra_island_cut_fraction", intra_frac);
+                json_rows.push(row);
             }
         }
     }
     t.print();
+    let mut summary = Json::obj();
+    summary.set("msct_moved_at_gap", msct_moved_at_gap);
+    maybe_write_json("fig9_topology_sensitivity", json_rows, Some(summary));
     assert!(
         msct_moved_at_gap,
         "m-SCT should re-place at a ≥4x inter-island bandwidth gap"

@@ -9,6 +9,7 @@
 
 use crate::engine::PlacerRegistry;
 use crate::error::BaechiError;
+use crate::feedback::ReplacementPolicy;
 use crate::models::Benchmark;
 use crate::optimizer::OptConfig;
 use crate::placer::Placer;
@@ -219,6 +220,12 @@ pub struct BaechiConfig {
     /// Interconnect topology (`TopologySpec::Uniform` = the paper's
     /// single-model cluster).
     pub topology: TopologySpec,
+    /// Contention-driven re-placement rounds (`--replace-rounds`;
+    /// 0 = single-shot placement, the paper's behavior).
+    pub replace_rounds: usize,
+    /// Link-utilization trigger for re-placement
+    /// (`--replace-threshold`).
+    pub replace_threshold: f64,
 }
 
 impl BaechiConfig {
@@ -250,6 +257,8 @@ impl BaechiConfig {
                 overlap_comm: true,
             },
             topology: TopologySpec::Uniform,
+            replace_rounds: 0,
+            replace_threshold: 0.5,
         }
     }
 
@@ -261,6 +270,21 @@ impl BaechiConfig {
     pub fn with_opt(mut self, opt: OptConfig) -> BaechiConfig {
         self.opt = opt;
         self
+    }
+
+    /// The re-placement policy this config asks for; `None` keeps the
+    /// single-shot pipeline. The CLI exposes one sensitivity knob, so
+    /// the secondary blocked-seconds trigger scales with the threshold
+    /// (0.5 maps to the policy's 0.05 default) — a high
+    /// `--replace-threshold` genuinely suppresses re-placement instead
+    /// of being overruled by the blocked-fraction default.
+    pub fn replacement_policy(&self) -> Option<ReplacementPolicy> {
+        (self.replace_rounds > 0).then(|| {
+            let mut p = ReplacementPolicy::rounds(self.replace_rounds)
+                .with_threshold(self.replace_threshold);
+            p.blocked_fraction = self.replace_threshold * 0.1;
+            p
+        })
     }
 
     /// Build the cluster this config describes. Fails with a typed
@@ -390,6 +414,19 @@ mod tests {
             TopologySpec::File("/nonexistent/topo.json".into()).build(4, comm),
             Err(BaechiError::InvalidRequest(_))
         ));
+    }
+
+    #[test]
+    fn replacement_policy_follows_config() {
+        let mut cfg = BaechiConfig::paper_default(Benchmark::LinReg, PlacerKind::MEtf);
+        assert!(cfg.replacement_policy().is_none(), "single-shot by default");
+        cfg.replace_rounds = 2;
+        cfg.replace_threshold = 0.7;
+        let p = cfg.replacement_policy().unwrap();
+        assert_eq!(p.max_rounds, 2);
+        assert_eq!(p.trunk_utilization, 0.7);
+        // Both triggers follow the CLI knob (0.5 → the 0.05 default).
+        assert!((p.blocked_fraction - 0.07).abs() < 1e-12);
     }
 
     #[test]

@@ -7,4 +7,4 @@ pub mod config;
 pub mod pipeline;
 
 pub use config::{BaechiConfig, PlacerKind, TopologySpec};
-pub use pipeline::{engine_for, run, RunReport};
+pub use pipeline::{engine_for, run, ReplacementSummary, RunReport};

@@ -11,10 +11,46 @@
 
 use super::config::BaechiConfig;
 use crate::engine::{PlacementEngine, PlacementRequest};
+use crate::feedback::ReplacementRound;
 use crate::graph::{DeviceId, NodeId};
 use crate::sim::SimResult;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
+
+/// Trajectory of an iterative run (`--replace-rounds > 0`): the
+/// single-shot baseline plus every feedback round. A report-friendly
+/// projection of [`crate::engine::IterativePlacement`] — same
+/// `baseline_makespan`/`rounds`, minus the `Arc`'d response that
+/// `RunReport` already carries as its own fields. Gains are computed
+/// via [`crate::feedback::relative_gain`].
+#[derive(Debug, Clone)]
+pub struct ReplacementSummary {
+    /// Simulated step time of the single-shot (round 0) placement.
+    pub baseline_makespan: f64,
+    pub rounds: Vec<ReplacementRound>,
+}
+
+impl ReplacementSummary {
+    fn to_json(&self) -> Json {
+        let mut rounds = Vec::new();
+        for r in &self.rounds {
+            let links: Vec<Json> = r.saturated_links.iter().map(|&l| Json::from(l)).collect();
+            let mut o = Json::obj();
+            o.set("round", r.round)
+                .set("makespan_s", r.makespan)
+                .set("oom", r.oom)
+                .set("saturated_links", Json::Arr(links))
+                .set("blocked_fraction", r.blocked_fraction)
+                .set("max_utilization", r.max_utilization)
+                .set("improved", r.improved);
+            rounds.push(o);
+        }
+        let mut j = Json::obj();
+        j.set("baseline_makespan_s", self.baseline_makespan)
+            .set("rounds", Json::Arr(rounds));
+        j
+    }
+}
 
 /// Everything a run produces (one row of the paper's tables).
 #[derive(Debug, Clone)]
@@ -40,6 +76,9 @@ pub struct RunReport {
     pub device_of: BTreeMap<NodeId, DeviceId>,
     /// Human summary of the cluster topology the run placed against.
     pub topology: String,
+    /// Re-placement trajectory (`None` for single-shot runs, and for
+    /// runs whose simulation OOMed — a partial makespan is not a gain).
+    pub replacement: Option<ReplacementSummary>,
 }
 
 impl RunReport {
@@ -66,6 +105,9 @@ impl RunReport {
                 "peak_memory",
                 Json::Arr(self.peak_memory.iter().map(|&b| Json::from(b)).collect()),
             );
+        if let Some(rep) = &self.replacement {
+            j.set("replacement", rep.to_json());
+        }
         j
     }
 }
@@ -87,10 +129,21 @@ pub fn engine_for(cfg: &BaechiConfig) -> crate::Result<PlacementEngine> {
 /// *runtime* OOM of a successful placement is reported in `sim.oom`.
 pub fn run(cfg: &BaechiConfig) -> crate::Result<RunReport> {
     let engine = engine_for(cfg)?;
-    let resp = engine.place(&PlacementRequest::for_benchmark(
-        cfg.benchmark,
-        &cfg.placer.spec(),
-    ))?;
+    let req = PlacementRequest::for_benchmark(cfg.benchmark, &cfg.placer.spec());
+    let (resp, replacement) = match cfg.replacement_policy() {
+        Some(policy) => {
+            let it = engine.place_iterative(&req, &policy)?;
+            // A run whose simulation OOMed has no meaningful makespan
+            // trajectory — report the OOM alone, not a bogus gain.
+            let ok = it.response.sim.as_ref().map_or(false, |s| s.ok());
+            let summary = ok.then(|| ReplacementSummary {
+                baseline_makespan: it.baseline_makespan,
+                rounds: it.rounds,
+            });
+            (it.response, summary)
+        }
+        None => (engine.place(&req)?, None),
+    };
     let sim = resp
         .sim
         .clone()
@@ -109,6 +162,7 @@ pub fn run(cfg: &BaechiConfig) -> crate::Result<RunReport> {
         device_capacity: engine.cluster().devices[0].memory,
         device_of: resp.placement.device_of.clone(),
         topology: engine.cluster().effective_topology().describe(),
+        replacement,
     })
 }
 
@@ -176,6 +230,37 @@ mod tests {
         let r = run(&cfg).unwrap();
         let j = r.to_json();
         assert_eq!(j.get("placer").unwrap().as_str(), Some("m-etf"));
+        assert!(j.get("replacement").is_none(), "single-shot run");
+        assert!(Json::parse(&j.pretty()).is_ok());
+    }
+
+    #[test]
+    fn replace_rounds_records_trajectory_and_never_hurts() {
+        use crate::coordinator::TopologySpec;
+        let mut cfg = BaechiConfig::paper_default(
+            Benchmark::Gnmt {
+                batch: 32,
+                seq_len: 10,
+            },
+            PlacerKind::MEtf,
+        );
+        cfg.topology = TopologySpec::TwoTier {
+            nodes: 2,
+            ratio: 8.0,
+        };
+        let single = run(&cfg).unwrap();
+        assert!(single.replacement.is_none());
+        cfg.replace_rounds = 2;
+        cfg.replace_threshold = 0.4;
+        let it = run(&cfg).unwrap();
+        let rep = it.replacement.as_ref().expect("records rounds");
+        assert!(!rep.rounds.is_empty());
+        assert_eq!(rep.rounds[0].round, 0);
+        assert_eq!(rep.baseline_makespan, single.sim.makespan);
+        // Best-of-rounds can never be worse than the single shot.
+        assert!(it.sim.makespan <= single.sim.makespan + 1e-9);
+        let j = it.to_json();
+        assert!(j.get("replacement").is_some());
         assert!(Json::parse(&j.pretty()).is_ok());
     }
 }

@@ -30,6 +30,9 @@
 //!   requests across OS threads via `std::thread::scope`.
 //! * **Observability** — [`PlacementObserver`] hooks receive per-stage
 //!   timings (optimize / place / expand / simulate).
+//! * **Re-placement** — [`PlacementEngine::place_iterative`] closes the
+//!   sim → placer loop: simulate, degrade saturated links by the
+//!   observed queueing ([`crate::feedback`]), re-place, keep the best.
 //! * **Typed errors** — every failure is a [`BaechiError`] variant.
 
 pub mod fingerprint;
@@ -40,6 +43,7 @@ pub use observer::{LogObserver, PlacementObserver, RecordingObserver, Stage, Sta
 pub use registry::{PlacerContext, PlacerRegistration, PlacerRegistry, ResolvedPlacer};
 
 use crate::error::BaechiError;
+use crate::feedback::{ReplacementPolicy, ReplacementRound, TopologyAdjustment};
 use crate::graph::OpGraph;
 use crate::models::Benchmark;
 use crate::optimizer::{self, OptConfig, OptStats};
@@ -127,6 +131,41 @@ pub struct PlacementResponse {
     pub sim: Option<SimResult>,
     /// Distinct devices used by the expanded placement.
     pub devices_used: usize,
+}
+
+/// Outcome of [`PlacementEngine::place_iterative`]: the best placement
+/// found plus the per-round trajectory of the feedback loop.
+#[derive(Debug, Clone)]
+pub struct IterativePlacement {
+    /// The best round's response; its `sim` field is the evaluation on
+    /// the *real* (unadjusted) topology.
+    pub response: Arc<PlacementResponse>,
+    /// Simulated makespan of the single-shot (round 0) placement. NaN
+    /// in exactly one case: a 0-round policy over a request that asked
+    /// to skip simulation (the call is then bit-identical to `place`,
+    /// so there is no simulator verdict to report; with rounds > 0 the
+    /// request is upgraded to simulate instead).
+    pub baseline_makespan: f64,
+    /// Round trajectory, starting with round 0 (empty when the policy's
+    /// round budget is 0 — the call degenerated to a plain `place`).
+    pub rounds: Vec<ReplacementRound>,
+}
+
+impl IterativePlacement {
+    /// Simulated makespan of the returned placement.
+    pub fn final_makespan(&self) -> f64 {
+        self.response
+            .sim
+            .as_ref()
+            .map(|s| s.makespan)
+            .unwrap_or(self.baseline_makespan)
+    }
+
+    /// Relative makespan recovered over the single-shot baseline
+    /// (0 when re-placement never beat round 0).
+    pub fn improvement(&self) -> f64 {
+        crate::feedback::relative_gain(self.baseline_makespan, self.final_makespan())
+    }
 }
 
 /// Placement-cache hit/miss counters.
@@ -422,6 +461,143 @@ impl PlacementEngine {
         });
         self.cache.lock().unwrap().insert(key, resp.clone());
         Ok(resp)
+    }
+
+    /// Contention-driven re-placement (the sim → engine → placer loop):
+    /// place, simulate, degrade the topology by the observed per-link
+    /// queueing ([`TopologyAdjustment`]), and re-place until the
+    /// simulated makespan stops improving or `policy.max_rounds` is
+    /// exhausted. The returned response is the best round's, always
+    /// evaluated on the **real** topology — the adjusted topologies are
+    /// only ever the placer's cost model.
+    ///
+    /// With `policy.max_rounds == 0` this is exactly [`Self::place`]
+    /// (same cached `Arc`, empty round list). Otherwise the simulator
+    /// verdict is required, so a request with `simulate == false` is
+    /// served as if it had asked for simulation. Every intermediate
+    /// placement goes through the cache keyed by the adjusted
+    /// topology's fingerprint, so repeating the loop re-runs no placer.
+    pub fn place_iterative(
+        &self,
+        req: &PlacementRequest,
+        policy: &ReplacementPolicy,
+    ) -> crate::Result<IterativePlacement> {
+        if policy.max_rounds == 0 {
+            let response = self.place(req)?;
+            let baseline_makespan = response
+                .sim
+                .as_ref()
+                .map(|s| s.makespan)
+                .unwrap_or(f64::NAN);
+            return Ok(IterativePlacement {
+                response,
+                baseline_makespan,
+                rounds: Vec::new(),
+            });
+        }
+        let base = if req.simulate {
+            self.place(req)?
+        } else {
+            let mut r = req.clone();
+            r.simulate = true;
+            self.place(&r)?
+        };
+        let base_sim = base.sim.as_ref().expect("iterative base always simulates");
+        let baseline_makespan = base_sim.makespan;
+        let round0 = ReplacementRound {
+            round: 0,
+            makespan: baseline_makespan,
+            oom: !base_sim.ok(),
+            saturated_links: policy.saturated_links(&base_sim.contention),
+            blocked_fraction: base_sim.contention.blocked_fraction(),
+            max_utilization: base_sim.contention.max_utilization(),
+            improved: false,
+        };
+        let mut rounds = vec![round0];
+        // A placement that OOMs at runtime has no meaningful makespan to
+        // iterate on; surface the single-shot verdict unchanged.
+        if !base_sim.ok() {
+            return Ok(IterativePlacement {
+                response: base,
+                baseline_makespan,
+                rounds,
+            });
+        }
+        // The cluster candidates are judged on (per-request override or
+        // the engine's own).
+        let real_cluster: Cow<'_, Cluster> = match &req.topology {
+            Some(t) => Cow::Owned(self.cluster.clone().with_topology(t.clone())?),
+            None => Cow::Borrowed(&self.cluster),
+        };
+        let mut adjusted = real_cluster.effective_topology().into_owned();
+        let mut report = base_sim.contention.clone();
+        let mut best = base;
+        let mut best_makespan = baseline_makespan;
+        for round in 1..=policy.max_rounds {
+            if !policy.should_replace(&report) {
+                break;
+            }
+            let adj = TopologyAdjustment::from_report(&report, policy.damping);
+            if adj.is_noop() {
+                break;
+            }
+            // Adjustments compound: a trunk that stays saturated keeps
+            // getting more expensive until traffic routes around it.
+            adjusted = adj.apply(&adjusted)?;
+            let cand = {
+                let mut r = req.clone();
+                r.topology = Some(adjusted.clone());
+                r.simulate = false;
+                self.place(&r)?
+            };
+            let t0 = Instant::now();
+            let sim = sim::simulate(
+                &req.graph,
+                &real_cluster,
+                &cand.placement.device_of,
+                self.sim,
+            );
+            self.notify(
+                Stage::Simulate,
+                &StageStats {
+                    placer: req.placer.clone(),
+                    duration: t0.elapsed().as_secs_f64(),
+                    ops_in: cand.placement.device_of.len(),
+                    ops_out: cand.placement.device_of.len(),
+                },
+            );
+            // Best-of-rounds: any strictly better round is adopted; the
+            // min_improvement margin only decides whether iterating
+            // further is worth it.
+            let better = sim.ok() && sim.makespan < best_makespan;
+            let significant =
+                sim.ok() && sim.makespan < best_makespan * (1.0 - policy.min_improvement);
+            rounds.push(ReplacementRound {
+                round,
+                makespan: sim.makespan,
+                oom: !sim.ok(),
+                saturated_links: policy.saturated_links(&sim.contention),
+                blocked_fraction: sim.contention.blocked_fraction(),
+                max_utilization: sim.contention.max_utilization(),
+                improved: better,
+            });
+            report = sim.contention.clone();
+            if better {
+                best_makespan = sim.makespan;
+                best = Arc::new(PlacementResponse {
+                    sim: Some(sim),
+                    ..(*cand).clone()
+                });
+            }
+            if !significant {
+                break;
+            }
+        }
+        Ok(IterativePlacement {
+            response: best,
+            baseline_makespan,
+            rounds,
+        })
     }
 
     /// Serve a batch, fanning requests across OS threads. Results are in

@@ -1,0 +1,222 @@
+//! Turning a [`ContentionReport`] into effective per-link models.
+//!
+//! The adjustment is a queueing-theory-flavored heuristic: a transfer
+//! crossing a contended link pays, on average, the wait the simulator
+//! observed there, so the link behaves *as if* its latency were higher
+//! and its bandwidth lower. Re-pricing the topology this way lets a
+//! placement-time scheduler — which only models its own reservations —
+//! anticipate the load every other transfer puts on the same link.
+
+use crate::error::BaechiError;
+use crate::profile::CommModel;
+use crate::sim::ContentionReport;
+use crate::topology::{Link, Topology};
+
+/// Per-link degradation derived from one simulated step: added latency
+/// (the observed mean queueing wait) and a bandwidth scale (the served
+/// share of link-seconds). Apply with [`TopologyAdjustment::apply`] to
+/// obtain the effective topology the next placement round prices
+/// against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyAdjustment {
+    added_latency: Vec<f64>,
+    bandwidth_scale: Vec<f64>,
+}
+
+impl TopologyAdjustment {
+    /// Derive the adjustment from a contention report. `damping` scales
+    /// the injected latency (1.0 = charge the full observed mean wait;
+    /// smaller values converge more cautiously).
+    ///
+    /// Links that never made a transfer wait are left untouched, so an
+    /// uncontended report yields a no-op adjustment.
+    pub fn from_report(report: &ContentionReport, damping: f64) -> TopologyAdjustment {
+        // A hostile damping (negative, NaN, infinite) would flow into
+        // link latencies unvalidated — apply() builds CommModels
+        // directly — so degrade it to 0 (latency injection off,
+        // bandwidth scaling still applies).
+        let damping = if damping.is_finite() && damping > 0.0 {
+            damping
+        } else {
+            0.0
+        };
+        let n = report.links.len();
+        let mut added_latency = vec![0.0; n];
+        let mut bandwidth_scale = vec![1.0; n];
+        for u in &report.links {
+            if u.transfers == 0 || u.blocked <= 0.0 {
+                continue;
+            }
+            // Mean per-transfer wait attributed to this link. The
+            // simulator splits each wait across its path's links, so
+            // re-summing the injected latencies along a path recovers
+            // roughly the observed queueing delay — the cost the placer
+            // never priced.
+            added_latency[u.link] = damping * u.blocked / u.transfers as f64;
+            // Served share of link-seconds: busy / (busy + queued).
+            // Zero-cost links (infinite bandwidth) stay infinite — the
+            // added latency alone carries their queue cost.
+            let share = u.busy / (u.busy + u.blocked);
+            bandwidth_scale[u.link] = share.clamp(0.05, 1.0);
+        }
+        TopologyAdjustment {
+            added_latency,
+            bandwidth_scale,
+        }
+    }
+
+    /// True when no link is degraded (nothing queued).
+    pub fn is_noop(&self) -> bool {
+        self.added_latency.iter().all(|&a| a == 0.0)
+            && self.bandwidth_scale.iter().all(|&s| s == 1.0)
+    }
+
+    /// Latency injected on `link`, seconds.
+    pub fn added_latency(&self, link: usize) -> f64 {
+        self.added_latency[link]
+    }
+
+    /// Bandwidth scale applied to `link`, in `(0, 1]`.
+    pub fn bandwidth_scale(&self, link: usize) -> f64 {
+        self.bandwidth_scale[link]
+    }
+
+    /// Number of links this adjustment covers.
+    pub fn n_links(&self) -> usize {
+        self.added_latency.len()
+    }
+
+    /// Rebuild `topo` with every link's model degraded by this
+    /// adjustment. Islands and device speed factors are preserved;
+    /// pairwise effective models and contention paths are re-resolved,
+    /// so traffic may also re-route around a degraded link. Adjusting a
+    /// uniform topology yields an explicit (non-uniform) link graph.
+    pub fn apply(&self, topo: &Topology) -> crate::Result<Topology> {
+        if topo.n_links() != self.n_links() {
+            return Err(BaechiError::invalid(format!(
+                "topology adjustment covers {} links but the topology has {}",
+                self.n_links(),
+                topo.n_links()
+            )));
+        }
+        let links: Vec<Link> = topo
+            .links()
+            .iter()
+            .enumerate()
+            .map(|(i, l)| Link {
+                comm: CommModel {
+                    latency: l.comm.latency + self.added_latency[i],
+                    bandwidth: l.comm.bandwidth * self.bandwidth_scale[i],
+                },
+                ..*l
+            })
+            .collect();
+        let islands: Vec<usize> = (0..topo.n()).map(|d| topo.island_of(d)).collect();
+        Topology::from_links(
+            topo.n(),
+            topo.n_switches(),
+            links,
+            Some(islands),
+            topo.speeds().map(|s| s.to_vec()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DeviceId, NodeId, OpGraph, OpKind};
+    use crate::profile::Cluster;
+    use crate::sim::{simulate, SimConfig};
+    use std::collections::BTreeMap;
+
+    fn trunk_report() -> (ContentionReport, Topology) {
+        // Two cross-machine transfers queueing on the shared trunks.
+        let mut g = OpGraph::new("trunk");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::MatMul);
+        for id in [a, b, c, d] {
+            g.node_mut(id).compute = 1.0;
+        }
+        g.add_edge(a, c, 10);
+        g.add_edge(b, d, 10);
+        let intra = CommModel::new(0.0, 100.0).unwrap();
+        let inter = CommModel::new(0.0, 1.0).unwrap();
+        let topo = Topology::two_tier(2, 2, intra, inter).unwrap();
+        let cluster = Cluster::homogeneous(4, 1000, inter)
+            .with_topology(topo.clone())
+            .unwrap();
+        let placement: BTreeMap<NodeId, DeviceId> = g
+            .node_ids()
+            .enumerate()
+            .map(|(i, id)| (id, DeviceId(i)))
+            .collect();
+        let r = simulate(&g, &cluster, &placement, SimConfig::default());
+        assert!(r.ok());
+        (r.contention, topo)
+    }
+
+    #[test]
+    fn contended_links_get_latency_and_bandwidth_penalties() {
+        let (report, topo) = trunk_report();
+        let adj = TopologyAdjustment::from_report(&report, 1.0);
+        assert!(!adj.is_noop());
+        let trunk: Vec<usize> = topo
+            .path(0, 2)
+            .iter()
+            .filter(|l| topo.path(1, 3).contains(l))
+            .copied()
+            .collect();
+        for &l in &trunk {
+            // The waiter's 10 s split over its 4-link path gives each
+            // trunk link blocked = 2.5 s; mean over 2 transfers = 1.25.
+            assert!((adj.added_latency(l) - 1.25).abs() < 1e-9);
+            // Served share = 20 / (20 + 2.5) = 8/9.
+            assert!((adj.bandwidth_scale(l) - 8.0 / 9.0).abs() < 1e-9);
+        }
+        // Intra-machine links never queued: untouched.
+        let intra_link = topo.path(0, 1)[0];
+        assert_eq!(adj.added_latency(intra_link), 0.0);
+        assert_eq!(adj.bandwidth_scale(intra_link), 1.0);
+    }
+
+    #[test]
+    fn damping_scales_the_injection() {
+        let (report, _) = trunk_report();
+        let full = TopologyAdjustment::from_report(&report, 1.0);
+        let half = TopologyAdjustment::from_report(&report, 0.5);
+        for l in 0..full.n_links() {
+            assert!((half.added_latency(l) - full.added_latency(l) / 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn apply_degrades_contended_pairs_only() {
+        let (report, topo) = trunk_report();
+        let adj = TopologyAdjustment::from_report(&report, 1.0);
+        let adjusted = adj.apply(&topo).unwrap();
+        // Cross-machine pairs got slower…
+        assert!(adjusted.time(0, 2, 1000) > topo.time(0, 2, 1000));
+        // …while intra-machine pairs are unchanged.
+        assert!((adjusted.time(0, 1, 1000) - topo.time(0, 1, 1000)).abs() < 1e-12);
+        // Structure is preserved.
+        assert_eq!(adjusted.n(), topo.n());
+        assert_eq!(adjusted.n_links(), topo.n_links());
+        assert_eq!(adjusted.island_of(3), topo.island_of(3));
+    }
+
+    #[test]
+    fn uncontended_report_is_noop_and_mismatch_is_typed() {
+        let topo = Topology::uniform(2, CommModel::new(0.0, 1.0).unwrap());
+        let report = ContentionReport::default();
+        let adj = TopologyAdjustment::from_report(&report, 1.0);
+        assert!(adj.is_noop());
+        // Zero links vs the 2-link topology: typed error, not a panic.
+        assert!(matches!(
+            adj.apply(&topo),
+            Err(crate::BaechiError::InvalidRequest(_))
+        ));
+    }
+}

@@ -1,0 +1,34 @@
+//! Contention feedback: closing the sim → engine → placer loop.
+//!
+//! Baechi's headline result is that algorithmic placement is fast
+//! enough to *re-run* (654×–206,000× faster than RL planners), yet a
+//! single placement pass is built on an optimistic communication model:
+//! the greedy placers commit one transfer at a time and never see the
+//! aggregate queueing their own decisions induce on shared links (a NIC
+//! trunk between machines, a host-mediated PCIe spoke). The execution
+//! simulator *does* observe that queueing — per-link busy time, waiter
+//! blocked-seconds, and queue depths in
+//! [`ContentionReport`](crate::sim::ContentionReport).
+//!
+//! This module feeds the observation back:
+//!
+//! * [`TopologyAdjustment`] degrades each link's effective
+//!   communication model by the queueing delay measured on it (observed
+//!   average wait becomes added latency; the queued share of
+//!   link-seconds scales bandwidth down), producing a topology the
+//!   placer prices honestly;
+//! * [`ReplacementPolicy`] decides *when* re-placement is worth it
+//!   (trunk-utilization and blocked-fraction triggers, a round budget,
+//!   and a minimum improvement to keep iterating);
+//! * [`PlacementEngine::place_iterative`](crate::engine::PlacementEngine::place_iterative)
+//!   runs the loop: place → simulate → adjust → re-place, judging every
+//!   candidate on the *real* topology and keeping the best round. Each
+//!   intermediate placement is cached under the adjusted topology's
+//!   fingerprint, so repeating the loop (the serving scenario) is
+//!   nearly free.
+
+pub mod adjust;
+pub mod policy;
+
+pub use adjust::TopologyAdjustment;
+pub use policy::{relative_gain, ReplacementPolicy, ReplacementRound};

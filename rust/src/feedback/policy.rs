@@ -1,0 +1,143 @@
+//! When is re-placement worth it, and how is each round reported.
+
+use crate::sim::ContentionReport;
+
+/// Trigger thresholds and budget for the iterative re-placement loop
+/// ([`crate::engine::PlacementEngine::place_iterative`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplacementPolicy {
+    /// Re-placement rounds after the single-shot baseline (0 = the loop
+    /// degenerates to a plain `place`, bit-for-bit).
+    pub max_rounds: usize,
+    /// Re-place when some link's busy time reaches this fraction of the
+    /// step (a saturated NIC trunk is the motivating case).
+    pub trunk_utilization: f64,
+    /// …or when total waiter-blocked seconds reach this fraction of the
+    /// step time.
+    pub blocked_fraction: f64,
+    /// Keep iterating only while a round improves the best simulated
+    /// makespan by at least this relative margin.
+    pub min_improvement: f64,
+    /// Scale on the latency injected per round by
+    /// [`crate::feedback::TopologyAdjustment::from_report`].
+    pub damping: f64,
+}
+
+impl Default for ReplacementPolicy {
+    fn default() -> ReplacementPolicy {
+        ReplacementPolicy {
+            max_rounds: 3,
+            trunk_utilization: 0.5,
+            blocked_fraction: 0.05,
+            min_improvement: 1e-3,
+            damping: 1.0,
+        }
+    }
+}
+
+impl ReplacementPolicy {
+    /// Default thresholds with an explicit round budget.
+    pub fn rounds(max_rounds: usize) -> ReplacementPolicy {
+        ReplacementPolicy {
+            max_rounds,
+            ..ReplacementPolicy::default()
+        }
+    }
+
+    /// Override the trunk-utilization trigger.
+    pub fn with_threshold(mut self, trunk_utilization: f64) -> ReplacementPolicy {
+        self.trunk_utilization = trunk_utilization;
+        self
+    }
+
+    /// Override the damping factor.
+    pub fn with_damping(mut self, damping: f64) -> ReplacementPolicy {
+        self.damping = damping;
+        self
+    }
+
+    /// Does the observed contention warrant another placement round?
+    pub fn should_replace(&self, report: &ContentionReport) -> bool {
+        report.max_utilization() >= self.trunk_utilization
+            || report.blocked_fraction() >= self.blocked_fraction
+    }
+
+    /// Links this policy considers saturated in `report`.
+    pub fn saturated_links(&self, report: &ContentionReport) -> Vec<usize> {
+        report.saturated_links(self.trunk_utilization)
+    }
+}
+
+/// Relative makespan recovered going from `baseline` to `current`
+/// (0 for a degenerate baseline; negative when `current` is worse).
+/// The single definition behind every "recovered X%" figure.
+pub fn relative_gain(baseline: f64, current: f64) -> f64 {
+    if baseline > 0.0 {
+        (baseline - current) / baseline
+    } else {
+        0.0
+    }
+}
+
+/// One round of the iterative loop, as recorded in
+/// [`crate::engine::IterativePlacement::rounds`]. Round 0 is the
+/// single-shot baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplacementRound {
+    pub round: usize,
+    /// Simulated makespan of this round's placement on the *real*
+    /// topology. When `oom` is true this is the truncated time at
+    /// which the simulation aborted, not a real step time.
+    pub makespan: f64,
+    /// This round's simulation ran out of memory (its makespan is
+    /// partial and the round can never be adopted).
+    pub oom: bool,
+    /// Links the policy considered saturated in this round's step.
+    pub saturated_links: Vec<usize>,
+    /// Blocked-seconds fraction observed in this round's step.
+    pub blocked_fraction: f64,
+    /// Highest per-link utilization observed in this round's step.
+    pub max_utilization: f64,
+    /// Whether this round beat the best makespan before it and was
+    /// adopted as the returned placement (always false for round 0;
+    /// the policy's `min_improvement` margin only decides whether the
+    /// loop keeps iterating).
+    pub improved: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ContentionReport;
+
+    #[test]
+    fn quiet_report_does_not_trigger() {
+        let p = ReplacementPolicy::default();
+        assert!(!p.should_replace(&ContentionReport::default()));
+    }
+
+    #[test]
+    fn builders_set_fields() {
+        let p = ReplacementPolicy::rounds(5)
+            .with_threshold(0.8)
+            .with_damping(0.25);
+        assert_eq!(p.max_rounds, 5);
+        assert_eq!(p.trunk_utilization, 0.8);
+        assert_eq!(p.damping, 0.25);
+        let default = ReplacementPolicy::default();
+        assert_eq!(p.blocked_fraction, default.blocked_fraction);
+    }
+
+    #[test]
+    fn blocked_fraction_alone_triggers() {
+        let r = ContentionReport {
+            makespan: 10.0,
+            blocked_seconds: 2.0, // 20 % of the step spent queued
+            ..ContentionReport::default()
+        };
+        let p = ReplacementPolicy::default();
+        assert!(p.should_replace(&r));
+        let quiet = ContentionReport::default();
+        assert!(!p.with_threshold(2.0).should_replace(&quiet));
+    }
+}

@@ -57,10 +57,15 @@
 //!   forward-only placement (paper §3.1).
 //! * [`lp`] — dense interior-point LP solver + the SCT favorite-child LP.
 //! * [`placer`] — m-TOPO, m-ETF, m-SCT (paper §2).
-//! * [`sim`] — the event-driven Execution Simulator (paper §4.2).
+//! * [`sim`] — the event-driven Execution Simulator (paper §4.2), which
+//!   also emits a per-link [`sim::ContentionReport`].
 //! * [`baselines`] — single-device, expert, and RL placers (paper §5).
+//! * [`feedback`] — contention feedback: turns a simulator report into
+//!   per-link topology degradations and a re-placement policy, closing
+//!   the sim → engine → placer loop.
 //! * [`engine`] — the `PlacementEngine` service layer: placer registry,
-//!   request/response sessions, placement cache, stage observers.
+//!   request/response sessions, placement cache, stage observers, and
+//!   the `place_iterative` contention-driven re-placement loop.
 //! * [`runtime`] — PJRT client + AOT HLO artifact registry (stubbed
 //!   offline; see `runtime::xla`).
 //! * [`exec`] — real multi-device executor + trainer (end-to-end example).
@@ -72,6 +77,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod error;
 pub mod exec;
+pub mod feedback;
 pub mod graph;
 pub mod lp;
 pub mod models;

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! baechi place   --model gnmt:128:40 --placer m-sct [--memory-fraction 0.3]
+//! baechi place   --model gnmt:32:10 --topology two-tier:2 --replace-rounds 3
 //! baechi compare --model transformer:64
 //! baechi e2e     --steps 200 --devices 2 [--placer m-sct]
 //! baechi info    --model inception:32
@@ -70,6 +71,18 @@ fn specs() -> Vec<OptSpec> {
             default: Some("uniform"),
         },
         OptSpec {
+            name: "replace-rounds",
+            help: "contention-driven re-placement rounds (0 = single-shot placement)",
+            takes_value: true,
+            default: Some("0"),
+        },
+        OptSpec {
+            name: "replace-threshold",
+            help: "link-utilization fraction that triggers re-placement",
+            takes_value: true,
+            default: Some("0.5"),
+        },
+        OptSpec {
             name: "dot",
             help: "place: write the placed graph as Graphviz DOT (islands grouped, \
                    cross-island edges highlighted)",
@@ -125,6 +138,8 @@ fn config_from(args: &Args) -> baechi::Result<BaechiConfig> {
     cfg.device_memory = (args.get_f64("memory-gb", 8.0)? * (1u64 << 30) as f64) as u64;
     cfg.memory_fraction = args.get_f64("memory-fraction", 1.0)?;
     cfg.topology = TopologySpec::parse(&args.get_or("topology", "uniform"))?;
+    cfg.replace_rounds = args.get_usize("replace-rounds", 0)?;
+    cfg.replace_threshold = args.get_f64("replace-threshold", 0.5)?;
     if args.has("no-opt") {
         cfg.opt = baechi::optimizer::OptConfig::none();
     }
@@ -162,6 +177,26 @@ fn cmd_place(args: &Args) -> baechi::Result<()> {
         None => t.row_strs(&["simulated step time", "OOM"]),
     };
     t.row_strs(&["devices used", &report.devices_used.to_string()]);
+    if let Some(rep) = &report.replacement {
+        for rd in &rep.rounds {
+            let tag = if rd.improved { ", improved" } else { "" };
+            let step = if rd.oom {
+                "OOM".to_string()
+            } else {
+                fmt_secs(rd.makespan)
+            };
+            t.row_strs(&[
+                &format!("replace round {}", rd.round),
+                &format!(
+                    "{step} ({} saturated links, {:.0}% peak link util{tag})",
+                    rd.saturated_links.len(),
+                    rd.max_utilization * 100.0
+                ),
+            ]);
+        }
+        let gain = baechi::feedback::relative_gain(rep.baseline_makespan, report.sim.makespan);
+        t.row_strs(&["replacement gain", &format!("{:+.1}%", gain * 100.0)]);
+    }
     for (i, &p) in report.peak_memory.iter().enumerate() {
         t.row_strs(&[&format!("peak memory gpu{i}"), &fmt_bytes(p)]);
     }

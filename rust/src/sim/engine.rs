@@ -19,7 +19,12 @@
 //! * memory follows the dynamic model of [`super::memory`], with
 //!   TensorFlow semantics (outputs freed when consumers finish) or
 //!   PyTorch semantics (forward outputs additionally held until the
-//!   matching backward finishes).
+//!   matching backward finishes);
+//! * alongside the step time, the simulator keeps a passive
+//!   [`ContentionReport`]: per-link busy/blocked seconds, queue-depth
+//!   samples, and the largest transfers per link. It never alters the
+//!   event order — results with and without it are bit-identical — and
+//!   feeds the [`crate::feedback`] re-placement loop.
 
 use super::memory::{DeviceMem, OomError};
 use crate::graph::{DeviceId, NodeId, OpGraph};
@@ -52,6 +57,181 @@ impl Default for SimConfig {
     }
 }
 
+/// Buckets of [`ContentionReport::queue_depth_hist`]: index = observed
+/// queue depth, with the last bucket collecting that depth and deeper.
+pub const QUEUE_DEPTH_BUCKETS: usize = 9;
+
+/// Largest transfers remembered per link in [`LinkUse::top_ops`].
+const TOP_OPS_PER_LINK: usize = 8;
+
+/// Per-link usage accounting of one simulated step.
+#[derive(Debug, Clone, Default)]
+pub struct LinkUse {
+    /// Link index into [`crate::topology::Topology::links`].
+    pub link: usize,
+    /// Seconds this link spent mid-transfer.
+    pub busy: f64,
+    /// Seconds that transfers crossing this link spent queued before
+    /// starting — waiting on a busy link, or (in blocking-communication
+    /// mode) on a busy endpoint compute engine. The blocking resource
+    /// is not attributed individually: a transfer's wait is split
+    /// evenly across its path's links, so summing `blocked` along a
+    /// path reconstructs the observed wait once (pairwise costs re-sum
+    /// per-link latencies, which would otherwise multiply an injected
+    /// delay by the path length — see
+    /// [`crate::feedback::TopologyAdjustment`]).
+    pub blocked: f64,
+    /// Transfers whose path crossed this link.
+    pub transfers: usize,
+    /// Payload bytes carried over this link.
+    pub bytes: u64,
+    /// Largest transfers that crossed this link, as `(bytes, producer
+    /// op)`, sorted by bytes descending, at most [`TOP_OPS_PER_LINK`].
+    pub top_ops: Vec<(u64, NodeId)>,
+}
+
+impl LinkUse {
+    /// Fraction of the step this link spent mid-transfer.
+    pub fn utilization(&self, makespan: f64) -> f64 {
+        if makespan > 0.0 {
+            self.busy / makespan
+        } else {
+            0.0
+        }
+    }
+}
+
+/// What the simulator observed about interconnect contention during one
+/// step: the measurement side of the sim → engine → placer feedback
+/// loop (see [`crate::feedback`]). Populated only in sequential-comm
+/// mode, where a link is an exclusive resource; with parallel
+/// communication the report stays empty and re-placement never
+/// triggers.
+#[derive(Debug, Clone, Default)]
+pub struct ContentionReport {
+    /// Step time the link usage is measured against.
+    pub makespan: f64,
+    /// Per-link accounting, indexed by link id.
+    pub links: Vec<LinkUse>,
+    /// Queue-depth samples taken whenever a link frees: bucket `d`
+    /// counts observations of `d` transfers still waiting on the link
+    /// (last bucket = that depth or deeper).
+    pub queue_depth_hist: Vec<u64>,
+    /// Total seconds transfers spent queued before starting.
+    pub blocked_seconds: f64,
+    /// Total link-seconds spent mid-transfer (sum of per-link busy).
+    pub busy_seconds: f64,
+}
+
+impl ContentionReport {
+    fn new(n_links: usize) -> ContentionReport {
+        ContentionReport {
+            makespan: 0.0,
+            links: (0..n_links)
+                .map(|link| LinkUse {
+                    link,
+                    ..LinkUse::default()
+                })
+                .collect(),
+            queue_depth_hist: vec![0; QUEUE_DEPTH_BUCKETS],
+            blocked_seconds: 0.0,
+            busy_seconds: 0.0,
+        }
+    }
+
+    /// Record a transfer starting after `waited` seconds in the queue.
+    fn on_start(&mut self, path: &[usize], dt: f64, waited: f64, bytes: u64, node: NodeId) {
+        if path.is_empty() {
+            return;
+        }
+        let waited = waited.max(0.0);
+        self.blocked_seconds += waited;
+        self.busy_seconds += dt * path.len() as f64;
+        // Split the wait across the path (see LinkUse::blocked).
+        let wait_share = waited / path.len() as f64;
+        for &l in path {
+            let u = &mut self.links[l];
+            u.busy += dt;
+            u.blocked += wait_share;
+            u.transfers += 1;
+            u.bytes += bytes;
+            u.top_ops.push((bytes, node));
+            if u.top_ops.len() > 4 * TOP_OPS_PER_LINK {
+                Self::shrink_top_ops(&mut u.top_ops);
+            }
+        }
+    }
+
+    fn shrink_top_ops(ops: &mut Vec<(u64, NodeId)>) {
+        ops.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        ops.truncate(TOP_OPS_PER_LINK);
+    }
+
+    /// Record the number of transfers still waiting on a link.
+    fn sample_depth(&mut self, depth: usize) {
+        let bucket = depth.min(QUEUE_DEPTH_BUCKETS - 1);
+        self.queue_depth_hist[bucket] += 1;
+    }
+
+    fn finalize(&mut self, makespan: f64) {
+        self.makespan = makespan;
+        for u in &mut self.links {
+            // Busy time is booked in full when a transfer starts; an
+            // OOM-truncated step can end before in-flight transfers do,
+            // so cap at the truncated makespan to keep utilization ≤ 1.
+            u.busy = u.busy.min(makespan);
+            Self::shrink_top_ops(&mut u.top_ops);
+        }
+        self.busy_seconds = self.links.iter().map(|u| u.busy).sum();
+    }
+
+    /// Utilization of one link over the whole step.
+    pub fn utilization(&self, link: usize) -> f64 {
+        self.links[link].utilization(self.makespan)
+    }
+
+    /// Highest per-link utilization (0 when nothing was transferred).
+    pub fn max_utilization(&self) -> f64 {
+        self.links
+            .iter()
+            .map(|u| u.utilization(self.makespan))
+            .fold(0.0, f64::max)
+    }
+
+    /// Queued seconds as a fraction of the step time. Can exceed 1 when
+    /// many transfers wait concurrently.
+    pub fn blocked_fraction(&self) -> f64 {
+        if self.makespan > 0.0 {
+            self.blocked_seconds / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    /// Links whose utilization reaches `threshold`, ascending by id.
+    pub fn saturated_links(&self, threshold: f64) -> Vec<usize> {
+        self.links
+            .iter()
+            .filter(|u| u.utilization(self.makespan) >= threshold)
+            .map(|u| u.link)
+            .collect()
+    }
+
+    /// The `k` busiest links that carried traffic, busiest first (ties
+    /// broken by link id).
+    pub fn top_saturated(&self, k: usize) -> Vec<&LinkUse> {
+        let mut used: Vec<&LinkUse> = self.links.iter().filter(|u| u.busy > 0.0).collect();
+        used.sort_by(|a, b| {
+            b.busy
+                .partial_cmp(&a.busy)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.link.cmp(&b.link))
+        });
+        used.truncate(k);
+        used
+    }
+}
+
 /// Simulation outcome.
 #[derive(Debug, Clone)]
 pub struct SimResult {
@@ -64,6 +244,8 @@ pub struct SimResult {
     /// Per-device compute busy time, seconds.
     pub busy: Vec<f64>,
     pub events: usize,
+    /// Per-link contention observations (feeds re-placement).
+    pub contention: ContentionReport,
 }
 
 impl SimResult {
@@ -107,6 +289,8 @@ struct Transfer {
     src: usize,
     dst: usize,
     bytes: u64,
+    /// When the producer finished and the transfer joined the queue.
+    enqueued_at: f64,
     started: bool,
     done: bool,
 }
@@ -184,10 +368,13 @@ pub fn simulate(
         transfer_bytes: 0,
         busy: vec![0.0; n],
         events: 0,
+        contention: ContentionReport::new(topo.n_links()),
     };
     let finish_with = |mut r: SimResult, mem: &[DeviceMem], oom: Option<OomError>| -> SimResult {
         r.peak_memory = mem.iter().map(|m| m.peak).collect();
         r.oom = oom;
+        let makespan = r.makespan;
+        r.contention.finalize(makespan);
         r
     };
 
@@ -263,6 +450,17 @@ pub fn simulate(
                         transfers[idx].started = true;
                         let dt = topo.time(src, dst, transfers[idx].bytes);
                         if cluster.sequential_comm {
+                            // Contention is only accounted where links are
+                            // exclusive resources; with parallel comm a
+                            // link's "busy" time could exceed the makespan
+                            // and spuriously trigger re-placement.
+                            result.contention.on_start(
+                                path,
+                                dt,
+                                now - transfers[idx].enqueued_at,
+                                transfers[idx].bytes,
+                                transfers[idx].node,
+                            );
                             links.acquire(path);
                         }
                         if !cfg.overlap_comm {
@@ -351,6 +549,7 @@ pub fn simulate(
                         src: dev,
                         dst: d,
                         bytes,
+                        enqueued_at: t,
                         started: false,
                         done: false,
                     });
@@ -439,6 +638,10 @@ pub fn simulate(
                             }
                             k += 1;
                         }
+                        // After pruning, every remaining entry is a
+                        // still-queued transfer: the queue depth seen as
+                        // this link frees.
+                        result.contention.sample_depth(waiters.len());
                     }
                 }
                 advance!(t, dirty);
@@ -700,6 +903,146 @@ mod tests {
         assert_eq!(ra.transfers, rb.transfers);
         assert_eq!(ra.peak_memory, rb.peak_memory);
         assert_eq!(ra.events, rb.events);
+    }
+
+    #[test]
+    fn contention_busy_time_matches_reserved_intervals() {
+        // chain3 across 3 uniform devices: two 10 s transfers, each
+        // occupying its 2 endpoint host-links for the full duration.
+        let g = chain3();
+        let cluster = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap());
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 2]), SimConfig::default());
+        assert!(r.ok());
+        let c = &r.contention;
+        assert_eq!(c.makespan.to_bits(), r.makespan.to_bits());
+        // Busy sums match the reserved intervals: 2 transfers × 10 s ×
+        // 2 links each.
+        let link_sum: f64 = c.links.iter().map(|u| u.busy).sum();
+        assert!((link_sum - 40.0).abs() < 1e-9, "{link_sum}");
+        assert!((c.busy_seconds - link_sum).abs() < 1e-9);
+        // Device 1's host-link carries both transfers (in and out).
+        assert!((c.links[1].busy - 20.0).abs() < 1e-9);
+        assert_eq!(c.links[1].transfers, 2);
+        assert_eq!(c.links[1].bytes, 20);
+        // The chain serializes through compute, so nothing ever queues.
+        assert_eq!(c.blocked_seconds, 0.0);
+        assert_eq!(c.saturated_links(0.9), Vec::<usize>::new());
+        assert_eq!(c.top_saturated(1)[0].link, 1);
+    }
+
+    #[test]
+    fn contention_report_sees_trunk_queueing() {
+        use crate::topology::Topology;
+        // Same scenario as two_tier_trunk_serializes_but_islands_overlap:
+        // transfers 0→2 and 1→3 queue on the shared NIC trunks.
+        let mut g = OpGraph::new("trunk");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::MatMul);
+        for id in [a, b, c, d] {
+            g.node_mut(id).compute = 1.0;
+        }
+        g.add_edge(a, c, 10);
+        g.add_edge(b, d, 10);
+        let intra = CommModel::new(0.0, 100.0).unwrap();
+        let inter = CommModel::new(0.0, 1.0).unwrap();
+        let topo = Topology::two_tier(2, 2, intra, inter).unwrap();
+        let trunk: Vec<usize> = topo
+            .path(0, 2)
+            .iter()
+            .filter(|l| topo.path(1, 3).contains(l))
+            .copied()
+            .collect();
+        assert!(!trunk.is_empty(), "cross-machine paths must share trunks");
+        let cluster = Cluster::homogeneous(4, 1000, inter)
+            .with_topology(topo)
+            .unwrap();
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 2, 3]), SimConfig::default());
+        assert!(r.ok());
+        let rep = &r.contention;
+        // Second transfer finished compute at t=1, started at t=11.
+        assert!((rep.blocked_seconds - 10.0).abs() < 1e-9, "{}", rep.blocked_seconds);
+        assert!(rep.blocked_fraction() > 0.4);
+        // Every shared trunk link carried both 10 s transfers; the
+        // waiter's 10 s are split across its 4-link path.
+        for &l in &trunk {
+            assert!((rep.links[l].busy - 20.0).abs() < 1e-9);
+            assert_eq!(rep.links[l].transfers, 2);
+            assert!((rep.links[l].blocked - 2.5).abs() < 1e-9);
+        }
+        // makespan 22 → trunk utilization ≈ 0.91, and only trunk links
+        // pass a 0.5 saturation threshold.
+        assert!(rep.max_utilization() > 0.9);
+        assert_eq!(rep.saturated_links(0.5), trunk);
+        // The queue was observed non-empty while the first transfer held
+        // the trunk.
+        assert!(rep.queue_depth_hist[1] > 0, "{:?}", rep.queue_depth_hist);
+        // Top-op attribution names the producers.
+        assert!(rep.links[trunk[0]]
+            .top_ops
+            .iter()
+            .any(|&(bytes, node)| bytes == 10 && (node == a || node == b)));
+    }
+
+    #[test]
+    fn contended_links_never_overcommit() {
+        use crate::topology::Topology;
+        // Regression for LinkQueues acquire/release symmetry: a wide
+        // fan-out pushes many overlapping transfers over the shared
+        // trunks; debug assertions in LinkQueues fire if a path is ever
+        // released while not held, and no link may be busy for longer
+        // than the whole step.
+        let mut g = OpGraph::new("wide");
+        let src = g.add_node("src", OpKind::MatMul);
+        g.node_mut(src).compute = 1.0;
+        g.node_mut(src).mem.output = 8;
+        g.node_mut(src).output_bytes = 8;
+        for i in 0..12 {
+            let id = g.add_node(&format!("w{i}"), OpKind::MatMul);
+            g.node_mut(id).compute = 0.5;
+            g.add_edge(src, id, 8);
+        }
+        let intra = CommModel::new(0.0, 100.0).unwrap();
+        let inter = CommModel::new(0.0, 1.0).unwrap();
+        let cluster = Cluster::homogeneous(4, 10_000, inter)
+            .with_topology(Topology::two_tier(2, 2, intra, inter).unwrap())
+            .unwrap();
+        let placement: BTreeMap<NodeId, DeviceId> = g
+            .node_ids()
+            .enumerate()
+            .map(|(i, id)| (id, DeviceId(i % 4)))
+            .collect();
+        let r = simulate(&g, &cluster, &placement, SimConfig::default());
+        assert!(r.ok());
+        assert!(r.contention.blocked_seconds > 0.0, "trunk must queue");
+        for u in &r.contention.links {
+            assert!(
+                u.busy <= r.makespan + 1e-9,
+                "link {} busy {} exceeds makespan {}",
+                u.link,
+                u.busy,
+                r.makespan
+            );
+            assert!(u.top_ops.len() <= 8);
+        }
+        let hist_samples: u64 = r.contention.queue_depth_hist.iter().sum();
+        assert!(hist_samples > 0);
+    }
+
+    #[test]
+    fn parallel_comm_reports_no_contention() {
+        // With parallel communication links are not exclusive, so the
+        // report must stay empty rather than showing busy > makespan.
+        let g = chain3();
+        let cluster = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap())
+            .with_sequential_comm(false);
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 2]), SimConfig::default());
+        assert!(r.ok());
+        assert_eq!(r.transfers, 2, "transfers still happen");
+        assert_eq!(r.contention.busy_seconds, 0.0);
+        assert_eq!(r.contention.blocked_seconds, 0.0);
+        assert_eq!(r.contention.max_utilization(), 0.0);
     }
 
     #[test]

@@ -7,5 +7,7 @@
 pub mod engine;
 pub mod memory;
 
-pub use engine::{simulate, Framework, SimConfig, SimResult};
+pub use engine::{
+    simulate, ContentionReport, Framework, LinkUse, SimConfig, SimResult, QUEUE_DEPTH_BUCKETS,
+};
 pub use memory::OomError;

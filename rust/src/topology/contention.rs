@@ -69,16 +69,28 @@ impl LinkQueues {
         path.iter().all(|&l| !self.busy[l])
     }
 
-    /// Mark every link of `path` mid-transfer.
+    /// Mark every link of `path` mid-transfer. In debug builds it is an
+    /// error to acquire a link that is already held — callers must gate
+    /// on [`LinkQueues::all_free`] first.
     pub fn acquire(&mut self, path: &[usize]) {
         for &l in path {
+            debug_assert!(
+                !self.busy[l],
+                "LinkQueues::acquire: link {l} is already mid-transfer"
+            );
             self.busy[l] = true;
         }
     }
 
-    /// Release every link of `path`.
+    /// Release every link of `path`. In debug builds it is an error to
+    /// release a link that is not currently held — an acquire/release
+    /// asymmetry would let two transfers overlap on one link.
     pub fn release(&mut self, path: &[usize]) {
         for &l in path {
+            debug_assert!(
+                self.busy[l],
+                "LinkQueues::release: link {l} released while not held"
+            );
             self.busy[l] = false;
         }
     }
@@ -122,6 +134,24 @@ mod tests {
         assert!(lq.all_free(&[1]));
         lq.release(&[0, 2]);
         assert!(lq.all_free(&[0, 1, 2]));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "released while not held")]
+    fn release_of_idle_link_asserts_in_debug() {
+        let mut lq = LinkQueues::new(2);
+        lq.acquire(&[0]);
+        lq.release(&[0, 1]); // link 1 was never acquired
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "already mid-transfer")]
+    fn double_acquire_asserts_in_debug() {
+        let mut lq = LinkQueues::new(2);
+        lq.acquire(&[0, 1]);
+        lq.acquire(&[1]);
     }
 
     #[test]

@@ -12,9 +12,93 @@
 //! minimum wall-clock budget (or max iteration count) is reached, and
 //! reports mean/p50/p90 with outlier-robust statistics.
 
+use super::json::Json;
 use super::stats::Summary;
 use super::table::{fmt_secs, Table};
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+/// Where bench `name` should write machine-readable results, if
+/// anywhere: an explicit `--json <path>` argument (after `cargo bench
+/// -- …`) wins; otherwise the `BAECHI_BENCH_JSON` environment variable
+/// names a directory that receives `BENCH_<name>.json`. `None` = no
+/// JSON requested (the default; benches stay print-only).
+///
+/// `cargo bench -- --json <path>` hands the flag to *every* bench
+/// binary, so a plain file path would be overwritten by each bench in
+/// turn. The rule: a path ending in `.json` (and not already a
+/// directory) is a file — only meaningful with a single `--bench`
+/// target; anything else is treated as a directory (created on write)
+/// receiving per-bench `BENCH_<name>.json` files.
+pub fn bench_json_path(name: &str) -> Option<PathBuf> {
+    resolve_json_path(
+        name,
+        std::env::args(),
+        std::env::var_os("BAECHI_BENCH_JSON").map(PathBuf::from),
+    )
+}
+
+/// Pure resolution behind [`bench_json_path`] (testable without
+/// touching the process environment, which data-races under the
+/// parallel test harness).
+fn resolve_json_path(
+    name: &str,
+    mut argv: impl Iterator<Item = String>,
+    env_dir: Option<PathBuf>,
+) -> Option<PathBuf> {
+    let per_bench = |dir: PathBuf| dir.join(format!("BENCH_{name}.json"));
+    while let Some(a) = argv.next() {
+        if a == "--json" {
+            match argv.next() {
+                Some(p) => {
+                    let p = PathBuf::from(p);
+                    let is_file = !p.is_dir() && p.extension().map_or(false, |e| e == "json");
+                    return Some(if is_file { p } else { per_bench(p) });
+                }
+                None => {
+                    eprintln!("warning: --json needs a path; ignoring");
+                    break;
+                }
+            }
+        }
+    }
+    env_dir.map(per_bench)
+}
+
+/// Write the schema-versioned bench document (see README "Bench JSON
+/// output") if JSON output was requested. Write failures warn instead
+/// of panicking — a bench run should never die on a bad output path.
+/// Returns the path written.
+pub fn maybe_write_json(name: &str, rows: Vec<Json>, summary: Option<Json>) -> Option<PathBuf> {
+    let path = bench_json_path(name)?;
+    write_doc(path, name, rows, summary)
+}
+
+fn write_doc(path: PathBuf, name: &str, rows: Vec<Json>, summary: Option<Json>) -> Option<PathBuf> {
+    // A CI run typically points BAECHI_BENCH_JSON at a directory that
+    // does not exist yet; create it rather than silently archiving
+    // nothing (write failures below still warn).
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let mut doc = Json::obj();
+    doc.set("bench", name)
+        .set("schema", 1u64)
+        .set("rows", Json::Arr(rows));
+    if let Some(s) = summary {
+        doc.set("summary", s);
+    }
+    match std::fs::write(&path, doc.pretty()) {
+        Ok(()) => {
+            eprintln!("wrote {}", path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("warning: could not write {}: {e}", path.display());
+            None
+        }
+    }
+}
 
 /// One measured benchmark entry.
 #[derive(Debug, Clone)]
@@ -100,7 +184,8 @@ impl Bench {
         &self.measurements
     }
 
-    /// Print the results table.
+    /// Print the results table, and emit the measurements as bench JSON
+    /// when requested (see [`maybe_write_json`]).
     pub fn finish(&self) {
         let mut t = Table::new(
             &format!("bench group: {}", self.group),
@@ -117,6 +202,23 @@ impl Bench {
             ]);
         }
         t.print();
+        maybe_write_json(
+            &self.group,
+            self.measurements
+                .iter()
+                .map(|m| {
+                    let mut j = Json::obj();
+                    j.set("name", m.name.as_str())
+                        .set("iters", m.iters)
+                        .set("mean_s", m.summary.mean)
+                        .set("p50_s", m.summary.p50)
+                        .set("p90_s", m.summary.p90)
+                        .set("stddev_s", m.summary.std_dev);
+                    j
+                })
+                .collect(),
+            None,
+        );
     }
 }
 
@@ -148,6 +250,59 @@ mod tests {
         let m = b.record("oneshot", &[1.0, 2.0, 3.0]);
         assert_eq!(m.iters, 3);
         assert!((m.summary.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_path_resolution_is_argv_first_then_env() {
+        // Pure resolution — never mutates the process env (set_var would
+        // data-race the parallel test harness's getenv calls).
+        let argv = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        let none: Option<PathBuf> = None;
+        // Nothing requested.
+        assert_eq!(resolve_json_path("g", argv(&["bench"]).into_iter(), none.clone()), None);
+        // Explicit file path wins over the env dir.
+        let got = resolve_json_path(
+            "g",
+            argv(&["bench", "--json", "/tmp/out.json"]).into_iter(),
+            Some(PathBuf::from("/elsewhere")),
+        );
+        assert_eq!(got, Some(PathBuf::from("/tmp/out.json")));
+        // A directory path (argv or env) gets the per-bench file name.
+        let dir = std::env::temp_dir();
+        let expect = dir.join("BENCH_g.json");
+        let via_argv = argv(&["bench", "--json", &dir.display().to_string()]);
+        assert_eq!(
+            resolve_json_path("g", via_argv.into_iter(), none.clone()),
+            Some(expect.clone())
+        );
+        assert_eq!(
+            resolve_json_path("g", argv(&["bench"]).into_iter(), Some(dir)),
+            Some(expect)
+        );
+        // A not-yet-existing path without a .json extension is a
+        // directory-to-be, not a file every bench would overwrite.
+        let fresh = argv(&["bench", "--json", "/tmp/bench-out"]);
+        assert_eq!(
+            resolve_json_path("g", fresh.into_iter(), none.clone()),
+            Some(PathBuf::from("/tmp/bench-out/BENCH_g.json"))
+        );
+        // Trailing --json without a value is ignored (with a warning).
+        assert_eq!(resolve_json_path("g", argv(&["bench", "--json"]).into_iter(), none), None);
+    }
+
+    #[test]
+    fn write_doc_emits_schema_versioned_document() {
+        let name = format!("baechi_bench_json_{}", std::process::id());
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut row = Json::obj();
+        row.set("name", "case").set("mean_s", 0.5);
+        let path = write_doc(dir.join("BENCH_envjson.json"), "envjson", vec![row], None).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("envjson"));
+        assert_eq!(doc.get("schema").unwrap().as_u64(), Some(1));
+        assert_eq!(doc.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

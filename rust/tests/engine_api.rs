@@ -419,3 +419,103 @@ fn expert_benchmark_flows_through_requests() {
         Err(e) => panic!("expected InvalidRequest, got {e}"),
     }
 }
+
+/// Fan-out graph that saturates a two-tier NIC trunk: one source feeds
+/// `width` chains with `bytes`-sized tensors.
+fn fanout_graph(width: usize, bytes: u64) -> OpGraph {
+    let mut g = OpGraph::new("fanout");
+    let src = g.add_node("src", OpKind::MatMul);
+    g.node_mut(src).compute = 0.3;
+    g.node_mut(src).mem.output = bytes;
+    g.node_mut(src).output_bytes = bytes;
+    for c in 0..width {
+        let head = g.add_node(&format!("h{c}"), OpKind::MatMul);
+        g.node_mut(head).compute = 0.3;
+        g.node_mut(head).mem.output = bytes;
+        g.node_mut(head).output_bytes = bytes;
+        let tail = g.add_node(&format!("t{c}"), OpKind::MatMul);
+        g.node_mut(tail).compute = 0.3;
+        g.add_edge(src, head, bytes);
+        g.add_edge(head, tail, bytes);
+    }
+    g
+}
+
+/// 2 machines × 2 devices with a slow shared NIC trunk.
+fn contended_engine() -> PlacementEngine {
+    use baechi::topology::Topology;
+    let intra = CommModel::new(1e-5, 10e9).unwrap();
+    let inter = CommModel::new(1e-4, 625e6).unwrap();
+    PlacementEngine::builder()
+        .cluster(
+            Cluster::homogeneous(4, 32 << 30, inter)
+                .with_topology(Topology::two_tier(2, 2, intra, inter).unwrap())
+                .unwrap(),
+        )
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn iterative_with_zero_rounds_is_exactly_place() {
+    use baechi::feedback::ReplacementPolicy;
+    let engine = contended_engine();
+    let req = PlacementRequest::new(fanout_graph(8, 256 << 20), "m-etf");
+    let it = engine
+        .place_iterative(&req, &ReplacementPolicy::rounds(0))
+        .unwrap();
+    let plain = engine.place(&req).unwrap();
+    assert!(
+        Arc::ptr_eq(&it.response, &plain),
+        "0 rounds must serve the same cached response as place()"
+    );
+    assert!(it.rounds.is_empty());
+    let plain_makespan = plain.sim.as_ref().unwrap().makespan;
+    assert_eq!(it.baseline_makespan.to_bits(), plain_makespan.to_bits());
+}
+
+#[test]
+fn iterative_records_rounds_and_never_regresses() {
+    use baechi::feedback::ReplacementPolicy;
+    let engine = contended_engine();
+    let req = PlacementRequest::new(fanout_graph(8, 256 << 20), "m-etf");
+    let policy = ReplacementPolicy::rounds(3).with_threshold(0.3);
+    let it = engine.place_iterative(&req, &policy).unwrap();
+    assert!(!it.rounds.is_empty());
+    assert_eq!(it.rounds[0].round, 0);
+    assert_eq!(it.rounds[0].makespan.to_bits(), it.baseline_makespan.to_bits());
+    assert!(!it.rounds[0].improved, "round 0 is the baseline");
+    // Best-of-rounds cannot be worse than single-shot.
+    assert!(it.final_makespan() <= it.baseline_makespan + 1e-9);
+    assert!(it.improvement() >= 0.0);
+    // The returned response was judged on the real topology.
+    let sim = it.response.sim.as_ref().expect("iterative simulates");
+    assert!(sim.ok());
+}
+
+#[test]
+fn iterative_rounds_hit_cache_on_repeated_topologies() {
+    use baechi::feedback::ReplacementPolicy;
+    let engine = contended_engine();
+    let req = PlacementRequest::new(fanout_graph(8, 256 << 20), "m-etf");
+    let policy = ReplacementPolicy::rounds(3).with_threshold(0.3);
+    let first = engine.place_iterative(&req, &policy).unwrap();
+    let misses_after_first = engine.cache_stats().misses;
+    let hits_after_first = engine.cache_stats().hits;
+    // The loop is deterministic: round r re-derives the same adjusted
+    // topology, so repeating the call re-runs no placer at all.
+    let second = engine.place_iterative(&req, &policy).unwrap();
+    let stats = engine.cache_stats();
+    assert_eq!(
+        stats.misses,
+        misses_after_first,
+        "repeated iterative placement must be served from the cache"
+    );
+    assert_eq!(
+        stats.hits,
+        hits_after_first + first.rounds.len() as u64,
+        "one hit per round (baseline + each adjusted topology)"
+    );
+    assert_eq!(first.rounds, second.rounds);
+    assert_eq!(first.final_makespan().to_bits(), second.final_makespan().to_bits());
+}

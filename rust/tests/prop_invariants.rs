@@ -297,3 +297,45 @@ fn prop_lp_favorites_unique_and_consistent() {
         }
     });
 }
+
+#[test]
+fn prop_iterative_zero_rounds_bit_identical_to_place() {
+    use baechi::engine::{PlacementEngine, PlacementRequest};
+    use baechi::feedback::ReplacementPolicy;
+    use baechi::topology::Topology;
+    use std::sync::Arc;
+    prop_check("iterative_zero_rounds", 25, |rng| {
+        let g = random_dag(rng, 40);
+        let intra = CommModel::new(0.0, 100.0).unwrap();
+        let inter = CommModel::new(0.0, 1.0).unwrap();
+        let engine = PlacementEngine::builder()
+            .cluster(
+                Cluster::homogeneous(4, 1 << 30, inter)
+                    .with_topology(Topology::two_tier(2, 2, intra, inter).unwrap())
+                    .unwrap(),
+            )
+            .build()
+            .unwrap();
+        let req = PlacementRequest::new(g, "m-etf");
+        let plain = engine.place(&req).unwrap();
+        // A zero-round budget degenerates to place(): same cached Arc,
+        // hence bit-identical placement and simulation.
+        let it = engine
+            .place_iterative(&req, &ReplacementPolicy::rounds(0))
+            .unwrap();
+        assert!(Arc::ptr_eq(&it.response, &plain), "same cached response");
+        assert!(it.rounds.is_empty());
+        // An un-triggerable policy must break before any re-placement
+        // and return the identical baseline as well.
+        let lazy = ReplacementPolicy {
+            trunk_utilization: f64::INFINITY,
+            blocked_fraction: f64::INFINITY,
+            ..ReplacementPolicy::rounds(3)
+        };
+        let it2 = engine.place_iterative(&req, &lazy).unwrap();
+        assert!(Arc::ptr_eq(&it2.response, &plain), "loop must not trigger");
+        assert_eq!(it2.rounds.len(), 1, "only the round-0 baseline");
+        let plain_makespan = plain.sim.as_ref().unwrap().makespan;
+        assert_eq!(it2.baseline_makespan.to_bits(), plain_makespan.to_bits());
+    });
+}
