@@ -31,6 +31,11 @@ stage cargo test -q
 stage cargo bench --no-run
 
 if [[ "$fast" == 0 ]]; then
+    # Calibration property tests (seeded round-trips over uniform /
+    # nvlink-islands / two-tier ground truths) — already part of
+    # `cargo test`, re-run by name so a calibration regression fails
+    # with a dedicated stage in the log.
+    stage cargo test -q --test prop_invariants calibration
     stage cargo fmt --check
     stage cargo clippy --all-targets -- -D warnings
     stage cargo doc --no-deps

@@ -1,0 +1,109 @@
+//! Figure 11 (extension): calibration fit error vs measurement noise.
+//!
+//! The calibration subsystem (`baechi::calibrate`) learns the cluster
+//! model — per-link CommModels, island partitions, device speeds — from
+//! pairwise transfer and op-probe measurements, the way the paper's
+//! Profiler (§4.1) learns its single linear model. This bench sweeps
+//! the measurement noise level (multiplicative log-normal sigma) across
+//! the three built-in ground-truth topology families and reports the
+//! mean relative error of the recovered all-pairs effective matrix
+//! against the ground truth, plus the fitter's own self-assessment
+//! (its residual against the measurements).
+//!
+//! Asserted: at zero noise every family recovers the pair matrix within
+//! 5% mean relative error (the repo's acceptance bar — in practice it
+//! is ~1e-9), and recovery degrades gracefully (≤ 5% + 8·noise).
+
+use baechi::calibrate::{collect, fit_cluster, pair_matrix_error, CalibrationPlan, SyntheticSource};
+use baechi::profile::CommModel;
+use baechi::topology::Topology;
+use baechi::util::bench::maybe_write_json;
+use baechi::util::json::Json;
+use baechi::util::table::Table;
+
+fn main() {
+    let comm = |lat: f64, bw: f64| CommModel::new(lat, bw).unwrap();
+    let truths: Vec<(&str, Topology)> = vec![
+        ("uniform/4", Topology::uniform(4, comm(5e-5, 6e9))),
+        (
+            "nvlink-islands/4x2",
+            Topology::nvlink_islands(4, 2, comm(5e-6, 48e9), comm(5e-5, 6e9)).unwrap(),
+        ),
+        (
+            "two-tier/2x3",
+            Topology::two_tier(2, 3, comm(1e-5, 10e9), comm(8e-5, 1.25e9)).unwrap(),
+        ),
+    ];
+    let noise_levels = [0.0, 0.005, 0.01, 0.02, 0.05, 0.1];
+    // Fits averaged per (truth, noise) cell — seeded, so deterministic.
+    const SEEDS: u64 = 5;
+
+    let mut t = Table::new(
+        "Fig. 11 — calibration fit error vs measurement noise (synthetic source)",
+        &[
+            "ground truth",
+            "noise",
+            "pair err vs truth",
+            "self-residual",
+            "islands ok",
+        ],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut zero_noise_worst = 0.0f64;
+    for (label, truth) in &truths {
+        for &noise in &noise_levels {
+            let mut err_sum = 0.0;
+            let mut residual_sum = 0.0;
+            let mut islands_ok = 0usize;
+            for seed in 0..SEEDS {
+                let mut src =
+                    SyntheticSource::new(truth.clone(), noise, 0x11f + seed).expect("source");
+                let m = collect(&mut src, &CalibrationPlan::default()).expect("collect");
+                let cal = fit_cluster(&m).expect("fit");
+                err_sum += pair_matrix_error(&cal.topology, truth);
+                residual_sum += cal.report.mean_rel_error;
+                islands_ok += (cal.topology.islands() == truth.islands()) as usize;
+            }
+            let err = err_sum / SEEDS as f64;
+            let residual = residual_sum / SEEDS as f64;
+            if noise == 0.0 {
+                zero_noise_worst = zero_noise_worst.max(err);
+            }
+            assert!(
+                err <= 0.05 + 8.0 * noise,
+                "{label} @ noise {noise}: pair error {err} degraded beyond the bound"
+            );
+            t.row(&[
+                label.to_string(),
+                format!("{:.1}%", noise * 100.0),
+                format!("{:.3}%", err * 100.0),
+                format!("{:.3}%", residual * 100.0),
+                format!("{islands_ok}/{SEEDS}"),
+            ]);
+            let mut row = Json::obj();
+            row.set("truth", *label)
+                .set("noise", noise)
+                .set("pair_error_vs_truth", err)
+                .set("self_residual", residual)
+                .set("islands_recovered", islands_ok)
+                .set("seeds", SEEDS);
+            json_rows.push(row);
+        }
+    }
+    t.print();
+    let mut summary = Json::obj();
+    summary.set("zero_noise_worst_pair_error", zero_noise_worst);
+    maybe_write_json("fig11_calibration", json_rows, Some(summary));
+    assert!(
+        zero_noise_worst < 0.05,
+        "zero-noise calibration must recover the pair matrix within 5% \
+         (worst: {:.3}%)",
+        zero_noise_worst * 100.0
+    );
+    println!(
+        "takeaway: measurement-driven calibration reproduces the ground-truth \
+         pair matrix to {:.2e} mean relative error at zero noise, and stays \
+         within 5% + 8x the measurement noise as noise grows.",
+        zero_noise_worst
+    );
+}

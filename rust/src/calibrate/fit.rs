@@ -1,0 +1,593 @@
+//! Turning raw measurements into a cluster model.
+//!
+//! The pipeline (paper §4.1's Profiler, generalized from one fitted
+//! model to a whole interconnect):
+//!
+//! 1. **Per-pair models** — for every ordered device pair, group the
+//!    transfer samples by payload size, take the per-size median (robust
+//!    to scheduler outliers), and run the least-squares
+//!    [`CommModel::fit`].
+//! 2. **Island inference** — cluster the symmetrized pairwise
+//!    bandwidths: if the spread exceeds [`ISLAND_GAP`], devices joined
+//!    by above-threshold bandwidth (geometric midpoint) form islands.
+//! 3. **Link fit** — intra-island pairs become direct links carrying the
+//!    symmetrized pair model. Cross-island traffic is explained by a
+//!    star through one core switch: per-device spoke latencies and
+//!    inverse bandwidths are solved by least squares over all cross
+//!    pairs (normal equations assembled in [`crate::lp::matrix`]), so
+//!    the path-composed spoke+spoke cost reproduces the measured matrix.
+//! 4. **Speed fit** — per-device speed factors are the median of
+//!    `reference / measured` over the op probes (1.0 = the profiling
+//!    device of the analytic cost model).
+//!
+//! The result carries a quality report: per-pair relative error of the
+//! recovered effective matrix against the measured medians, plus
+//! condition warnings (thin sweeps, rank-deficient spoke splits, poor
+//! residuals).
+
+use super::{CalibratedCluster, CalibrationReport, Measurements};
+use crate::error::BaechiError;
+use crate::lp::matrix::{Cholesky, Mat};
+use crate::profile::CommModel;
+use crate::topology::{Link, LinkKind, Topology};
+use std::collections::BTreeMap;
+
+/// Pair spread below which a single-island cluster collapses to the
+/// bit-exact [`Topology::uniform`] representation.
+const UNIFORM_TOL: f64 = 0.02;
+/// Max/min pairwise-bandwidth ratio below which everything is one island.
+const ISLAND_GAP: f64 = 2.0;
+/// Fitted speeds within this of 1.0 collapse to "inherit the cluster's".
+const SPEED_TOL: f64 = 0.02;
+/// Pair residual above which a warning is recorded.
+const RESIDUAL_WARN: f64 = 0.10;
+/// Link-kind classification thresholds on end-to-end pair bandwidth.
+const NVLINK_BW: f64 = 25e9;
+const PCIE_BW: f64 = 4e9;
+
+/// Payloads the recovered topology is scored at (per-pair relative
+/// error in the report): one latency-dominated, one bandwidth-dominated.
+const SCORE_BYTES: [u64; 2] = [64 << 10, 8 << 20];
+
+/// Mean relative error of `rec`'s effective all-pairs matrix against
+/// `truth`'s, scored at [`SCORE_BYTES`] (one latency-dominated, one
+/// bandwidth-dominated payload) — the single definition behind the
+/// report's self-assessment, the round-trip property tests, and the
+/// fig11 bench. Panics if the two topologies disagree on device count
+/// (comparing matrices of different clusters is a caller bug).
+pub fn pair_matrix_error(rec: &Topology, truth: &Topology) -> f64 {
+    assert_eq!(
+        rec.n(),
+        truth.n(),
+        "pair_matrix_error: {} vs {} devices",
+        rec.n(),
+        truth.n()
+    );
+    let n = truth.n();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut sum = 0.0;
+    let mut k = 0usize;
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            for &bytes in &SCORE_BYTES {
+                let t = truth.time(i, j, bytes).max(1e-12);
+                sum += (rec.time(i, j, bytes) - t).abs() / t;
+                k += 1;
+            }
+        }
+    }
+    sum / k as f64
+}
+
+/// Classify a link by the end-to-end bandwidth it sustains.
+fn classify(pair_bandwidth: f64) -> LinkKind {
+    if !pair_bandwidth.is_finite() {
+        // Zero-cost wiring (infinite bandwidth): kind is cosmetic.
+        LinkKind::Pcie
+    } else if pair_bandwidth >= NVLINK_BW {
+        LinkKind::NvLink
+    } else if pair_bandwidth >= PCIE_BW {
+        LinkKind::Pcie
+    } else {
+        LinkKind::Nic
+    }
+}
+
+fn median(samples: &mut [f64]) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Union-find with path halving.
+struct Dsu(Vec<usize>);
+
+impl Dsu {
+    fn new(n: usize) -> Dsu {
+        Dsu((0..n).collect())
+    }
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.0[x] != x {
+            self.0[x] = self.0[self.0[x]];
+            x = self.0[x];
+        }
+        x
+    }
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        self.0[ra] = rb;
+    }
+}
+
+/// Fit the full cluster model from raw measurements. Errors with
+/// [`BaechiError::InvalidRequest`] on unmeasured pairs, degenerate
+/// sweeps, or non-physical samples; soft quality issues land in
+/// [`CalibrationReport::warnings`] instead.
+pub fn fit_cluster(m: &Measurements) -> crate::Result<CalibratedCluster> {
+    let n = m.n;
+    if n < 2 {
+        return Err(BaechiError::invalid(format!(
+            "calibration: need at least 2 devices, got {n}"
+        )));
+    }
+    if m.transfers.len() != n * n {
+        return Err(BaechiError::invalid(format!(
+            "calibration: {} transfer cells for {n} devices (need {})",
+            m.transfers.len(),
+            n * n
+        )));
+    }
+    let mut warnings = Vec::new();
+
+    // 1. Per-pair medians and least-squares models.
+    let mut pair = vec![CommModel { latency: 0.0, bandwidth: f64::INFINITY }; n * n];
+    for src in 0..n {
+        for dst in 0..n {
+            if src == dst {
+                continue;
+            }
+            let cell = &m.transfers[src * n + dst];
+            let mut by_size: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
+            for &(bytes, secs) in cell {
+                if bytes == 0 || !secs.is_finite() || secs < 0.0 {
+                    return Err(BaechiError::invalid(format!(
+                        "calibration: non-physical transfer sample {src}→{dst}: \
+                         ({bytes} B, {secs} s)"
+                    )));
+                }
+                by_size.entry(bytes).or_default().push(secs);
+            }
+            if by_size.len() < 2 {
+                return Err(BaechiError::invalid(format!(
+                    "calibration: pair {src}→{dst} has {} distinct payload sizes \
+                     (need ≥ 2 to identify latency and bandwidth)",
+                    by_size.len()
+                )));
+            }
+            if by_size.len() < 3 {
+                warnings.push(format!(
+                    "pair {src}→{dst}: thin sweep ({} payload sizes)",
+                    by_size.len()
+                ));
+            }
+            let meds: BTreeMap<u64, f64> = by_size
+                .into_iter()
+                .map(|(b, mut ts)| (b, median(&mut ts)))
+                .collect();
+            let samples: Vec<(u64, f64)> = meds.iter().map(|(&b, &t)| (b, t)).collect();
+            pair[src * n + dst] = CommModel::fit(&samples).map_err(|e| {
+                BaechiError::invalid(format!("calibration: pair {src}→{dst}: {e}"))
+            })?;
+        }
+    }
+
+    // Symmetrized pair costs: mean latency, harmonic-mean bandwidth.
+    let sym = |i: usize, j: usize| -> CommModel {
+        let (a, b) = (&pair[i * n + j], &pair[j * n + i]);
+        CommModel {
+            latency: (a.latency + b.latency) / 2.0,
+            bandwidth: 2.0 / (1.0 / a.bandwidth + 1.0 / b.bandwidth),
+        }
+    };
+
+    // 2. Island inference from bandwidth clustering.
+    let mut bw_min = f64::INFINITY;
+    let mut bw_max = 0.0f64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let bw = sym(i, j).bandwidth;
+            bw_min = bw_min.min(bw);
+            bw_max = bw_max.max(bw);
+        }
+    }
+    let mut dsu = Dsu::new(n);
+    if bw_min.is_finite() && bw_max / bw_min > ISLAND_GAP {
+        let threshold = (bw_min * bw_max).sqrt();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if sym(i, j).bandwidth >= threshold {
+                    dsu.union(i, j);
+                }
+            }
+        }
+    } else {
+        for d in 1..n {
+            dsu.union(0, d);
+        }
+    }
+    let mut island_id: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut islands = Vec::with_capacity(n);
+    for d in 0..n {
+        let root = dsu.find(d);
+        let next = island_id.len();
+        islands.push(*island_id.entry(root).or_insert(next));
+    }
+    let n_islands = island_id.len();
+
+    // 3. Per-device speed factors from op probes.
+    let speeds = fit_speeds(m, &mut warnings)?;
+
+    // 4. Structure + link fit.
+    let topology = if n_islands == 1 && is_uniform(&pair, n) {
+        let mut t = Topology::uniform(n, mean_model(&pair, n));
+        if let Some(s) = &speeds {
+            t = t.with_speeds(s.clone())?;
+        }
+        t
+    } else {
+        let mut links = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if islands[i] == islands[j] {
+                    let c = sym(i, j);
+                    links.push(Link {
+                        a: i,
+                        b: j,
+                        kind: classify(c.bandwidth),
+                        comm: c,
+                    });
+                }
+            }
+        }
+        if n_islands > 1 {
+            if n_islands == 2 {
+                warnings.push(
+                    "2 islands: the cross-island spoke split is rank-deficient \
+                     (only spoke sums are identifiable); costs are split evenly"
+                        .to_string(),
+                );
+            }
+            let (lat, inv_bw) = fit_spokes(&pair, n, &islands)?;
+            let core = n;
+            for d in 0..n {
+                let spoke_bw = if inv_bw[d] > 0.0 {
+                    1.0 / inv_bw[d]
+                } else {
+                    f64::INFINITY
+                };
+                // Classify by the composed pair bandwidth two such
+                // spokes sustain end-to-end.
+                let kind = classify(spoke_bw / 2.0);
+                links.push(Link {
+                    a: d,
+                    b: core,
+                    kind,
+                    comm: CommModel {
+                        latency: lat[d],
+                        bandwidth: spoke_bw,
+                    },
+                });
+            }
+        }
+        let n_switches = if n_islands > 1 { 1 } else { 0 };
+        Topology::from_links(n, n_switches, links, Some(islands), speeds)?
+    };
+
+    // 5. Quality report: recovered effective matrix vs measured medians.
+    let mut pair_rel_error = vec![0.0; n * n];
+    let mut sum = 0.0;
+    let mut worst = 0.0f64;
+    for src in 0..n {
+        for dst in 0..n {
+            if src == dst {
+                continue;
+            }
+            let meas = &pair[src * n + dst];
+            let mut err = 0.0;
+            for &b in &SCORE_BYTES {
+                let t_meas = meas.time(b).max(1e-12);
+                err += (topology.time(src, dst, b) - t_meas).abs() / t_meas;
+            }
+            err /= SCORE_BYTES.len() as f64;
+            pair_rel_error[src * n + dst] = err;
+            sum += err;
+            worst = worst.max(err);
+            if err > RESIDUAL_WARN {
+                warnings.push(format!(
+                    "pair {src}→{dst}: recovered model off by {:.1}% from measurements",
+                    err * 100.0
+                ));
+            }
+        }
+    }
+    let pairs = (n * n - n) as f64;
+    let report = CalibrationReport {
+        source: m.source.clone(),
+        devices: n,
+        n_islands,
+        mean_rel_error: sum / pairs,
+        max_rel_error: worst,
+        pair_rel_error,
+        warnings,
+    };
+    Ok(CalibratedCluster { topology, report })
+}
+
+/// Mean latency + harmonic-mean bandwidth over all ordered pairs.
+fn mean_model(pair: &[CommModel], n: usize) -> CommModel {
+    let mut latency = 0.0;
+    let mut inv_bw = 0.0;
+    let mut k = 0usize;
+    for src in 0..n {
+        for dst in 0..n {
+            if src != dst {
+                latency += pair[src * n + dst].latency;
+                inv_bw += 1.0 / pair[src * n + dst].bandwidth;
+                k += 1;
+            }
+        }
+    }
+    CommModel {
+        latency: latency / k as f64,
+        bandwidth: if inv_bw > 0.0 {
+            k as f64 / inv_bw
+        } else {
+            f64::INFINITY
+        },
+    }
+}
+
+/// All ordered pairs within [`UNIFORM_TOL`] of the mean at both score
+/// payloads: the cluster is a single-model star.
+fn is_uniform(pair: &[CommModel], n: usize) -> bool {
+    let mean = mean_model(pair, n);
+    for src in 0..n {
+        for dst in 0..n {
+            if src == dst {
+                continue;
+            }
+            for &b in &SCORE_BYTES {
+                let t_mean = mean.time(b).max(1e-12);
+                if (pair[src * n + dst].time(b) - t_mean).abs() / t_mean > UNIFORM_TOL {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Least-squares spoke fit: find per-device `(latency, 1/bandwidth)`
+/// such that `spoke_i + spoke_j` reproduces every measured cross-island
+/// pair cost. Normal equations `AᵀA x = Aᵀb` are assembled densely and
+/// solved with the regularized [`Cholesky`] from the LP substrate (with
+/// two islands the system has a one-dimensional null space — the ridge
+/// picks the even split).
+fn fit_spokes(
+    pair: &[CommModel],
+    n: usize,
+    islands: &[usize],
+) -> crate::Result<(Vec<f64>, Vec<f64>)> {
+    let mut normal = Mat::zeros(n, n);
+    let mut rhs_lat = vec![0.0; n];
+    let mut rhs_ibw = vec![0.0; n];
+    let mut rows = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if islands[i] == islands[j] {
+                continue;
+            }
+            // Symmetrize the two directions into one equation.
+            let (a, b) = (&pair[i * n + j], &pair[j * n + i]);
+            let lat = (a.latency + b.latency) / 2.0;
+            let ibw = (1.0 / a.bandwidth + 1.0 / b.bandwidth) / 2.0;
+            normal.add_at(i, i, 1.0);
+            normal.add_at(j, j, 1.0);
+            normal.add_at(i, j, 1.0);
+            normal.add_at(j, i, 1.0);
+            rhs_lat[i] += lat;
+            rhs_lat[j] += lat;
+            rhs_ibw[i] += ibw;
+            rhs_ibw[j] += ibw;
+            rows += 1;
+        }
+    }
+    if rows == 0 {
+        return Err(BaechiError::invalid(
+            "calibration: no cross-island pairs to fit spokes from",
+        ));
+    }
+    // Tikhonov ridge: keeps the 2-island null-space direction harmless
+    // and the factorization PD; the bias is ~1e-8 of the pair cost.
+    let max_diag = (0..n).map(|d| normal.at(d, d)).fold(0.0, f64::max);
+    let ridge = 1e-8 * (1.0 + max_diag);
+    for d in 0..n {
+        normal.add_at(d, d, ridge);
+    }
+    let ch = Cholesky::factor(normal, 1e-12)
+        .map_err(|e| BaechiError::invalid(format!("calibration: spoke fit: {e}")))?;
+    let lat: Vec<f64> = ch.solve(&rhs_lat).into_iter().map(|x| x.max(0.0)).collect();
+    let ibw: Vec<f64> = ch.solve(&rhs_ibw).into_iter().map(|x| x.max(0.0)).collect();
+    Ok((lat, ibw))
+}
+
+/// Median `reference / measured` per device; `None` when no op probes
+/// ran or when every device sits within [`SPEED_TOL`] of the profiling
+/// reference (speed 1.0) — the homogeneous case stays homogeneous.
+fn fit_speeds(
+    m: &Measurements,
+    warnings: &mut Vec<String>,
+) -> crate::Result<Option<Vec<f64>>> {
+    if m.ops.iter().all(|cell| cell.is_empty()) {
+        if !m.ops.is_empty() {
+            warnings.push("no op probes: device speeds inherit the cluster's".to_string());
+        }
+        return Ok(None);
+    }
+    let mut speeds = Vec::with_capacity(m.n);
+    for (d, cell) in m.ops.iter().enumerate() {
+        if cell.is_empty() {
+            return Err(BaechiError::invalid(format!(
+                "calibration: device {d} has no op probes while others do"
+            )));
+        }
+        let mut ratios = Vec::with_capacity(cell.len());
+        for &(reference, measured) in cell {
+            if !reference.is_finite()
+                || reference <= 0.0
+                || !measured.is_finite()
+                || measured <= 0.0
+            {
+                return Err(BaechiError::invalid(format!(
+                    "calibration: non-physical op sample on device {d}: \
+                     (ref {reference} s, measured {measured} s)"
+                )));
+            }
+            ratios.push(reference / measured);
+        }
+        let s = median(&mut ratios);
+        if !(0.2..=5.0).contains(&s) {
+            warnings.push(format!(
+                "device {d}: measured speed {s:.2}× the profiling reference \
+                 (op cost annotations may not transfer)"
+            ));
+        }
+        speeds.push(s);
+    }
+    if speeds.iter().all(|s| (s - 1.0).abs() <= SPEED_TOL) {
+        return Ok(None);
+    }
+    Ok(Some(speeds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::source::SyntheticSource;
+    use crate::calibrate::{collect, CalibrationPlan};
+
+    fn comm(lat: f64, bw: f64) -> CommModel {
+        CommModel::new(lat, bw).unwrap()
+    }
+
+    fn calibrate_synthetic(topo: Topology, noise: f64, seed: u64) -> CalibratedCluster {
+        let mut src = SyntheticSource::new(topo, noise, seed).unwrap();
+        let m = collect(&mut src, &CalibrationPlan::default()).unwrap();
+        fit_cluster(&m).unwrap()
+    }
+
+    #[test]
+    fn uniform_ground_truth_collapses_to_uniform() {
+        let truth = Topology::uniform(4, comm(5e-5, 6e9));
+        let cal = calibrate_synthetic(truth.clone(), 0.0, 1);
+        assert!(cal.topology.is_uniform(), "{:?}", cal.report);
+        assert!(pair_matrix_error(&cal.topology, &truth) < 1e-6);
+        assert!(cal.report.mean_rel_error < 1e-6);
+        assert_eq!(cal.report.n_islands, 1);
+    }
+
+    #[test]
+    fn two_tier_ground_truth_recovers_islands_and_matrix() {
+        let truth = Topology::two_tier(2, 2, comm(1e-5, 10e9), comm(8e-5, 1.25e9)).unwrap();
+        let cal = calibrate_synthetic(truth.clone(), 0.0, 2);
+        assert_eq!(cal.report.n_islands, 2, "{:?}", cal.report.warnings);
+        for d in 0..4 {
+            assert_eq!(cal.topology.island_of(d), truth.island_of(d));
+        }
+        let err = pair_matrix_error(&cal.topology, &truth);
+        assert!(err < 0.05, "mean rel error {err}");
+        assert!(cal.report.mean_rel_error < 0.05);
+        // The recovered spokes are NIC-class: the measured cross
+        // bandwidth sits below the PCIe threshold.
+        let cross: Vec<_> = cal
+            .topology
+            .links()
+            .iter()
+            .filter(|l| l.b == 4 || l.a == 4)
+            .collect();
+        assert_eq!(cross.len(), 4);
+        assert!(cross.iter().all(|l| l.kind == LinkKind::Nic));
+    }
+
+    #[test]
+    fn nvlink_islands_recover_kinds_and_speeds() {
+        let truth = Topology::nvlink_islands(4, 2, comm(5e-6, 48e9), comm(5e-5, 6e9))
+            .unwrap()
+            .with_speeds(vec![1.0, 1.0, 2.0, 2.0])
+            .unwrap();
+        let cal = calibrate_synthetic(truth.clone(), 0.0, 3);
+        assert_eq!(cal.report.n_islands, 2);
+        assert!(pair_matrix_error(&cal.topology, &truth) < 0.05);
+        // Intra links classified NVLink, spokes PCIe.
+        for l in cal.topology.links() {
+            if l.a < 4 && l.b < 4 {
+                assert_eq!(l.kind, LinkKind::NvLink, "intra {l:?}");
+            } else {
+                assert_eq!(l.kind, LinkKind::Pcie, "spoke {l:?}");
+            }
+        }
+        let speeds = cal.topology.speeds().expect("heterogeneous speeds kept");
+        for (d, &s) in speeds.iter().enumerate() {
+            assert!(
+                (s - truth.speed(d)).abs() < 0.05,
+                "device {d}: {s} vs {}",
+                truth.speed(d)
+            );
+        }
+    }
+
+    #[test]
+    fn unmeasured_pair_and_degenerate_sweep_are_typed() {
+        let mut m = Measurements::new(2, "test");
+        assert!(matches!(
+            fit_cluster(&m),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+        // One size only: latency/bandwidth unidentifiable.
+        m.push_transfer(0, 1, 1 << 20, 1e-3);
+        m.push_transfer(1, 0, 1 << 20, 1e-3);
+        assert!(matches!(
+            fit_cluster(&m),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+        // Single device is meaningless to calibrate.
+        assert!(matches!(
+            fit_cluster(&Measurements::new(1, "test")),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn noisy_measurements_stay_close_and_warn_on_thin_sweeps() {
+        let truth = Topology::two_tier(2, 2, comm(1e-5, 10e9), comm(8e-5, 1.25e9)).unwrap();
+        let mut src = SyntheticSource::new(truth.clone(), 0.03, 11).unwrap();
+        let plan = CalibrationPlan {
+            payload_sizes: vec![64 << 10, 8 << 20],
+            repeats: 5,
+            ..CalibrationPlan::default()
+        };
+        let m = collect(&mut src, &plan).unwrap();
+        let cal = fit_cluster(&m).unwrap();
+        assert!(
+            cal.report.warnings.iter().any(|w| w.contains("thin sweep")),
+            "{:?}",
+            cal.report.warnings
+        );
+        let err = pair_matrix_error(&cal.topology, &truth);
+        assert!(err < 0.15, "3% noise should stay near truth, got {err}");
+    }
+}

@@ -7,6 +7,9 @@
 //! delegates to the registry. New placement strategies should register
 //! with the engine directly instead of growing this enum.
 
+use crate::calibrate::{
+    calibrate, CalibratedCluster, CalibrationPlan, RuntimeSource, SyntheticSource,
+};
 use crate::engine::PlacerRegistry;
 use crate::error::BaechiError;
 use crate::feedback::ReplacementPolicy;
@@ -203,6 +206,81 @@ impl TopologySpec {
     }
 }
 
+/// How the run obtains its cluster model (`--calibrate`): hand-specified
+/// (`off`, the default — the [`TopologySpec`] is used as-is), measured
+/// from a deterministic synthetic replay of that topology
+/// (`synthetic[:noise]`, seeded — what CI runs), measured from the real
+/// host (`runtime`), or loaded from a saved
+/// [`CalibratedCluster`] artifact (`<path>.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CalibrationSpec {
+    Off,
+    Synthetic { noise: f64 },
+    Runtime,
+    File(String),
+}
+
+/// Seed for `--calibrate synthetic` runs: fixed so CLI runs are
+/// reproducible (the property tests sweep seeds instead).
+const SYNTHETIC_CALIBRATION_SEED: u64 = 0xbaec1;
+
+impl CalibrationSpec {
+    pub fn parse(s: &str) -> crate::Result<CalibrationSpec> {
+        match s {
+            "off" => Ok(CalibrationSpec::Off),
+            "runtime" => Ok(CalibrationSpec::Runtime),
+            "synthetic" => Ok(CalibrationSpec::Synthetic { noise: 0.0 }),
+            _ if s.ends_with(".json") => Ok(CalibrationSpec::File(s.to_string())),
+            _ => {
+                if let Some(rest) = s.strip_prefix("synthetic:") {
+                    let noise: f64 = rest
+                        .parse()
+                        .ok()
+                        .filter(|n: &f64| n.is_finite() && *n >= 0.0)
+                        .ok_or_else(|| {
+                            BaechiError::invalid(format!(
+                                "calibrate: noise in '{s}' must be a non-negative number"
+                            ))
+                        })?;
+                    Ok(CalibrationSpec::Synthetic { noise })
+                } else {
+                    Err(BaechiError::invalid(format!(
+                        "unknown calibration source '{s}' \
+                         (off | synthetic[:<noise>] | runtime | <artifact>.json)"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Run this calibration for an `n`-device cluster. `truth` lazily
+    /// builds the hand-specified topology the synthetic source replays —
+    /// it is only invoked (and its errors only surface) for
+    /// [`CalibrationSpec::Synthetic`]; runtime probes and saved
+    /// artifacts never need (or validate) a hand-specified ground
+    /// truth. `Ok(None)` when calibration is off.
+    pub fn run(
+        &self,
+        n: usize,
+        truth: impl FnOnce() -> crate::Result<Topology>,
+    ) -> crate::Result<Option<CalibratedCluster>> {
+        let plan = CalibrationPlan::default();
+        match self {
+            CalibrationSpec::Off => Ok(None),
+            CalibrationSpec::Synthetic { noise } => {
+                let mut src =
+                    SyntheticSource::new(truth()?, *noise, SYNTHETIC_CALIBRATION_SEED)?;
+                calibrate(&mut src, &plan).map(Some)
+            }
+            CalibrationSpec::Runtime => {
+                let mut src = RuntimeSource::new(n)?;
+                calibrate(&mut src, &plan).map(Some)
+            }
+            CalibrationSpec::File(path) => CalibratedCluster::load(path).map(Some),
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Debug, Clone)]
 pub struct BaechiConfig {
@@ -220,6 +298,10 @@ pub struct BaechiConfig {
     /// Interconnect topology (`TopologySpec::Uniform` = the paper's
     /// single-model cluster).
     pub topology: TopologySpec,
+    /// Cluster-model calibration (`--calibrate`): when not `Off`, the
+    /// hand-specified topology is replaced by a measured one (for the
+    /// synthetic source it doubles as the ground truth being measured).
+    pub calibrate: CalibrationSpec,
     /// Contention-driven re-placement rounds (`--replace-rounds`;
     /// 0 = single-shot placement, the paper's behavior).
     pub replace_rounds: usize,
@@ -257,6 +339,7 @@ impl BaechiConfig {
                 overlap_comm: true,
             },
             topology: TopologySpec::Uniform,
+            calibrate: CalibrationSpec::Off,
             replace_rounds: 0,
             replace_threshold: 0.5,
         }
@@ -287,13 +370,40 @@ impl BaechiConfig {
         })
     }
 
-    /// Build the cluster this config describes. Fails with a typed
-    /// [`BaechiError::InvalidRequest`] when the topology spec is
-    /// malformed or does not match the device count.
+    /// The hand-specified topology this config describes (the uniform
+    /// star when the spec is `uniform`) — what a synthetic calibration
+    /// run measures as its ground truth.
+    pub fn truth_topology(&self) -> crate::Result<Topology> {
+        Ok(self
+            .topology
+            .build(self.devices, self.comm)?
+            .unwrap_or_else(|| Topology::uniform(self.devices, self.comm)))
+    }
+
+    /// Run this config's calibration against its hand-specified
+    /// topology as the ground truth. `Ok(None)` when `calibrate` is
+    /// [`CalibrationSpec::Off`].
+    pub fn calibrated(&self) -> crate::Result<Option<CalibratedCluster>> {
+        self.calibrate.run(self.devices, || self.truth_topology())
+    }
+
+    /// Build the cluster this config describes, including calibration
+    /// when requested (the measured topology replaces the hand-specified
+    /// one). Fails with a typed [`BaechiError::InvalidRequest`] when the
+    /// topology spec is malformed or does not match the device count.
     pub fn cluster(&self) -> crate::Result<Cluster> {
+        self.cluster_with(self.calibrated()?.as_ref())
+    }
+
+    /// [`BaechiConfig::cluster`] with an already-run calibration (so one
+    /// calibration serves both the engine and the run report).
+    pub fn cluster_with(&self, cal: Option<&CalibratedCluster>) -> crate::Result<Cluster> {
         let base = Cluster::homogeneous(self.devices, self.device_memory, self.comm)
             .with_memory_fraction(self.memory_fraction)
             .with_sequential_comm(self.sequential_comm);
+        if let Some(cal) = cal {
+            return cal.apply_to(base);
+        }
         match self.topology.build(self.devices, self.comm)? {
             Some(t) => base.with_topology(t),
             None => Ok(base),
@@ -427,6 +537,68 @@ mod tests {
         assert_eq!(p.trunk_utilization, 0.7);
         // Both triggers follow the CLI knob (0.5 → the 0.05 default).
         assert!((p.blocked_fraction - 0.07).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibration_spec_parse() {
+        assert_eq!(CalibrationSpec::parse("off").unwrap(), CalibrationSpec::Off);
+        assert_eq!(
+            CalibrationSpec::parse("synthetic").unwrap(),
+            CalibrationSpec::Synthetic { noise: 0.0 }
+        );
+        assert_eq!(
+            CalibrationSpec::parse("synthetic:0.05").unwrap(),
+            CalibrationSpec::Synthetic { noise: 0.05 }
+        );
+        assert_eq!(
+            CalibrationSpec::parse("runtime").unwrap(),
+            CalibrationSpec::Runtime
+        );
+        assert_eq!(
+            CalibrationSpec::parse("calib.json").unwrap(),
+            CalibrationSpec::File("calib.json".into())
+        );
+        for bad in ["synthetic:-1", "synthetic:nan", "mesh", ""] {
+            assert!(
+                matches!(
+                    CalibrationSpec::parse(bad),
+                    Err(BaechiError::InvalidRequest(_))
+                ),
+                "{bad}"
+            );
+        }
+        // Missing artifact file is typed, not a panic.
+        assert!(matches!(
+            CalibrationSpec::File("/nonexistent/calib.json".into())
+                .run(4, || Ok(Topology::uniform(4, CommModel::pcie_via_host()))),
+            Err(BaechiError::Io(_))
+        ));
+        // Non-synthetic sources never build (or fail on) the ground
+        // truth — loading an artifact must not validate a topology that
+        // is about to be replaced anyway.
+        let err = CalibrationSpec::File("/nonexistent/calib.json".into())
+            .run(4, || Err(BaechiError::invalid("truth must not be built")));
+        assert!(matches!(err, Err(BaechiError::Io(_))), "{err:?}");
+    }
+
+    #[test]
+    fn calibrated_cluster_replaces_hand_specified_topology() {
+        let mut cfg = BaechiConfig::paper_default(Benchmark::LinReg, PlacerKind::MEtf);
+        cfg.topology = TopologySpec::TwoTier { nodes: 2, ratio: 8.0 };
+        cfg.calibrate = CalibrationSpec::Synthetic { noise: 0.0 };
+        let cal = cfg.calibrated().unwrap().expect("calibration ran");
+        assert_eq!(cal.report.devices, 4);
+        assert_eq!(cal.report.n_islands, 2, "{:?}", cal.report.warnings);
+        assert!(cal.report.mean_rel_error < 0.05);
+        let c = cfg.cluster().unwrap();
+        // The cluster carries the *measured* topology (star through a
+        // fitted core switch), not the hand-specified trunk graph.
+        assert_eq!(c.topology(), &cal.topology);
+        assert_eq!(c.topology().n_islands(), 2);
+        // Off keeps the hand-specified one.
+        cfg.calibrate = CalibrationSpec::Off;
+        assert!(cfg.calibrated().unwrap().is_none());
+        assert_ne!(cfg.cluster().unwrap().topology(), &cal.topology);
     }
 
     #[test]

@@ -6,5 +6,5 @@
 pub mod config;
 pub mod pipeline;
 
-pub use config::{BaechiConfig, PlacerKind, TopologySpec};
+pub use config::{BaechiConfig, CalibrationSpec, PlacerKind, TopologySpec};
 pub use pipeline::{engine_for, run, ReplacementSummary, RunReport};

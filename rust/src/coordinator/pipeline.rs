@@ -10,6 +10,7 @@
 //! should talk to [`crate::engine`] directly.
 
 use super::config::BaechiConfig;
+use crate::calibrate::CalibrationReport;
 use crate::engine::{PlacementEngine, PlacementRequest};
 use crate::feedback::ReplacementRound;
 use crate::graph::{DeviceId, NodeId};
@@ -79,6 +80,9 @@ pub struct RunReport {
     /// Re-placement trajectory (`None` for single-shot runs, and for
     /// runs whose simulation OOMed — a partial makespan is not a gain).
     pub replacement: Option<ReplacementSummary>,
+    /// Calibration quality report (`--calibrate`; `None` when the run
+    /// used the hand-specified cluster model).
+    pub calibration: Option<CalibrationReport>,
 }
 
 impl RunReport {
@@ -108,16 +112,27 @@ impl RunReport {
         if let Some(rep) = &self.replacement {
             j.set("replacement", rep.to_json());
         }
+        if let Some(cal) = &self.calibration {
+            j.set("calibration", cal.to_json());
+        }
         j
     }
 }
 
 /// Build the [`PlacementEngine`] a config describes (without serving any
-/// request). The CLI shares this so every entrypoint routes through one
-/// engine construction path.
+/// request), running calibration when the config asks for it. The CLI
+/// shares this so every entrypoint routes through one engine
+/// construction path.
 pub fn engine_for(cfg: &BaechiConfig) -> crate::Result<PlacementEngine> {
+    engine_with(cfg, cfg.calibrated()?.as_ref())
+}
+
+fn engine_with(
+    cfg: &BaechiConfig,
+    cal: Option<&crate::calibrate::CalibratedCluster>,
+) -> crate::Result<PlacementEngine> {
     PlacementEngine::builder()
-        .cluster(cfg.cluster()?)
+        .cluster(cfg.cluster_with(cal)?)
         .optimizer(cfg.opt)
         .sim(cfg.sim)
         .build()
@@ -128,7 +143,9 @@ pub fn engine_for(cfg: &BaechiConfig) -> crate::Result<PlacementEngine> {
 /// `Err(BaechiError::Oom { .. })` (the paper's m-* OOM rows), while
 /// *runtime* OOM of a successful placement is reported in `sim.oom`.
 pub fn run(cfg: &BaechiConfig) -> crate::Result<RunReport> {
-    let engine = engine_for(cfg)?;
+    // Calibrate once; the engine's cluster and the report share the run.
+    let calibrated = cfg.calibrated()?;
+    let engine = engine_with(cfg, calibrated.as_ref())?;
     let req = PlacementRequest::for_benchmark(cfg.benchmark, &cfg.placer.spec());
     let (resp, replacement) = match cfg.replacement_policy() {
         Some(policy) => {
@@ -163,6 +180,7 @@ pub fn run(cfg: &BaechiConfig) -> crate::Result<RunReport> {
         device_of: resp.placement.device_of.clone(),
         topology: engine.cluster().effective_topology().describe(),
         replacement,
+        calibration: calibrated.map(|c| c.report),
     })
 }
 
@@ -232,6 +250,22 @@ mod tests {
         assert_eq!(j.get("placer").unwrap().as_str(), Some("m-etf"));
         assert!(j.get("replacement").is_none(), "single-shot run");
         assert!(Json::parse(&j.pretty()).is_ok());
+    }
+
+    #[test]
+    fn calibrated_run_reports_quality_and_serializes() {
+        use crate::coordinator::{CalibrationSpec, TopologySpec};
+        let mut cfg = BaechiConfig::paper_default(Benchmark::LinReg, PlacerKind::MEtf);
+        cfg.topology = TopologySpec::TwoTier { nodes: 2, ratio: 8.0 };
+        cfg.calibrate = CalibrationSpec::Synthetic { noise: 0.0 };
+        let r = run(&cfg).unwrap();
+        let cal = r.calibration.as_ref().expect("calibrated run carries a report");
+        assert!(cal.mean_rel_error < 0.05, "mean rel error {}", cal.mean_rel_error);
+        assert_eq!(cal.n_islands, 2);
+        let j = r.to_json();
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        let cj = parsed.get("calibration").expect("calibration in JSON");
+        assert_eq!(cj.get("islands").and_then(Json::as_u64), Some(2));
     }
 
     #[test]

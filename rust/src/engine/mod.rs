@@ -33,6 +33,9 @@
 //! * **Re-placement** — [`PlacementEngine::place_iterative`] closes the
 //!   sim → placer loop: simulate, degrade saturated links by the
 //!   observed queueing ([`crate::feedback`]), re-place, keep the best.
+//!   [`PlacementEngine::place_iterative_measured`] seeds the loop with a
+//!   *measured* contention report ([`crate::calibrate::measured_report`])
+//!   instead of the simulator's.
 //! * **Typed errors** — every failure is a [`BaechiError`] variant.
 
 pub mod fingerprint;
@@ -482,6 +485,50 @@ impl PlacementEngine {
         req: &PlacementRequest,
         policy: &ReplacementPolicy,
     ) -> crate::Result<IterativePlacement> {
+        self.iterate(req, policy, None)
+    }
+
+    /// [`Self::place_iterative`] driven by a **measured** contention
+    /// report instead of the simulator's: the supplied report (built
+    /// from runtime link observations via
+    /// [`crate::calibrate::measured_report`]) seeds the first topology
+    /// adjustment and the round-0 trigger decision, so the loop corrects
+    /// for the queueing the *real* cluster exhibited rather than what
+    /// the simulator predicted. Subsequent rounds are still judged and
+    /// re-observed in the simulator (the only executor that can score a
+    /// candidate without deploying it).
+    ///
+    /// The report must cover the links of the topology the request
+    /// resolves to (typed [`BaechiError::InvalidRequest`] otherwise).
+    /// With `policy.max_rounds == 0` the call degenerates to
+    /// [`Self::place`] bit-for-bit, exactly like `place_iterative`.
+    pub fn place_iterative_measured(
+        &self,
+        req: &PlacementRequest,
+        policy: &ReplacementPolicy,
+        report: &crate::sim::ContentionReport,
+    ) -> crate::Result<IterativePlacement> {
+        // Validate the report against the topology the loop will adjust
+        // before doing any placement work (mismatches are caller bugs).
+        let topo_links = match &req.topology {
+            Some(t) => t.n_links(),
+            None => self.cluster.effective_topology().n_links(),
+        };
+        if report.links.len() != topo_links {
+            return Err(BaechiError::invalid(format!(
+                "measured report covers {} links but the request's topology has {topo_links}",
+                report.links.len()
+            )));
+        }
+        self.iterate(req, policy, Some(report))
+    }
+
+    fn iterate(
+        &self,
+        req: &PlacementRequest,
+        policy: &ReplacementPolicy,
+        measured: Option<&crate::sim::ContentionReport>,
+    ) -> crate::Result<IterativePlacement> {
         if policy.max_rounds == 0 {
             let response = self.place(req)?;
             let baseline_makespan = response
@@ -504,13 +551,17 @@ impl PlacementEngine {
         };
         let base_sim = base.sim.as_ref().expect("iterative base always simulates");
         let baseline_makespan = base_sim.makespan;
+        // The report that drives the round-0 trigger and the first
+        // adjustment: the measured one when supplied, else the
+        // simulator's observation of the single-shot placement.
+        let round0_report = measured.unwrap_or(&base_sim.contention);
         let round0 = ReplacementRound {
             round: 0,
             makespan: baseline_makespan,
             oom: !base_sim.ok(),
-            saturated_links: policy.saturated_links(&base_sim.contention),
-            blocked_fraction: base_sim.contention.blocked_fraction(),
-            max_utilization: base_sim.contention.max_utilization(),
+            saturated_links: policy.saturated_links(round0_report),
+            blocked_fraction: round0_report.blocked_fraction(),
+            max_utilization: round0_report.max_utilization(),
             improved: false,
         };
         let mut rounds = vec![round0];
@@ -530,14 +581,17 @@ impl PlacementEngine {
             None => Cow::Borrowed(&self.cluster),
         };
         let mut adjusted = real_cluster.effective_topology().into_owned();
-        let mut report = base_sim.contention.clone();
+        let mut report = round0_report.clone();
         let mut best = base;
         let mut best_makespan = baseline_makespan;
         for round in 1..=policy.max_rounds {
             if !policy.should_replace(&report) {
                 break;
             }
-            let adj = TopologyAdjustment::from_report(&report, policy.damping);
+            // Per-link-kind damping: NVLink observations are charged in
+            // full, NIC trunk waits most cautiously (the compounding
+            // loop must not slosh traffic between machines each round).
+            let adj = TopologyAdjustment::for_topology(&report, policy, &adjusted)?;
             if adj.is_noop() {
                 break;
             }

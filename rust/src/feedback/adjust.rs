@@ -7,6 +7,7 @@
 //! placement-time scheduler — which only models its own reservations —
 //! anticipate the load every other transfer puts on the same link.
 
+use super::policy::ReplacementPolicy;
 use crate::error::BaechiError;
 use crate::profile::CommModel;
 use crate::sim::ContentionReport;
@@ -26,7 +27,8 @@ pub struct TopologyAdjustment {
 impl TopologyAdjustment {
     /// Derive the adjustment from a contention report. `damping` scales
     /// the injected latency (1.0 = charge the full observed mean wait;
-    /// smaller values converge more cautiously).
+    /// smaller values converge more cautiously) uniformly across link
+    /// kinds; [`TopologyAdjustment::for_topology`] adapts it per kind.
     ///
     /// Links that never made a transfer wait are left untouched, so an
     /// uncontended report yields a no-op adjustment.
@@ -40,6 +42,32 @@ impl TopologyAdjustment {
         } else {
             0.0
         };
+        Self::build(report, |_| damping)
+    }
+
+    /// Kind-adaptive variant: each link's injected latency is damped by
+    /// [`ReplacementPolicy::damping_for`] its kind in `topo` (NVLink
+    /// observations charged in full, NIC trunk waits most cautiously).
+    /// Errors with [`BaechiError::InvalidRequest`] when the report does
+    /// not cover `topo`'s links — e.g. a measured report recorded
+    /// against a different cluster.
+    pub fn for_topology(
+        report: &ContentionReport,
+        policy: &ReplacementPolicy,
+        topo: &Topology,
+    ) -> crate::Result<TopologyAdjustment> {
+        if report.links.len() != topo.n_links() {
+            return Err(BaechiError::invalid(format!(
+                "topology adjustment: report covers {} links but the topology has {}",
+                report.links.len(),
+                topo.n_links()
+            )));
+        }
+        let links = topo.links();
+        Ok(Self::build(report, |l| policy.damping_for(links[l].kind)))
+    }
+
+    fn build(report: &ContentionReport, damping_of: impl Fn(usize) -> f64) -> TopologyAdjustment {
         let n = report.links.len();
         let mut added_latency = vec![0.0; n];
         let mut bandwidth_scale = vec![1.0; n];
@@ -52,7 +80,7 @@ impl TopologyAdjustment {
             // re-summing the injected latencies along a path recovers
             // roughly the observed queueing delay — the cost the placer
             // never priced.
-            added_latency[u.link] = damping * u.blocked / u.transfers as f64;
+            added_latency[u.link] = damping_of(u.link) * u.blocked / u.transfers as f64;
             // Served share of link-seconds: busy / (busy + queued).
             // Zero-cost links (infinite bandwidth) stay infinite — the
             // added latency alone carries their queue cost.
@@ -111,7 +139,7 @@ impl TopologyAdjustment {
                 ..*l
             })
             .collect();
-        let islands: Vec<usize> = (0..topo.n()).map(|d| topo.island_of(d)).collect();
+        let islands = topo.islands().to_vec();
         Topology::from_links(
             topo.n(),
             topo.n_switches(),
@@ -190,6 +218,42 @@ mod tests {
         for l in 0..full.n_links() {
             assert!((half.added_latency(l) - full.added_latency(l) / 2.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn kind_adaptive_damping_follows_the_policy() {
+        use crate::feedback::ReplacementPolicy;
+        use crate::topology::LinkKind;
+        let (report, topo) = trunk_report();
+        // Every contended link in the trunk scenario is NIC-kind (the
+        // intra PCIe links never queue): with the default policy the
+        // injection is half the uniform charge, while bandwidth scaling
+        // (damping-independent) is untouched.
+        let uniform = TopologyAdjustment::from_report(&report, 1.0);
+        let policy = ReplacementPolicy::default();
+        let adaptive = TopologyAdjustment::for_topology(&report, &policy, &topo).unwrap();
+        for (u, l) in report.links.iter().zip(topo.links()) {
+            if u.blocked > 0.0 {
+                assert_eq!(l.kind, LinkKind::Nic, "contended link {}", u.link);
+            }
+        }
+        for l in 0..uniform.n_links() {
+            assert!(
+                (adaptive.added_latency(l) - 0.5 * uniform.added_latency(l)).abs() < 1e-12,
+                "link {l}"
+            );
+            assert_eq!(adaptive.bandwidth_scale(l), uniform.bandwidth_scale(l));
+        }
+        // An all-1.0 kind table reproduces the uniform adjustment.
+        let flat = ReplacementPolicy::default().with_uniform_damping();
+        let same = TopologyAdjustment::for_topology(&report, &flat, &topo).unwrap();
+        assert_eq!(same, uniform);
+        // A report for a different link set is a typed error.
+        let other = Topology::uniform(2, CommModel::new(0.0, 1.0).unwrap());
+        assert!(matches!(
+            TopologyAdjustment::for_topology(&report, &policy, &other),
+            Err(BaechiError::InvalidRequest(_))
+        ));
     }
 
     #[test]

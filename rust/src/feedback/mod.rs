@@ -19,7 +19,10 @@
 //!   placer prices honestly;
 //! * [`ReplacementPolicy`] decides *when* re-placement is worth it
 //!   (trunk-utilization and blocked-fraction triggers, a round budget,
-//!   and a minimum improvement to keep iterating);
+//!   and a minimum improvement to keep iterating) and *how hard* to
+//!   correct per link kind (NVLink observations charged in full, PCIe
+//!   and NIC progressively damped — see
+//!   [`ReplacementPolicy::damping_for`]);
 //! * [`PlacementEngine::place_iterative`](crate::engine::PlacementEngine::place_iterative)
 //!   runs the loop: place → simulate → adjust → re-place, judging every
 //!   candidate on the *real* topology and keeping the best round. Each

@@ -1,6 +1,7 @@
 //! When is re-placement worth it, and how is each round reported.
 
 use crate::sim::ContentionReport;
+use crate::topology::LinkKind;
 
 /// Trigger thresholds and budget for the iterative re-placement loop
 /// ([`crate::engine::PlacementEngine::place_iterative`]).
@@ -18,9 +19,18 @@ pub struct ReplacementPolicy {
     /// Keep iterating only while a round improves the best simulated
     /// makespan by at least this relative margin.
     pub min_improvement: f64,
-    /// Scale on the latency injected per round by
-    /// [`crate::feedback::TopologyAdjustment::from_report`].
+    /// Global scale on the latency injected per round by
+    /// [`crate::feedback::TopologyAdjustment`]; composed with the
+    /// per-link-kind multipliers below (see
+    /// [`ReplacementPolicy::damping_for`]).
     pub damping: f64,
+    /// Per-link-kind damping multipliers, indexed NVLink / PCIe / NIC.
+    /// NVLink queueing observations are point-to-point and reliable, so
+    /// they are charged in full; PCIe waits are host-mediated and partly
+    /// transient (0.7); NIC trunk waits swing hardest between rounds, so
+    /// they get the most cautious correction (0.5) to keep the loop from
+    /// oscillating traffic back and forth across machines.
+    pub kind_damping: [f64; 3],
 }
 
 impl Default for ReplacementPolicy {
@@ -31,7 +41,17 @@ impl Default for ReplacementPolicy {
             blocked_fraction: 0.05,
             min_improvement: 1e-3,
             damping: 1.0,
+            kind_damping: [1.0, 0.7, 0.5],
         }
+    }
+}
+
+/// Slot of a link kind in [`ReplacementPolicy::kind_damping`].
+fn kind_slot(kind: LinkKind) -> usize {
+    match kind {
+        LinkKind::NvLink => 0,
+        LinkKind::Pcie => 1,
+        LinkKind::Nic => 2,
     }
 }
 
@@ -50,10 +70,36 @@ impl ReplacementPolicy {
         self
     }
 
-    /// Override the damping factor.
+    /// Override the global damping factor.
     pub fn with_damping(mut self, damping: f64) -> ReplacementPolicy {
         self.damping = damping;
         self
+    }
+
+    /// Override the damping multiplier for one link kind.
+    pub fn with_kind_damping(mut self, kind: LinkKind, damping: f64) -> ReplacementPolicy {
+        self.kind_damping[kind_slot(kind)] = damping;
+        self
+    }
+
+    /// Disable kind adaptation: every link kind is damped by the global
+    /// factor alone (the pre-adaptive behavior).
+    pub fn with_uniform_damping(mut self) -> ReplacementPolicy {
+        self.kind_damping = [1.0, 1.0, 1.0];
+        self
+    }
+
+    /// Effective damping for a link of `kind`: the global factor times
+    /// the kind multiplier, sanitized to `[0, ∞)` (hostile values damp
+    /// to 0 — latency injection off — rather than poisoning the
+    /// topology).
+    pub fn damping_for(&self, kind: LinkKind) -> f64 {
+        let d = self.damping * self.kind_damping[kind_slot(kind)];
+        if d.is_finite() && d > 0.0 {
+            d
+        } else {
+            0.0
+        }
     }
 
     /// Does the observed contention warrant another placement round?
@@ -126,6 +172,32 @@ mod tests {
         assert_eq!(p.damping, 0.25);
         let default = ReplacementPolicy::default();
         assert_eq!(p.blocked_fraction, default.blocked_fraction);
+    }
+
+    #[test]
+    fn kind_damping_defaults_and_overrides() {
+        let p = ReplacementPolicy::default();
+        // NVLink charged in full, PCIe and NIC progressively damped.
+        assert_eq!(p.damping_for(LinkKind::NvLink), 1.0);
+        assert!((p.damping_for(LinkKind::Pcie) - 0.7).abs() < 1e-12);
+        assert!((p.damping_for(LinkKind::Nic) - 0.5).abs() < 1e-12);
+        // The global factor composes with the kind multiplier.
+        let half = p.with_damping(0.5);
+        assert!((half.damping_for(LinkKind::Nic) - 0.25).abs() < 1e-12);
+        // Per-kind override.
+        let custom = ReplacementPolicy::default().with_kind_damping(LinkKind::Nic, 0.9);
+        assert!((custom.damping_for(LinkKind::Nic) - 0.9).abs() < 1e-12);
+        assert!((custom.damping_for(LinkKind::Pcie) - 0.7).abs() < 1e-12);
+        // Uniform mode restores the pre-adaptive behavior.
+        let uniform = ReplacementPolicy::default().with_uniform_damping();
+        for k in [LinkKind::NvLink, LinkKind::Pcie, LinkKind::Nic] {
+            assert_eq!(uniform.damping_for(k), 1.0);
+        }
+        // Hostile values sanitize to 0, never NaN/negative.
+        let bad = ReplacementPolicy::default().with_damping(f64::NAN);
+        assert_eq!(bad.damping_for(LinkKind::Pcie), 0.0);
+        let neg = ReplacementPolicy::default().with_kind_damping(LinkKind::Pcie, -3.0);
+        assert_eq!(neg.damping_for(LinkKind::Pcie), 0.0);
     }
 
     #[test]

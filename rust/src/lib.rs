@@ -60,6 +60,12 @@
 //! * [`sim`] — the event-driven Execution Simulator (paper §4.2), which
 //!   also emits a per-link [`sim::ContentionReport`].
 //! * [`baselines`] — single-device, expert, and RL placers (paper §5).
+//! * [`calibrate`] — learn the cluster model from measurements: probe
+//!   sources (runtime host timings, or a synthetic ground-truth replay
+//!   with seeded noise), a per-link least-squares fitter, the
+//!   `CalibratedCluster` JSON artifact with a quality report, and the
+//!   bridge from runtime link observations to measured
+//!   `ContentionReport`s.
 //! * [`feedback`] — contention feedback: turns a simulator report into
 //!   per-link topology degradations and a re-placement policy, closing
 //!   the sim → engine → placer loop.
@@ -73,6 +79,7 @@
 //!   thin wrapper over the engine.
 
 pub mod baselines;
+pub mod calibrate;
 pub mod coordinator;
 pub mod engine;
 pub mod error;

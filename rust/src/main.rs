@@ -3,7 +3,9 @@
 //! ```text
 //! baechi place   --model gnmt:128:40 --placer m-sct [--memory-fraction 0.3]
 //! baechi place   --model gnmt:32:10 --topology two-tier:2 --replace-rounds 3
+//! baechi place   --model gnmt:32:10 --calibrate synthetic:0.02
 //! baechi compare --model transformer:64
+//! baechi calibrate --source synthetic --topology two-tier:2 --out calib.json
 //! baechi e2e     --steps 200 --devices 2 [--placer m-sct]
 //! baechi info    --model inception:32
 //! ```
@@ -12,7 +14,7 @@
 //! `place` issues one request, `compare` serves a batch across placers
 //! (fanned over threads, with typed per-row error handling).
 
-use baechi::coordinator::{engine_for, run, BaechiConfig, PlacerKind, TopologySpec};
+use baechi::coordinator::{engine_for, run, BaechiConfig, CalibrationSpec, PlacerKind, TopologySpec};
 use baechi::engine::PlacementRequest;
 use baechi::models::Benchmark;
 use baechi::util::cli::{Args, OptSpec};
@@ -71,6 +73,25 @@ fn specs() -> Vec<OptSpec> {
             default: Some("uniform"),
         },
         OptSpec {
+            name: "calibrate",
+            help: "cluster-model calibration: off | synthetic[:<noise>] | runtime | \
+                   <artifact>.json (replaces the hand-specified topology with a measured one)",
+            takes_value: true,
+            default: Some("off"),
+        },
+        OptSpec {
+            name: "source",
+            help: "calibrate: measurement source (synthetic[:<noise>] | runtime)",
+            takes_value: true,
+            default: Some("synthetic"),
+        },
+        OptSpec {
+            name: "out",
+            help: "calibrate: write the CalibratedCluster artifact to this path",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
             name: "replace-rounds",
             help: "contention-driven re-placement rounds (0 = single-shot placement)",
             takes_value: true,
@@ -121,10 +142,11 @@ fn real_main() -> baechi::Result<()> {
     match cmd {
         "place" => cmd_place(&args),
         "compare" => cmd_compare(&args),
+        "calibrate" => cmd_calibrate(&args),
         "e2e" => cmd_e2e(&args),
         "info" => cmd_info(&args),
         other => Err(BaechiError::invalid(format!(
-            "unknown command '{other}' (place|compare|e2e|info)\n{}",
+            "unknown command '{other}' (place|compare|calibrate|e2e|info)\n{}",
             args.usage()
         ))),
     }
@@ -138,6 +160,7 @@ fn config_from(args: &Args) -> baechi::Result<BaechiConfig> {
     cfg.device_memory = (args.get_f64("memory-gb", 8.0)? * (1u64 << 30) as f64) as u64;
     cfg.memory_fraction = args.get_f64("memory-fraction", 1.0)?;
     cfg.topology = TopologySpec::parse(&args.get_or("topology", "uniform"))?;
+    cfg.calibrate = CalibrationSpec::parse(&args.get_or("calibrate", "off"))?;
     cfg.replace_rounds = args.get_usize("replace-rounds", 0)?;
     cfg.replace_threshold = args.get_f64("replace-threshold", 0.5)?;
     if args.has("no-opt") {
@@ -177,6 +200,17 @@ fn cmd_place(args: &Args) -> baechi::Result<()> {
         None => t.row_strs(&["simulated step time", "OOM"]),
     };
     t.row_strs(&["devices used", &report.devices_used.to_string()]);
+    if let Some(cal) = &report.calibration {
+        t.row_strs(&[
+            "calibration",
+            &format!(
+                "{} → mean pair error {:.2}%, {} warning(s)",
+                cal.source,
+                cal.mean_rel_error * 100.0,
+                cal.warnings.len()
+            ),
+        ]);
+    }
     if let Some(rep) = &report.replacement {
         for rd in &rep.rounds {
             let tag = if rd.improved { ", improved" } else { "" };
@@ -269,6 +303,59 @@ fn cmd_compare(args: &Args) -> baechi::Result<()> {
                     "-".into(),
                 ]);
             }
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> baechi::Result<()> {
+    let cfg = config_from(args)?;
+    let spec = CalibrationSpec::parse(&args.get_or("source", "synthetic"))?;
+    if spec == CalibrationSpec::Off {
+        return Err(BaechiError::invalid(
+            "calibrate: source 'off' measures nothing \
+             (synthetic[:<noise>] | runtime | <artifact>.json)",
+        ));
+    }
+    // The hand-specified topology doubles as the synthetic ground truth.
+    let cal = spec
+        .run(cfg.devices, || cfg.truth_topology())?
+        .expect("non-off calibration always produces an artifact");
+    if let Some(path) = args.get("out") {
+        cal.save(&path)?;
+        eprintln!("wrote {path}");
+    }
+    if args.has("json") {
+        println!("{}", cal.to_json().pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!("calibration: {}", cal.report.source),
+        &["metric", "value"],
+    );
+    t.row_strs(&["devices", &cal.report.devices.to_string()]);
+    t.row_strs(&["recovered topology", &cal.topology.describe()]);
+    t.row_strs(&["islands", &cal.report.n_islands.to_string()]);
+    t.row_strs(&[
+        "mean pair error",
+        &format!("{:.3}%", cal.report.mean_rel_error * 100.0),
+    ]);
+    t.row_strs(&[
+        "max pair error",
+        &format!("{:.3}%", cal.report.max_rel_error * 100.0),
+    ]);
+    for (d, s) in (0..cal.report.devices)
+        .map(|d| (d, cal.topology.speed(d)))
+        .filter(|(_, s)| (*s - 1.0).abs() > 1e-9)
+    {
+        t.row_strs(&[&format!("speed gpu{d}"), &format!("{s:.3}×")]);
+    }
+    if cal.report.warnings.is_empty() {
+        t.row_strs(&["warnings", "none"]);
+    } else {
+        for (i, w) in cal.report.warnings.iter().enumerate() {
+            t.row_strs(&[&format!("warning {i}"), w]);
         }
     }
     t.print();

@@ -45,6 +45,26 @@ impl CostModel {
     }
 }
 
+/// Reference op costs for device-speed calibration
+/// ([`crate::calibrate`]): a spread of operator shapes under the default
+/// analytic cost model, from launch-overhead-dominated micro-ops to
+/// FLOP-dominated dense matmuls. A device's fitted speed factor is the
+/// median ratio of these reference costs to its measured times — 1.0
+/// means the device matches the profiling model exactly.
+pub fn calibration_probe_costs() -> Vec<f64> {
+    let c = CostModel::default();
+    vec![
+        // Launch-overhead floor: a no-op kernel.
+        c.op_time(0.0, 0),
+        // Tiny elementwise op (memory-bound).
+        c.op_time(1e6, 64 << 10),
+        // Mid-size matmul (512³, compute-bound).
+        c.op_time(2.0 * 512f64.powi(3), 1 << 20),
+        // Large matmul (2048³) — the steady-state throughput probe.
+        c.op_time(2.0 * 2048f64.powi(3), 32 << 20),
+    ]
+}
+
 /// Declarative module description.
 #[derive(Debug, Clone)]
 pub struct ModuleSpec {

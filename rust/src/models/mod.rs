@@ -13,6 +13,8 @@ pub mod linreg;
 pub mod mlp;
 pub mod transformer;
 
+pub use common::calibration_probe_costs;
+
 use crate::graph::OpGraph;
 
 /// The paper's benchmark suite, one variant per evaluated configuration.

@@ -193,14 +193,17 @@ impl CommModel {
     }
 
     /// Least-squares fit from `(bytes, seconds)` microbenchmark samples.
-    pub fn fit(samples: &[(u64, f64)]) -> CommModel {
+    /// Degenerate sample sets (fewer than 2 points, or all at one payload
+    /// size) are a typed [`BaechiError::InvalidRequest`] — a calibration
+    /// sweep that collapsed must not produce NaN cost models.
+    pub fn fit(samples: &[(u64, f64)]) -> crate::Result<CommModel> {
         let xs: Vec<f64> = samples.iter().map(|&(b, _)| b as f64).collect();
         let ys: Vec<f64> = samples.iter().map(|&(_, t)| t).collect();
-        let (a, b, _r2) = linear_fit(&xs, &ys);
-        CommModel {
+        let (a, b, _r2) = linear_fit(&xs, &ys)?;
+        Ok(CommModel {
             latency: a.max(0.0),
             bandwidth: if b > 0.0 { 1.0 / b } else { f64::INFINITY },
-        }
+        })
     }
 }
 
@@ -242,9 +245,21 @@ mod tests {
                 (b, truth.time(b))
             })
             .collect();
-        let fitted = CommModel::fit(&samples);
+        let fitted = CommModel::fit(&samples).unwrap();
         assert!((fitted.latency - truth.latency).abs() / truth.latency < 0.01);
         assert!((fitted.bandwidth - truth.bandwidth).abs() / truth.bandwidth < 0.01);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_sweeps() {
+        // One sample, and many samples at one payload size: both leave
+        // the linear model unidentifiable.
+        for samples in [vec![(1024u64, 1e-3)], vec![(1024, 1e-3), (1024, 2e-3)]] {
+            assert!(matches!(
+                CommModel::fit(&samples),
+                Err(BaechiError::InvalidRequest(_))
+            ));
+        }
     }
 
     #[test]

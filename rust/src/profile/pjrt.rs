@@ -54,7 +54,7 @@ pub fn profile_exec(
 /// paper's GPU-to-GPU transfer microbenchmark: in our substitution the
 /// interconnect is host memory, so a memcpy-based model is the honest
 /// equivalent (DESIGN.md §2).
-pub fn microbench_comm(max_mb: usize) -> super::CommModel {
+pub fn microbench_comm(max_mb: usize) -> crate::Result<super::CommModel> {
     let mut samples = Vec::new();
     let mut size = 64 * 1024; // 64 KiB
     let max = max_mb * 1024 * 1024;
@@ -76,18 +76,47 @@ pub fn microbench_comm(max_mb: usize) -> super::CommModel {
     super::CommModel::fit(&samples)
 }
 
+/// Time one host-memory copy of `bytes` between two freshly-allocated
+/// buffers, seconds (median over `reps` runs). The single-transfer probe
+/// behind [`crate::calibrate`]'s runtime measurement source — the paper's
+/// GPU-pair transfer microbenchmark, restated for the host-mediated
+/// testbed (§5.1: no P2P, every transfer goes through host memory).
+pub fn time_host_copy(bytes: usize, reps: usize) -> f64 {
+    let bytes = bytes.max(1);
+    let src = vec![0u8; bytes];
+    let mut dst = vec![0u8; bytes];
+    dst.copy_from_slice(&src); // warm both buffers
+    let mut samples = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&dst);
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn microbench_produces_sane_model() {
-        let m = microbench_comm(4);
+        let m = microbench_comm(4).unwrap();
         // Host memcpy bandwidth should be between 100 MB/s and 1 TB/s.
         assert!(m.bandwidth > 1e8, "bandwidth {}", m.bandwidth);
         assert!(m.bandwidth < 1e13, "bandwidth {}", m.bandwidth);
         assert!(m.latency >= 0.0);
         // Larger transfers take longer.
         assert!(m.time(64 * 1024 * 1024) > m.time(1024 * 1024));
+    }
+
+    #[test]
+    fn host_copy_probe_is_positive_and_monotone_ish() {
+        let small = time_host_copy(64 << 10, 5);
+        let large = time_host_copy(16 << 20, 5);
+        assert!(small > 0.0);
+        assert!(large > small, "16 MiB copy ({large}) ≤ 64 KiB copy ({small})");
     }
 }

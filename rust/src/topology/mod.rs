@@ -475,6 +475,12 @@ impl Topology {
         self.island[device]
     }
 
+    /// The full island partition, one id per device (dense, numbered by
+    /// first appearance in device order).
+    pub fn islands(&self) -> &[usize] {
+        &self.island
+    }
+
     pub fn n_islands(&self) -> usize {
         self.island.iter().copied().max().map(|m| m + 1).unwrap_or(0)
     }

@@ -54,15 +54,38 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Ordinary least squares fit `y = a + b*x`; returns `(a, b, r2)`.
-pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
-    assert_eq!(xs.len(), ys.len());
-    assert!(xs.len() >= 2, "need >= 2 points for a fit");
+///
+/// Degenerate sample sets — fewer than 2 points, mismatched lengths, or
+/// zero variance in `x` (every sample at the same abscissa, where the
+/// slope is unidentifiable) — are a typed
+/// [`BaechiError::InvalidRequest`](crate::BaechiError::InvalidRequest)
+/// instead of NaN coefficients: a calibration run fed a broken
+/// measurement sweep must fail loudly, not fit garbage.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> crate::Result<(f64, f64, f64)> {
+    if xs.len() != ys.len() {
+        return Err(crate::BaechiError::invalid(format!(
+            "linear fit: {} x samples vs {} y samples",
+            xs.len(),
+            ys.len()
+        )));
+    }
+    if xs.len() < 2 {
+        return Err(crate::BaechiError::invalid(format!(
+            "linear fit: need at least 2 samples, got {}",
+            xs.len()
+        )));
+    }
     let n = xs.len() as f64;
     let mx = xs.iter().sum::<f64>() / n;
     let my = ys.iter().sum::<f64>() / n;
     let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
     let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
-    let b = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    if sxx <= 0.0 || sxx.is_nan() {
+        return Err(crate::BaechiError::invalid(
+            "linear fit: zero variance in x (all samples at one abscissa)",
+        ));
+    }
+    let b = sxy / sxx;
     let a = my - b * mx;
     let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
     let ss_res: f64 = xs
@@ -74,7 +97,7 @@ pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
         })
         .sum();
     let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
-    (a, b, r2)
+    Ok((a, b, r2))
 }
 
 /// Geometric mean of positive values.
@@ -109,10 +132,35 @@ mod tests {
     fn linear_fit_exact() {
         let xs = [0.0, 1.0, 2.0, 3.0];
         let ys = [1.0, 3.0, 5.0, 7.0];
-        let (a, b, r2) = linear_fit(&xs, &ys);
+        let (a, b, r2) = linear_fit(&xs, &ys).unwrap();
         assert!((a - 1.0).abs() < 1e-12);
         assert!((b - 2.0).abs() < 1e-12);
         assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_degenerate_inputs_are_typed_errors() {
+        use crate::BaechiError;
+        // Too few samples.
+        for (xs, ys) in [(&[][..], &[][..]), (&[1.0][..], &[2.0][..])] {
+            assert!(matches!(
+                linear_fit(xs, ys),
+                Err(BaechiError::InvalidRequest(_))
+            ));
+        }
+        // Mismatched lengths.
+        assert!(matches!(
+            linear_fit(&[1.0, 2.0], &[1.0]),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+        // Zero variance in x: the slope is unidentifiable; this used to
+        // silently return b = 0 (and NaN with hostile inputs upstream).
+        match linear_fit(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]) {
+            Err(BaechiError::InvalidRequest(msg)) => {
+                assert!(msg.contains("variance"), "{msg}")
+            }
+            other => panic!("expected InvalidRequest, got {other:?}"),
+        }
     }
 
     #[test]

@@ -519,3 +519,86 @@ fn iterative_rounds_hit_cache_on_repeated_topologies() {
     assert_eq!(first.rounds, second.rounds);
     assert_eq!(first.final_makespan().to_bits(), second.final_makespan().to_bits());
 }
+
+#[test]
+fn iterative_measured_zero_rounds_is_exactly_place() {
+    use baechi::calibrate::measured_report;
+    use baechi::feedback::ReplacementPolicy;
+    let engine = contended_engine();
+    let topo = engine.cluster().effective_topology().into_owned();
+    let req = PlacementRequest::new(fanout_graph(8, 256 << 20), "m-etf");
+    let report = measured_report(&topo, 1.0, &[]).unwrap();
+    let it = engine
+        .place_iterative_measured(&req, &ReplacementPolicy::rounds(0), &report)
+        .unwrap();
+    let plain = engine.place(&req).unwrap();
+    assert!(
+        Arc::ptr_eq(&it.response, &plain),
+        "0 rounds + measured report must still be bit-identical to place()"
+    );
+    assert!(it.rounds.is_empty());
+}
+
+#[test]
+fn iterative_measured_drives_the_loop_from_the_supplied_report() {
+    use baechi::calibrate::{measured_report, LinkObservation};
+    use baechi::feedback::ReplacementPolicy;
+    let engine = contended_engine();
+    let topo = engine.cluster().effective_topology().into_owned();
+    let req = PlacementRequest::new(fanout_graph(8, 256 << 20), "m-etf");
+    let policy = ReplacementPolicy::rounds(3).with_threshold(0.3);
+
+    // A quiet measured report: nothing saturated on the real cluster,
+    // so the loop must not trigger even if the simulator would have.
+    let quiet = measured_report(&topo, 10.0, &[]).unwrap();
+    let it = engine
+        .place_iterative_measured(&req, &policy, &quiet)
+        .unwrap();
+    assert_eq!(it.rounds.len(), 1, "quiet measurement → baseline only");
+    assert!(!it.rounds[0].improved);
+    assert_eq!(it.rounds[0].max_utilization, 0.0, "round 0 reflects the measurement");
+
+    // A hot measured report: every transfer queued on the trunk links of
+    // the (0,2) path. Round 0's stats must mirror the measurement and
+    // the loop must run, never regressing vs single-shot.
+    let step = 10.0;
+    let obs: Vec<LinkObservation> = topo
+        .path(0, 2)
+        .iter()
+        .map(|&link| LinkObservation {
+            link,
+            busy: 0.9 * step,
+            blocked: 2.0 * step,
+            transfers: 8,
+            bytes: 256 << 20,
+        })
+        .collect();
+    let hot = measured_report(&topo, step, &obs).unwrap();
+    let it = engine.place_iterative_measured(&req, &policy, &hot).unwrap();
+    assert!(
+        it.rounds.len() > 1,
+        "saturated measurement must trigger re-placement: {:?}",
+        it.rounds
+    );
+    assert!((it.rounds[0].max_utilization - 0.9).abs() < 1e-9);
+    assert!(!it.rounds[0].saturated_links.is_empty());
+    assert!(it.final_makespan() <= it.baseline_makespan + 1e-9, "never regresses");
+}
+
+#[test]
+fn iterative_measured_rejects_mismatched_report() {
+    use baechi::calibrate::measured_report;
+    use baechi::feedback::ReplacementPolicy;
+    use baechi::topology::Topology;
+    let engine = contended_engine();
+    let req = PlacementRequest::new(fanout_graph(4, 1 << 20), "m-etf");
+    // Report recorded against a different (2-device uniform) cluster.
+    let other = Topology::uniform(2, CommModel::new(0.0, 1e9).unwrap());
+    let report = measured_report(&other, 1.0, &[]).unwrap();
+    match engine.place_iterative_measured(&req, &ReplacementPolicy::rounds(2), &report) {
+        Err(BaechiError::InvalidRequest(msg)) => {
+            assert!(msg.contains("links"), "{msg}")
+        }
+        other => panic!("expected InvalidRequest, got {other:?}"),
+    }
+}

@@ -298,6 +298,125 @@ fn prop_lp_favorites_unique_and_consistent() {
     });
 }
 
+/// Draw a ground-truth topology family for calibration round-trips:
+/// uniform (sometimes with heterogeneous speeds), ragged NVLink
+/// islands, or two-tier machines. The intra/inter bandwidth gap is kept
+/// ≥ 4× so the island structure is unambiguous.
+fn random_truth_topology(rng: &mut Pcg) -> baechi::topology::Topology {
+    use baechi::topology::Topology;
+    let comm = |lat: f64, bw: f64| CommModel::new(lat, bw).unwrap();
+    match rng.below(3) {
+        0 => {
+            let n = rng.range(2, 7);
+            let t = Topology::uniform(n, comm(rng.uniform(1e-6, 1e-4), rng.uniform(1e9, 2e10)));
+            if rng.chance(0.5) {
+                let speeds: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+                t.with_speeds(speeds).unwrap()
+            } else {
+                t
+            }
+        }
+        1 => {
+            let n = rng.range(3, 9);
+            let island = rng.range(2, 4);
+            let inter = comm(rng.uniform(2e-5, 1e-4), rng.uniform(2e9, 8e9));
+            let ratio = rng.uniform(4.0, 10.0);
+            let intra = comm(inter.latency / ratio, inter.bandwidth * ratio);
+            Topology::nvlink_islands(n, island, intra, inter).unwrap()
+        }
+        _ => {
+            let nodes = rng.range(2, 4);
+            let per = rng.range(2, 4);
+            let intra = comm(rng.uniform(1e-6, 2e-5), rng.uniform(8e9, 2e10));
+            let ratio = rng.uniform(4.0, 10.0);
+            let inter = comm(intra.latency * ratio, intra.bandwidth / ratio);
+            Topology::two_tier(nodes, per, intra, inter).unwrap()
+        }
+    }
+}
+
+#[test]
+fn prop_calibration_round_trip_recovers_ground_truth() {
+    use baechi::calibrate::{collect, fit_cluster, pair_matrix_error, CalibrationPlan, SyntheticSource};
+    prop_check("calibration_round_trip", 40, |rng| {
+        let truth = random_truth_topology(rng);
+        let noise = if rng.chance(0.5) {
+            0.0
+        } else {
+            rng.uniform(0.005, 0.03)
+        };
+        let mut src = SyntheticSource::new(truth.clone(), noise, rng.next_u64()).unwrap();
+        let m = collect(&mut src, &CalibrationPlan::default()).unwrap();
+        let cal = fit_cluster(&m).unwrap();
+        let rec = &cal.topology;
+        assert_eq!(rec.n(), truth.n());
+        let n = truth.n();
+
+        // The recovered effective pair matrix reproduces the ground
+        // truth: within 5% mean relative error at zero noise (the
+        // acceptance bar), degrading gracefully with the noise level.
+        let mean_err = pair_matrix_error(rec, &truth);
+        let tol = 0.05 + 8.0 * noise;
+        assert!(
+            mean_err < tol,
+            "mean pair error {mean_err} > {tol} (noise {noise}, truth {}, warnings {:?})",
+            truth.describe(),
+            cal.report.warnings
+        );
+        // The report's self-assessment agrees with the external check:
+        // it scores against measurements, which sit within noise of the
+        // truth the external check uses.
+        assert!(cal.report.mean_rel_error < tol);
+
+        // At zero noise the island partition is recovered exactly (both
+        // sides number islands densely in device order), and so are
+        // declared device speeds.
+        if noise == 0.0 {
+            assert_eq!(rec.islands(), truth.islands(), "island partition");
+            for d in 0..n {
+                assert!(
+                    (rec.speed(d) - truth.speed(d)).abs() < 0.05,
+                    "device {d} speed {} vs truth {}",
+                    rec.speed(d),
+                    truth.speed(d)
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_calibration_measured_report_zero_rounds_identity() {
+    // A measured report through `place_iterative_measured` with a
+    // 0-round budget must stay bit-identical to `place` — the measured
+    // path can never perturb the single-shot contract.
+    use baechi::calibrate::measured_report;
+    use baechi::engine::{PlacementEngine, PlacementRequest};
+    use baechi::feedback::ReplacementPolicy;
+    use std::sync::Arc;
+    prop_check("calibration_measured_zero_rounds", 15, |rng| {
+        let g = random_dag(rng, 30);
+        let truth = random_truth_topology(rng);
+        let n = truth.n();
+        let engine = PlacementEngine::builder()
+            .cluster(
+                Cluster::homogeneous(n, 1 << 30, CommModel::new(1e-5, 1e9).unwrap())
+                    .with_topology(truth.clone())
+                    .unwrap(),
+            )
+            .build()
+            .unwrap();
+        let req = PlacementRequest::new(g, "m-etf");
+        let plain = engine.place(&req).unwrap();
+        let report = measured_report(&truth, rng.uniform(0.1, 10.0), &[]).unwrap();
+        let it = engine
+            .place_iterative_measured(&req, &ReplacementPolicy::rounds(0), &report)
+            .unwrap();
+        assert!(Arc::ptr_eq(&it.response, &plain));
+        assert!(it.rounds.is_empty());
+    });
+}
+
 #[test]
 fn prop_iterative_zero_rounds_bit_identical_to_place() {
     use baechi::engine::{PlacementEngine, PlacementRequest};
