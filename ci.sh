@@ -36,6 +36,12 @@ if [[ "$fast" == 0 ]]; then
     # `cargo test`, re-run by name so a calibration regression fails
     # with a dedicated stage in the log.
     stage cargo test -q --test prop_invariants calibration
+    # Flow-simulator suite (event-driven bandwidth-sharing comm model):
+    # fair-sharing unit tests, the sequential/flow compatibility
+    # property tests, and the parallel-comm contention acceptance test
+    # all carry "flow" in their names. Already part of `cargo test`;
+    # re-run by name so a comm-model regression gets its own stage.
+    stage cargo test -q flow
     stage cargo fmt --check
     stage cargo clippy --all-targets -- -D warnings
     stage cargo doc --no-deps

@@ -10,12 +10,15 @@
 //! saturated links by the observed queueing delay, and re-places.
 //!
 //! Swept here: NIC trunk slowdown ratio × communication protocol ×
+//! comm model (sequential queueing vs bandwidth-sharing flows) ×
 //! placer, over a wide fan-out graph (the trunk worst case: every chain
 //! landing on the remote machine queues its input tensor behind the
 //! others) and GNMT. Reported per row: single-shot vs iterative
 //! simulated step time, rounds used, and the recovered makespan.
 //! Iterative keeps the best round, so it can never lose; the bench
-//! asserts it strictly wins somewhere in the sweep.
+//! asserts it strictly wins somewhere in the sweep, and that the flow
+//! simulator reports real contention (non-empty `ContentionReport`)
+//! under parallel comm — the signal the feedback loop runs on.
 
 use baechi::engine::{PlacementEngine, PlacementRequest};
 use baechi::feedback::ReplacementPolicy;
@@ -54,13 +57,15 @@ fn fanout_graph(width: usize, len: usize, compute: f64, bytes: u64) -> OpGraph {
 }
 
 /// 2 machines × 2 GPUs; the NIC trunk runs `ratio`× slower than the
-/// intra-machine PCIe links.
-fn two_tier_cluster(ratio: f64, mem: u64) -> Cluster {
+/// intra-machine PCIe links. `sequential` picks the comm model:
+/// one-at-a-time link queues vs max-min fair bandwidth-sharing flows.
+fn two_tier_cluster(ratio: f64, mem: u64, sequential: bool) -> Cluster {
     let intra = CommModel::new(1e-5, 10e9).unwrap();
     let inter = CommModel::new(1e-5 * ratio, 10e9 / ratio).unwrap();
     Cluster::homogeneous(4, mem, inter)
         .with_topology(Topology::two_tier(2, 2, intra, inter).unwrap())
         .unwrap()
+        .with_sequential_comm(sequential)
 }
 
 fn main() {
@@ -69,12 +74,14 @@ fn main() {
     let fanout = fanout_graph(12, 2, 0.3, 512 << 20);
     let gnmt = Benchmark::Gnmt { batch: 32, seq_len: 10 }.graph();
 
-    // (label, graph, trunk ratios, overlap_comm)
-    let scenarios: Vec<(&str, &OpGraph, Vec<f64>, bool)> = vec![
-        ("fanout/overlap", &fanout, vec![4.0, 8.0, 16.0], true),
-        ("fanout/blocking", &fanout, vec![4.0, 16.0], false),
-        ("gnmt/overlap", &gnmt, vec![8.0, 16.0], true),
-        ("gnmt/blocking", &gnmt, vec![8.0], false),
+    // (label, graph, trunk ratios, overlap_comm, sequential_comm)
+    let scenarios: Vec<(&str, &OpGraph, Vec<f64>, bool, bool)> = vec![
+        ("fanout/overlap", &fanout, vec![4.0, 8.0, 16.0], true, true),
+        ("fanout/blocking", &fanout, vec![4.0, 16.0], false, true),
+        ("fanout/flow", &fanout, vec![4.0, 16.0], true, false),
+        ("gnmt/overlap", &gnmt, vec![8.0, 16.0], true, true),
+        ("gnmt/blocking", &gnmt, vec![8.0], false, true),
+        ("gnmt/flow", &gnmt, vec![8.0], true, false),
     ];
 
     let mut t = Table::new(
@@ -91,10 +98,12 @@ fn main() {
     );
     let mut json_rows: Vec<Json> = Vec::new();
     let mut best_gain = 0.0f64;
-    for (label, graph, ratios, overlap) in &scenarios {
+    let mut flow_busy = 0.0f64;
+    let mut flow_blocked = 0.0f64;
+    for (label, graph, ratios, overlap, sequential) in &scenarios {
         for &ratio in ratios {
             let engine = PlacementEngine::builder()
-                .cluster(two_tier_cluster(ratio, mem))
+                .cluster(two_tier_cluster(ratio, mem, *sequential))
                 .sim(SimConfig {
                     overlap_comm: *overlap,
                     ..SimConfig::default()
@@ -104,7 +113,12 @@ fn main() {
             for placer in ["m-etf", "m-sct"] {
                 let req = PlacementRequest::new((*graph).clone(), placer);
                 let single = engine.place(&req).expect("single-shot placement");
-                let single_step = single.sim.as_ref().expect("sim").makespan;
+                let sim = single.sim.as_ref().expect("sim");
+                let single_step = sim.makespan;
+                if !sequential {
+                    flow_busy = flow_busy.max(sim.contention.busy_seconds);
+                    flow_blocked = flow_blocked.max(sim.contention.blocked_seconds);
+                }
                 let it = engine.place_iterative(&req, &policy).expect("iterative");
                 let iter_step = it.final_makespan();
                 assert!(
@@ -128,6 +142,8 @@ fn main() {
                     .set("placer", placer)
                     .set("trunk_ratio", ratio)
                     .set("overlap_comm", *overlap)
+                    .set("sequential_comm", *sequential)
+                    .set("blocked_fraction", sim.contention.blocked_fraction())
                     .set("step_single_s", single_step)
                     .set("step_iterative_s", iter_step)
                     .set("rounds", it.rounds.len().saturating_sub(1))
@@ -145,6 +161,11 @@ fn main() {
         "iterative re-placement should recover makespan in at least one contended \
          two-tier scenario (best gain: {:.2}%)",
         best_gain * 100.0
+    );
+    assert!(
+        flow_busy > 0.0 && flow_blocked > 0.0,
+        "the flow simulator should populate the contention report under parallel \
+         comm (busy {flow_busy} s, slowdown {flow_blocked} s)"
     );
     println!(
         "takeaway: feeding observed trunk queueing back into the placer recovers \

@@ -6,9 +6,12 @@
 //! each ratio re-places against `nvlink_islands(4, 2)` whose intra
 //! links are `ratio`× the PCIe bandwidth (and `1/ratio`× the latency).
 //! Reported per row: simulated step time under the uniform placement vs
-//! the topology-aware one, how many ops moved relative to the uniform
-//! placement, and the fraction of cut (cross-device) traffic that stays
-//! on fast intra-island links.
+//! the topology-aware one, the same topology-aware placement re-priced
+//! by the bandwidth-sharing flow simulator (parallel comm — concurrent
+//! transfers split each link max-min fairly instead of queueing one at
+//! a time), how many ops moved relative to the uniform placement, and
+//! the fraction of cut (cross-device) traffic that stays on fast
+//! intra-island links.
 //!
 //! Expected shape: at ratio 1 the islands cluster is cost-equivalent to
 //! uniform and placements barely move; from a ≥4× gap m-SCT visibly
@@ -17,6 +20,7 @@
 use baechi::engine::{PlacementEngine, PlacementRequest};
 use baechi::models::Benchmark;
 use baechi::profile::{Cluster, CommModel};
+use baechi::sim::{simulate, SimConfig};
 use baechi::topology::Topology;
 use baechi::util::bench::maybe_write_json;
 use baechi::util::json::Json;
@@ -43,6 +47,7 @@ fn main() {
             "ratio",
             "step (uniform)",
             "step (islands)",
+            "step (flow)",
             "ops moved",
             "intra-island cut",
         ],
@@ -99,12 +104,31 @@ fn main() {
                     msct_moved_at_gap = true;
                 }
                 let islands_step = resp.sim.as_ref().expect("sim").makespan;
+                // Same placement, re-priced by the flow simulator:
+                // concurrent transfers share each link max-min fairly
+                // instead of queueing one at a time.
+                let flow_cluster = Cluster::homogeneous(4, mem, inter)
+                    .with_topology(topo.clone())
+                    .expect("flow cluster")
+                    .with_sequential_comm(false);
+                let flow = simulate(
+                    &graph,
+                    &flow_cluster,
+                    &resp.placement.device_of,
+                    SimConfig::default(),
+                );
+                assert!(
+                    flow.ok() && flow.makespan.is_finite() && flow.makespan > 0.0,
+                    "flow-model re-simulation should run to completion"
+                );
+                let flow_step = flow.makespan;
                 t.row(&[
                     b.name(),
                     placer.to_string(),
                     format!("{ratio}x"),
                     format!("{:.4}", base_step),
                     format!("{:.4}", islands_step),
+                    format!("{:.4}", flow_step),
                     moved.to_string(),
                     format!("{:.0}%", intra_frac * 100.0),
                 ]);
@@ -114,6 +138,8 @@ fn main() {
                     .set("ratio", ratio)
                     .set("step_uniform_s", base_step)
                     .set("step_islands_s", islands_step)
+                    .set("step_flow_s", flow_step)
+                    .set("flow_blocked_fraction", flow.contention.blocked_fraction())
                     .set("ops_moved", moved)
                     .set("intra_island_cut_fraction", intra_frac);
                 json_rows.push(row);

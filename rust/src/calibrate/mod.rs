@@ -407,6 +407,7 @@ pub fn measured_report(
         queue_depth_hist: vec![0; QUEUE_DEPTH_BUCKETS],
         blocked_seconds,
         busy_seconds,
+        drop_warnings: 0,
     })
 }
 

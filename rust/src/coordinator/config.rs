@@ -337,6 +337,7 @@ impl BaechiConfig {
             sim: SimConfig {
                 framework,
                 overlap_comm: true,
+                ..SimConfig::default()
             },
             topology: TopologySpec::Uniform,
             calibrate: CalibrationSpec::Off,

@@ -164,6 +164,7 @@ pub fn sim_fingerprint(s: &SimConfig) -> u64 {
     let mut h = Fnv::new();
     h.write_bool(matches!(s.framework, Framework::PyTorch));
     h.write_bool(s.overlap_comm);
+    h.write_usize(s.queue_limit);
     h.finish()
 }
 

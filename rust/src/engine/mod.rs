@@ -480,6 +480,13 @@ impl PlacementEngine {
     /// served as if it had asked for simulation. Every intermediate
     /// placement goes through the cache keyed by the adjusted
     /// topology's fingerprint, so repeating the loop re-runs no placer.
+    ///
+    /// Works in both comm modes: sequential clusters report serialized
+    /// link waits, parallel-comm clusters report max-min fair flow
+    /// slowdown (see [`crate::sim::ContentionReport`]) — the loop
+    /// thresholds and adjusts on either signal identically. (Before the
+    /// flow simulator landed, parallel-comm reports were empty and this
+    /// loop silently degenerated to a single-shot placement.)
     pub fn place_iterative(
         &self,
         req: &PlacementRequest,

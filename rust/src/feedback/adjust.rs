@@ -6,6 +6,14 @@
 //! and its bandwidth lower. Re-pricing the topology this way lets a
 //! placement-time scheduler — which only models its own reservations —
 //! anticipate the load every other transfer puts on the same link.
+//!
+//! The same arithmetic serves both comm modes: in sequential mode a
+//! link's `blocked` seconds are serialized pre-start waits; in parallel
+//! mode they are bandwidth-sharing *slowdown* (extra in-flight seconds
+//! of flows bottlenecked on the link). Either way `blocked / transfers`
+//! is the mean extra delay a transfer crossing the link experienced,
+//! and `busy / (busy + blocked)` the fraction of demanded link-seconds
+//! actually served.
 
 use super::policy::ReplacementPolicy;
 use crate::error::BaechiError;

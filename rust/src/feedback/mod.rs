@@ -6,9 +6,14 @@
 //! the greedy placers commit one transfer at a time and never see the
 //! aggregate queueing their own decisions induce on shared links (a NIC
 //! trunk between machines, a host-mediated PCIe spoke). The execution
-//! simulator *does* observe that queueing — per-link busy time, waiter
+//! simulator *does* observe that queueing — per-link busy time,
 //! blocked-seconds, and queue depths in
-//! [`ContentionReport`](crate::sim::ContentionReport).
+//! [`ContentionReport`](crate::sim::ContentionReport) — in **both**
+//! comm modes: serialized waiter queueing in sequential mode, and
+//! max-min fair flow *slowdown* (extra in-flight seconds below the
+//! uncontended rate, attributed to the bottleneck link) in parallel
+//! mode. Either way `blocked` means "seconds lost to the interconnect
+//! versus running alone", so the loop below is mode-agnostic.
 //!
 //! This module feeds the observation back:
 //!

@@ -13,8 +13,9 @@ pub struct ReplacementPolicy {
     /// Re-place when some link's busy time reaches this fraction of the
     /// step (a saturated NIC trunk is the motivating case).
     pub trunk_utilization: f64,
-    /// …or when total waiter-blocked seconds reach this fraction of the
-    /// step time.
+    /// …or when total blocked seconds (serialized waits in
+    /// sequential-comm mode, flow slowdown in parallel-comm mode) reach
+    /// this fraction of the step time.
     pub blocked_fraction: f64,
     /// Keep iterating only while a round improves the best simulated
     /// makespan by at least this relative margin.

@@ -13,6 +13,13 @@
 //!   trunk queue while disjoint NVLink pairs overlap. Under a uniform
 //!   topology the links are exactly the per-device transfer engines of
 //!   the paper's testbed, bit-for-bit;
+//! * in parallel-comm mode each transfer becomes a bandwidth-shared
+//!   *flow* over its path: concurrent flows split link capacity max-min
+//!   fairly, rates are recomputed on every arrival/departure event
+//!   ([`super::flows`]), and each link enforces a finite queue depth —
+//!   arrivals beyond [`SimConfig::queue_limit`] are tallied in
+//!   [`ContentionReport::drop_warnings`] (drop-tail accounting; the
+//!   payload still flows, the counter flags an unrealistic burst);
 //! * with `overlap_comm = false` (Table 7's "without protocol" baseline,
 //!   the blocking `.to()` call) a transfer additionally occupies both
 //!   endpoints' compute engines;
@@ -22,10 +29,14 @@
 //!   matching backward finishes);
 //! * alongside the step time, the simulator keeps a passive
 //!   [`ContentionReport`]: per-link busy/blocked seconds, queue-depth
-//!   samples, and the largest transfers per link. It never alters the
-//!   event order — results with and without it are bit-identical — and
-//!   feeds the [`crate::feedback`] re-placement loop.
+//!   samples, and the largest transfers per link, populated in **both**
+//!   comm modes (serialized waits in sequential mode, flow slowdown in
+//!   parallel mode). It never alters the event order — results with and
+//!   without it are bit-identical — and feeds the [`crate::feedback`]
+//!   re-placement loop.
 
+use super::events::{Event, EventQueue, Timed};
+use super::flows::FlowNet;
 use super::memory::{DeviceMem, OomError};
 use crate::graph::{DeviceId, NodeId, OpGraph};
 use crate::profile::Cluster;
@@ -46,6 +57,12 @@ pub struct SimConfig {
     /// Overlap communication with compute (Baechi-PY protocol). When
     /// false, transfers block both endpoint devices (naive `.to()`).
     pub overlap_comm: bool,
+    /// Finite per-link queue depth (drop-tail accounting): a transfer
+    /// that arrives at a link already carrying/queueing this many
+    /// increments [`ContentionReport::drop_warnings`] instead of being
+    /// dropped — the simulated payload still goes through, the counter
+    /// flags that a real switch would have shed load.
+    pub queue_limit: usize,
 }
 
 impl Default for SimConfig {
@@ -53,6 +70,7 @@ impl Default for SimConfig {
         SimConfig {
             framework: Framework::TensorFlow,
             overlap_comm: true,
+            queue_limit: QUEUE_DEPTH_BUCKETS - 1,
         }
     }
 }
@@ -71,15 +89,18 @@ pub struct LinkUse {
     pub link: usize,
     /// Seconds this link spent mid-transfer.
     pub busy: f64,
-    /// Seconds that transfers crossing this link spent queued before
-    /// starting — waiting on a busy link, or (in blocking-communication
-    /// mode) on a busy endpoint compute engine. The blocking resource
-    /// is not attributed individually: a transfer's wait is split
-    /// evenly across its path's links, so summing `blocked` along a
-    /// path reconstructs the observed wait once (pairwise costs re-sum
-    /// per-link latencies, which would otherwise multiply an injected
-    /// delay by the path length — see
-    /// [`crate::feedback::TopologyAdjustment`]).
+    /// Seconds lost to this link. Sequential mode: time transfers
+    /// crossing it spent queued before starting — waiting on a busy
+    /// link, or (in blocking-communication mode) on a busy endpoint
+    /// compute engine. The blocking resource is not attributed
+    /// individually: a transfer's wait is split evenly across its
+    /// path's links, so summing `blocked` along a path reconstructs the
+    /// observed wait once (pairwise costs re-sum per-link latencies,
+    /// which would otherwise multiply an injected delay by the path
+    /// length — see [`crate::feedback::TopologyAdjustment`]). Parallel
+    /// mode: slowdown seconds of flows bottlenecked *on this link* —
+    /// `dt * (1 - rate/cap)` integrated while the link holds them below
+    /// their uncontended rate.
     pub blocked: f64,
     /// Transfers whose path crossed this link.
     pub transfers: usize,
@@ -103,28 +124,40 @@ impl LinkUse {
 
 /// What the simulator observed about interconnect contention during one
 /// step: the measurement side of the sim → engine → placer feedback
-/// loop (see [`crate::feedback`]). Populated only in sequential-comm
-/// mode, where a link is an exclusive resource; with parallel
-/// communication the report stays empty and re-placement never
-/// triggers.
+/// loop (see [`crate::feedback`]). Populated in **both** comm modes. In
+/// sequential mode a link is an exclusive resource and `blocked` means
+/// serialized queueing before a transfer starts; in parallel mode
+/// concurrent flows share bandwidth max-min fairly and `blocked` means
+/// *slowdown* — the extra in-flight seconds a flow spent below its
+/// uncontended rate, attributed to its bottleneck link. Both reduce to
+/// "seconds lost to the interconnect versus running alone", which is
+/// what the re-placement policy thresholds against.
 #[derive(Debug, Clone, Default)]
 pub struct ContentionReport {
     /// Step time the link usage is measured against.
     pub makespan: f64,
     /// Per-link accounting, indexed by link id.
     pub links: Vec<LinkUse>,
-    /// Queue-depth samples taken whenever a link frees: bucket `d`
-    /// counts observations of `d` transfers still waiting on the link
-    /// (last bucket = that depth or deeper).
+    /// Queue-depth samples: in sequential mode, taken whenever a link
+    /// frees (bucket `d` counts observations of `d` transfers still
+    /// waiting); in parallel mode, taken per path link whenever a flow
+    /// arrives (bucket `d` counts arrivals seeing `d` concurrent flows,
+    /// self included). Last bucket = that depth or deeper.
     pub queue_depth_hist: Vec<u64>,
-    /// Total seconds transfers spent queued before starting.
+    /// Total seconds lost to the interconnect: queued-before-start in
+    /// sequential mode, below-cap slowdown in parallel mode.
     pub blocked_seconds: f64,
     /// Total link-seconds spent mid-transfer (sum of per-link busy).
     pub busy_seconds: f64,
+    /// Flow arrivals that found a link's queue past
+    /// [`SimConfig::queue_limit`] (drop-tail events a real switch would
+    /// have shed). The payload still flows; non-zero means the burst
+    /// was unrealistically deep for the modeled hardware.
+    pub drop_warnings: u64,
 }
 
 impl ContentionReport {
-    fn new(n_links: usize) -> ContentionReport {
+    pub(crate) fn new(n_links: usize) -> ContentionReport {
         ContentionReport {
             makespan: 0.0,
             links: (0..n_links)
@@ -136,6 +169,7 @@ impl ContentionReport {
             queue_depth_hist: vec![0; QUEUE_DEPTH_BUCKETS],
             blocked_seconds: 0.0,
             busy_seconds: 0.0,
+            drop_warnings: 0,
         }
     }
 
@@ -152,6 +186,30 @@ impl ContentionReport {
         for &l in path {
             let u = &mut self.links[l];
             u.busy += dt;
+            u.blocked += wait_share;
+            u.transfers += 1;
+            u.bytes += bytes;
+            u.top_ops.push((bytes, node));
+            if u.top_ops.len() > 4 * TOP_OPS_PER_LINK {
+                Self::shrink_top_ops(&mut u.top_ops);
+            }
+        }
+    }
+
+    /// Record a flow entering the network (parallel-comm mode). Busy
+    /// and slowdown seconds are integrated by the flow network as time
+    /// advances ([`FlowNet::integrate_to`]); here we book only the
+    /// per-link traffic counters plus any pre-start wait (blocking-comm
+    /// mode can still hold a transfer on a busy endpoint).
+    fn on_flow_start(&mut self, path: &[usize], waited: f64, bytes: u64, node: NodeId) {
+        if path.is_empty() {
+            return;
+        }
+        let waited = waited.max(0.0);
+        self.blocked_seconds += waited;
+        let wait_share = waited / path.len() as f64;
+        for &l in path {
+            let u = &mut self.links[l];
             u.blocked += wait_share;
             u.transfers += 1;
             u.bytes += bytes;
@@ -251,35 +309,6 @@ pub struct SimResult {
 impl SimResult {
     pub fn ok(&self) -> bool {
         self.oom.is_none()
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum Event {
-    ComputeDone { dev: usize, node: NodeId },
-    TransferDone { idx: usize },
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct Timed {
-    t: f64,
-    seq: u64,
-    ev: Event,
-}
-impl Eq for Timed {}
-impl Ord for Timed {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest first.
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap()
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-impl PartialOrd for Timed {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
     }
 }
 
@@ -389,13 +418,15 @@ pub fn simulate(
         }
     }
 
-    let mut heap: BinaryHeap<Timed> = BinaryHeap::new();
-    let mut seq = 0u64;
+    let mut events = EventQueue::new();
     let mut compute_busy_until: Vec<f64> = vec![0.0; n]; // for bookkeeping only
     let mut compute_idle: Vec<bool> = vec![true; n];
-    // Per-link contention state: busy flags plus waiter queues (§3.1.4
-    // generalized from per-device engines to topology links).
+    // Per-link contention state. Sequential comm: busy flags plus
+    // waiter queues (§3.1.4 generalized from per-device engines to
+    // topology links). Parallel comm: a max-min fair flow network over
+    // the same links.
     let mut links = LinkQueues::new(topo.n_links());
+    let mut flownet = FlowNet::new(topo.links().iter().map(|l| l.comm.bandwidth).collect());
     let mut transfers: Vec<Transfer> = Vec::new();
     // Un-started transfers indexed under BOTH endpoint devices, so an
     // engine freeing only rescans its own queue (§Perf iteration 3 —
@@ -409,17 +440,6 @@ pub fn simulate(
         if missing[id.0] == 0 {
             ready[dev_of(id)].push(std::cmp::Reverse((ranks[id.0], id)));
         }
-    }
-
-    macro_rules! push_ev {
-        ($t:expr, $ev:expr) => {{
-            seq += 1;
-            heap.push(Timed {
-                t: $t,
-                seq,
-                ev: $ev,
-            });
-        }};
     }
 
     // Try to start transfers/ops on the given dirty devices at `now`.
@@ -449,25 +469,61 @@ pub fn simulate(
                         pend[d].swap_remove(i);
                         transfers[idx].started = true;
                         let dt = topo.time(src, dst, transfers[idx].bytes);
+                        let waited = now - transfers[idx].enqueued_at;
                         if cluster.sequential_comm {
-                            // Contention is only accounted where links are
-                            // exclusive resources; with parallel comm a
-                            // link's "busy" time could exceed the makespan
-                            // and spuriously trigger re-placement.
                             result.contention.on_start(
                                 path,
                                 dt,
-                                now - transfers[idx].enqueued_at,
+                                waited,
                                 transfers[idx].bytes,
                                 transfers[idx].node,
                             );
                             links.acquire(path);
+                            events.push(now + dt, Event::TransferDone { idx });
+                        } else {
+                            // Parallel comm: the transfer becomes a
+                            // bandwidth-shared flow capped at its pair
+                            // model's end-to-end rate, so an uncontended
+                            // flow still finishes at exactly `now + dt`.
+                            let pairm = *topo.pair(src, dst);
+                            if transfers[idx].bytes > 0
+                                && pairm.bandwidth.is_finite()
+                                && !path.is_empty()
+                            {
+                                flownet.integrate_to(now, &mut result.contention);
+                                result.contention.on_flow_start(
+                                    path,
+                                    waited,
+                                    transfers[idx].bytes,
+                                    transfers[idx].node,
+                                );
+                                for &l in path {
+                                    let depth = flownet.active_on(l) + 1;
+                                    result.contention.sample_depth(depth);
+                                    if depth > cfg.queue_limit {
+                                        result.contention.drop_warnings += 1;
+                                    }
+                                }
+                                flownet.add(
+                                    idx,
+                                    path.to_vec(),
+                                    pairm.bandwidth,
+                                    pairm.latency,
+                                    transfers[idx].bytes,
+                                );
+                                for (f, gen, t_done) in flownet.reallocate(now) {
+                                    events.push(t_done, Event::FlowDrained { flow: f, gen });
+                                }
+                            } else {
+                                // Zero-byte or infinite-bandwidth path:
+                                // nothing to share, use the closed form.
+                                events.push(now + dt, Event::TransferDone { idx });
+                            }
                         }
                         if !cfg.overlap_comm {
                             compute_idle[src] = false;
                             compute_idle[dst] = false;
                         }
-                        push_ev!(now + dt, Event::TransferDone { idx });
                     } else {
                         i += 1;
                     }
@@ -486,7 +542,7 @@ pub fn simulate(
                         let dt = nd.compute / cluster.devices[d].speed;
                         result.busy[d] += dt;
                         compute_busy_until[d] = now + dt;
-                        push_ev!(now + dt, Event::ComputeDone { dev: d, node: op });
+                        events.push(now + dt, Event::ComputeDone { dev: d, node: op });
                     }
                 }
             }
@@ -498,7 +554,16 @@ pub fn simulate(
         advance!(0.0, all);
     }
 
-    while let Some(Timed { t, ev, .. }) = heap.pop() {
+    while let Some(Timed { t, ev, .. }) = events.pop() {
+        // Stale drain events (the flow's rate changed since this was
+        // scheduled) must be skipped before any bookkeeping: a flow
+        // rescheduled *earlier* leaves a later stale event behind that
+        // would otherwise inflate the makespan.
+        if let Event::FlowDrained { flow, gen } = ev {
+            if !flownet.valid(flow, gen) {
+                continue;
+            }
+        }
         result.events += 1;
         result.makespan = result.makespan.max(t);
         match ev {
@@ -557,7 +622,20 @@ pub fn simulate(
                     pend[dev].push(idx);
                     pend[d].push(idx);
                     if cluster.sequential_comm {
-                        links.enqueue(topo.path(dev, d), idx);
+                        let path = topo.path(dev, d);
+                        links.enqueue(path, idx);
+                        // Drop-tail accounting: count live (un-started)
+                        // waiters, this arrival included.
+                        for &l in path {
+                            let depth = links
+                                .waiters_mut(l)
+                                .iter()
+                                .filter(|&&w| !transfers[w].started)
+                                .count();
+                            if depth > cfg.queue_limit {
+                                result.contention.drop_warnings += 1;
+                            }
+                        }
                     }
                     if !dirty.contains(&d) {
                         dirty.push(d);
@@ -645,6 +723,17 @@ pub fn simulate(
                     }
                 }
                 advance!(t, dirty);
+            }
+            Event::FlowDrained { flow, gen: _ } => {
+                // The flow's last byte left the source; survivors speed
+                // up, and delivery completes after the path latency (a
+                // latency holds no bandwidth, so it is not shared).
+                flownet.integrate_to(t, &mut result.contention);
+                let (idx, latency) = flownet.remove(flow);
+                for (f, g, t_done) in flownet.reallocate(t) {
+                    events.push(t_done, Event::FlowDrained { flow: f, gen: g });
+                }
+                events.push(t + latency, Event::TransferDone { idx });
             }
         }
     }
@@ -1031,18 +1120,316 @@ mod tests {
     }
 
     #[test]
-    fn parallel_comm_reports_no_contention() {
-        // With parallel communication links are not exclusive, so the
-        // report must stay empty rather than showing busy > makespan.
+    fn flow_report_populated_under_parallel_comm() {
+        // Regression for the parallel-comm blind spot: the report used
+        // to stay empty, silently disabling re-placement. Flows must
+        // book busy time, and an uncontended chain must still match the
+        // sequential makespan (no competing flows ⇒ same schedule).
         let g = chain3();
-        let cluster = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap())
+        let seq = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap());
+        let par = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap())
             .with_sequential_comm(false);
-        let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 2]), SimConfig::default());
+        let rs = simulate(&g, &seq, &place_all(&g, &[0, 1, 2]), SimConfig::default());
+        let rp = simulate(&g, &par, &place_all(&g, &[0, 1, 2]), SimConfig::default());
+        assert!(rs.ok() && rp.ok());
+        assert_eq!(rp.transfers, 2, "transfers still happen");
+        assert!(
+            (rp.makespan - rs.makespan).abs() < 1e-9,
+            "uncontended parallel {} vs sequential {}",
+            rp.makespan,
+            rs.makespan
+        );
+        let c = &rp.contention;
+        // Two 10 s flows, each holding its 2 endpoint host-links.
+        assert!((c.busy_seconds - 40.0).abs() < 1e-9, "{}", c.busy_seconds);
+        assert!((c.links[1].busy - 20.0).abs() < 1e-9);
+        assert_eq!(c.links[1].transfers, 2);
+        assert_eq!(c.links[1].bytes, 20);
+        // Nothing competed: no slowdown, no drops.
+        assert_eq!(c.blocked_seconds, 0.0);
+        assert_eq!(c.drop_warnings, 0);
+        assert!(c.max_utilization() > 0.0);
+    }
+
+    /// 4 devices + 2 switches joined by one capacity-1 trunk; every
+    /// spoke is infinitely fast so the trunk is the only constraint.
+    fn trunk_topology() -> crate::topology::Topology {
+        use crate::topology::{Link, LinkKind, Topology};
+        let fast = CommModel {
+            latency: 0.0,
+            bandwidth: f64::INFINITY,
+        };
+        let trunk = CommModel {
+            latency: 0.0,
+            bandwidth: 1.0,
+        };
+        let mk = |a: usize, b: usize, comm: CommModel| Link {
+            a,
+            b,
+            kind: LinkKind::Nic,
+            comm,
+        };
+        Topology::from_links(
+            4,
+            2,
+            vec![
+                mk(0, 4, fast),
+                mk(1, 4, fast),
+                mk(4, 5, trunk),
+                mk(5, 2, fast),
+                mk(5, 3, fast),
+            ],
+            None,
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn flow_two_concurrent_flows_on_shared_trunk_halve_bandwidth() {
+        // a(0)→c(2) and b(1)→d(3), 10 bytes each, both crossing the
+        // capacity-1 trunk at the same time: each runs at rate 0.5 and
+        // takes 20 s instead of 10.
+        let mut g = OpGraph::new("share");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::MatMul);
+        for id in [a, b, c, d] {
+            g.node_mut(id).compute = 1.0;
+        }
+        g.add_edge(a, c, 10);
+        g.add_edge(b, d, 10);
+        let cluster = Cluster::homogeneous(4, 1000, CommModel::new(0.0, 1.0).unwrap())
+            .with_topology(trunk_topology())
+            .unwrap()
+            .with_sequential_comm(false);
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 2, 3]), SimConfig::default());
         assert!(r.ok());
-        assert_eq!(r.transfers, 2, "transfers still happen");
-        assert_eq!(r.contention.busy_seconds, 0.0);
-        assert_eq!(r.contention.blocked_seconds, 0.0);
-        assert_eq!(r.contention.max_utilization(), 0.0);
+        // compute [0,1], both flows drain [1,21] at half rate, compute
+        // [21,22].
+        assert!((r.makespan - 22.0).abs() < 1e-9, "{}", r.makespan);
+        let rep = &r.contention;
+        // The trunk carried both flows for 20 s; each accrued
+        // 20 s × (1 − 0.5/1.0) = 10 s of slowdown there.
+        assert!((rep.links[2].busy - 20.0).abs() < 1e-9);
+        assert!((rep.links[2].blocked - 20.0).abs() < 1e-9);
+        assert!((rep.blocked_seconds - 20.0).abs() < 1e-9);
+        assert_eq!(rep.links[2].transfers, 2);
+        // The uncontended spokes saw traffic but no slowdown.
+        assert_eq!(rep.links[0].blocked, 0.0);
+        assert_eq!(rep.links[3].blocked, 0.0);
+        assert!(rep.max_utilization() > 0.9);
+    }
+
+    #[test]
+    fn flow_star_overlapped_cross_island_transfers_finish_later() {
+        use crate::topology::{Link, LinkKind, Topology};
+        // Three-island star: devices 0 and 1 reach device 2 through its
+        // slow spoke. Overlapping both transfers must finish later than
+        // running one alone.
+        let fat = CommModel {
+            latency: 0.0,
+            bandwidth: 10.0,
+        };
+        let thin = CommModel {
+            latency: 0.0,
+            bandwidth: 1.0,
+        };
+        let hub = 3;
+        let topo = Topology::from_links(
+            3,
+            1,
+            vec![
+                Link {
+                    a: 0,
+                    b: hub,
+                    kind: LinkKind::Nic,
+                    comm: fat,
+                },
+                Link {
+                    a: 1,
+                    b: hub,
+                    kind: LinkKind::Nic,
+                    comm: fat,
+                },
+                Link {
+                    a: 2,
+                    b: hub,
+                    kind: LinkKind::Nic,
+                    comm: thin,
+                },
+            ],
+            None,
+            None,
+        )
+        .unwrap();
+        let mk_cluster = || {
+            Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap())
+                .with_topology(topo.clone())
+                .unwrap()
+                .with_sequential_comm(false)
+        };
+        let mut both = OpGraph::new("both");
+        let a = both.add_node("a", OpKind::MatMul);
+        let b = both.add_node("b", OpKind::MatMul);
+        let c = both.add_node("c", OpKind::MatMul);
+        let d = both.add_node("d", OpKind::MatMul);
+        for id in [a, b, c, d] {
+            both.node_mut(id).compute = 1.0;
+        }
+        both.add_edge(a, c, 10);
+        both.add_edge(b, d, 10);
+        let r_both = simulate(
+            &both,
+            &mk_cluster(),
+            &place_all(&both, &[0, 1, 2, 2]),
+            SimConfig::default(),
+        );
+        let mut alone = OpGraph::new("alone");
+        let a1 = alone.add_node("a", OpKind::MatMul);
+        let c1 = alone.add_node("c", OpKind::MatMul);
+        alone.node_mut(a1).compute = 1.0;
+        alone.node_mut(c1).compute = 1.0;
+        alone.add_edge(a1, c1, 10);
+        let r_alone = simulate(
+            &alone,
+            &mk_cluster(),
+            &place_all(&alone, &[0, 2]),
+            SimConfig::default(),
+        );
+        assert!(r_both.ok() && r_alone.ok());
+        // Alone: 1 + 10·(1/10 + 1/1) + 1 = 13. Overlapped: dev 2's
+        // spoke splits 0.5/0.5, both flows drain in 20 s, then the two
+        // consumers serialize on device 2: 1 + 20 + 2 = 23.
+        assert!((r_alone.makespan - 13.0).abs() < 1e-9, "{}", r_alone.makespan);
+        assert!((r_both.makespan - 23.0).abs() < 1e-9, "{}", r_both.makespan);
+        assert!(r_both.makespan > r_alone.makespan + 5.0);
+        // Slowdown lands on the thin spoke: each flow ran at 0.5 of its
+        // 10/11 cap for 20 s → 2 × 20 × (1 − 0.55) = 18 s.
+        let rep = &r_both.contention;
+        assert!((rep.blocked_seconds - 18.0).abs() < 1e-9, "{}", rep.blocked_seconds);
+        assert!((rep.links[2].blocked - rep.blocked_seconds).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flow_two_tier_trunk_contends_with_concurrent_cross_island_transfers() {
+        use crate::topology::Topology;
+        // Acceptance scenario: 5 concurrent cross-machine flows on a
+        // two-tier topology. The trunk carries 4× the per-pair
+        // bandwidth, so 5 flows share it at rate 0.8 each.
+        let mut g = OpGraph::new("xisland");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let w34 = g.add_node("w34", OpKind::MatMul);
+        let w4 = g.add_node("w4", OpKind::MatMul);
+        let w5 = g.add_node("w5", OpKind::MatMul);
+        for id in [a, b, c, w34, w4, w5] {
+            g.node_mut(id).compute = 1.0;
+        }
+        g.add_edge(a, w34, 100);
+        g.add_edge(a, w4, 100);
+        g.add_edge(b, w34, 100);
+        g.add_edge(b, w5, 100);
+        g.add_edge(c, w4, 100);
+        let intra = CommModel::new(0.0, 1000.0).unwrap();
+        let inter = CommModel::new(0.0, 1.0).unwrap();
+        let placement = place_all(&g, &[0, 1, 2, 3, 4, 5]);
+        let topo = Topology::two_tier(2, 3, intra, inter).unwrap();
+        let par = Cluster::homogeneous(6, 10_000, inter)
+            .with_topology(topo.clone())
+            .unwrap()
+            .with_sequential_comm(false);
+        let seq = Cluster::homogeneous(6, 10_000, inter)
+            .with_topology(topo)
+            .unwrap();
+        let rp = simulate(&g, &par, &placement, SimConfig::default());
+        let rs = simulate(&g, &seq, &placement, SimConfig::default());
+        assert!(rp.ok() && rs.ok());
+        // 5 flows × 100 bytes at rate 0.8 from t=1: drains at t=126,
+        // consumers finish at 127.
+        assert!((rp.makespan - 127.0).abs() < 1e-9, "{}", rp.makespan);
+        assert!(
+            rp.makespan > 102.0 + 1.0,
+            "must be slower than 5 independent transfers"
+        );
+        assert!(
+            rp.makespan < rs.makespan,
+            "sharing beats serializing: {} vs {}",
+            rp.makespan,
+            rs.makespan
+        );
+        // The report is non-empty: every flow lost 125 × 0.2 = 25 s to
+        // the shared trunk.
+        let rep = &rp.contention;
+        assert!((rep.blocked_seconds - 125.0).abs() < 1e-9, "{}", rep.blocked_seconds);
+        assert!(rep.busy_seconds > 0.0);
+        assert!(rep.blocked_fraction() > 0.5);
+        let trunk_blocked: f64 = rep
+            .links
+            .iter()
+            .filter(|u| u.blocked > 0.0)
+            .map(|u| u.blocked)
+            .sum();
+        assert!((trunk_blocked - 125.0).abs() < 1e-9);
+        assert!(rep.queue_depth_hist.iter().skip(2).any(|&h| h > 0));
+    }
+
+    #[test]
+    fn flow_report_zero_makespan_returns_zero_fractions() {
+        // Regression: utilization/blocked_fraction must not divide by a
+        // zero makespan on an empty graph.
+        let g = OpGraph::new("empty");
+        for seq in [true, false] {
+            let cluster = Cluster::homogeneous(2, 1000, CommModel::new(0.0, 1.0).unwrap())
+                .with_sequential_comm(seq);
+            let r = simulate(&g, &cluster, &BTreeMap::new(), SimConfig::default());
+            assert!(r.ok());
+            assert_eq!(r.makespan, 0.0);
+            assert_eq!(r.contention.blocked_fraction(), 0.0);
+            assert_eq!(r.contention.max_utilization(), 0.0);
+            for l in 0..r.contention.links.len() {
+                assert_eq!(r.contention.utilization(l), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn flow_drop_tail_counter_flags_deep_queues() {
+        // Same shared-trunk scenario as the halved-bandwidth test: with
+        // the default queue limit nothing drops; with a limit of 1 the
+        // second flow's arrival at the trunk is flagged.
+        let mut g = OpGraph::new("drop");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::MatMul);
+        for id in [a, b, c, d] {
+            g.node_mut(id).compute = 1.0;
+        }
+        g.add_edge(a, c, 10);
+        g.add_edge(b, d, 10);
+        let cluster = Cluster::homogeneous(4, 1000, CommModel::new(0.0, 1.0).unwrap())
+            .with_topology(trunk_topology())
+            .unwrap()
+            .with_sequential_comm(false);
+        let placement = place_all(&g, &[0, 1, 2, 3]);
+        let relaxed = simulate(&g, &cluster, &placement, SimConfig::default());
+        let strict = simulate(
+            &g,
+            &cluster,
+            &placement,
+            SimConfig {
+                queue_limit: 1,
+                ..Default::default()
+            },
+        );
+        assert!(relaxed.ok() && strict.ok());
+        assert_eq!(relaxed.contention.drop_warnings, 0);
+        assert!(strict.contention.drop_warnings > 0);
+        // Accounting never alters the schedule.
+        assert_eq!(relaxed.makespan.to_bits(), strict.makespan.to_bits());
     }
 
     #[test]

@@ -1,0 +1,359 @@
+//! Bandwidth-sharing flow network for parallel-comm simulation.
+//!
+//! Each in-flight transfer becomes a [`Flow`] holding every link on its
+//! route. Between events the network is in steady state: rates are the
+//! max-min fair allocation over link capacities, computed by
+//! water-filling with per-flow rate caps (a flow never exceeds the
+//! end-to-end bandwidth of its pair model, so an uncontended flow
+//! finishes exactly when the closed-form `CommModel::time` says).
+//!
+//! Rates are recomputed on every flow arrival and departure. A rate
+//! change bumps the flow's generation counter and schedules a fresh
+//! drain event; stale events (older generation) are skipped at pop
+//! time — see [`super::events`].
+//!
+//! Contention accounting: over an interval `dt`, a flow whose rate is
+//! held below its cap by a bottleneck link accrues
+//! `dt * (1 - rate / cap)` of *slowdown* on that link. Integrated over
+//! the flow's lifetime this equals exactly the extra seconds the
+//! transfer spent in flight versus running alone, which is what
+//! `ContentionReport::blocked_seconds` means in parallel-comm mode.
+
+use super::engine::ContentionReport;
+
+/// One in-flight transfer, as seen by the flow network.
+#[derive(Debug, Clone)]
+pub struct Flow {
+    /// Index into the simulator's transfer table.
+    pub transfer: usize,
+    /// Link indices this flow holds, in route order.
+    pub path: Vec<usize>,
+    /// Rate cap: the pair model's end-to-end bandwidth (bytes/s).
+    pub cap: f64,
+    /// Path latency, paid as a tail after the last byte drains.
+    pub latency: f64,
+    /// Bytes not yet drained.
+    pub remaining: f64,
+    /// Current allocated rate (bytes/s).
+    pub rate: f64,
+    /// The link holding this flow below its cap, if any.
+    pub bottleneck: Option<usize>,
+    /// Bumped on every rate change; stale drain events carry older values.
+    pub gen: u64,
+    /// False once the flow drained and was removed.
+    pub alive: bool,
+}
+
+/// The set of active flows over the topology's links.
+#[derive(Debug, Default)]
+pub struct FlowNet {
+    /// Per-link capacity in bytes/s (may be infinite).
+    capacity: Vec<f64>,
+    /// All flows ever created this run; drained flows stay (alive=false)
+    /// so generation checks remain O(1).
+    flows: Vec<Flow>,
+    /// Indices of alive flows, in insertion order (deterministic ties).
+    active: Vec<usize>,
+    /// Number of active flows crossing each link.
+    on_link: Vec<usize>,
+    /// Simulated time up to which flow state has been integrated.
+    last_t: f64,
+}
+
+impl FlowNet {
+    pub fn new(capacity: Vec<f64>) -> FlowNet {
+        let n = capacity.len();
+        FlowNet {
+            capacity,
+            flows: Vec::new(),
+            active: Vec::new(),
+            on_link: vec![0; n],
+            last_t: 0.0,
+        }
+    }
+
+    /// How many active flows currently cross link `l`.
+    pub fn active_on(&self, l: usize) -> usize {
+        self.on_link[l]
+    }
+
+    /// Is a drain event for (`flow`, `gen`) still current?
+    pub fn valid(&self, flow: usize, gen: u64) -> bool {
+        self.flows
+            .get(flow)
+            .map_or(false, |f| f.alive && f.gen == gen)
+    }
+
+    /// Advance flow state to time `t`: drain bytes at current rates and
+    /// book busy/slowdown seconds into the report.
+    pub fn integrate_to(&mut self, t: f64, report: &mut ContentionReport) {
+        let dt = t - self.last_t;
+        self.last_t = self.last_t.max(t);
+        if dt <= 0.0 || self.active.is_empty() {
+            return;
+        }
+        for (l, &c) in self.on_link.iter().enumerate() {
+            if c > 0 {
+                report.links[l].busy += dt;
+            }
+        }
+        for &f in &self.active {
+            let flow = &mut self.flows[f];
+            flow.remaining = (flow.remaining - flow.rate * dt).max(0.0);
+            if let Some(l) = flow.bottleneck {
+                let slow = dt * (1.0 - flow.rate / flow.cap);
+                if slow > 0.0 {
+                    report.links[l].blocked += slow;
+                    report.blocked_seconds += slow;
+                }
+            }
+        }
+    }
+
+    /// Register a new flow. The caller must `reallocate` afterwards.
+    pub fn add(
+        &mut self,
+        transfer: usize,
+        path: Vec<usize>,
+        cap: f64,
+        latency: f64,
+        bytes: u64,
+    ) -> usize {
+        debug_assert!(cap.is_finite() && cap > 0.0, "flow cap must be finite");
+        debug_assert!(!path.is_empty(), "flow must hold at least one link");
+        for &l in &path {
+            self.on_link[l] += 1;
+        }
+        let id = self.flows.len();
+        self.flows.push(Flow {
+            transfer,
+            path,
+            cap,
+            latency,
+            remaining: bytes as f64,
+            rate: 0.0,
+            bottleneck: None,
+            gen: 0,
+            alive: true,
+        });
+        self.active.push(id);
+        id
+    }
+
+    /// Retire a drained flow; returns its transfer index and path
+    /// latency (the tail still owed before delivery).
+    pub fn remove(&mut self, flow: usize) -> (usize, f64) {
+        let pos = self
+            .active
+            .iter()
+            .position(|&f| f == flow)
+            .expect("removing a flow that is not active");
+        self.active.remove(pos);
+        let f = &mut self.flows[flow];
+        f.alive = false;
+        for &l in &f.path {
+            self.on_link[l] -= 1;
+        }
+        (f.transfer, f.latency)
+    }
+
+    /// Recompute the max-min fair allocation and return fresh drain
+    /// events `(flow, generation, drain_time)` for every flow whose
+    /// rate or bottleneck changed. `t` is the current simulated time;
+    /// the caller must have integrated state to `t` first.
+    ///
+    /// Water-filling with caps: repeatedly take the tightest
+    /// constraint — either the smallest per-link fair share
+    /// (`residual / crossing_flows`) or the smallest unfrozen cap.
+    /// A cap-frozen flow has headroom on every link it crosses
+    /// (`bottleneck: None`); a link-frozen flow is held below its cap
+    /// by that link (`bottleneck: Some(l)`). On a tie the cap wins, so
+    /// flows that fit exactly are not reported as contended. Ties
+    /// between links resolve to the lowest index and between flows to
+    /// insertion order, keeping replays deterministic.
+    pub fn reallocate(&mut self, t: f64) -> Vec<(usize, u64, f64)> {
+        let n = self.active.len();
+        let mut residual = self.capacity.clone();
+        let mut count = vec![0usize; residual.len()];
+        for &f in &self.active {
+            for &l in &self.flows[f].path {
+                count[l] += 1;
+            }
+        }
+        let mut frozen = vec![false; n];
+        let mut assigned: Vec<(f64, Option<usize>)> = vec![(0.0, None); n];
+        let mut unfrozen = n;
+        while unfrozen > 0 {
+            let mut best_fair = f64::INFINITY;
+            let mut best_link = None;
+            for (l, (&res, &c)) in residual.iter().zip(count.iter()).enumerate() {
+                if c > 0 && res.is_finite() {
+                    let fair = res / c as f64;
+                    if fair < best_fair {
+                        best_fair = fair;
+                        best_link = Some(l);
+                    }
+                }
+            }
+            let mut best_cap = f64::INFINITY;
+            let mut cap_pos = None;
+            for (pos, &f) in self.active.iter().enumerate() {
+                if !frozen[pos] && self.flows[f].cap < best_cap {
+                    best_cap = self.flows[f].cap;
+                    cap_pos = Some(pos);
+                }
+            }
+            if best_cap <= best_fair {
+                // This flow tops out below every shared link's fair
+                // share: freeze it at its cap, uncontended.
+                let pos = cap_pos.expect("an unfrozen flow must exist");
+                frozen[pos] = true;
+                unfrozen -= 1;
+                assigned[pos] = (best_cap, None);
+                for &l in &self.flows[self.active[pos]].path {
+                    residual[l] = (residual[l] - best_cap).max(0.0);
+                    count[l] -= 1;
+                }
+            } else {
+                // The tightest link saturates: every unfrozen flow
+                // crossing it is held at the fair share.
+                let bl = best_link.expect("a finite fair share names a link");
+                for pos in 0..n {
+                    if frozen[pos] {
+                        continue;
+                    }
+                    let f = self.active[pos];
+                    if !self.flows[f].path.contains(&bl) {
+                        continue;
+                    }
+                    frozen[pos] = true;
+                    unfrozen -= 1;
+                    assigned[pos] = (best_fair, Some(bl));
+                    for &l in &self.flows[f].path {
+                        residual[l] = (residual[l] - best_fair).max(0.0);
+                        count[l] -= 1;
+                    }
+                }
+            }
+        }
+        let mut out = Vec::new();
+        for (pos, &(rate, bneck)) in assigned.iter().enumerate() {
+            let f = self.active[pos];
+            let flow = &mut self.flows[f];
+            let changed = flow.rate.to_bits() != rate.to_bits() || flow.bottleneck != bneck;
+            flow.rate = rate;
+            flow.bottleneck = bneck;
+            if changed {
+                debug_assert!(rate > 0.0, "flow assigned a zero rate");
+                flow.gen += 1;
+                out.push((f, flow.gen, t + flow.remaining / rate));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(n_links: usize) -> ContentionReport {
+        ContentionReport::new(n_links)
+    }
+
+    #[test]
+    fn flow_two_flows_share_a_trunk_fairly() {
+        let mut net = FlowNet::new(vec![1.0]);
+        let a = net.add(0, vec![0], 1.0, 0.0, 10);
+        let b = net.add(1, vec![0], 1.0, 0.0, 10);
+        let evs = net.reallocate(0.0);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(net.flows[a].rate, 0.5);
+        assert_eq!(net.flows[b].rate, 0.5);
+        assert_eq!(net.flows[a].bottleneck, Some(0));
+        // Drain events at t = 10 / 0.5 = 20.
+        for &(_, _, t_done) in &evs {
+            assert!((t_done - 20.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn flow_cap_limited_flow_leaves_headroom() {
+        let mut net = FlowNet::new(vec![10.0]);
+        let a = net.add(0, vec![0], 2.0, 0.0, 10);
+        let b = net.add(1, vec![0], 10.0, 0.0, 10);
+        net.reallocate(0.0);
+        // Flow a tops out at its cap (fair share would be 5), flow b
+        // soaks up the rest of the trunk.
+        assert_eq!(net.flows[a].rate, 2.0);
+        assert_eq!(net.flows[a].bottleneck, None);
+        assert_eq!(net.flows[b].rate, 8.0);
+        assert_eq!(net.flows[b].bottleneck, Some(0));
+    }
+
+    #[test]
+    fn flow_exact_fit_capacity_shows_no_bottleneck() {
+        // Two cap-1 flows on a capacity-2 trunk fit exactly: the tie
+        // rule must freeze them at their caps, uncontended.
+        let mut net = FlowNet::new(vec![2.0]);
+        let a = net.add(0, vec![0], 1.0, 0.0, 10);
+        let b = net.add(1, vec![0], 1.0, 0.0, 10);
+        net.reallocate(0.0);
+        assert_eq!(net.flows[a].rate, 1.0);
+        assert_eq!(net.flows[b].rate, 1.0);
+        assert_eq!(net.flows[a].bottleneck, None);
+        assert_eq!(net.flows[b].bottleneck, None);
+    }
+
+    #[test]
+    fn flow_integration_drains_and_books_slowdown() {
+        let mut net = FlowNet::new(vec![1.0]);
+        let a = net.add(0, vec![0], 1.0, 0.0, 10);
+        let b = net.add(1, vec![0], 1.0, 0.0, 10);
+        net.reallocate(0.0);
+        let mut rep = report(1);
+        net.integrate_to(4.0, &mut rep);
+        assert_eq!(net.flows[a].remaining, 8.0);
+        assert_eq!(net.flows[b].remaining, 8.0);
+        // Each flow runs at half its cap: 4s * 0.5 slowdown * 2 flows.
+        assert!((rep.blocked_seconds - 4.0).abs() < 1e-12);
+        assert!((rep.links[0].blocked - 4.0).abs() < 1e-12);
+        assert!((rep.links[0].busy - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flow_departure_speeds_up_survivors_and_bumps_generation() {
+        let mut net = FlowNet::new(vec![1.0]);
+        let a = net.add(7, vec![0], 1.0, 0.25, 10);
+        let b = net.add(8, vec![0], 1.0, 0.0, 10);
+        net.reallocate(0.0);
+        let gen_before = net.flows[b].gen;
+        let mut rep = report(1);
+        net.integrate_to(10.0, &mut rep);
+        let (transfer, latency) = net.remove(a);
+        assert_eq!(transfer, 7);
+        assert_eq!(latency, 0.25);
+        let evs = net.reallocate(10.0);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(net.flows[b].rate, 1.0);
+        assert!(net.flows[b].gen > gen_before);
+        // 5 bytes left at full rate: drains at t = 15.
+        assert!((evs[0].2 - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flow_stale_generations_are_invalid() {
+        let mut net = FlowNet::new(vec![1.0]);
+        let a = net.add(0, vec![0], 1.0, 0.0, 10);
+        net.reallocate(0.0);
+        assert!(net.valid(a, net.flows[a].gen));
+        assert!(!net.valid(a, net.flows[a].gen + 1));
+        let b = net.add(1, vec![0], 1.0, 0.0, 10);
+        net.reallocate(0.0);
+        // a's rate halved: its generation moved on.
+        assert!(!net.valid(a, 1));
+        assert!(net.valid(a, net.flows[a].gen));
+        net.remove(b);
+        assert!(!net.valid(b, net.flows[b].gen), "dead flows are invalid");
+    }
+}

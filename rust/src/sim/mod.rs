@@ -5,6 +5,8 @@
 //! Figures 7–8.
 
 pub mod engine;
+pub mod events;
+pub mod flows;
 pub mod memory;
 
 pub use engine::{

@@ -12,7 +12,10 @@
 //!   hypothetical transfers;
 //! * [`LinkQueues`] — simulation-time: which links are mid-transfer plus
 //!   the pending transfers waiting on each link, consumed by the
-//!   event-driven execution simulator.
+//!   event-driven execution simulator **in sequential-comm mode only**
+//!   (in parallel-comm mode links are not exclusive: concurrent
+//!   transfers share bandwidth max-min fairly via
+//!   [`crate::sim::flows::FlowNet`] instead of queueing here).
 
 /// Placement-time contention: earliest free instant per link.
 #[derive(Debug, Clone)]

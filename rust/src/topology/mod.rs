@@ -231,12 +231,16 @@ impl Topology {
                     });
                 }
             }
-            // Each device pays half the end-to-end NIC cost reaching its
-            // machine's NIC, so two half-hops compose to `inter` and the
-            // NIC switch is not a free intra-machine shortcut. The trunk
-            // itself is the zero-cost shared resource: it is held for the
-            // whole transfer, which is what serializes a machine's
-            // cross-machine traffic.
+            // A cross-machine path crosses four links — spoke, trunk,
+            // trunk, spoke — so each carries a quarter of the end-to-end
+            // cost: latencies split across the two spokes, and every
+            // link runs at 4× the pair bandwidth so the four inverse
+            // bandwidths sum back to `inter` exactly. The NIC switch is
+            // never a free intra-machine shortcut (two spokes cost a
+            // full `inter`), and the trunk is the shared resource a
+            // machine's cross-machine traffic queues on: exclusive in
+            // sequential-comm mode, a finite 4× pipe that flows split
+            // max-min fairly in parallel-comm mode.
             for d in lo..hi {
                 links.push(Link {
                     a: d,
@@ -244,7 +248,7 @@ impl Topology {
                     kind: LinkKind::Nic,
                     comm: CommModel {
                         latency: inter.latency / 2.0,
-                        bandwidth: inter.bandwidth * 2.0,
+                        bandwidth: inter.bandwidth * 4.0,
                     },
                 });
             }
@@ -254,7 +258,7 @@ impl Topology {
                 kind: LinkKind::Nic,
                 comm: CommModel {
                     latency: 0.0,
-                    bandwidth: f64::INFINITY,
+                    bandwidth: inter.bandwidth * 4.0,
                 },
             });
         }

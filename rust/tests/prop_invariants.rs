@@ -417,6 +417,99 @@ fn prop_calibration_measured_report_zero_rounds_identity() {
     });
 }
 
+/// A chain: at most one transfer is ever in flight, so the
+/// bandwidth-sharing flow simulator has nothing to share.
+fn random_chain(rng: &mut Pcg, max_nodes: usize) -> OpGraph {
+    let n = rng.range(3, max_nodes.max(4));
+    let mut g = OpGraph::new("chain");
+    let mut prev: Option<NodeId> = None;
+    for i in 0..n {
+        let id = g.add_node(&format!("op{i}"), OpKind::Generic(0));
+        g.node_mut(id).compute = rng.uniform(0.1, 2.0);
+        let bytes = rng.below(1 << 20) + 1;
+        g.node_mut(id).mem.output = bytes;
+        g.node_mut(id).output_bytes = bytes;
+        if let Some(p) = prev {
+            let b = g.node(p).mem.output;
+            g.add_edge(p, id, b);
+        }
+        prev = Some(id);
+    }
+    g
+}
+
+#[test]
+fn prop_flow_sim_matches_sequential_without_competing_flows() {
+    // Compatibility contract of the flow simulator: with no competing
+    // flows the two comm modes describe the same physics, so chain
+    // makespans must agree within 1e-9 on every topology family.
+    prop_check("flow_chain_compat", 60, |rng| {
+        let g = random_chain(rng, 20);
+        let topo = random_truth_topology(rng);
+        let n = topo.n();
+        let mk = |seq: bool| {
+            Cluster::homogeneous(n, u64::MAX / 4, CommModel::new(1e-5, 1e9).unwrap())
+                .with_topology(topo.clone())
+                .unwrap()
+                .with_sequential_comm(seq)
+        };
+        let placement: std::collections::BTreeMap<_, _> = g
+            .node_ids()
+            .map(|id| (id, baechi::graph::DeviceId(rng.range(0, n))))
+            .collect();
+        let rs = simulate(&g, &mk(true), &placement, SimConfig::default());
+        let rp = simulate(&g, &mk(false), &placement, SimConfig::default());
+        assert!(rs.ok() && rp.ok());
+        let tol = 1e-9 * rs.makespan.max(1.0);
+        assert!(
+            (rs.makespan - rp.makespan).abs() <= tol,
+            "chain makespans diverge: sequential {} vs flow {}",
+            rs.makespan,
+            rp.makespan
+        );
+        // One transfer at a time ⇒ nothing competes: no queue drops and
+        // (up to an ulp of pair-model composition) no slowdown.
+        assert!(rp.contention.blocked_seconds < 1e-9);
+        assert_eq!(rp.contention.drop_warnings, 0);
+        assert_eq!(rs.transfers, rp.transfers);
+    });
+}
+
+#[test]
+fn prop_flow_uniform_topology_bit_identical_in_parallel_comm() {
+    // The flow simulator must not break the uniform-topology identity:
+    // a homogeneous cluster and an explicit `Topology::uniform` resolve
+    // to the same pair models and paths, so parallel-comm runs are
+    // bit-identical.
+    use baechi::topology::Topology;
+    prop_check("flow_uniform_identity", 40, |rng| {
+        let g = random_dag(rng, 40);
+        let n_dev = rng.range(2, 5);
+        let comm = CommModel::new(rng.uniform(0.0, 1e-4), rng.uniform(0.5, 1e9)).unwrap();
+        let base =
+            Cluster::homogeneous(n_dev, u64::MAX / 4, comm).with_sequential_comm(false);
+        let explicit = Cluster::homogeneous(n_dev, u64::MAX / 4, comm)
+            .with_topology(Topology::uniform(n_dev, comm))
+            .unwrap()
+            .with_sequential_comm(false);
+        let placement: std::collections::BTreeMap<_, _> = g
+            .node_ids()
+            .map(|id| (id, baechi::graph::DeviceId(rng.range(0, n_dev))))
+            .collect();
+        let ra = simulate(&g, &base, &placement, SimConfig::default());
+        let rb = simulate(&g, &explicit, &placement, SimConfig::default());
+        assert!(ra.ok() && rb.ok());
+        assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+        assert_eq!(ra.events, rb.events);
+        assert_eq!(ra.transfers, rb.transfers);
+        assert_eq!(
+            ra.contention.blocked_seconds.to_bits(),
+            rb.contention.blocked_seconds.to_bits()
+        );
+        assert_eq!(ra.contention.drop_warnings, rb.contention.drop_warnings);
+    });
+}
+
 #[test]
 fn prop_iterative_zero_rounds_bit_identical_to_place() {
     use baechi::engine::{PlacementEngine, PlacementRequest};
