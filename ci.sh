@@ -42,6 +42,16 @@ if [[ "$fast" == 0 ]]; then
     # all carry "flow" in their names. Already part of `cargo test`;
     # re-run by name so a comm-model regression gets its own stage.
     stage cargo test -q flow
+    # Placement-as-a-service suite: the concurrency stress tests
+    # (responses bit-identical to sequential engine.place) and the
+    # incremental-placement property tests (memory capacity + makespan
+    # tolerance). Named stages so a serving regression is attributable.
+    stage cargo test -q serve
+    stage cargo test -q incremental
+    # Serving bench smoke run: a shrunken Fig. 12 sweep whose in-bench
+    # assertions gate hit rate and incremental-vs-full latency, emitting
+    # bench-json/BENCH_serving.json for the CI artifact upload.
+    stage env BAECHI_BENCH_JSON=bench-json cargo bench --bench fig12_serving -- --smoke
     stage cargo fmt --check
     stage cargo clippy --all-targets -- -D warnings
     stage cargo doc --no-deps

@@ -1,0 +1,200 @@
+//! `baechi serve-bench`: drive the [`PlacementService`] with a sustained
+//! closed-loop stream of mutated benchmark graphs and report serving
+//! metrics (placements/sec, latency percentiles, cache hit rate,
+//! incremental-vs-full split).
+
+use super::config::BaechiConfig;
+use crate::engine::{PlacementEngine, PlacementRequest, DEFAULT_CACHE_CAPACITY};
+use crate::error::BaechiError;
+use crate::graph::delta::{mutate, MutationSpec};
+use crate::graph::OpGraph;
+use crate::serve::{PlacementService, ServiceConfig, ServiceMetrics};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Knobs of one serving-bench run.
+#[derive(Debug, Clone)]
+pub struct ServeBenchOpts {
+    /// Total requests in the stream.
+    pub requests: usize,
+    /// Closed-loop client threads (each submits its slice and waits).
+    pub clients: usize,
+    /// Probability a request's graph mutates away from the previous one
+    /// (0 = the same graph repeated, 1 = every request is a new version).
+    pub mutation_rate: f64,
+    /// Engine placement-cache shard count.
+    pub cache_shards: usize,
+    /// Engine placement-cache capacity (cost units).
+    pub cache_capacity: u64,
+    /// Service worker threads.
+    pub workers: usize,
+    /// Enable the incremental (delta) placement path.
+    pub incremental: bool,
+    /// Stream RNG seed (the stream is deterministic given the seed).
+    pub seed: u64,
+}
+
+impl Default for ServeBenchOpts {
+    fn default() -> ServeBenchOpts {
+        ServeBenchOpts {
+            requests: 200,
+            clients: 4,
+            mutation_rate: 0.3,
+            cache_shards: 8,
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
+            workers: 2,
+            incremental: true,
+            seed: 0xbaec1,
+        }
+    }
+}
+
+/// Result of [`run_serve_bench`].
+#[derive(Debug, Clone)]
+pub struct ServeBenchReport {
+    pub benchmark: String,
+    pub placer: String,
+    pub requests: usize,
+    /// Wall-clock of the whole stream, seconds.
+    pub wall_s: f64,
+    /// Completed placements per wall-clock second.
+    pub placements_per_sec: f64,
+    pub metrics: ServiceMetrics,
+}
+
+impl ServeBenchReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("benchmark", self.benchmark.as_str())
+            .set("placer", self.placer.as_str())
+            .set("requests", self.requests)
+            .set("wall_s", self.wall_s)
+            .set("placements_per_sec", self.placements_per_sec)
+            .set("metrics", self.metrics.to_json());
+        j
+    }
+}
+
+/// Deterministic request stream: a graph version chain where each request
+/// either repeats the current version or mutates it by one small delta.
+/// This is the serving workload the ROADMAP names — users iterating on
+/// models, most requests near-duplicates.
+pub fn request_stream(base: &OpGraph, n: usize, mutation_rate: f64, seed: u64) -> Vec<OpGraph> {
+    let mut rng = Pcg::seed(seed);
+    let spec = MutationSpec::small();
+    let mut current = base.clone();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if rng.chance(mutation_rate) {
+            mutate(&mut current, &mut rng, &spec);
+        }
+        out.push(current.clone());
+    }
+    out
+}
+
+/// Build the engine + service described by `cfg`/`opts`, run the stream
+/// through closed-loop clients, and report.
+pub fn run_serve_bench(
+    cfg: &BaechiConfig,
+    opts: &ServeBenchOpts,
+) -> crate::Result<ServeBenchReport> {
+    let engine = Arc::new(
+        PlacementEngine::builder()
+            .cluster(cfg.cluster()?)
+            .optimizer(cfg.opt)
+            .sim(cfg.sim)
+            .cache_shards(opts.cache_shards)
+            .cache_capacity(opts.cache_capacity)
+            .build()?,
+    );
+    let mut scfg = ServiceConfig::default();
+    scfg.workers = opts.workers.max(1);
+    scfg.incremental.enabled = opts.incremental;
+    let service = PlacementService::new(engine, scfg)?;
+
+    let stream = request_stream(&cfg.benchmark.graph(), opts.requests, opts.mutation_rate, opts.seed);
+    let placer = cfg.placer.spec();
+    let clients = opts.clients.max(1);
+    let chunk = (stream.len() + clients - 1) / clients.max(1);
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> crate::Result<()> {
+        let service = &service;
+        let placer = placer.as_str();
+        let handles: Vec<_> = stream
+            .chunks(chunk.max(1))
+            .map(|slice| {
+                s.spawn(move || -> crate::Result<()> {
+                    for g in slice {
+                        service.place(PlacementRequest::new(g.clone(), placer))?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join()
+                .map_err(|_| BaechiError::runtime("serve-bench client panicked"))??;
+        }
+        Ok(())
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = service.metrics();
+    Ok(ServeBenchReport {
+        benchmark: cfg.benchmark.name(),
+        placer: cfg.placer.spec(),
+        requests: opts.requests,
+        wall_s,
+        placements_per_sec: metrics.completed as f64 / wall_s.max(1e-9),
+        metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PlacerKind;
+    use crate::models::Benchmark;
+
+    #[test]
+    fn serve_bench_small_stream_reports() {
+        let cfg = BaechiConfig::paper_default(Benchmark::LinReg, PlacerKind::MEtf);
+        let opts = ServeBenchOpts {
+            requests: 24,
+            clients: 2,
+            mutation_rate: 0.3,
+            workers: 2,
+            ..ServeBenchOpts::default()
+        };
+        let r = run_serve_bench(&cfg, &opts).unwrap();
+        assert_eq!(r.metrics.completed, 24);
+        assert_eq!(r.metrics.errors, 0);
+        assert!(r.metrics.cache_hit_rate() > 0.0, "repeats must hit: {:?}", r.metrics);
+        assert!(r.placements_per_sec > 0.0);
+        let j = r.to_json();
+        assert!(j.get("metrics").and_then(|m| m.get("qps")).is_some());
+    }
+
+    #[test]
+    fn request_stream_is_deterministic_and_mutates() {
+        let base = Benchmark::LinReg.graph();
+        let a = request_stream(&base, 16, 0.5, 7);
+        let b = request_stream(&base, 16, 0.5, 7);
+        assert_eq!(a.len(), 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                crate::engine::fingerprint::graph_fingerprint(x),
+                crate::engine::fingerprint::graph_fingerprint(y)
+            );
+        }
+        let first = crate::engine::fingerprint::graph_fingerprint(&a[0]);
+        assert!(
+            a.iter()
+                .any(|g| crate::engine::fingerprint::graph_fingerprint(g) != first),
+            "rate 0.5 over 16 requests must mutate at least once"
+        );
+    }
+}

@@ -1,0 +1,253 @@
+//! Sharded, size-bounded LRU cache for placement responses.
+//!
+//! Replaces the engine's original unbounded single-`Mutex<BTreeMap>`
+//! fingerprint cache. Keys are spread across N shards by a caller-supplied
+//! shard key (the top bits of the entry's fingerprint), so concurrent
+//! serving threads contend on different locks. Each shard evicts
+//! least-recently-used entries by *cost* (for placements: ops in the plan),
+//! keeping the total retained cost under a configurable capacity.
+//! Hit/miss/eviction counters are lock-free atomics so a metrics snapshot
+//! never blocks the serving path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Cache counters. `hits + misses` equals the number of [`ShardedLru::get`]
+/// probes ([`ShardedLru::peek`] counts hits only — the caller is expected to
+/// follow a peek-miss with a full `get`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct Entry<V> {
+    value: V,
+    cost: u64,
+    tick: u64,
+}
+
+struct Shard<K, V> {
+    map: BTreeMap<K, Entry<V>>,
+    /// tick → key, ordered oldest-first; the LRU victim is the first entry.
+    recency: BTreeMap<u64, K>,
+    tick: u64,
+    used: u64,
+}
+
+impl<K: Ord + Clone, V> Shard<K, V> {
+    fn new() -> Shard<K, V> {
+        Shard { map: BTreeMap::new(), recency: BTreeMap::new(), tick: 0, used: 0 }
+    }
+
+    fn touch(&mut self, key: &K) {
+        let e = self.map.get_mut(key).expect("touched key present");
+        self.recency.remove(&e.tick);
+        self.tick += 1;
+        e.tick = self.tick;
+        self.recency.insert(self.tick, key.clone());
+    }
+}
+
+/// N-way sharded bounded LRU. `V` is cloned out on hits, so callers store
+/// `Arc`s for anything non-trivial.
+pub struct ShardedLru<K, V> {
+    shards: Vec<Mutex<Shard<K, V>>>,
+    per_shard_capacity: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<K: Ord + Clone, V: Clone> ShardedLru<K, V> {
+    /// `capacity` is the total cost budget, split evenly across `shards`
+    /// (each rounded up, so small capacities still admit one entry per
+    /// shard). Both are clamped to at least 1.
+    pub fn new(shards: usize, capacity: u64) -> ShardedLru<K, V> {
+        let shards = shards.max(1);
+        let capacity = capacity.max(1);
+        ShardedLru {
+            per_shard_capacity: (capacity + shards as u64 - 1) / shards as u64,
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_index(&self, shard_key: u64) -> usize {
+        // Fingerprint-prefix sharding: the top bits pick the shard so that
+        // keys hashed by the same function spread evenly.
+        ((shard_key >> 48) as usize) % self.shards.len()
+    }
+
+    /// Look up `key`, counting a hit or a miss and refreshing recency.
+    pub fn get(&self, shard_key: u64, key: &K) -> Option<V> {
+        let mut guard = self.shards[self.shard_index(shard_key)].lock().unwrap();
+        let s = &mut *guard;
+        if s.map.contains_key(key) {
+            s.touch(key);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Some(s.map[key].value.clone())
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Look up `key` without counting a miss (hits still count and refresh
+    /// recency). Serving paths probe with `peek` before deciding how to
+    /// produce the response; the eventual `get` on the placement path
+    /// records the miss exactly once.
+    pub fn peek(&self, shard_key: u64, key: &K) -> Option<V> {
+        let mut guard = self.shards[self.shard_index(shard_key)].lock().unwrap();
+        let s = &mut *guard;
+        if s.map.contains_key(key) {
+            s.touch(key);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Some(s.map[key].value.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Insert `key` with the given cost (clamped to ≥ 1), then evict
+    /// least-recently-used entries until the shard is back under budget.
+    /// The newest entry always survives, even if its cost alone exceeds
+    /// the per-shard capacity.
+    pub fn insert(&self, shard_key: u64, key: K, value: V, cost: u64) {
+        let cost = cost.max(1);
+        let mut guard = self.shards[self.shard_index(shard_key)].lock().unwrap();
+        let s = &mut *guard;
+        if let Some(old) = s.map.get(&key) {
+            s.used -= old.cost;
+            let old_tick = old.tick;
+            s.recency.remove(&old_tick);
+        }
+        s.tick += 1;
+        let tick = s.tick;
+        s.used += cost;
+        s.map.insert(key.clone(), Entry { value, cost, tick });
+        s.recency.insert(tick, key);
+        let mut evicted = 0u64;
+        while s.used > self.per_shard_capacity && s.map.len() > 1 {
+            let (&oldest, _) = s.recency.iter().next().expect("recency tracks map");
+            let victim = s.recency.remove(&oldest).expect("victim key");
+            let entry = s.map.remove(&victim).expect("victim entry");
+            s.used -= entry.cost;
+            evicted += 1;
+        }
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Number of resident entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total retained cost across all shards.
+    pub fn used(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().used).sum()
+    }
+
+    /// Drop every entry; counters are preserved (they describe lifetime
+    /// traffic, not residency).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut guard = shard.lock().unwrap();
+            *guard = Shard::new();
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_counts_hits_and_misses() {
+        let c: ShardedLru<u64, &str> = ShardedLru::new(1, 100);
+        assert_eq!(c.get(0, &1), None);
+        c.insert(0, 1, "a", 1);
+        assert_eq!(c.get(0, &1), Some("a"));
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
+    }
+
+    #[test]
+    fn peek_never_counts_a_miss() {
+        let c: ShardedLru<u64, u32> = ShardedLru::new(2, 100);
+        assert_eq!(c.peek(0, &7), None);
+        c.insert(0, 7, 42, 1);
+        assert_eq!(c.peek(0, &7), Some(42));
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 0, evictions: 0 });
+    }
+
+    #[test]
+    fn evicts_least_recently_used_by_cost() {
+        // Single shard, capacity 7: two cost-3 entries fit, a third evicts.
+        let c: ShardedLru<u64, &str> = ShardedLru::new(1, 7);
+        c.insert(0, 1, "a", 3);
+        c.insert(0, 2, "b", 3);
+        assert_eq!(c.len(), 2);
+        c.get(0, &1); // refresh 1 → 2 is now the LRU victim
+        c.insert(0, 3, "c", 3);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(0, &2), None, "LRU entry evicted");
+        assert_eq!(c.get(0, &1), Some("a"));
+        assert_eq!(c.get(0, &3), Some("c"));
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.used() <= 7);
+    }
+
+    #[test]
+    fn oversized_entry_survives_alone() {
+        let c: ShardedLru<u64, &str> = ShardedLru::new(1, 4);
+        c.insert(0, 1, "a", 2);
+        c.insert(0, 2, "big", 100);
+        assert_eq!(c.get(0, &2), Some("big"), "newest entry always resident");
+        assert_eq!(c.get(0, &1), None);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn reinsert_replaces_cost_without_eviction() {
+        let c: ShardedLru<u64, &str> = ShardedLru::new(1, 10);
+        c.insert(0, 1, "a", 4);
+        c.insert(0, 1, "a2", 6);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used(), 6);
+        assert_eq!(c.get(0, &1), Some("a2"));
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn shard_keys_spread_and_clear_keeps_counters() {
+        let c: ShardedLru<u64, u32> = ShardedLru::new(4, 1000);
+        for i in 0..32u64 {
+            c.insert(i << 48, i, i as u32, 1);
+        }
+        assert_eq!(c.len(), 32);
+        for i in 0..32u64 {
+            assert_eq!(c.get(i << 48, &i), Some(i as u32));
+        }
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats().hits, 32, "clear preserves lifetime counters");
+    }
+}

@@ -7,6 +7,7 @@
 //! deterministic for a fixed input), so the cache can serve the memoized
 //! response.
 
+use crate::error::BaechiError;
 use crate::graph::OpGraph;
 use crate::optimizer::OptConfig;
 use crate::profile::Cluster;
@@ -102,6 +103,61 @@ pub fn graph_fingerprint(g: &OpGraph) -> u64 {
         h.write_u64(e.bytes);
     }
     h.finish()
+}
+
+/// Merkle-style per-op *cone* fingerprints: each op's hash covers its own
+/// placement-relevant attributes plus the cone hashes of its predecessors
+/// (with edge payloads), so a node's fingerprint changes iff something in
+/// its ancestor cone changed. Incremental placement diffs two graph
+/// versions by these hashes to find the dirty cone that needs re-placing.
+///
+/// Hashes are **name-based**, not id-based: node ids can shift between
+/// versions of a graph (nodes added/removed), but an op whose name,
+/// attributes, and upstream cone are unchanged keeps its fingerprint.
+/// Returns one hash per id slot (`0` for dead slots); fails with
+/// [`BaechiError::Cyclic`] on cyclic graphs.
+pub fn cone_fingerprints(g: &OpGraph) -> crate::Result<Vec<u64>> {
+    let order = g.topo_order().ok_or(BaechiError::Cyclic)?;
+    let mut cones = vec![0u64; g.capacity()];
+    for &id in &order {
+        let n = g.node(id);
+        let mut h = Fnv::new();
+        h.write_str(&n.name);
+        h.write_str(&n.kind.name());
+        h.write_f64(n.compute);
+        for v in [
+            n.mem.params,
+            n.mem.output,
+            n.mem.param_grad,
+            n.mem.upstream_grad,
+            n.mem.temp,
+            n.output_bytes,
+        ] {
+            h.write_u64(v);
+        }
+        h.write_opt_str(n.colocation_group.as_deref());
+        h.write_opt_str(n.coplacement_group.as_deref());
+        h.write_bool(n.is_backward);
+        let forward_name = n
+            .forward_of
+            .filter(|&f| g.is_alive(f))
+            .map(|f| g.node(f).name.clone());
+        h.write_opt_str(forward_name.as_deref());
+        // Predecessor cones, sorted so the hash is order-independent.
+        let mut preds: Vec<(u64, u64)> = g
+            .predecessors(id)
+            .iter()
+            .map(|&(p, bytes)| (cones[p.0], bytes))
+            .collect();
+        preds.sort_unstable();
+        h.write_usize(preds.len());
+        for (cone, bytes) in preds {
+            h.write_u64(cone);
+            h.write_u64(bytes);
+        }
+        cones[id.0] = h.finish();
+    }
+    Ok(cones)
 }
 
 /// Fingerprint of the cluster spec (devices + comm model + topology).
@@ -226,6 +282,59 @@ mod tests {
             topology_fingerprint(islands.topology()),
             topology_fingerprint(uniform.topology())
         );
+    }
+
+    #[test]
+    fn cone_fingerprints_localize_mutations_to_descendants() {
+        // a → b → c, plus an unrelated d.
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::MatMul);
+        g.add_edge(a, b, 10);
+        g.add_edge(b, c, 10);
+        let base = cone_fingerprints(&g).unwrap();
+        assert_eq!(base, cone_fingerprints(&g.clone()).unwrap(), "deterministic");
+
+        let mut tail = g.clone();
+        tail.node_mut(c).compute += 1.0;
+        let cones = cone_fingerprints(&tail).unwrap();
+        assert_eq!(cones[a.0], base[a.0]);
+        assert_eq!(cones[b.0], base[b.0]);
+        assert_ne!(cones[c.0], base[c.0], "mutated node is dirty");
+        assert_eq!(cones[d.0], base[d.0], "unrelated node untouched");
+
+        let mut head = g.clone();
+        head.node_mut(a).compute += 1.0;
+        let cones = cone_fingerprints(&head).unwrap();
+        assert_ne!(cones[a.0], base[a.0]);
+        assert_ne!(cones[b.0], base[b.0], "descendants inherit the dirt");
+        assert_ne!(cones[c.0], base[c.0]);
+        assert_eq!(cones[d.0], base[d.0]);
+    }
+
+    #[test]
+    fn cone_fingerprints_are_name_based_not_id_based() {
+        // Same logical graph built in a different insertion order: the ops
+        // keep their cones even though their ids differ.
+        let mut g1 = OpGraph::new("t");
+        let x1 = g1.add_node("x", OpKind::MatMul);
+        let y1 = g1.add_node("y", OpKind::MatMul);
+        g1.add_edge(x1, y1, 7);
+
+        let mut g2 = OpGraph::new("t");
+        let pad = g2.add_node("pad", OpKind::MatMul);
+        let x2 = g2.add_node("x", OpKind::MatMul);
+        let y2 = g2.add_node("y", OpKind::MatMul);
+        g2.add_edge(x2, y2, 7);
+        g2.remove_node(pad);
+
+        let c1 = cone_fingerprints(&g1).unwrap();
+        let c2 = cone_fingerprints(&g2).unwrap();
+        assert_ne!(x1.0, x2.0, "ids shifted by construction");
+        assert_eq!(c1[x1.0], c2[x2.0]);
+        assert_eq!(c1[y1.0], c2[y2.0]);
     }
 
     #[test]

@@ -24,8 +24,10 @@
 //! * **Registry** — placers resolve by name through [`PlacerRegistry`];
 //!   register your own with [`PlacementEngineBuilder::register_placer`].
 //! * **Cache** — responses are memoized by (graph, cluster, optimizer,
-//!   placer) fingerprint; repeated requests (the serving scenario)
-//!   return the cached `Arc` without re-running the placer.
+//!   placer) fingerprint in a sharded, size-bounded LRU ([`cache`]);
+//!   repeated requests (the serving scenario) return the cached `Arc`
+//!   without re-running the placer, and observers see the hit as a
+//!   [`Stage::CacheHit`]. Capacity and shard count are builder knobs.
 //! * **Batching** — [`PlacementEngine::place_batch`] fans a slice of
 //!   requests across OS threads via `std::thread::scope`.
 //! * **Observability** — [`PlacementObserver`] hooks receive per-stage
@@ -38,10 +40,12 @@
 //!   instead of the simulator's.
 //! * **Typed errors** — every failure is a [`BaechiError`] variant.
 
+pub mod cache;
 pub mod fingerprint;
 pub mod observer;
 pub mod registry;
 
+pub use cache::{CacheStats, ShardedLru};
 pub use observer::{LogObserver, PlacementObserver, RecordingObserver, Stage, StageStats};
 pub use registry::{PlacerContext, PlacerRegistration, PlacerRegistry, ResolvedPlacer};
 
@@ -55,9 +59,15 @@ use crate::profile::Cluster;
 use crate::sim::{self, SimConfig, SimResult};
 use crate::topology::Topology;
 use std::borrow::Cow;
-use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Default total cost budget of the placement cache, in retained plan ops
+/// (each entry costs its op count + 1). Generous: tens of thousands of
+/// typical model graphs fit before anything is evicted.
+pub const DEFAULT_CACHE_CAPACITY: u64 = 4 << 20;
+/// Default shard count of the placement cache.
+pub const DEFAULT_CACHE_SHARDS: usize = 16;
 
 /// One placement request: the graph to place and how to place it.
 #[derive(Debug, Clone)]
@@ -171,13 +181,6 @@ impl IterativePlacement {
     }
 }
 
-/// Placement-cache hit/miss counters.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct CacheStats {
-    pub hits: u64,
-    pub misses: u64,
-}
-
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 struct CacheKey {
     graph: u64,
@@ -191,15 +194,32 @@ struct CacheKey {
     benchmark: Option<String>,
 }
 
+impl CacheKey {
+    /// Fingerprint of the whole key; its top bits pick the cache shard.
+    fn shard_fp(&self) -> u64 {
+        let mut h = fingerprint::Fnv::new();
+        h.write_u64(self.graph);
+        h.write_u64(self.cluster);
+        h.write_u64(self.opt);
+        h.write_u64(self.sim);
+        h.write_str(&self.placer);
+        h.write_opt_str(self.benchmark.as_deref());
+        h.finish()
+    }
+}
+
 /// Builder for [`PlacementEngine`]. `cluster` is mandatory; everything
 /// else defaults (paper optimizer config, TF-semantics simulator, the
-/// built-in placer registry, no observers).
+/// built-in placer registry, no observers, a generously bounded sharded
+/// cache).
 pub struct PlacementEngineBuilder {
     cluster: Option<Cluster>,
     opt: OptConfig,
     sim: SimConfig,
     registry: PlacerRegistry,
     observers: Vec<Arc<dyn PlacementObserver>>,
+    cache_capacity: u64,
+    cache_shards: usize,
 }
 
 impl PlacementEngineBuilder {
@@ -210,6 +230,8 @@ impl PlacementEngineBuilder {
             sim: SimConfig::default(),
             registry: PlacerRegistry::with_builtins(),
             observers: Vec::new(),
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
+            cache_shards: DEFAULT_CACHE_SHARDS,
         }
     }
 
@@ -253,6 +275,20 @@ impl PlacementEngineBuilder {
         self
     }
 
+    /// Total cost budget of the placement cache (entry cost = plan ops + 1;
+    /// clamped to ≥ 1). Least-recently-used entries are evicted beyond it.
+    pub fn cache_capacity(mut self, capacity: u64) -> PlacementEngineBuilder {
+        self.cache_capacity = capacity;
+        self
+    }
+
+    /// Shard count of the placement cache (clamped to ≥ 1). More shards
+    /// mean less lock contention between concurrent serving threads.
+    pub fn cache_shards(mut self, shards: usize) -> PlacementEngineBuilder {
+        self.cache_shards = shards;
+        self
+    }
+
     pub fn build(self) -> crate::Result<PlacementEngine> {
         let cluster = self.cluster.ok_or_else(|| {
             BaechiError::invalid("PlacementEngine::builder(): a cluster is required")
@@ -271,10 +307,17 @@ impl PlacementEngineBuilder {
             sim: self.sim,
             registry: self.registry,
             observers: self.observers,
-            cache: Mutex::new(BTreeMap::new()),
-            stats: Mutex::new(CacheStats::default()),
+            cache: ShardedLru::new(self.cache_shards, self.cache_capacity),
         })
     }
+}
+
+/// A request's resolved cache identity (see [`PlacementEngine::keyed`]).
+struct Keyed<'req> {
+    key: CacheKey,
+    override_t: Option<(&'req Topology, u64)>,
+    ocfg: OptConfig,
+    resolved: ResolvedPlacer,
 }
 
 /// The long-lived placement service. Thread-safe: share it by reference
@@ -285,8 +328,7 @@ pub struct PlacementEngine {
     sim: SimConfig,
     registry: PlacerRegistry,
     observers: Vec<Arc<dyn PlacementObserver>>,
-    cache: Mutex<BTreeMap<CacheKey, Arc<PlacementResponse>>>,
-    stats: Mutex<CacheStats>,
+    cache: ShardedLru<CacheKey, Arc<PlacementResponse>>,
     cluster_fp: u64,
     /// Fingerprint of the engine cluster's own topology, to recognize
     /// per-request overrides that change nothing.
@@ -309,19 +351,29 @@ impl PlacementEngine {
         &self.registry
     }
 
-    /// Cache hit/miss counters so far.
+    /// The engine's default simulator configuration.
+    pub fn sim_config(&self) -> SimConfig {
+        self.sim
+    }
+
+    /// The engine's default optimizer configuration.
+    pub fn opt_config(&self) -> OptConfig {
+        self.opt
+    }
+
+    /// Cache hit/miss/eviction counters so far.
     pub fn cache_stats(&self) -> CacheStats {
-        *self.stats.lock().unwrap()
+        self.cache.stats()
     }
 
     /// Number of memoized responses.
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.len()
     }
 
     /// Drop every memoized response (e.g. after profile refresh).
     pub fn clear_cache(&self) {
-        self.cache.lock().unwrap().clear();
+        self.cache.clear();
     }
 
     fn notify(&self, stage: Stage, stats: &StageStats) {
@@ -350,10 +402,12 @@ impl PlacementEngine {
         o
     }
 
-    /// Serve one request. Identical requests (same graph, cluster,
-    /// topology, optimizer config, and placer spec) are answered from
-    /// the cache.
-    pub fn place(&self, req: &PlacementRequest) -> crate::Result<Arc<PlacementResponse>> {
+    /// Resolve everything that identifies a request's cache entry: the
+    /// placer, the (possibly overridden) topology, the effective optimizer
+    /// config, and the full [`CacheKey`]. Shared by [`Self::place`] and
+    /// [`Self::lookup`] so a peek and the subsequent placement agree on
+    /// the key bit-for-bit.
+    fn keyed<'req>(&self, req: &'req PlacementRequest) -> crate::Result<Keyed<'req>> {
         let resolved = self.registry.resolve(&req.placer, req.benchmark)?;
         // Per-request topology override: fold the topology into the
         // cluster fingerprint so the cache cannot serve a stale plan.
@@ -383,11 +437,61 @@ impl PlacementEngine {
             placer: req.placer.clone(),
             benchmark: req.benchmark.map(|b| b.name()),
         };
-        if let Some(hit) = self.cache.lock().unwrap().get(&key).cloned() {
-            self.stats.lock().unwrap().hits += 1;
+        Ok(Keyed {
+            key,
+            override_t,
+            ocfg,
+            resolved,
+        })
+    }
+
+    fn notify_cache_hit(&self, req: &PlacementRequest, hit: &PlacementResponse, t0: Instant) {
+        let ops = hit.placement.device_of.len();
+        self.notify(
+            Stage::CacheHit,
+            &StageStats {
+                placer: req.placer.clone(),
+                duration: t0.elapsed().as_secs_f64(),
+                ops_in: ops,
+                ops_out: ops,
+            },
+        );
+    }
+
+    /// Probe the cache without placing on a miss: `Ok(Some)` is exactly
+    /// the response [`Self::place`] would return (and counts a hit +
+    /// reports a [`Stage::CacheHit`]); `Ok(None)` counts nothing — the
+    /// follow-up `place` call records the miss. Serving layers use this
+    /// to try cheaper strategies (incremental placement) before paying
+    /// for a full pipeline run.
+    pub fn lookup(&self, req: &PlacementRequest) -> crate::Result<Option<Arc<PlacementResponse>>> {
+        let keyed = self.keyed(req)?;
+        let t0 = Instant::now();
+        match self.cache.peek(keyed.key.shard_fp(), &keyed.key) {
+            Some(hit) => {
+                self.notify_cache_hit(req, &hit, t0);
+                Ok(Some(hit))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Serve one request. Identical requests (same graph, cluster,
+    /// topology, optimizer config, and placer spec) are answered from
+    /// the cache (visible to observers as a [`Stage::CacheHit`]).
+    pub fn place(&self, req: &PlacementRequest) -> crate::Result<Arc<PlacementResponse>> {
+        let keyed = self.keyed(req)?;
+        let Keyed {
+            key,
+            override_t,
+            ocfg,
+            resolved,
+        } = keyed;
+        let t0 = Instant::now();
+        if let Some(hit) = self.cache.get(key.shard_fp(), &key) {
+            self.notify_cache_hit(req, &hit, t0);
             return Ok(hit);
         }
-        self.stats.lock().unwrap().misses += 1;
         let cluster: Cow<'_, Cluster> = match override_t {
             Some((t, _)) => Cow::Owned(self.cluster.clone().with_topology(t.clone())?),
             None => Cow::Borrowed(&self.cluster),
@@ -462,7 +566,8 @@ impl PlacementEngine {
             sim,
             devices_used,
         });
-        self.cache.lock().unwrap().insert(key, resp.clone());
+        let cost = resp.placement.device_of.len() as u64 + 1;
+        self.cache.insert(key.shard_fp(), key, resp.clone(), cost);
         Ok(resp)
     }
 
@@ -718,7 +823,14 @@ mod tests {
         let resp = e.place(&PlacementRequest::new(g, "m-etf")).unwrap();
         assert_eq!(resp.placement.device_of.len(), n_ops);
         assert!(resp.sim.as_ref().unwrap().ok());
-        assert_eq!(e.cache_stats(), CacheStats { hits: 0, misses: 1 });
+        assert_eq!(
+            e.cache_stats(),
+            CacheStats {
+                hits: 0,
+                misses: 1,
+                evictions: 0
+            }
+        );
     }
 
     #[test]
@@ -729,7 +841,14 @@ mod tests {
         let a = e.place(&req).unwrap();
         let b = e.place(&req).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "second response must be the cached Arc");
-        assert_eq!(e.cache_stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(
+            e.cache_stats(),
+            CacheStats {
+                hits: 1,
+                misses: 1,
+                evictions: 0
+            }
+        );
         // A different placer misses.
         let c = e.place(&PlacementRequest::new(
             crate::models::linreg::linreg_graph(),
@@ -759,7 +878,14 @@ mod tests {
         let a = e.place(&r1).unwrap();
         let b = e.place(&r2).unwrap();
         assert!(!Arc::ptr_eq(&a, &b), "benchmark must be part of the key");
-        assert_eq!(e.cache_stats(), CacheStats { hits: 0, misses: 2 });
+        assert_eq!(
+            e.cache_stats(),
+            CacheStats {
+                hits: 0,
+                misses: 2,
+                evictions: 0
+            }
+        );
     }
 
     #[test]

@@ -14,6 +14,10 @@ pub enum Stage {
     Expand,
     /// Execution-simulator evaluation of the expanded placement.
     Simulate,
+    /// Request served from the placement cache — no pipeline stage ran.
+    /// `duration` is the lookup time; `ops_in`/`ops_out` are the cached
+    /// plan's op count.
+    CacheHit,
 }
 
 impl Stage {
@@ -23,6 +27,7 @@ impl Stage {
             Stage::Place => "place",
             Stage::Expand => "expand",
             Stage::Simulate => "simulate",
+            Stage::CacheHit => "cache_hit",
         }
     }
 }
@@ -116,5 +121,6 @@ mod tests {
     fn stage_names() {
         assert_eq!(Stage::Optimize.name(), "optimize");
         assert_eq!(Stage::Simulate.name(), "simulate");
+        assert_eq!(Stage::CacheHit.name(), "cache_hit");
     }
 }

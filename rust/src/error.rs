@@ -55,6 +55,13 @@ pub enum BaechiError {
     Io(String),
     /// Runtime/executor failure (PJRT backend, device worker threads).
     Runtime(String),
+    /// A serving deadline elapsed before the request was placed
+    /// ([`crate::serve::PlacementService`]). `waited` is how long the
+    /// request sat, in seconds.
+    DeadlineExceeded { waited: f64 },
+    /// The placement service's bounded request queue is full
+    /// (backpressure signal from `try_submit`).
+    Saturated { capacity: usize },
 }
 
 impl BaechiError {
@@ -99,6 +106,12 @@ impl std::fmt::Display for BaechiError {
             BaechiError::Json(e) => write!(f, "{e}"),
             BaechiError::Io(msg) => write!(f, "io: {msg}"),
             BaechiError::Runtime(msg) => write!(f, "runtime: {msg}"),
+            BaechiError::DeadlineExceeded { waited } => {
+                write!(f, "deadline exceeded: request waited {waited:.3}s unserved")
+            }
+            BaechiError::Saturated { capacity } => {
+                write!(f, "service saturated: request queue full at capacity {capacity}")
+            }
         }
     }
 }

@@ -1,0 +1,255 @@
+//! Graph deltas for incremental placement.
+//!
+//! Two versions of a model graph (a layer tweaked, a tensor grown, an op
+//! spliced in) usually share almost all of their structure. The serving
+//! layer diffs them by per-op **cone fingerprints**
+//! ([`crate::engine::fingerprint::cone_fingerprints`]): an op whose name,
+//! attributes, and entire ancestor cone are unchanged is *clean* and can
+//! keep its cached device; everything else is *dirty* and gets re-placed.
+//!
+//! Also home to the deterministic mutation model
+//! ([`MutationSpec`] / [`mutate`]) that the serving benches, stress tests,
+//! and property tests use to generate realistic small-delta request
+//! streams.
+
+use crate::graph::{NodeId, OpGraph, OpKind};
+use crate::util::rng::Pcg;
+use std::collections::BTreeMap;
+
+/// The diff between two graph versions, from the new graph's viewpoint.
+#[derive(Debug, Clone)]
+pub struct GraphDelta {
+    /// New-graph nodes whose cone changed (or that have no clean match).
+    pub dirty: Vec<NodeId>,
+    /// `(new_id, old_id)` pairs with identical names and cone hashes.
+    pub clean: Vec<(NodeId, NodeId)>,
+    /// `dirty / (dirty + clean)`; 0 for identical graphs.
+    pub dirty_fraction: f64,
+}
+
+/// Diff `new` against `old` using precomputed cone fingerprints (indexed
+/// by id slot, as returned by `cone_fingerprints`). Matching is by op
+/// *name*: a new-graph op is clean iff exactly one old op carries its name
+/// and their cone hashes agree. Ops with duplicated names are
+/// conservatively dirty.
+pub fn diff_by_cones(
+    old: &OpGraph,
+    new: &OpGraph,
+    old_cones: &[u64],
+    new_cones: &[u64],
+) -> GraphDelta {
+    let mut by_name: BTreeMap<&str, Option<(NodeId, u64)>> = BTreeMap::new();
+    for n in old.iter_nodes() {
+        by_name
+            .entry(n.name.as_str())
+            .and_modify(|e| *e = None) // ambiguous name → never clean
+            .or_insert(Some((n.id, old_cones[n.id.0])));
+    }
+    let mut dirty = Vec::new();
+    let mut clean = Vec::new();
+    for n in new.iter_nodes() {
+        match by_name.get(n.name.as_str()) {
+            Some(Some((old_id, old_cone))) if *old_cone == new_cones[n.id.0] => {
+                clean.push((n.id, *old_id));
+            }
+            _ => dirty.push(n.id),
+        }
+    }
+    let total = (dirty.len() + clean.len()).max(1);
+    GraphDelta {
+        dirty_fraction: dirty.len() as f64 / total as f64,
+        dirty,
+        clean,
+    }
+}
+
+/// Knobs for [`mutate`]: how much one call perturbs the graph.
+#[derive(Debug, Clone)]
+pub struct MutationSpec {
+    /// Point mutations applied per call (≥ 1).
+    pub ops: usize,
+    /// Relative ± jitter on a mutated op's compute cost.
+    pub compute_jitter: f64,
+    /// Max relative growth of a mutated edge's payload (edges only ever
+    /// grow: `add_edge` merges duplicates by max).
+    pub bytes_growth: f64,
+    /// Probability a mutation splices a new op into the graph instead of
+    /// perturbing an existing one.
+    pub p_add_node: f64,
+}
+
+impl MutationSpec {
+    /// A "small delta": the serving scenario of a model iterated on by a
+    /// user — one tweak per request.
+    pub fn small() -> MutationSpec {
+        MutationSpec {
+            ops: 1,
+            compute_jitter: 0.05,
+            bytes_growth: 0.10,
+            p_add_node: 0.15,
+        }
+    }
+}
+
+impl Default for MutationSpec {
+    fn default() -> MutationSpec {
+        MutationSpec::small()
+    }
+}
+
+/// Apply `spec.ops` random point mutations to `g` in place. Mutations
+/// preserve acyclicity, node-name uniqueness (new ops are named
+/// `mut<slot>`), and the graph's `name` (version streams stay keyed to
+/// the same logical model). Deterministic for a fixed RNG state.
+pub fn mutate(g: &mut OpGraph, rng: &mut Pcg, spec: &MutationSpec) {
+    for _ in 0..spec.ops.max(1) {
+        let ids: Vec<NodeId> = g.node_ids().collect();
+        if ids.is_empty() {
+            return;
+        }
+        if rng.chance(spec.p_add_node) {
+            // Splice a cheap elementwise op under a random producer; feed
+            // one of the producer's existing consumers when it has any so
+            // the new op lands on a real dataflow path. `src → new` and
+            // `new → (successor of src)` cannot close a cycle: the new
+            // node has no other edges.
+            let src = *rng.choose(&ids);
+            let name = format!("mut{}", g.capacity());
+            let (compute, bytes) = {
+                let s = g.node(src);
+                ((s.compute * 0.1).max(1e-6), s.output_bytes.max(1))
+            };
+            let id = g.add_node(&name, OpKind::Elementwise);
+            {
+                let n = g.node_mut(id);
+                n.compute = compute;
+                n.mem.output = bytes;
+                n.mem.temp = bytes;
+                n.output_bytes = bytes;
+            }
+            let consumers: Vec<NodeId> = g
+                .successors(src)
+                .iter()
+                .map(|&(d, _)| d)
+                .filter(|&d| d != id)
+                .collect();
+            g.add_edge(src, id, bytes);
+            if !consumers.is_empty() {
+                let dst = *rng.choose(&consumers);
+                g.add_edge(id, dst, bytes);
+            }
+        } else if rng.chance(0.5) {
+            // Jitter one op's compute cost.
+            let id = *rng.choose(&ids);
+            let f = 1.0 + rng.uniform(-spec.compute_jitter, spec.compute_jitter);
+            let n = g.node_mut(id);
+            n.compute = (n.compute * f).max(1e-9);
+        } else {
+            // Grow one edge's payload (a tensor got bigger).
+            let with_out: Vec<NodeId> = ids
+                .iter()
+                .copied()
+                .filter(|&i| g.out_degree(i) > 0)
+                .collect();
+            if with_out.is_empty() {
+                continue;
+            }
+            let src = *rng.choose(&with_out);
+            let outs: Vec<(NodeId, u64)> = g.successors(src).to_vec();
+            let &(dst, bytes) = rng.choose(&outs);
+            let grown = bytes + 1 + (bytes as f64 * rng.uniform(0.0, spec.bytes_growth)) as u64;
+            g.add_edge(src, dst, grown);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::fingerprint::cone_fingerprints;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new("chain");
+        let mut prev: Option<NodeId> = None;
+        for i in 0..n {
+            let id = g.add_node(&format!("op{i}"), OpKind::MatMul);
+            g.node_mut(id).compute = 1.0 + i as f64;
+            g.node_mut(id).output_bytes = 100;
+            g.node_mut(id).mem.output = 100;
+            if let Some(p) = prev {
+                g.add_edge(p, id, 100);
+            }
+            prev = Some(id);
+        }
+        g
+    }
+
+    #[test]
+    fn identical_graphs_diff_all_clean() {
+        let g = chain(6);
+        let cones = cone_fingerprints(&g).unwrap();
+        let d = diff_by_cones(&g, &g.clone(), &cones, &cones);
+        assert!(d.dirty.is_empty());
+        assert_eq!(d.clean.len(), 6);
+        assert_eq!(d.dirty_fraction, 0.0);
+    }
+
+    #[test]
+    fn tail_mutation_dirties_only_the_tail() {
+        let g = chain(6);
+        let old = cone_fingerprints(&g).unwrap();
+        let mut m = g.clone();
+        let last = m.node_ids().last().unwrap();
+        m.node_mut(last).compute += 1.0;
+        let new = cone_fingerprints(&m).unwrap();
+        let d = diff_by_cones(&g, &m, &old, &new);
+        assert_eq!(d.dirty, vec![last]);
+        assert_eq!(d.clean.len(), 5);
+        assert!(d.dirty_fraction < 0.2);
+    }
+
+    #[test]
+    fn duplicate_names_are_conservatively_dirty() {
+        let mut old = OpGraph::new("dup");
+        old.add_node("x", OpKind::MatMul);
+        old.add_node("x", OpKind::MatMul);
+        let mut new = OpGraph::new("dup");
+        new.add_node("x", OpKind::MatMul);
+        let oc = cone_fingerprints(&old).unwrap();
+        let nc = cone_fingerprints(&new).unwrap();
+        let d = diff_by_cones(&old, &new, &oc, &nc);
+        assert_eq!(d.dirty.len(), 1);
+        assert!(d.clean.is_empty());
+    }
+
+    #[test]
+    fn mutate_preserves_dag_and_name_uniqueness() {
+        let mut g = chain(8);
+        let mut rng = Pcg::seed(0xde17a);
+        let spec = MutationSpec::small();
+        for _ in 0..200 {
+            mutate(&mut g, &mut rng, &spec);
+            assert!(g.topo_order().is_some(), "mutation broke acyclicity");
+        }
+        let mut names: Vec<&str> = g.iter_nodes().map(|n| n.name.as_str()).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate node names after mutation");
+        assert_eq!(g.name, "chain", "graph identity must survive mutation");
+        assert!(g.len() > 8, "200 rounds at p_add_node=0.15 add nodes");
+    }
+
+    #[test]
+    fn mutate_is_deterministic_for_a_seed() {
+        let run = || {
+            let mut g = chain(8);
+            let mut rng = Pcg::seed(42);
+            for _ in 0..50 {
+                mutate(&mut g, &mut rng, &MutationSpec::small());
+            }
+            crate::engine::fingerprint::graph_fingerprint(&g)
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -70,8 +70,12 @@
 //!   per-link topology degradations and a re-placement policy, closing
 //!   the sim → engine → placer loop.
 //! * [`engine`] — the `PlacementEngine` service layer: placer registry,
-//!   request/response sessions, placement cache, stage observers, and
-//!   the `place_iterative` contention-driven re-placement loop.
+//!   request/response sessions, the sharded bounded placement cache,
+//!   stage observers, and the `place_iterative` contention-driven
+//!   re-placement loop.
+//! * [`serve`] — placement as a service: `PlacementService` (bounded
+//!   queue, worker pool, deadlines, micro-batching), incremental delta
+//!   placement over cone fingerprints, and `ServiceMetrics`.
 //! * [`runtime`] — PJRT client + AOT HLO artifact registry (stubbed
 //!   offline; see `runtime::xla`).
 //! * [`exec`] — real multi-device executor + trainer (end-to-end example).
@@ -92,6 +96,7 @@ pub mod optimizer;
 pub mod placer;
 pub mod profile;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod topology;
 pub mod util;

@@ -7,6 +7,7 @@
 //! baechi compare --model transformer:64
 //! baechi calibrate --source synthetic --topology two-tier:2 --out calib.json
 //! baechi e2e     --steps 200 --devices 2 [--placer m-sct]
+//! baechi serve-bench --model gnmt:16:8 --requests 500 --mutation-rate 0.3
 //! baechi info    --model inception:32
 //! ```
 //!
@@ -14,7 +15,10 @@
 //! `place` issues one request, `compare` serves a batch across placers
 //! (fanned over threads, with typed per-row error handling).
 
-use baechi::coordinator::{engine_for, run, BaechiConfig, CalibrationSpec, PlacerKind, TopologySpec};
+use baechi::coordinator::{
+    engine_for, run, run_serve_bench, BaechiConfig, CalibrationSpec, PlacerKind, ServeBenchOpts,
+    TopologySpec,
+};
 use baechi::engine::PlacementRequest;
 use baechi::models::Benchmark;
 use baechi::util::cli::{Args, OptSpec};
@@ -111,6 +115,42 @@ fn specs() -> Vec<OptSpec> {
             default: None,
         },
         OptSpec {
+            name: "requests",
+            help: "serve-bench: total requests in the stream",
+            takes_value: true,
+            default: Some("200"),
+        },
+        OptSpec {
+            name: "clients",
+            help: "serve-bench: closed-loop client threads",
+            takes_value: true,
+            default: Some("4"),
+        },
+        OptSpec {
+            name: "mutation-rate",
+            help: "serve-bench: probability each request mutates the graph",
+            takes_value: true,
+            default: Some("0.3"),
+        },
+        OptSpec {
+            name: "cache-shards",
+            help: "serve-bench: engine placement-cache shard count",
+            takes_value: true,
+            default: Some("8"),
+        },
+        OptSpec {
+            name: "serve-workers",
+            help: "serve-bench: service worker threads",
+            takes_value: true,
+            default: Some("2"),
+        },
+        OptSpec {
+            name: "no-incremental",
+            help: "serve-bench: disable the incremental (delta) placement path",
+            takes_value: false,
+            default: None,
+        },
+        OptSpec {
             name: "json",
             help: "emit the report as JSON",
             takes_value: false,
@@ -144,9 +184,10 @@ fn real_main() -> baechi::Result<()> {
         "compare" => cmd_compare(&args),
         "calibrate" => cmd_calibrate(&args),
         "e2e" => cmd_e2e(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "info" => cmd_info(&args),
         other => Err(BaechiError::invalid(format!(
-            "unknown command '{other}' (place|compare|calibrate|e2e|info)\n{}",
+            "unknown command '{other}' (place|compare|calibrate|e2e|serve-bench|info)\n{}",
             args.usage()
         ))),
     }
@@ -426,6 +467,67 @@ fn cmd_e2e(args: &Args) -> baechi::Result<()> {
         "oracle check: first {} steps match the fused train_step",
         oracle.len()
     );
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> baechi::Result<()> {
+    let cfg = config_from(args)?;
+    let opts = ServeBenchOpts {
+        requests: args.get_usize("requests", 200)?,
+        clients: args.get_usize("clients", 4)?,
+        mutation_rate: args.get_f64("mutation-rate", 0.3)?,
+        cache_shards: args.get_usize("cache-shards", 8)?,
+        workers: args.get_usize("serve-workers", 2)?,
+        incremental: !args.has("no-incremental"),
+        ..ServeBenchOpts::default()
+    };
+    let report = run_serve_bench(&cfg, &opts)?;
+    if args.has("json") {
+        println!("{}", report.to_json().pretty());
+        return Ok(());
+    }
+    let m = &report.metrics;
+    let mut t = Table::new(
+        &format!("serve-bench: {} via {}", report.benchmark, report.placer),
+        &["metric", "value"],
+    );
+    t.row_strs(&["requests", &report.requests.to_string()]);
+    t.row_strs(&["wall clock", &fmt_secs(report.wall_s)]);
+    t.row_strs(&[
+        "placements/sec",
+        &format!("{:.1}", report.placements_per_sec),
+    ]);
+    t.row_strs(&[
+        "cache hit rate",
+        &format!("{:.1}%", m.cache_hit_rate() * 100.0),
+    ]);
+    t.row_strs(&["latency p50", &fmt_secs(m.p50_latency_s)]);
+    t.row_strs(&["latency p99", &fmt_secs(m.p99_latency_s)]);
+    t.row_strs(&[
+        "modes (hit/incremental/full)",
+        &format!("{}/{}/{}", m.cache_hits, m.incremental, m.full),
+    ]);
+    if m.incremental > 0 && m.full > 0 {
+        t.row_strs(&[
+            "incremental vs full mean",
+            &format!(
+                "{} vs {}",
+                fmt_secs(m.incremental_mean_latency_s),
+                fmt_secs(m.full_mean_latency_s)
+            ),
+        ]);
+    }
+    t.row_strs(&[
+        "batches (mean size)",
+        &format!(
+            "{} ({:.2})",
+            m.batches,
+            m.batched_requests as f64 / m.batches.max(1) as f64
+        ),
+    ]);
+    t.row_strs(&["errors", &m.errors.to_string()]);
+    t.row_strs(&["engine cache evictions", &m.engine_cache.evictions.to_string()]);
+    t.print();
     Ok(())
 }
 

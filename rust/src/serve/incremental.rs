@@ -1,0 +1,367 @@
+//! Incremental (delta) placement.
+//!
+//! The serving workload is dominated by *versions* of graphs already
+//! placed: a user tweaks a layer, dims change, an op is spliced in. A full
+//! pipeline run (optimize → place → expand → simulate) re-derives the
+//! ~unchanged 99% from scratch. Instead, [`try_incremental`] diffs the
+//! request against the last served version by per-op cone fingerprints
+//! ([`crate::engine::fingerprint::cone_fingerprints`]), keeps every clean
+//! op on its cached device, and greedily re-schedules only the dirty cone
+//! under the full memory ledger.
+//!
+//! **Contract** (property-tested in `prop_invariants`): an incremental
+//! plan always covers every op, always respects per-device memory
+//! capacity (it is re-validated in the execution simulator), and its
+//! simulated makespan never exceeds the base plan's by more than the
+//! configured tolerance — otherwise `try_incremental` returns `None` and
+//! the service falls back to full placement.
+
+use crate::engine::fingerprint::{cone_fingerprints, graph_fingerprint};
+use crate::engine::{PlacementEngine, PlacementRequest, PlacementResponse};
+use crate::graph::delta::{diff_by_cones, GraphDelta};
+use crate::graph::{DeviceId, NodeId, OpGraph};
+use crate::optimizer::OptStats;
+use crate::placer::ledger::MemoryLedger;
+use crate::placer::Placement;
+use crate::sim;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Knobs for the incremental path.
+#[derive(Debug, Clone, Copy)]
+pub struct IncrementalConfig {
+    pub enabled: bool,
+    /// Fall back to full placement when more than this fraction of ops is
+    /// dirty (the patch would redo most of the work anyway).
+    pub max_dirty_fraction: f64,
+    /// Reject a patched plan whose simulated makespan exceeds the base
+    /// plan's by more than this relative tolerance.
+    pub makespan_tolerance: f64,
+}
+
+impl Default for IncrementalConfig {
+    fn default() -> IncrementalConfig {
+        IncrementalConfig {
+            enabled: true,
+            max_dirty_fraction: 0.25,
+            makespan_tolerance: 0.25,
+        }
+    }
+}
+
+/// How the service produced a response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Straight from the engine's placement cache.
+    CacheHit,
+    /// Full pipeline run (optimize → place → expand → simulate).
+    Full,
+    /// Patched against a cached base plan; only `dirty_ops` ops were
+    /// re-placed.
+    Incremental { dirty_ops: usize },
+}
+
+/// A fully-placed graph version that later small-delta requests can be
+/// patched against.
+pub struct DeltaBase {
+    pub graph: OpGraph,
+    pub cones: Vec<u64>,
+    pub response: Arc<PlacementResponse>,
+}
+
+impl DeltaBase {
+    pub fn new(graph: OpGraph, response: Arc<PlacementResponse>) -> crate::Result<DeltaBase> {
+        let cones = cone_fingerprints(&graph)?;
+        Ok(DeltaBase {
+            graph,
+            cones,
+            response,
+        })
+    }
+}
+
+/// A successful incremental placement.
+pub(crate) struct IncrementalPlan {
+    pub response: Arc<PlacementResponse>,
+    pub dirty_ops: usize,
+    /// Cone fingerprints of the request graph, reusable as the next base.
+    pub cones: Vec<u64>,
+}
+
+/// Try to serve `req` by patching `base`. `None` means "take the full
+/// path": delta too large, a frozen assignment no longer fits, no device
+/// fits a dirty op, the patched plan OOMs in the simulator, or its
+/// makespan regresses past tolerance. Only plain simulated requests are
+/// eligible (no per-request topology override).
+pub(crate) fn try_incremental(
+    engine: &PlacementEngine,
+    req: &PlacementRequest,
+    base: &DeltaBase,
+    cfg: &IncrementalConfig,
+) -> Option<IncrementalPlan> {
+    if !cfg.enabled || req.topology.is_some() || !req.simulate {
+        return None;
+    }
+    let base_sim = base.response.sim.as_ref()?;
+    if !base_sim.ok() {
+        return None;
+    }
+    let cones = cone_fingerprints(&req.graph).ok()?;
+    // The identical graph under the same placer: the base answer *is* the
+    // answer. (The engine cache usually catches this first; this arm keeps
+    // the path correct when the cache entry was evicted.)
+    if graph_fingerprint(&req.graph) == graph_fingerprint(&base.graph) {
+        return Some(IncrementalPlan {
+            response: base.response.clone(),
+            dirty_ops: 0,
+            cones,
+        });
+    }
+    let delta = diff_by_cones(&base.graph, &req.graph, &base.cones, &cones);
+    if delta.dirty_fraction > cfg.max_dirty_fraction {
+        return None;
+    }
+    // (An empty dirty set with differing fingerprints means ops were
+    // *removed*; the patch below re-schedules the clean survivors on
+    // their frozen devices and re-validates memory + makespan.)
+    let t0 = Instant::now();
+    let (device_of, predicted, peaks) = patch_placement(engine, req, base, &delta)?;
+    let simulated = sim::simulate(
+        &req.graph,
+        engine.cluster(),
+        &device_of,
+        engine.sim_config(),
+    );
+    if !simulated.ok() {
+        return None;
+    }
+    if simulated.makespan > base_sim.makespan * (1.0 + cfg.makespan_tolerance) + 1e-12 {
+        return None;
+    }
+    let devices_used = device_of.values().collect::<BTreeSet<_>>().len();
+    let dirty_ops = delta.dirty.len();
+    let response = Arc::new(PlacementResponse {
+        placer: format!("{}+delta", base.response.placer),
+        placement: Placement {
+            algorithm: format!("{}+delta", base.response.placement.algorithm),
+            device_of,
+            predicted_makespan: predicted,
+            placement_time: t0.elapsed().as_secs_f64(),
+            peak_memory: peaks,
+        },
+        stats: OptStats {
+            original_ops: req.graph.len(),
+            placed_ops: dirty_ops,
+            ..OptStats::default()
+        },
+        sim: Some(simulated),
+        devices_used,
+    });
+    Some(IncrementalPlan {
+        response,
+        dirty_ops,
+        cones,
+    })
+}
+
+/// One topo-order sweep over the request graph: clean ops keep their
+/// cached device (frozen loads), dirty ops greedily take the device with
+/// the earliest start time among those with memory room. Returns `None`
+/// when any op has no feasible device.
+fn patch_placement(
+    engine: &PlacementEngine,
+    req: &PlacementRequest,
+    base: &DeltaBase,
+    delta: &GraphDelta,
+) -> Option<(BTreeMap<NodeId, DeviceId>, f64, Vec<u64>)> {
+    let g = &req.graph;
+    let cluster = engine.cluster();
+    let topo = cluster.effective_topology();
+    let caps: Vec<u64> = cluster.devices.iter().map(|d| d.memory).collect();
+    let n_dev = cluster.n();
+    let order = g.topo_order()?;
+
+    let mut frozen: Vec<Option<DeviceId>> = vec![None; g.capacity()];
+    for &(new_id, old_id) in &delta.clean {
+        frozen[new_id.0] = base.response.placement.try_device(old_id);
+    }
+    // A colocation group with a frozen member pins its dirty members too.
+    let mut group_dev: BTreeMap<&str, DeviceId> = BTreeMap::new();
+    for id in g.node_ids() {
+        if let (Some(grp), Some(d)) = (g.node(id).colocation_group.as_deref(), frozen[id.0]) {
+            group_dev.entry(grp).or_insert(d);
+        }
+    }
+
+    let mut ledger = MemoryLedger::new(g, &caps);
+    let mut dev_ready = vec![0.0f64; n_dev];
+    let mut finish = vec![0.0f64; g.capacity()];
+    let mut device_of: BTreeMap<NodeId, DeviceId> = BTreeMap::new();
+
+    let est = |id: NodeId,
+               d: DeviceId,
+               dev_ready: &[f64],
+               finish: &[f64],
+               device_of: &BTreeMap<NodeId, DeviceId>| {
+        let mut t = dev_ready[d.0];
+        for &(p, bytes) in g.predecessors(id) {
+            let pd = device_of[&p];
+            let arrive = finish[p.0]
+                + if pd == d {
+                    0.0
+                } else {
+                    topo.pair(pd.0, d.0).time(bytes)
+                };
+            if arrive > t {
+                t = arrive;
+            }
+        }
+        t
+    };
+
+    for &id in &order {
+        let node = g.node(id);
+        let choice = match frozen[id.0] {
+            Some(d) => {
+                // Frozen loads: the patch may only *keep* cached devices.
+                // If memory no longer works out, the whole patch is off.
+                if !ledger.fits(g, id, d) {
+                    return None;
+                }
+                d
+            }
+            None => {
+                let forced = node
+                    .colocation_group
+                    .as_deref()
+                    .and_then(|grp| group_dev.get(grp).copied())
+                    .or_else(|| ledger.pinned_device(g, id));
+                let mut best: Option<(f64, DeviceId)> = None;
+                let candidates: Vec<DeviceId> = match forced {
+                    Some(d) => vec![d],
+                    None => (0..n_dev).map(DeviceId).collect(),
+                };
+                for d in candidates {
+                    if !ledger.fits(g, id, d) {
+                        continue;
+                    }
+                    let t = est(id, d, &dev_ready, &finish, &device_of);
+                    if best.map_or(true, |(bt, _)| t < bt) {
+                        best = Some((t, d));
+                    }
+                }
+                best?.1
+            }
+        };
+        ledger.commit(g, id, choice);
+        let start = est(id, choice, &dev_ready, &finish, &device_of);
+        let done = start + node.compute / cluster.devices[choice.0].speed.max(1e-12);
+        finish[id.0] = done;
+        dev_ready[choice.0] = done;
+        device_of.insert(id, choice);
+    }
+    let predicted = order.iter().map(|&id| finish[id.0]).fold(0.0, f64::max);
+    Some((device_of, predicted, ledger.peaks()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+    use crate::profile::{Cluster, CommModel};
+
+    fn chain(n: usize, bytes: u64) -> OpGraph {
+        let mut g = OpGraph::new("chain");
+        let mut prev: Option<NodeId> = None;
+        for i in 0..n {
+            let id = g.add_node(&format!("op{i}"), OpKind::MatMul);
+            g.node_mut(id).compute = 2.0;
+            g.node_mut(id).output_bytes = bytes;
+            g.node_mut(id).mem.output = bytes;
+            g.node_mut(id).mem.temp = bytes;
+            if let Some(p) = prev {
+                g.add_edge(p, id, bytes);
+            }
+            prev = Some(id);
+        }
+        g
+    }
+
+    fn engine(n: usize, mem: u64) -> PlacementEngine {
+        PlacementEngine::builder()
+            .cluster(Cluster::homogeneous(n, mem, CommModel::new(1e-6, 1e9).unwrap()))
+            .build()
+            .unwrap()
+    }
+
+    fn base_for(e: &PlacementEngine, g: &OpGraph) -> DeltaBase {
+        let resp = e.place(&PlacementRequest::new(g.clone(), "m-etf")).unwrap();
+        DeltaBase::new(g.clone(), resp).unwrap()
+    }
+
+    #[test]
+    fn small_tail_delta_patches() {
+        let e = engine(2, 1 << 20);
+        let g = chain(12, 100);
+        let base = base_for(&e, &g);
+        let mut m = g.clone();
+        let last = m.node_ids().last().unwrap();
+        m.node_mut(last).compute += 0.5;
+        let req = PlacementRequest::new(m.clone(), "m-etf");
+        let plan =
+            try_incremental(&e, &req, &base, &IncrementalConfig::default()).expect("patchable");
+        assert_eq!(plan.dirty_ops, 1);
+        assert_eq!(plan.response.placement.device_of.len(), m.len());
+        assert!(plan.response.sim.as_ref().unwrap().ok());
+        assert!(plan.response.placer.ends_with("+delta"));
+        // Clean ops kept their cached devices.
+        for id in g.node_ids() {
+            if id == last {
+                continue;
+            }
+            assert_eq!(
+                plan.response.placement.try_device(id),
+                base.response.placement.try_device(id),
+                "clean op moved"
+            );
+        }
+    }
+
+    #[test]
+    fn identical_graph_reuses_base_outright() {
+        let e = engine(2, 1 << 20);
+        let g = chain(8, 100);
+        let base = base_for(&e, &g);
+        let req = PlacementRequest::new(g.clone(), "m-etf");
+        let plan = try_incremental(&e, &req, &base, &IncrementalConfig::default()).unwrap();
+        assert_eq!(plan.dirty_ops, 0);
+        assert!(Arc::ptr_eq(&plan.response, &base.response));
+    }
+
+    #[test]
+    fn large_delta_falls_back() {
+        let e = engine(2, 1 << 20);
+        let g = chain(8, 100);
+        let base = base_for(&e, &g);
+        let mut m = g.clone();
+        let first = m.node_ids().next().unwrap();
+        m.node_mut(first).compute += 1.0; // head mutation dirties the whole chain
+        let req = PlacementRequest::new(m, "m-etf");
+        assert!(try_incremental(&e, &req, &base, &IncrementalConfig::default()).is_none());
+    }
+
+    #[test]
+    fn topology_override_and_no_sim_are_ineligible() {
+        let e = engine(2, 1 << 20);
+        let g = chain(8, 100);
+        let base = base_for(&e, &g);
+        let cfg = IncrementalConfig::default();
+        let no_sim = PlacementRequest::new(g.clone(), "m-etf").without_simulation();
+        assert!(try_incremental(&e, &no_sim, &base, &cfg).is_none());
+        let mut disabled = cfg;
+        disabled.enabled = false;
+        let plain = PlacementRequest::new(g, "m-etf");
+        assert!(try_incremental(&e, &plain, &base, &disabled).is_none());
+    }
+}

@@ -1,0 +1,250 @@
+//! Service-level metrics: counters and latency percentiles.
+//!
+//! The hot path touches only relaxed atomics plus one short-lived mutex
+//! per completed request (the bounded latency reservoir); snapshots never
+//! block serving.
+
+use super::incremental::ServeMode;
+use crate::engine::CacheStats;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Samples kept per latency reservoir; older samples are overwritten
+/// ring-buffer style, so percentiles describe the recent window.
+const LATENCY_WINDOW: usize = 4096;
+
+#[derive(Debug, Default)]
+struct Reservoir {
+    samples: Vec<f64>,
+    next: usize,
+    count: u64,
+    sum: f64,
+}
+
+impl Reservoir {
+    fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        if self.samples.len() < LATENCY_WINDOW {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next] = v;
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
+    }
+
+    fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+}
+
+/// Internal live counters shared between service workers.
+pub(crate) struct MetricsInner {
+    start: Instant,
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub deadline_misses: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub incremental: AtomicU64,
+    pub full: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    lat_all: Mutex<Reservoir>,
+    lat_incremental: Mutex<Reservoir>,
+    lat_full: Mutex<Reservoir>,
+}
+
+impl MetricsInner {
+    pub fn new() -> MetricsInner {
+        MetricsInner {
+            start: Instant::now(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            incremental: AtomicU64::new(0),
+            full: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            lat_all: Mutex::new(Reservoir::default()),
+            lat_incremental: Mutex::new(Reservoir::default()),
+            lat_full: Mutex::new(Reservoir::default()),
+        }
+    }
+
+    pub fn record_latency(&self, mode: ServeMode, latency_s: f64) {
+        self.lat_all.lock().unwrap().record(latency_s);
+        match mode {
+            ServeMode::Incremental { .. } => {
+                self.lat_incremental.lock().unwrap().record(latency_s)
+            }
+            ServeMode::Full => self.lat_full.lock().unwrap().record(latency_s),
+            ServeMode::CacheHit => {}
+        }
+    }
+
+    pub fn snapshot(&self, engine_cache: CacheStats) -> ServiceMetrics {
+        let all = self.lat_all.lock().unwrap();
+        let uptime_s = self.start.elapsed().as_secs_f64();
+        let completed = self.completed.load(Ordering::Relaxed);
+        ServiceMetrics {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            errors: self.errors.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            incremental: self.incremental.load(Ordering::Relaxed),
+            full: self.full.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            uptime_s,
+            qps: completed as f64 / uptime_s.max(1e-9),
+            mean_latency_s: all.mean(),
+            p50_latency_s: all.percentile(50.0),
+            p99_latency_s: all.percentile(99.0),
+            incremental_mean_latency_s: self.lat_incremental.lock().unwrap().mean(),
+            full_mean_latency_s: self.lat_full.lock().unwrap().mean(),
+            engine_cache,
+        }
+    }
+}
+
+/// Point-in-time service metrics snapshot
+/// ([`crate::serve::PlacementService::metrics`]).
+#[derive(Debug, Clone)]
+pub struct ServiceMetrics {
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Requests answered successfully (any mode).
+    pub completed: u64,
+    /// Requests answered with an error (includes deadline misses).
+    pub errors: u64,
+    /// Requests dropped because their deadline passed before serving.
+    pub deadline_misses: u64,
+    /// Responses served from the engine's placement cache.
+    pub cache_hits: u64,
+    /// Responses produced by incremental (delta) placement.
+    pub incremental: u64,
+    /// Responses produced by a full pipeline run.
+    pub full: u64,
+    /// Micro-batches drained from the queue.
+    pub batches: u64,
+    /// Requests that arrived inside those batches (`/ batches` = mean
+    /// batch size).
+    pub batched_requests: u64,
+    /// Seconds since the service started.
+    pub uptime_s: f64,
+    /// Completed requests per second of uptime.
+    pub qps: f64,
+    /// Mean submit-to-completion latency, seconds (lifetime).
+    pub mean_latency_s: f64,
+    /// Median latency over the recent window, seconds.
+    pub p50_latency_s: f64,
+    /// 99th-percentile latency over the recent window, seconds.
+    pub p99_latency_s: f64,
+    /// Mean latency of incremental-mode responses, seconds.
+    pub incremental_mean_latency_s: f64,
+    /// Mean latency of full-mode responses, seconds.
+    pub full_mean_latency_s: f64,
+    /// The shared engine's cache counters at snapshot time.
+    pub engine_cache: CacheStats,
+}
+
+impl ServiceMetrics {
+    /// Fraction of completed responses served straight from the cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache_hits as f64 / (self.completed.max(1)) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("submitted", self.submitted)
+            .set("completed", self.completed)
+            .set("errors", self.errors)
+            .set("deadline_misses", self.deadline_misses)
+            .set("cache_hits", self.cache_hits)
+            .set("cache_hit_rate", self.cache_hit_rate())
+            .set("incremental", self.incremental)
+            .set("full", self.full)
+            .set("batches", self.batches)
+            .set("batched_requests", self.batched_requests)
+            .set("uptime_s", self.uptime_s)
+            .set("qps", self.qps)
+            .set("mean_latency_s", self.mean_latency_s)
+            .set("p50_latency_s", self.p50_latency_s)
+            .set("p99_latency_s", self.p99_latency_s)
+            .set("incremental_mean_latency_s", self.incremental_mean_latency_s)
+            .set("full_mean_latency_s", self.full_mean_latency_s)
+            .set("engine_cache_hits", self.engine_cache.hits)
+            .set("engine_cache_misses", self.engine_cache.misses)
+            .set("engine_cache_evictions", self.engine_cache.evictions);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_percentiles_and_mean() {
+        let mut r = Reservoir::default();
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        assert!((r.mean() - 50.5).abs() < 1e-9);
+        assert!((r.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((r.percentile(99.0) - 99.0).abs() <= 1.0);
+        assert_eq!(r.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn reservoir_window_overwrites_oldest() {
+        let mut r = Reservoir::default();
+        for _ in 0..LATENCY_WINDOW {
+            r.record(1.0);
+        }
+        for _ in 0..LATENCY_WINDOW {
+            r.record(9.0);
+        }
+        assert_eq!(r.percentile(50.0), 9.0, "old window fully displaced");
+        assert_eq!(r.count, 2 * LATENCY_WINDOW as u64);
+    }
+
+    #[test]
+    fn snapshot_reports_modes_and_hit_rate() {
+        let m = MetricsInner::new();
+        m.completed.store(10, Ordering::Relaxed);
+        m.cache_hits.store(4, Ordering::Relaxed);
+        m.record_latency(ServeMode::Full, 0.2);
+        m.record_latency(ServeMode::Incremental { dirty_ops: 1 }, 0.01);
+        m.record_latency(ServeMode::CacheHit, 0.001);
+        let s = m.snapshot(CacheStats::default());
+        assert_eq!(s.completed, 10);
+        assert!((s.cache_hit_rate() - 0.4).abs() < 1e-9);
+        assert!((s.full_mean_latency_s - 0.2).abs() < 1e-9);
+        assert!((s.incremental_mean_latency_s - 0.01).abs() < 1e-9);
+        assert!(s.mean_latency_s > 0.0);
+        let j = s.to_json();
+        assert!(j.get("qps").is_some());
+        assert!(j.get("p99_latency_s").is_some());
+    }
+}

@@ -1,0 +1,28 @@
+//! Placement as a service.
+//!
+//! The paper's headline result is placement *speed* — algorithmic
+//! placement is 654×–206,000× faster than learning-based planners — which
+//! only pays off at scale if the engine serves a sustained request stream
+//! rather than one-shot CLI invocations. This layer is that service:
+//!
+//! * [`PlacementService`] wraps a shared [`crate::engine::PlacementEngine`]
+//!   behind a bounded MPSC queue and a worker pool, with per-request
+//!   deadlines and adaptive micro-batching of compatible requests (same
+//!   cluster/topology fingerprint) through the engine's `place_batch`.
+//! * **Incremental placement** ([`incremental`]): a request whose graph
+//!   differs from the previously served version by a small delta (diffed
+//!   via Merkle-style cone fingerprints) re-places only the dirty cone
+//!   against the cached plan's frozen device assignments, falling back to
+//!   full placement when the delta is too large or the patched plan
+//!   regresses past the configured makespan tolerance.
+//! * [`ServiceMetrics`] snapshots qps, p50/p99 latency, cache hit rate,
+//!   and incremental-vs-full counts; `baechi serve-bench` drives the
+//!   whole stack over mutated benchmark-graph streams.
+
+pub mod incremental;
+pub mod metrics;
+pub mod service;
+
+pub use incremental::{DeltaBase, IncrementalConfig, ServeMode};
+pub use metrics::ServiceMetrics;
+pub use service::{PlacementService, ServeOutcome, ServiceConfig, Ticket};

@@ -1,0 +1,651 @@
+//! The placement service: a bounded-queue worker pool over a shared
+//! [`PlacementEngine`].
+//!
+//! Request lifecycle:
+//!
+//! 1. [`PlacementService::submit`] enqueues (blocking on a full queue —
+//!    backpressure) or [`PlacementService::try_submit`] fails fast with
+//!    [`BaechiError::Saturated`]. Each submission returns a [`Ticket`].
+//! 2. A worker drains a micro-batch (up to `max_batch`, waiting at most
+//!    `batch_window` for stragglers), then per request: expired deadline →
+//!    typed error; engine cache → [`ServeMode::CacheHit`]; small delta vs
+//!    the last served version of the same model → incremental placement;
+//!    otherwise requests are grouped by topology fingerprint and fanned
+//!    through the engine's `place_batch` ([`ServeMode::Full`]).
+//! 3. [`Ticket::wait`] returns the [`ServeOutcome`] (response + mode +
+//!    measured latency).
+
+use super::incremental::{try_incremental, DeltaBase, IncrementalConfig, ServeMode};
+use super::metrics::{MetricsInner, ServiceMetrics};
+use crate::engine::{fingerprint, PlacementEngine, PlacementRequest, PlacementResponse};
+use crate::error::BaechiError;
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Service tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads draining the queue (≥ 1).
+    pub workers: usize,
+    /// Bounded request-queue depth; a full queue blocks `submit` and
+    /// fails `try_submit` with [`BaechiError::Saturated`].
+    pub queue_capacity: usize,
+    /// Max requests drained into one micro-batch (≥ 1).
+    pub max_batch: usize,
+    /// How long a worker waits for stragglers to fill a batch after the
+    /// first request arrives. Zero (the default) means "batch whatever is
+    /// already queued" — lowest latency, still adaptive under load
+    /// because a busy queue is never empty.
+    pub batch_window: Duration,
+    /// Deadline applied to every submission unless overridden.
+    pub default_deadline: Option<Duration>,
+    /// Incremental-placement knobs.
+    pub incremental: IncrementalConfig,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2)
+                .clamp(1, 4),
+            queue_capacity: 1024,
+            max_batch: 16,
+            batch_window: Duration::ZERO,
+            default_deadline: None,
+            incremental: IncrementalConfig::default(),
+        }
+    }
+}
+
+/// A served response plus how it was produced.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub response: Arc<PlacementResponse>,
+    pub mode: ServeMode,
+    /// Submit-to-completion latency, seconds.
+    pub latency_s: f64,
+}
+
+struct Job {
+    req: PlacementRequest,
+    submitted: Instant,
+    deadline: Option<Instant>,
+    reply: std::sync::mpsc::Sender<crate::Result<ServeOutcome>>,
+}
+
+/// Handle to one in-flight request.
+pub struct Ticket {
+    rx: std::sync::mpsc::Receiver<crate::Result<ServeOutcome>>,
+}
+
+impl Ticket {
+    /// Block until the request is served.
+    pub fn wait(self) -> crate::Result<ServeOutcome> {
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(BaechiError::runtime(
+                "placement service dropped the request (shutting down)",
+            ))
+        })
+    }
+
+    /// Block at most `timeout`; [`BaechiError::DeadlineExceeded`] if the
+    /// response hasn't arrived by then (the request keeps running).
+    pub fn wait_timeout(self, timeout: Duration) -> crate::Result<ServeOutcome> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Err(BaechiError::DeadlineExceeded {
+                waited: timeout.as_secs_f64(),
+            }),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(BaechiError::runtime(
+                "placement service dropped the request (shutting down)",
+            )),
+        }
+    }
+}
+
+struct Shared {
+    engine: Arc<PlacementEngine>,
+    cfg: ServiceConfig,
+    metrics: MetricsInner,
+    /// Workers take turns holding the receiver while gathering a batch.
+    rx: Mutex<Receiver<Job>>,
+    /// Last served graph version per model identity, for delta patching.
+    bases: Mutex<BTreeMap<String, Arc<DeltaBase>>>,
+}
+
+/// A long-running placement service over a shared engine. Threads submit
+/// concurrently; dropping (or [`PlacementService::shutdown`]) drains the
+/// queue and joins the workers.
+pub struct PlacementService {
+    shared: Arc<Shared>,
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl PlacementService {
+    pub fn new(engine: Arc<PlacementEngine>, cfg: ServiceConfig) -> crate::Result<PlacementService> {
+        if cfg.workers == 0 {
+            return Err(BaechiError::invalid("PlacementService: workers must be >= 1"));
+        }
+        if cfg.queue_capacity == 0 {
+            return Err(BaechiError::invalid(
+                "PlacementService: queue_capacity must be >= 1",
+            ));
+        }
+        if cfg.max_batch == 0 {
+            return Err(BaechiError::invalid("PlacementService: max_batch must be >= 1"));
+        }
+        let (tx, rx) = sync_channel(cfg.queue_capacity);
+        let shared = Arc::new(Shared {
+            engine,
+            cfg: cfg.clone(),
+            metrics: MetricsInner::new(),
+            rx: Mutex::new(rx),
+            bases: Mutex::new(BTreeMap::new()),
+        });
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("baechi-serve-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn placement-service worker")
+            })
+            .collect();
+        Ok(PlacementService {
+            shared,
+            tx: Some(tx),
+            workers,
+        })
+    }
+
+    /// The engine this service fronts.
+    pub fn engine(&self) -> &Arc<PlacementEngine> {
+        &self.shared.engine
+    }
+
+    /// Snapshot of service + engine-cache metrics.
+    pub fn metrics(&self) -> ServiceMetrics {
+        self.shared
+            .metrics
+            .snapshot(self.shared.engine.cache_stats())
+    }
+
+    /// Enqueue a request under the configured default deadline, blocking
+    /// while the queue is full (backpressure).
+    pub fn submit(&self, req: PlacementRequest) -> crate::Result<Ticket> {
+        self.submit_with_deadline(req, self.shared.cfg.default_deadline)
+    }
+
+    /// Enqueue with an explicit deadline measured from now (`None` =
+    /// no deadline). Blocks while the queue is full.
+    pub fn submit_with_deadline(
+        &self,
+        req: PlacementRequest,
+        deadline: Option<Duration>,
+    ) -> crate::Result<Ticket> {
+        let (job, ticket) = Self::job(req, deadline);
+        self.sender()?
+            .send(job)
+            .map_err(|_| BaechiError::runtime("placement service is shut down"))?;
+        self.shared.metrics.submitted.fetch_add(1, Relaxed);
+        Ok(ticket)
+    }
+
+    /// Non-blocking enqueue: [`BaechiError::Saturated`] when the queue is
+    /// full, so callers can shed load instead of stalling.
+    pub fn try_submit(&self, req: PlacementRequest) -> crate::Result<Ticket> {
+        let (job, ticket) = Self::job(req, self.shared.cfg.default_deadline);
+        match self.sender()?.try_send(job) {
+            Ok(()) => {
+                self.shared.metrics.submitted.fetch_add(1, Relaxed);
+                Ok(ticket)
+            }
+            Err(TrySendError::Full(_)) => Err(BaechiError::Saturated {
+                capacity: self.shared.cfg.queue_capacity,
+            }),
+            Err(TrySendError::Disconnected(_)) => {
+                Err(BaechiError::runtime("placement service is shut down"))
+            }
+        }
+    }
+
+    /// Submit and wait: the one-call serving API.
+    pub fn place(&self, req: PlacementRequest) -> crate::Result<ServeOutcome> {
+        self.submit(req)?.wait()
+    }
+
+    /// Stop accepting requests, drain the queue, and join the workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.tx = None; // closing the channel ends the worker loops
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn job(req: PlacementRequest, deadline: Option<Duration>) -> (Job, Ticket) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let now = Instant::now();
+        (
+            Job {
+                req,
+                submitted: now,
+                deadline: deadline.map(|d| now + d),
+                reply: tx,
+            },
+            Ticket { rx },
+        )
+    }
+
+    fn sender(&self) -> crate::Result<&SyncSender<Job>> {
+        self.tx
+            .as_ref()
+            .ok_or_else(|| BaechiError::runtime("placement service is shut down"))
+    }
+}
+
+impl Drop for PlacementService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    while let Some(batch) = gather(shared) {
+        serve_batch(shared, batch);
+    }
+}
+
+/// Drain one micro-batch. Blocks for the first job; then greedily takes
+/// whatever is queued, waiting up to `batch_window` for more while the
+/// batch is short. Holds the intake lock for the whole gather — with the
+/// default zero window that is only as long as the queue has jobs ready,
+/// so workers still serve in parallel.
+fn gather(shared: &Shared) -> Option<Vec<Job>> {
+    let cfg = &shared.cfg;
+    let rx = shared.rx.lock().unwrap();
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let window_end = Instant::now() + cfg.batch_window;
+    while batch.len() < cfg.max_batch {
+        match rx.try_recv() {
+            Ok(job) => batch.push(job),
+            Err(TryRecvError::Disconnected) => break,
+            Err(TryRecvError::Empty) => {
+                let now = Instant::now();
+                if now >= window_end {
+                    break;
+                }
+                match rx.recv_timeout(window_end - now) {
+                    Ok(job) => batch.push(job),
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+    Some(batch)
+}
+
+fn serve_batch(shared: &Shared, batch: Vec<Job>) {
+    let m = &shared.metrics;
+    m.batches.fetch_add(1, Relaxed);
+    m.batched_requests.fetch_add(batch.len() as u64, Relaxed);
+    // Full placements grouped by topology-override fingerprint: only
+    // requests placed against the same target share a `place_batch` call.
+    let mut fulls: BTreeMap<u64, Vec<Job>> = BTreeMap::new();
+    for job in batch {
+        if let Some(d) = job.deadline {
+            if Instant::now() >= d {
+                m.deadline_misses.fetch_add(1, Relaxed);
+                let waited = job.submitted.elapsed().as_secs_f64();
+                finish(
+                    shared,
+                    job,
+                    Err(BaechiError::DeadlineExceeded { waited }),
+                    ServeMode::Full,
+                );
+                continue;
+            }
+        }
+        // 1) Engine cache.
+        match shared.engine.lookup(&job.req) {
+            Ok(Some(hit)) => {
+                m.cache_hits.fetch_add(1, Relaxed);
+                finish(shared, job, Ok(hit), ServeMode::CacheHit);
+                continue;
+            }
+            Ok(None) => {}
+            Err(e) => {
+                finish(shared, job, Err(e), ServeMode::Full);
+                continue;
+            }
+        }
+        // 2) Incremental: patch against the last served version.
+        if shared.cfg.incremental.enabled {
+            let key = base_key(&job.req);
+            let base = shared.bases.lock().unwrap().get(&key).cloned();
+            if let Some(base) = base {
+                if let Some(plan) =
+                    try_incremental(&shared.engine, &job.req, &base, &shared.cfg.incremental)
+                {
+                    m.incremental.fetch_add(1, Relaxed);
+                    if plan.dirty_ops > 0 {
+                        let next = DeltaBase {
+                            graph: job.req.graph.clone(),
+                            cones: plan.cones,
+                            response: Arc::clone(&plan.response),
+                        };
+                        shared.bases.lock().unwrap().insert(key, Arc::new(next));
+                    }
+                    let mode = ServeMode::Incremental {
+                        dirty_ops: plan.dirty_ops,
+                    };
+                    finish(shared, job, Ok(plan.response), mode);
+                    continue;
+                }
+            }
+        }
+        // 3) Full pipeline.
+        fulls.entry(compat_key(&job.req)).or_default().push(job);
+    }
+    for jobs in fulls.into_values() {
+        let results = if jobs.len() > 1 {
+            let reqs: Vec<PlacementRequest> = jobs.iter().map(|j| j.req.clone()).collect();
+            shared.engine.place_batch(&reqs)
+        } else {
+            vec![shared.engine.place(&jobs[0].req)]
+        };
+        for (job, result) in jobs.into_iter().zip(results) {
+            if let Ok(resp) = &result {
+                m.full.fetch_add(1, Relaxed);
+                remember_base(shared, &job.req, Arc::clone(resp));
+            }
+            finish(shared, job, result, ServeMode::Full);
+        }
+    }
+}
+
+fn finish(
+    shared: &Shared,
+    job: Job,
+    result: crate::Result<Arc<PlacementResponse>>,
+    mode: ServeMode,
+) {
+    let m = &shared.metrics;
+    let latency_s = job.submitted.elapsed().as_secs_f64();
+    let outcome = match result {
+        Ok(response) => {
+            m.completed.fetch_add(1, Relaxed);
+            m.record_latency(mode, latency_s);
+            Ok(ServeOutcome {
+                response,
+                mode,
+                latency_s,
+            })
+        }
+        Err(e) => {
+            m.errors.fetch_add(1, Relaxed);
+            Err(e)
+        }
+    };
+    // A dropped Ticket just means the caller stopped waiting.
+    let _ = job.reply.send(outcome);
+}
+
+/// Record a full response as the delta base for its model identity, so
+/// the next near-duplicate request can be patched instead of re-placed.
+/// Only plain simulated requests are eligible (the same precondition
+/// `try_incremental` checks on the consuming side).
+fn remember_base(shared: &Shared, req: &PlacementRequest, resp: Arc<PlacementResponse>) {
+    if !shared.cfg.incremental.enabled || req.topology.is_some() || !req.simulate {
+        return;
+    }
+    if let Ok(base) = DeltaBase::new(req.graph.clone(), resp) {
+        shared
+            .bases
+            .lock()
+            .unwrap()
+            .insert(base_key(req), Arc::new(base));
+    }
+}
+
+/// Base-index key: the model identity a delta stream is keyed by. The
+/// incremental guards (fingerprint diff + simulator verdict) keep
+/// correctness even if distinct streams collide here.
+fn base_key(req: &PlacementRequest) -> String {
+    let opt_fp = req
+        .opt
+        .map(|o| fingerprint::opt_fingerprint(&o))
+        .unwrap_or(0);
+    format!(
+        "{}|{}|{}|{opt_fp:x}",
+        req.graph.name,
+        req.placer,
+        req.benchmark.map(|b| b.name()).unwrap_or_default(),
+    )
+}
+
+/// Micro-batch compatibility: requests against the same topology target.
+fn compat_key(req: &PlacementRequest) -> u64 {
+    req.topology
+        .as_ref()
+        .map(fingerprint::topology_fingerprint)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::delta::{mutate, MutationSpec};
+    use crate::graph::{NodeId, OpGraph, OpKind};
+    use crate::placer::{Placement, Placer};
+    use crate::profile::{Cluster, CommModel};
+    use crate::util::rng::Pcg;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new("chain");
+        let mut prev: Option<NodeId> = None;
+        for i in 0..n {
+            let id = g.add_node(&format!("op{i}"), OpKind::MatMul);
+            g.node_mut(id).compute = 2.0;
+            g.node_mut(id).output_bytes = 100;
+            g.node_mut(id).mem.output = 100;
+            g.node_mut(id).mem.temp = 100;
+            if let Some(p) = prev {
+                g.add_edge(p, id, 100);
+            }
+            prev = Some(id);
+        }
+        g
+    }
+
+    fn engine() -> Arc<PlacementEngine> {
+        Arc::new(
+            PlacementEngine::builder()
+                .cluster(Cluster::homogeneous(
+                    2,
+                    1 << 20,
+                    CommModel::new(1e-6, 1e9).unwrap(),
+                ))
+                .build()
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn serve_full_then_cache_hit() {
+        let service = PlacementService::new(engine(), ServiceConfig::default()).unwrap();
+        let g = chain(6);
+        let a = service
+            .place(PlacementRequest::new(g.clone(), "m-etf"))
+            .unwrap();
+        assert_eq!(a.mode, ServeMode::Full);
+        let b = service.place(PlacementRequest::new(g, "m-etf")).unwrap();
+        assert_eq!(b.mode, ServeMode::CacheHit);
+        assert!(Arc::ptr_eq(&a.response, &b.response));
+        let m = service.metrics();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.full, 1);
+        assert_eq!(m.cache_hits, 1);
+        assert!(m.cache_hit_rate() > 0.0);
+        assert!(m.qps > 0.0);
+    }
+
+    #[test]
+    fn serve_incremental_on_small_delta() {
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        let service = PlacementService::new(engine(), cfg).unwrap();
+        let g = chain(12);
+        service
+            .place(PlacementRequest::new(g.clone(), "m-etf"))
+            .unwrap();
+        let mut m = g.clone();
+        let last = m.node_ids().last().unwrap();
+        m.node_mut(last).compute += 0.5;
+        let out = service
+            .place(PlacementRequest::new(m.clone(), "m-etf"))
+            .unwrap();
+        assert_eq!(out.mode, ServeMode::Incremental { dirty_ops: 1 });
+        assert_eq!(out.response.placement.device_of.len(), m.len());
+        assert_eq!(service.metrics().incremental, 1);
+    }
+
+    #[test]
+    fn serve_mutation_stream_mixes_modes() {
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 2;
+        let service = PlacementService::new(engine(), cfg).unwrap();
+        let mut g = chain(10);
+        let mut rng = Pcg::seed(7);
+        let mut served = 0u64;
+        for i in 0..20 {
+            if i % 3 == 1 {
+                mutate(&mut g, &mut rng, &MutationSpec::small());
+            }
+            service
+                .place(PlacementRequest::new(g.clone(), "m-etf"))
+                .unwrap();
+            served += 1;
+        }
+        let m = service.metrics();
+        assert_eq!(m.completed, served);
+        assert_eq!(m.errors, 0);
+        assert!(m.cache_hits > 0, "repeats must hit: {m:?}");
+        assert_eq!(m.cache_hits + m.incremental + m.full, served);
+    }
+
+    #[test]
+    fn zero_deadline_is_a_typed_miss() {
+        let service = PlacementService::new(engine(), ServiceConfig::default()).unwrap();
+        let ticket = service
+            .submit_with_deadline(
+                PlacementRequest::new(chain(4), "m-etf"),
+                Some(Duration::ZERO),
+            )
+            .unwrap();
+        match ticket.wait() {
+            Err(BaechiError::DeadlineExceeded { waited }) => assert!(waited >= 0.0),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let m = service.metrics();
+        assert_eq!(m.deadline_misses, 1);
+        assert_eq!(m.errors, 1);
+    }
+
+    /// Placer that sleeps, to wedge the single worker deterministically.
+    struct SleepyPlacer;
+    impl Placer for SleepyPlacer {
+        fn name(&self) -> String {
+            "sleepy".into()
+        }
+        fn place(&self, graph: &OpGraph, _cluster: &Cluster) -> crate::Result<Placement> {
+            std::thread::sleep(Duration::from_millis(300));
+            Ok(Placement {
+                algorithm: "sleepy".into(),
+                device_of: graph
+                    .node_ids()
+                    .map(|id| (id, crate::graph::DeviceId(0)))
+                    .collect(),
+                predicted_makespan: 0.0,
+                placement_time: 0.0,
+                peak_memory: Vec::new(),
+            })
+        }
+    }
+
+    #[test]
+    fn try_submit_reports_saturation() {
+        let engine = Arc::new(
+            PlacementEngine::builder()
+                .cluster(Cluster::homogeneous(
+                    2,
+                    1 << 20,
+                    CommModel::new(1e-6, 1e9).unwrap(),
+                ))
+                .register_placer(
+                    "sleepy",
+                    crate::engine::PlacerRegistration::new(|_| Ok(Box::new(SleepyPlacer))),
+                )
+                .build()
+                .unwrap(),
+        );
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.queue_capacity = 1;
+        cfg.incremental.enabled = false;
+        let service = PlacementService::new(engine, cfg).unwrap();
+        let mut tickets = Vec::new();
+        let mut saturated = false;
+        // Distinct graphs so nothing is served from the cache; the sleepy
+        // placer wedges the worker, so by the third submission at most one
+        // job is in flight and one queued.
+        for i in 0..8 {
+            let mut g = chain(4);
+            g.node_mut(NodeId(0)).compute += i as f64;
+            match service.try_submit(PlacementRequest::new(g, "sleepy").without_simulation()) {
+                Ok(t) => tickets.push(t),
+                Err(BaechiError::Saturated { capacity }) => {
+                    assert_eq!(capacity, 1);
+                    saturated = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(saturated, "queue of 1 must saturate under a wedged worker");
+        for t in tickets {
+            t.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_and_rejects_new_work() {
+        let service = PlacementService::new(engine(), ServiceConfig::default()).unwrap();
+        let t = service
+            .submit(PlacementRequest::new(chain(4), "m-etf"))
+            .unwrap();
+        service.shutdown();
+        t.wait().unwrap();
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 0;
+        assert!(PlacementService::new(engine(), cfg).is_err());
+        let mut cfg = ServiceConfig::default();
+        cfg.max_batch = 0;
+        assert!(PlacementService::new(engine(), cfg).is_err());
+    }
+}

@@ -387,14 +387,92 @@ fn observer_sees_all_stages_in_order() {
         assert_eq!(st.placer, "m-etf");
         assert!(st.ops_in > 0);
     }
-    // A cache hit emits no further stage events.
+    // A cache hit re-runs no pipeline stage; it emits a single
+    // `cache_hit` event instead.
     engine
         .place(&PlacementRequest::new(
             baechi::models::linreg::linreg_graph(),
             "m-etf",
         ))
         .unwrap();
-    assert_eq!(obs.events().len(), 4, "hit must not re-run stages");
+    let events = obs.events();
+    assert_eq!(events.len(), 5, "hit adds exactly one event");
+    let (stage, st) = &events[4];
+    assert_eq!(*stage, Stage::CacheHit);
+    assert_eq!(st.placer, "m-etf");
+    assert!(st.duration >= 0.0);
+    assert_eq!(st.ops_in, st.ops_out, "hit reports the served plan size");
+    assert!(st.ops_out > 0);
+}
+
+#[test]
+fn lookup_peeks_without_counting_misses() {
+    let obs = RecordingObserver::new();
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 20))
+        .observer(obs.clone())
+        .build()
+        .unwrap();
+    let req = PlacementRequest::new(baechi::models::linreg::linreg_graph(), "m-etf");
+
+    // Unknown request: lookup returns None and counts nothing.
+    assert!(engine.lookup(&req).unwrap().is_none());
+    let stats = engine.cache_stats();
+    assert_eq!((stats.hits, stats.misses), (0, 0), "peek never counts a miss");
+    assert!(obs.events().is_empty(), "a lookup miss emits no event");
+
+    // After one real placement, lookup hits and emits Stage::CacheHit.
+    let placed = engine.place(&req).unwrap();
+    let events_after_place = obs.events().len();
+    let hit = engine.lookup(&req).unwrap().expect("warm entry must hit");
+    assert!(Arc::ptr_eq(&placed, &hit));
+    let stats = engine.cache_stats();
+    assert_eq!((stats.hits, stats.misses), (1, 1));
+    let events = obs.events();
+    assert_eq!(events.len(), events_after_place + 1);
+    assert_eq!(events.last().unwrap().0, Stage::CacheHit);
+}
+
+/// Regression for the bounded cache: with a capacity of ~2 entries and a
+/// single shard, a third distinct graph must evict the least recently
+/// used entry, counters must stay consistent with the request count, and
+/// re-placing an evicted graph must miss (and re-run the pipeline).
+#[test]
+fn bounded_cache_evicts_lru_and_keeps_counters_consistent() {
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 20))
+        .cache_shards(1)
+        // Entry cost is ops + 1 = 3 for the 2-op graphs below, so
+        // capacity 7 holds two entries but not three.
+        .cache_capacity(7)
+        .build()
+        .unwrap();
+
+    let mk = |name: &str| {
+        let mut g = OpGraph::new(name);
+        let a = g.add_node(&format!("{name}_a"), OpKind::MatMul);
+        let b = g.add_node(&format!("{name}_b"), OpKind::MatMul);
+        g.node_mut(a).compute = 1.0;
+        g.node_mut(b).compute = 1.0;
+        g.add_edge(a, b, 8);
+        g
+    };
+    let req = |name: &str| PlacementRequest::new(mk(name), "m-etf").without_simulation();
+
+    engine.place(&req("g1")).unwrap(); // miss → {g1}
+    engine.place(&req("g2")).unwrap(); // miss → {g1, g2}
+    engine.place(&req("g1")).unwrap(); // hit, g1 now most recent
+    engine.place(&req("g3")).unwrap(); // miss, evicts LRU g2 → {g1, g3}
+    let stats = engine.cache_stats();
+    assert_eq!((stats.hits, stats.misses, stats.evictions), (1, 3, 1));
+    assert_eq!(engine.cache_len(), 2);
+
+    engine.place(&req("g2")).unwrap(); // miss again: g2 was evicted
+    engine.place(&req("g3")).unwrap(); // hit: g3 survived the g2 re-insert
+    let stats = engine.cache_stats();
+    assert_eq!((stats.hits, stats.misses, stats.evictions), (2, 4, 2));
+    assert_eq!(engine.cache_len(), 2);
+    assert_eq!(stats.hits + stats.misses, 6, "every request counted once");
 }
 
 #[test]

@@ -511,6 +511,129 @@ fn prop_flow_uniform_topology_bit_identical_in_parallel_comm() {
 }
 
 #[test]
+fn prop_incremental_cone_diff_marks_exactly_descendants() {
+    // A point mutation of one op's compute cost must dirty exactly the
+    // mutated op and its transitive descendants — nothing else. This is
+    // the soundness contract the incremental placer builds on: clean
+    // nodes are provably unaffected by the change.
+    use baechi::engine::fingerprint::cone_fingerprints;
+    use baechi::graph::delta::diff_by_cones;
+    prop_check("incremental_cone_diff", 120, |rng| {
+        let old = random_dag(rng, 40);
+        let ids: Vec<NodeId> = old.node_ids().collect();
+        let target = *rng.choose(&ids);
+        let mut new = old.clone();
+        new.node_mut(target).compute += 1.0;
+        let old_cones = cone_fingerprints(&old).unwrap();
+        let new_cones = cone_fingerprints(&new).unwrap();
+        let delta = diff_by_cones(&old, &new, &old_cones, &new_cones);
+        for id in new.node_ids() {
+            let expect_dirty = new.reachable(target, id);
+            assert_eq!(
+                delta.dirty.contains(&id),
+                expect_dirty,
+                "node {id:?}: dirty set must be exactly the descendants of {target:?}"
+            );
+        }
+        // Clean pairs are identity matches (same graph layout) and the
+        // partition is exhaustive.
+        for &(new_id, old_id) in &delta.clean {
+            assert_eq!(new_id, old_id);
+        }
+        assert_eq!(delta.dirty.len() + delta.clean.len(), new.len());
+        let expect_fraction = delta.dirty.len() as f64 / new.len() as f64;
+        assert!((delta.dirty_fraction - expect_fraction).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_incremental_results_respect_memory_and_makespan_tolerance() {
+    // The ISSUE acceptance property: serving a small delta through the
+    // incremental path must (a) cover every op, (b) respect per-device
+    // memory capacity, and (c) never exceed the full-placement makespan
+    // beyond the configured tolerance. When the service falls back to a
+    // full run instead, the result must be bit-identical to a fresh
+    // engine's full placement.
+    use baechi::engine::{PlacementEngine, PlacementRequest};
+    use baechi::graph::delta::{mutate, MutationSpec};
+    use baechi::serve::{IncrementalConfig, PlacementService, ServeMode, ServiceConfig};
+    use std::sync::Arc;
+    prop_check("incremental_capacity_tolerance", 25, |rng| {
+        let g = random_dag(rng, 30);
+        let n_dev = rng.range(2, 5);
+        let mem: u64 = 1 << 20; // ample for random_dag's byte scale
+        let cluster = unit_cluster(n_dev, mem);
+        let engine = Arc::new(
+            PlacementEngine::builder()
+                .cluster(cluster.clone())
+                .build()
+                .unwrap(),
+        );
+        let tol = 0.25;
+        let mut scfg = ServiceConfig::default();
+        scfg.workers = 1;
+        scfg.incremental = IncrementalConfig {
+            enabled: true,
+            max_dirty_fraction: 0.6,
+            makespan_tolerance: tol,
+        };
+        let service = PlacementService::new(engine, scfg).unwrap();
+
+        let base = service
+            .place(PlacementRequest::new(g.clone(), "m-etf"))
+            .unwrap();
+        let mut mutated = g.clone();
+        mutate(&mut mutated, rng, &MutationSpec::small());
+        let out = service
+            .place(PlacementRequest::new(mutated.clone(), "m-etf"))
+            .unwrap();
+
+        // (a) coverage and (b) capacity hold in every serve mode.
+        assert_eq!(out.response.placement.device_of.len(), mutated.len());
+        let sim = out.response.sim.as_ref().expect("service simulates");
+        assert!(sim.ok(), "served plan must not OOM: {:?}", sim.oom);
+        for (d, &peak) in sim.peak_memory.iter().enumerate() {
+            assert!(peak <= mem, "device {d} peak {peak} > capacity {mem}");
+        }
+
+        // Full reference for the mutated graph on a fresh engine.
+        let fresh = PlacementEngine::builder()
+            .cluster(cluster)
+            .build()
+            .unwrap();
+        let full = fresh
+            .place(&PlacementRequest::new(mutated, "m-etf"))
+            .unwrap();
+        let full_makespan = full.sim.as_ref().unwrap().makespan;
+        match out.mode {
+            ServeMode::Incremental { dirty_ops } => {
+                assert!(dirty_ops > 0, "a real delta patches at least one op");
+                // (c) tolerance: the guard compares against the cached
+                // base plan, which a one-op small() mutation keeps within
+                // a few percent of the fresh full makespan — 1.25× slack
+                // absorbs that gap.
+                assert!(
+                    sim.makespan <= full_makespan * (1.0 + tol) * 1.25 + 1e-9,
+                    "incremental makespan {} vs full {} beyond tolerance",
+                    sim.makespan,
+                    full_makespan
+                );
+            }
+            ServeMode::Full => {
+                assert_eq!(
+                    out.response.placement.device_of, full.placement.device_of,
+                    "full fallback must match a fresh engine bit-for-bit"
+                );
+            }
+            ServeMode::CacheHit => {
+                // A no-op mutation draw: served from cache, same plan.
+                assert!(Arc::ptr_eq(&out.response, &base.response));
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_iterative_zero_rounds_bit_identical_to_place() {
     use baechi::engine::{PlacementEngine, PlacementRequest};
     use baechi::feedback::ReplacementPolicy;

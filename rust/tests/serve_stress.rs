@@ -1,0 +1,199 @@
+//! Concurrency stress tests for the `serve::PlacementService`: many
+//! client threads hammer one service with a mix of repeated, mutated, and
+//! fresh graphs across several placers, and every response must be
+//! bit-identical to what a sequential `engine.place` produces on a fresh
+//! engine. This pins the service's whole concurrent path — bounded queue,
+//! worker pool, micro-batching, sharded cache — to the single-threaded
+//! semantics.
+
+use baechi::engine::{PlacementEngine, PlacementRequest};
+use baechi::graph::delta::{mutate, MutationSpec};
+use baechi::graph::{MemorySpec, NodeId, OpGraph, OpKind};
+use baechi::models::Benchmark;
+use baechi::profile::{Cluster, CommModel};
+use baechi::serve::{PlacementService, ServeMode, ServiceConfig};
+use baechi::util::rng::Pcg;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+fn stress_cluster() -> Cluster {
+    Cluster::homogeneous(4, 1 << 30, CommModel::new(1e-5, 1e9).unwrap())
+}
+
+/// Small random layered DAG (a "fresh" request no cache can have seen).
+fn fresh_dag(rng: &mut Pcg, tag: usize) -> OpGraph {
+    let n = rng.range(6, 18);
+    let mut g = OpGraph::new(&format!("fresh{tag}"));
+    let mut ids: Vec<NodeId> = Vec::new();
+    for i in 0..n {
+        let id = g.add_node(&format!("f{tag}_op{i}"), OpKind::Generic(0));
+        g.node_mut(id).compute = rng.uniform(0.2, 2.0);
+        g.node_mut(id).mem = MemorySpec {
+            params: rng.below(512) + 1,
+            output: rng.below(256) + 1,
+            ..Default::default()
+        };
+        g.node_mut(id).output_bytes = g.node(id).mem.output;
+        if !ids.is_empty() {
+            let p = *rng.choose(&ids);
+            let bytes = g.node(id).mem.output;
+            g.add_edge(p, id, bytes);
+        }
+        ids.push(id);
+    }
+    g
+}
+
+/// Deterministic workload: repeated, mutated, and fresh graphs.
+fn graph_mix(seed: u64) -> Vec<OpGraph> {
+    let mut rng = Pcg::seed(seed);
+    let base = Benchmark::Mlp.graph();
+    let mut current = base.clone();
+    let mut out = Vec::new();
+    for i in 0..12 {
+        match i % 3 {
+            0 => out.push(current.clone()), // repeat → cache hits
+            1 => {
+                let mut m = current.clone();
+                mutate(&mut m, &mut rng, &MutationSpec::small());
+                current = m.clone();
+                out.push(m);
+            }
+            _ => out.push(fresh_dag(&mut rng, i)),
+        }
+    }
+    out
+}
+
+#[test]
+fn serve_stress_concurrent_responses_bit_identical_to_sequential() {
+    const PLACERS: [&str; 3] = ["m-etf", "m-topo", "m-sct"];
+    const CLIENTS: usize = 8;
+    let graphs = graph_mix(0x5eed);
+
+    // Sequential reference on a fresh engine with the identical cluster.
+    let reference_engine = PlacementEngine::builder()
+        .cluster(stress_cluster())
+        .build()
+        .unwrap();
+    let mut reference: BTreeMap<(usize, &str), _> = BTreeMap::new();
+    for (gi, g) in graphs.iter().enumerate() {
+        for placer in PLACERS {
+            let r = reference_engine
+                .place(&PlacementRequest::new(g.clone(), placer))
+                .unwrap();
+            reference.insert((gi, placer), r);
+        }
+    }
+
+    // The service under stress: incremental off so every response is
+    // either the full pipeline or a cache hit of it — the modes that
+    // promise bit-identity.
+    let engine = Arc::new(
+        PlacementEngine::builder()
+            .cluster(stress_cluster())
+            .build()
+            .unwrap(),
+    );
+    let mut cfg = ServiceConfig::default();
+    cfg.workers = 4;
+    cfg.incremental.enabled = false;
+    let service = PlacementService::new(engine, cfg).unwrap();
+
+    let results: Mutex<Vec<((usize, &str), Arc<baechi::engine::PlacementResponse>)>> =
+        Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let service = &service;
+            let graphs = &graphs;
+            let results = &results;
+            s.spawn(move || {
+                // Each client walks the workload in a different order so
+                // hits and misses interleave across threads.
+                for k in 0..graphs.len() * PLACERS.len() {
+                    let j = (k + c * 5) % (graphs.len() * PLACERS.len());
+                    let (gi, pi) = (j / PLACERS.len(), j % PLACERS.len());
+                    let out = service
+                        .place(PlacementRequest::new(graphs[gi].clone(), PLACERS[pi]))
+                        .unwrap();
+                    results.lock().unwrap().push(((gi, PLACERS[pi]), out.response));
+                }
+            });
+        }
+    });
+
+    let results = results.into_inner().unwrap();
+    assert_eq!(results.len(), CLIENTS * graphs.len() * PLACERS.len());
+    for (key, resp) in &results {
+        let want = &reference[key];
+        assert_eq!(
+            resp.placement.device_of, want.placement.device_of,
+            "{key:?}: concurrent placement diverged from sequential"
+        );
+        assert_eq!(
+            resp.placement.predicted_makespan.to_bits(),
+            want.placement.predicted_makespan.to_bits(),
+            "{key:?}: predicted makespan not bit-identical"
+        );
+        let (a, b) = (resp.sim.as_ref().unwrap(), want.sim.as_ref().unwrap());
+        assert_eq!(
+            a.makespan.to_bits(),
+            b.makespan.to_bits(),
+            "{key:?}: simulated makespan not bit-identical"
+        );
+    }
+
+    let m = service.metrics();
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.completed, results.len() as u64);
+    assert!(m.cache_hits > 0, "repeated requests must hit: {m:?}");
+    assert_eq!(m.incremental, 0, "incremental path was disabled");
+    assert_eq!(m.cache_hits + m.full, m.completed);
+}
+
+#[test]
+fn serve_stress_incremental_stream_stays_valid_under_concurrency() {
+    // With the incremental path on, bit-identity to a fresh engine no
+    // longer holds (patched plans are a different, cheaper answer), but
+    // every response must still cover all ops and simulate OOM-free, and
+    // the mode counters must account for every completed request.
+    let engine = Arc::new(
+        PlacementEngine::builder()
+            .cluster(stress_cluster())
+            .build()
+            .unwrap(),
+    );
+    let mut cfg = ServiceConfig::default();
+    cfg.workers = 4;
+    cfg.incremental.enabled = true;
+    let service = PlacementService::new(engine, cfg).unwrap();
+
+    let graphs = graph_mix(0xfeed);
+    std::thread::scope(|s| {
+        for c in 0..4usize {
+            let service = &service;
+            let graphs = &graphs;
+            s.spawn(move || {
+                for (gi, g) in graphs.iter().enumerate() {
+                    let out = service
+                        .place(PlacementRequest::new(g.clone(), "m-etf"))
+                        .unwrap();
+                    assert_eq!(
+                        out.response.placement.device_of.len(),
+                        g.len(),
+                        "client {c} graph {gi}: incomplete coverage"
+                    );
+                    let sim = out.response.sim.as_ref().expect("service simulates");
+                    assert!(sim.ok(), "client {c} graph {gi}: served plan OOMs");
+                    if let ServeMode::Incremental { dirty_ops } = out.mode {
+                        assert!(dirty_ops <= g.len());
+                    }
+                }
+            });
+        }
+    });
+    let m = service.metrics();
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.completed, 4 * graphs.len() as u64);
+    assert_eq!(m.cache_hits + m.incremental + m.full, m.completed);
+}
