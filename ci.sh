@@ -52,6 +52,16 @@ if [[ "$fast" == 0 ]]; then
     # assertions gate hit rate and incremental-vs-full latency, emitting
     # bench-json/BENCH_serving.json for the CI artifact upload.
     stage env BAECHI_BENCH_JSON=bench-json cargo bench --bench fig12_serving -- --smoke
+    # Telemetry suite: span collection through engine + service, Chrome
+    # trace-event export, Prometheus exposition, and the trace-off
+    # bit-identity / schedule-reconstruction property tests.
+    stage cargo test -q --test telemetry
+    stage cargo test -q --test prop_invariants trace
+    # Trace-export smoke run: `baechi trace` must emit a file that
+    # validates as trace-event JSON with every stage span nested inside
+    # its request span (uploaded as the trace-smoke CI artifact).
+    stage ./target/release/baechi trace --model linreg --placer m-etf --out trace-smoke.json
+    stage python3 tools/validate_trace.py trace-smoke.json
     stage cargo fmt --check
     stage cargo clippy --all-targets -- -D warnings
     stage cargo doc --no-deps

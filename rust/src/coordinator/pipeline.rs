@@ -10,11 +10,12 @@
 //! should talk to [`crate::engine`] directly.
 
 use super::config::BaechiConfig;
-use crate::calibrate::CalibrationReport;
+use crate::calibrate::{CalibratedCluster, CalibrationReport};
 use crate::engine::{PlacementEngine, PlacementRequest};
 use crate::feedback::ReplacementRound;
 use crate::graph::{DeviceId, NodeId};
 use crate::sim::SimResult;
+use crate::telemetry::{chrome_trace, SimTrack};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -124,18 +125,24 @@ impl RunReport {
 /// shares this so every entrypoint routes through one engine
 /// construction path.
 pub fn engine_for(cfg: &BaechiConfig) -> crate::Result<PlacementEngine> {
-    engine_with(cfg, cfg.calibrated()?.as_ref())
+    engine_with(cfg, cfg.calibrated()?.as_ref(), None)
 }
 
+/// `tracing = None` defers to the builder's default (`BAECHI_TRACE`);
+/// `Some(on)` forces span collection on or off.
 fn engine_with(
     cfg: &BaechiConfig,
-    cal: Option<&crate::calibrate::CalibratedCluster>,
+    cal: Option<&CalibratedCluster>,
+    tracing: Option<bool>,
 ) -> crate::Result<PlacementEngine> {
-    PlacementEngine::builder()
+    let mut builder = PlacementEngine::builder()
         .cluster(cfg.cluster_with(cal)?)
         .optimizer(cfg.opt)
-        .sim(cfg.sim)
-        .build()
+        .sim(cfg.sim);
+    if let Some(on) = tracing {
+        builder = builder.tracing(on);
+    }
+    builder.build()
 }
 
 /// Run the full pipeline through the engine. `Err` only for
@@ -145,7 +152,37 @@ fn engine_with(
 pub fn run(cfg: &BaechiConfig) -> crate::Result<RunReport> {
     // Calibrate once; the engine's cluster and the report share the run.
     let calibrated = cfg.calibrated()?;
-    let engine = engine_with(cfg, calibrated.as_ref())?;
+    let engine = engine_with(cfg, calibrated.as_ref(), None)?;
+    run_with_engine(cfg, &engine, calibrated)
+}
+
+/// [`run`] with span collection forced on: returns the report plus the
+/// Chrome trace-event JSON covering both the pipeline spans and the
+/// simulated execution timeline (`baechi trace` / `baechi place
+/// --trace`). Load the file in `chrome://tracing` or Perfetto.
+pub fn run_traced(cfg: &BaechiConfig) -> crate::Result<(RunReport, Json)> {
+    let calibrated = cfg.calibrated()?;
+    let engine = engine_with(cfg, calibrated.as_ref(), Some(true))?;
+    let report = run_with_engine(cfg, &engine, calibrated)?;
+    let spans = engine.tracer().drain();
+    let graph = cfg.benchmark.graph();
+    let topo = engine.cluster().effective_topology().into_owned();
+    let trace = chrome_trace(
+        &spans,
+        Some(SimTrack {
+            graph: &graph,
+            topo: &topo,
+            schedule: &report.sim.schedule,
+        }),
+    );
+    Ok((report, trace))
+}
+
+fn run_with_engine(
+    cfg: &BaechiConfig,
+    engine: &PlacementEngine,
+    calibrated: Option<CalibratedCluster>,
+) -> crate::Result<RunReport> {
     let req = PlacementRequest::for_benchmark(cfg.benchmark, &cfg.placer.spec());
     let (resp, replacement) = match cfg.replacement_policy() {
         Some(policy) => {

@@ -9,6 +9,7 @@ use crate::error::BaechiError;
 use crate::graph::delta::{mutate, MutationSpec};
 use crate::graph::OpGraph;
 use crate::serve::{PlacementService, ServiceConfig, ServiceMetrics};
+use crate::telemetry::{chrome_trace, MetricsServer};
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 use std::sync::Arc;
@@ -34,6 +35,12 @@ pub struct ServeBenchOpts {
     pub incremental: bool,
     /// Stream RNG seed (the stream is deterministic given the seed).
     pub seed: u64,
+    /// Collect telemetry spans and return the Chrome trace-event JSON
+    /// of the whole run in [`ServeBenchReport::trace`].
+    pub trace: bool,
+    /// Serve Prometheus metrics over HTTP at this address for the
+    /// duration of the bench (e.g. `"127.0.0.1:9184"`).
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServeBenchOpts {
@@ -47,6 +54,8 @@ impl Default for ServeBenchOpts {
             workers: 2,
             incremental: true,
             seed: 0xbaec1,
+            trace: false,
+            metrics_addr: None,
         }
     }
 }
@@ -62,6 +71,10 @@ pub struct ServeBenchReport {
     /// Completed placements per wall-clock second.
     pub placements_per_sec: f64,
     pub metrics: ServiceMetrics,
+    /// Chrome trace-event JSON of the run's telemetry spans
+    /// (`opts.trace`; deliberately not folded into [`Self::to_json`] —
+    /// the CLI writes it to its own file).
+    pub trace: Option<Json>,
 }
 
 impl ServeBenchReport {
@@ -101,19 +114,34 @@ pub fn run_serve_bench(
     cfg: &BaechiConfig,
     opts: &ServeBenchOpts,
 ) -> crate::Result<ServeBenchReport> {
-    let engine = Arc::new(
-        PlacementEngine::builder()
-            .cluster(cfg.cluster()?)
-            .optimizer(cfg.opt)
-            .sim(cfg.sim)
-            .cache_shards(opts.cache_shards)
-            .cache_capacity(opts.cache_capacity)
-            .build()?,
-    );
+    let mut builder = PlacementEngine::builder()
+        .cluster(cfg.cluster()?)
+        .optimizer(cfg.opt)
+        .sim(cfg.sim)
+        .cache_shards(opts.cache_shards)
+        .cache_capacity(opts.cache_capacity);
+    if opts.trace {
+        builder = builder.tracing(true);
+    }
+    let engine = Arc::new(builder.build()?);
     let mut scfg = ServiceConfig::default();
     scfg.workers = opts.workers.max(1);
     scfg.incremental.enabled = opts.incremental;
-    let service = PlacementService::new(engine, scfg)?;
+    let service = Arc::new(PlacementService::new(Arc::clone(&engine), scfg)?);
+    // Live Prometheus endpoint for the duration of the bench; dropped
+    // (and joined) when this function returns.
+    let _metrics_server = match &opts.metrics_addr {
+        Some(addr) => {
+            let svc = Arc::clone(&service);
+            let server = MetricsServer::bind(addr, move || svc.metrics_text())?;
+            crate::util::log::log(
+                crate::util::log::Level::Info,
+                format_args!("serving metrics at http://{}/metrics", server.addr()),
+            );
+            Some(server)
+        }
+        None => None,
+    };
 
     let stream = request_stream(&cfg.benchmark.graph(), opts.requests, opts.mutation_rate, opts.seed);
     let placer = cfg.placer.spec();
@@ -143,6 +171,9 @@ pub fn run_serve_bench(
     })?;
     let wall_s = t0.elapsed().as_secs_f64();
     let metrics = service.metrics();
+    let trace = opts
+        .trace
+        .then(|| chrome_trace(&engine.tracer().drain(), None));
     Ok(ServeBenchReport {
         benchmark: cfg.benchmark.name(),
         placer: cfg.placer.spec(),
@@ -150,6 +181,7 @@ pub fn run_serve_bench(
         wall_s,
         placements_per_sec: metrics.completed as f64 / wall_s.max(1e-9),
         metrics,
+        trace,
     })
 }
 

@@ -30,8 +30,14 @@
 //!   [`Stage::CacheHit`]. Capacity and shard count are builder knobs.
 //! * **Batching** — [`PlacementEngine::place_batch`] fans a slice of
 //!   requests across OS threads via `std::thread::scope`.
-//! * **Observability** — [`PlacementObserver`] hooks receive per-stage
-//!   timings (optimize / place / expand / simulate).
+//! * **Observability** — every request runs under a telemetry span tree
+//!   ([`crate::telemetry::Tracer`]): a per-request trace id (stamped by
+//!   the caller via [`PlacementRequest::with_trace`] or minted at
+//!   intake) plus one child span per stage (optimize / place / expand /
+//!   simulate; cache hits book a `cache_hit` span). When the tracer is
+//!   not live the span guards are inert — a single relaxed atomic load.
+//!   Legacy [`PlacementObserver`] hooks keep working: an internal
+//!   bridge replays closed stage spans as `on_stage` callbacks.
 //! * **Re-placement** — [`PlacementEngine::place_iterative`] closes the
 //!   sim → placer loop: simulate, degrade saturated links by the
 //!   observed queueing ([`crate::feedback`]), re-place, keep the best.
@@ -57,6 +63,7 @@ use crate::optimizer::{self, OptConfig, OptStats};
 use crate::placer::Placement;
 use crate::profile::Cluster;
 use crate::sim::{self, SimConfig, SimResult};
+use crate::telemetry::tracer::{SpanId, TraceId, Tracer, DEFAULT_SPAN_CAPACITY};
 use crate::topology::Topology;
 use std::borrow::Cow;
 use std::sync::Arc;
@@ -86,6 +93,11 @@ pub struct PlacementRequest {
     pub topology: Option<Topology>,
     /// Evaluate the expanded placement in the execution simulator.
     pub simulate: bool,
+    /// Telemetry trace id to attribute this request's spans to (stamped
+    /// by the serving layer at intake; `None` or `0` mints a fresh id
+    /// when tracing is live). Deliberately **not** part of the cache
+    /// key: tracing never changes what is served.
+    pub trace: Option<u64>,
 }
 
 impl PlacementRequest {
@@ -97,6 +109,7 @@ impl PlacementRequest {
             opt: None,
             topology: None,
             simulate: true,
+            trace: None,
         }
     }
 
@@ -125,6 +138,13 @@ impl PlacementRequest {
     /// Skip the execution-simulator evaluation.
     pub fn without_simulation(mut self) -> PlacementRequest {
         self.simulate = false;
+        self
+    }
+
+    /// Attribute this request's telemetry spans to an existing trace id
+    /// (end-to-end propagation across service → engine → stages).
+    pub fn with_trace(mut self, trace: u64) -> PlacementRequest {
+        self.trace = Some(trace);
         self
     }
 }
@@ -210,7 +230,8 @@ impl CacheKey {
 
 /// Builder for [`PlacementEngine`]. `cluster` is mandatory; everything
 /// else defaults (paper optimizer config, TF-semantics simulator, the
-/// built-in placer registry, no observers, a generously bounded sharded
+/// built-in placer registry, no observers, span collection from the
+/// `BAECHI_TRACE` environment variable, a generously bounded sharded
 /// cache).
 pub struct PlacementEngineBuilder {
     cluster: Option<Cluster>,
@@ -220,6 +241,9 @@ pub struct PlacementEngineBuilder {
     observers: Vec<Arc<dyn PlacementObserver>>,
     cache_capacity: u64,
     cache_shards: usize,
+    /// `None` defers to `BAECHI_TRACE` at build time.
+    tracing: Option<bool>,
+    trace_capacity: usize,
 }
 
 impl PlacementEngineBuilder {
@@ -232,6 +256,8 @@ impl PlacementEngineBuilder {
             observers: Vec::new(),
             cache_capacity: DEFAULT_CACHE_CAPACITY,
             cache_shards: DEFAULT_CACHE_SHARDS,
+            tracing: None,
+            trace_capacity: DEFAULT_SPAN_CAPACITY,
         }
     }
 
@@ -289,6 +315,21 @@ impl PlacementEngineBuilder {
         self
     }
 
+    /// Enable or disable telemetry span collection explicitly. Without
+    /// this call the engine defers to the `BAECHI_TRACE` environment
+    /// variable (off unless set to a truthy value).
+    pub fn tracing(mut self, on: bool) -> PlacementEngineBuilder {
+        self.tracing = Some(on);
+        self
+    }
+
+    /// Bound on spans held by the tracer before drops are counted
+    /// instead (default [`DEFAULT_SPAN_CAPACITY`]).
+    pub fn trace_capacity(mut self, capacity: usize) -> PlacementEngineBuilder {
+        self.trace_capacity = capacity;
+        self
+    }
+
     pub fn build(self) -> crate::Result<PlacementEngine> {
         let cluster = self.cluster.ok_or_else(|| {
             BaechiError::invalid("PlacementEngine::builder(): a cluster is required")
@@ -298,6 +339,14 @@ impl PlacementEngineBuilder {
                 "PlacementEngine::builder(): cluster has no devices",
             ));
         }
+        let mut tracer = Tracer::new(self.trace_capacity);
+        if !self.observers.is_empty() {
+            tracer.add_listener(Arc::new(observer::ObserverBridge::new(self.observers)));
+        }
+        tracer.set_collecting(
+            self.tracing
+                .unwrap_or_else(crate::telemetry::env_tracing_enabled),
+        );
         Ok(PlacementEngine {
             cluster_fp: fingerprint::cluster_fingerprint(&cluster),
             topo_fp: fingerprint::topology_fingerprint(&cluster.effective_topology()),
@@ -306,7 +355,7 @@ impl PlacementEngineBuilder {
             opt: self.opt,
             sim: self.sim,
             registry: self.registry,
-            observers: self.observers,
+            tracer: Arc::new(tracer),
             cache: ShardedLru::new(self.cache_shards, self.cache_capacity),
         })
     }
@@ -327,7 +376,7 @@ pub struct PlacementEngine {
     opt: OptConfig,
     sim: SimConfig,
     registry: PlacerRegistry,
-    observers: Vec<Arc<dyn PlacementObserver>>,
+    tracer: Arc<Tracer>,
     cache: ShardedLru<CacheKey, Arc<PlacementResponse>>,
     cluster_fp: u64,
     /// Fingerprint of the engine cluster's own topology, to recognize
@@ -376,10 +425,44 @@ impl PlacementEngine {
         self.cache.clear();
     }
 
-    fn notify(&self, stage: Stage, stats: &StageStats) {
-        for obs in &self.observers {
-            obs.on_stage(stage, stats);
+    /// The engine's tracer: mint/propagate trace ids, toggle span
+    /// collection, drain collected spans for export.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// The trace id this request's telemetry books under: the caller's
+    /// (when stamped non-zero), else freshly minted. `None` when the
+    /// tracer is not live — nothing is recorded at all.
+    fn trace_for(&self, req: &PlacementRequest) -> Option<TraceId> {
+        if !self.tracer.is_live() {
+            return None;
         }
+        Some(match req.trace {
+            Some(t) if t != 0 => TraceId(t),
+            _ => self.tracer.mint_trace(),
+        })
+    }
+
+    /// Book an externally timed span (`t0` = when the interval began):
+    /// cache hits measured around the lock-free lookup, round
+    /// simulations in the iterative loop. No-op when `trace` is `None`.
+    #[allow(clippy::too_many_arguments)]
+    fn record_interval(
+        &self,
+        trace: Option<TraceId>,
+        parent: Option<SpanId>,
+        name: &'static str,
+        placer: &str,
+        t0: Instant,
+        ops_in: usize,
+        ops_out: usize,
+    ) {
+        let Some(trace) = trace else { return };
+        let end_s = self.tracer.now_s();
+        let start_s = end_s - t0.elapsed().as_secs_f64();
+        self.tracer
+            .record_at(trace, parent, name, placer, start_s, end_s, ops_in, ops_out);
     }
 
     /// The optimizer config a request resolves to. `comm` is the
@@ -445,19 +528,6 @@ impl PlacementEngine {
         })
     }
 
-    fn notify_cache_hit(&self, req: &PlacementRequest, hit: &PlacementResponse, t0: Instant) {
-        let ops = hit.placement.device_of.len();
-        self.notify(
-            Stage::CacheHit,
-            &StageStats {
-                placer: req.placer.clone(),
-                duration: t0.elapsed().as_secs_f64(),
-                ops_in: ops,
-                ops_out: ops,
-            },
-        );
-    }
-
     /// Probe the cache without placing on a miss: `Ok(Some)` is exactly
     /// the response [`Self::place`] would return (and counts a hit +
     /// reports a [`Stage::CacheHit`]); `Ok(None)` counts nothing — the
@@ -469,7 +539,16 @@ impl PlacementEngine {
         let t0 = Instant::now();
         match self.cache.peek(keyed.key.shard_fp(), &keyed.key) {
             Some(hit) => {
-                self.notify_cache_hit(req, &hit, t0);
+                let ops = hit.placement.device_of.len();
+                self.record_interval(
+                    self.trace_for(req),
+                    None,
+                    Stage::CacheHit.name(),
+                    &req.placer,
+                    t0,
+                    ops,
+                    ops,
+                );
                 Ok(Some(hit))
             }
             None => Ok(None),
@@ -487,9 +566,19 @@ impl PlacementEngine {
             ocfg,
             resolved,
         } = keyed;
+        let mut root = self.tracer.request_span(req.trace, &req.placer);
         let t0 = Instant::now();
         if let Some(hit) = self.cache.get(key.shard_fp(), &key) {
-            self.notify_cache_hit(req, &hit, t0);
+            let ops = hit.placement.device_of.len();
+            self.record_interval(
+                root.trace_id(),
+                root.span_id(),
+                Stage::CacheHit.name(),
+                &req.placer,
+                t0,
+                ops,
+                ops,
+            );
             return Ok(hit);
         }
         let cluster: Cow<'_, Cluster> = match override_t {
@@ -498,67 +587,52 @@ impl PlacementEngine {
         };
 
         // Optimize (§3.1).
-        let t0 = Instant::now();
-        let opt = optimizer::optimize(&req.graph, &ocfg);
-        self.notify(
-            Stage::Optimize,
-            &StageStats {
-                placer: req.placer.clone(),
-                duration: t0.elapsed().as_secs_f64(),
-                ops_in: opt.stats.original_ops,
-                ops_out: opt.stats.placed_ops,
-            },
-        );
+        let opt = {
+            let mut sp = self.tracer.child(&root, Stage::Optimize.name(), &req.placer);
+            let opt = optimizer::optimize(&req.graph, &ocfg);
+            sp.annotate(opt.stats.original_ops, opt.stats.placed_ops);
+            opt
+        };
 
         // Place.
-        let t0 = Instant::now();
-        let meta = resolved.placer.place(&opt.graph, &cluster)?;
-        self.notify(
-            Stage::Place,
-            &StageStats {
-                placer: req.placer.clone(),
-                duration: t0.elapsed().as_secs_f64(),
-                ops_in: opt.stats.placed_ops,
-                ops_out: meta.device_of.len(),
-            },
-        );
+        let meta = {
+            let mut sp = self.tracer.child(&root, Stage::Place.name(), &req.placer);
+            match resolved.placer.place(&opt.graph, &cluster) {
+                Ok(meta) => {
+                    sp.annotate(opt.stats.placed_ops, meta.device_of.len());
+                    meta
+                }
+                Err(e) => {
+                    sp.cancel();
+                    return Err(e);
+                }
+            }
+        };
 
         // Expand onto the original graph.
-        let t0 = Instant::now();
-        let full = optimizer::expand_placement(&req.graph, &opt, &meta.device_of);
-        let placement = Placement {
-            device_of: full,
-            ..meta
+        let placement = {
+            let mut sp = self.tracer.child(&root, Stage::Expand.name(), &req.placer);
+            let full = optimizer::expand_placement(&req.graph, &opt, &meta.device_of);
+            let placement = Placement {
+                device_of: full,
+                ..meta
+            };
+            sp.annotate(opt.stats.placed_ops, placement.device_of.len());
+            placement
         };
-        self.notify(
-            Stage::Expand,
-            &StageStats {
-                placer: req.placer.clone(),
-                duration: t0.elapsed().as_secs_f64(),
-                ops_in: opt.stats.placed_ops,
-                ops_out: placement.device_of.len(),
-            },
-        );
 
         // Simulate (optional).
         let sim = if req.simulate {
-            let t0 = Instant::now();
+            let mut sp = self.tracer.child(&root, Stage::Simulate.name(), &req.placer);
             let s = sim::simulate(&req.graph, &cluster, &placement.device_of, self.sim);
-            self.notify(
-                Stage::Simulate,
-                &StageStats {
-                    placer: req.placer.clone(),
-                    duration: t0.elapsed().as_secs_f64(),
-                    ops_in: placement.device_of.len(),
-                    ops_out: placement.device_of.len(),
-                },
-            );
+            sp.annotate(placement.device_of.len(), placement.device_of.len());
             Some(s)
         } else {
             None
         };
 
         let devices_used = placement.devices_used();
+        root.annotate(opt.stats.original_ops, placement.device_of.len());
         let resp = Arc::new(PlacementResponse {
             placer: placement.algorithm.clone(),
             placement,
@@ -654,11 +728,15 @@ impl PlacementEngine {
                 rounds: Vec::new(),
             });
         }
-        let base = if req.simulate {
+        // One trace id covers the whole loop: the base placement, every
+        // candidate round, and the round simulations all book under it.
+        let trace = self.trace_for(req);
+        let base = if req.simulate && req.trace == trace.map(|t| t.0) {
             self.place(req)?
         } else {
             let mut r = req.clone();
             r.simulate = true;
+            r.trace = trace.map(|t| t.0).or(req.trace);
             self.place(&r)?
         };
         let base_sim = base.sim.as_ref().expect("iterative base always simulates");
@@ -714,6 +792,7 @@ impl PlacementEngine {
                 let mut r = req.clone();
                 r.topology = Some(adjusted.clone());
                 r.simulate = false;
+                r.trace = trace.map(|t| t.0).or(req.trace);
                 self.place(&r)?
             };
             let t0 = Instant::now();
@@ -723,14 +802,14 @@ impl PlacementEngine {
                 &cand.placement.device_of,
                 self.sim,
             );
-            self.notify(
-                Stage::Simulate,
-                &StageStats {
-                    placer: req.placer.clone(),
-                    duration: t0.elapsed().as_secs_f64(),
-                    ops_in: cand.placement.device_of.len(),
-                    ops_out: cand.placement.device_of.len(),
-                },
+            self.record_interval(
+                trace,
+                None,
+                Stage::Simulate.name(),
+                &req.placer,
+                t0,
+                cand.placement.device_of.len(),
+                cand.placement.device_of.len(),
             );
             // Best-of-rounds: any strictly better round is adopted; the
             // min_improvement margin only decides whether iterating

@@ -1,6 +1,15 @@
 //! Stage observers: per-stage timing hooks for instrumenting the engine
 //! (metrics export, tracing, progress display).
+//!
+//! Since the telemetry layer landed, observers are a *compatibility
+//! adapter*: the engine itself emits [`crate::telemetry::tracer`] spans,
+//! and [`ObserverBridge`] replays each closed stage span as the
+//! equivalent [`PlacementObserver::on_stage`] callback. Existing
+//! observers see exactly the events they always did (one per pipeline
+//! stage, in completion order, plus cache hits), whether or not span
+//! collection is enabled.
 
+use crate::telemetry::tracer::{SpanListener, SpanRecord};
 use std::sync::{Arc, Mutex};
 
 /// A pipeline stage the engine reports on.
@@ -50,6 +59,42 @@ pub struct StageStats {
 /// across threads and every thread reports through the same observers.
 pub trait PlacementObserver: Send + Sync {
     fn on_stage(&self, stage: Stage, stats: &StageStats);
+}
+
+/// Replays closed telemetry spans as legacy observer callbacks. Spans
+/// that do not correspond to a pipeline stage (the request envelope,
+/// service queue waits) are filtered out, so observers keep their
+/// pre-telemetry event stream.
+pub(crate) struct ObserverBridge {
+    observers: Vec<Arc<dyn PlacementObserver>>,
+}
+
+impl ObserverBridge {
+    pub(crate) fn new(observers: Vec<Arc<dyn PlacementObserver>>) -> ObserverBridge {
+        ObserverBridge { observers }
+    }
+}
+
+impl SpanListener for ObserverBridge {
+    fn on_close(&self, record: &SpanRecord) {
+        let stage = match record.name {
+            "optimize" => Stage::Optimize,
+            "place" => Stage::Place,
+            "expand" => Stage::Expand,
+            "simulate" => Stage::Simulate,
+            "cache_hit" => Stage::CacheHit,
+            _ => return,
+        };
+        let stats = StageStats {
+            placer: record.detail.clone(),
+            duration: record.end_s - record.start_s,
+            ops_in: record.ops_in,
+            ops_out: record.ops_out,
+        };
+        for obs in &self.observers {
+            obs.on_stage(stage, &stats);
+        }
+    }
 }
 
 /// Observer that records every event — introspection and tests.

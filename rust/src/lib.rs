@@ -76,6 +76,11 @@
 //! * [`serve`] — placement as a service: `PlacementService` (bounded
 //!   queue, worker pool, deadlines, micro-batching), incremental delta
 //!   placement over cone fingerprints, and `ServiceMetrics`.
+//! * [`telemetry`] — end-to-end observability over the engine and the
+//!   service: per-request trace IDs and pipeline spans (`Tracer`),
+//!   Chrome/Perfetto trace-event export of spans and simulated
+//!   schedules, and Prometheus text exposition with a minimal HTTP
+//!   listener.
 //! * [`runtime`] — PJRT client + AOT HLO artifact registry (stubbed
 //!   offline; see `runtime::xla`).
 //! * [`exec`] — real multi-device executor + trainer (end-to-end example).
@@ -98,6 +103,7 @@ pub mod profile;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 pub mod topology;
 pub mod util;
 

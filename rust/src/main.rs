@@ -8,20 +8,27 @@
 //! baechi calibrate --source synthetic --topology two-tier:2 --out calib.json
 //! baechi e2e     --steps 200 --devices 2 [--placer m-sct]
 //! baechi serve-bench --model gnmt:16:8 --requests 500 --mutation-rate 0.3
+//! baechi serve-bench --trace serve.json --metrics-addr 127.0.0.1:9184
+//! baechi trace   --model linreg --placer m-etf --out trace.json
 //! baechi info    --model inception:32
 //! ```
 //!
 //! Every command routes through the [`baechi::engine::PlacementEngine`]:
 //! `place` issues one request, `compare` serves a batch across placers
-//! (fanned over threads, with typed per-row error handling).
+//! (fanned over threads, with typed per-row error handling). `trace`
+//! (and `--trace` on `place`/`serve-bench`) exports a Chrome
+//! trace-event timeline of the run — pipeline spans plus the simulated
+//! per-device/per-link schedule — loadable in `chrome://tracing` or
+//! Perfetto.
 
 use baechi::coordinator::{
-    engine_for, run, run_serve_bench, BaechiConfig, CalibrationSpec, PlacerKind, ServeBenchOpts,
-    TopologySpec,
+    engine_for, run, run_serve_bench, run_traced, BaechiConfig, CalibrationSpec, PlacerKind,
+    ServeBenchOpts, TopologySpec,
 };
 use baechi::engine::PlacementRequest;
 use baechi::models::Benchmark;
 use baechi::util::cli::{Args, OptSpec};
+use baechi::util::json::Json;
 use baechi::util::table::{fmt_bytes, fmt_secs, Table};
 use baechi::BaechiError;
 
@@ -151,6 +158,19 @@ fn specs() -> Vec<OptSpec> {
             default: None,
         },
         OptSpec {
+            name: "trace",
+            help: "place/serve-bench: write a Chrome trace-event JSON timeline to this path",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
+            name: "metrics-addr",
+            help: "serve-bench: serve Prometheus metrics over HTTP at this address \
+                   (e.g. 127.0.0.1:9184) for the duration of the run",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
             name: "json",
             help: "emit the report as JSON",
             takes_value: false,
@@ -185,9 +205,10 @@ fn real_main() -> baechi::Result<()> {
         "calibrate" => cmd_calibrate(&args),
         "e2e" => cmd_e2e(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         other => Err(BaechiError::invalid(format!(
-            "unknown command '{other}' (place|compare|calibrate|e2e|serve-bench|info)\n{}",
+            "unknown command '{other}' (place|compare|calibrate|e2e|serve-bench|trace|info)\n{}",
             args.usage()
         ))),
     }
@@ -210,9 +231,27 @@ fn config_from(args: &Args) -> baechi::Result<BaechiConfig> {
     Ok(cfg)
 }
 
+fn write_trace(path: &str, trace: &Json) -> baechi::Result<()> {
+    std::fs::write(path, trace.pretty())
+        .map_err(|e| BaechiError::io(format!("writing {path}: {e}")))?;
+    let events = match trace.get("traceEvents") {
+        Some(Json::Arr(a)) => a.len(),
+        _ => 0,
+    };
+    eprintln!("wrote {path} ({events} trace events; load in chrome://tracing or Perfetto)");
+    Ok(())
+}
+
 fn cmd_place(args: &Args) -> baechi::Result<()> {
     let cfg = config_from(args)?;
-    let report = run(&cfg)?;
+    let report = match args.get("trace") {
+        Some(path) => {
+            let (report, trace) = run_traced(&cfg)?;
+            write_trace(&path, &trace)?;
+            report
+        }
+        None => run(&cfg)?,
+    };
     if let Some(path) = args.get("dot") {
         // Only an explicit --dot pays for rebuilding the cluster (the
         // topology's link paths) and the benchmark graph.
@@ -479,9 +518,14 @@ fn cmd_serve_bench(args: &Args) -> baechi::Result<()> {
         cache_shards: args.get_usize("cache-shards", 8)?,
         workers: args.get_usize("serve-workers", 2)?,
         incremental: !args.has("no-incremental"),
+        trace: args.get("trace").is_some(),
+        metrics_addr: args.get("metrics-addr"),
         ..ServeBenchOpts::default()
     };
     let report = run_serve_bench(&cfg, &opts)?;
+    if let (Some(path), Some(trace)) = (args.get("trace"), &report.trace) {
+        write_trace(&path, trace)?;
+    }
     if args.has("json") {
         println!("{}", report.to_json().pretty());
         return Ok(());
@@ -528,6 +572,17 @@ fn cmd_serve_bench(args: &Args) -> baechi::Result<()> {
     t.row_strs(&["errors", &m.errors.to_string()]);
     t.row_strs(&["engine cache evictions", &m.engine_cache.evictions.to_string()]);
     t.print();
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> baechi::Result<()> {
+    let cfg = config_from(args)?;
+    let (report, trace) = run_traced(&cfg)?;
+    let path = args.get_or("out", "trace.json");
+    write_trace(&path, &trace)?;
+    if args.has("json") {
+        println!("{}", report.to_json().pretty());
+    }
     Ok(())
 }
 

@@ -15,22 +15,28 @@ use std::time::Instant;
 /// ring-buffer style, so percentiles describe the recent window.
 const LATENCY_WINDOW: usize = 4096;
 
+/// Seconds of history behind [`ServiceMetrics::recent_qps`].
+pub const RECENT_QPS_WINDOW_S: f64 = 30.0;
+
+/// Bounded ring of `(latency, recorded_at)` samples; `recorded_at` is
+/// seconds since service start, which makes the reservoir double as the
+/// completion-time record behind `recent_qps`.
 #[derive(Debug, Default)]
 struct Reservoir {
-    samples: Vec<f64>,
+    samples: Vec<(f64, f64)>,
     next: usize,
     count: u64,
     sum: f64,
 }
 
 impl Reservoir {
-    fn record(&mut self, v: f64) {
+    fn record(&mut self, v: f64, at_s: f64) {
         self.count += 1;
         self.sum += v;
         if self.samples.len() < LATENCY_WINDOW {
-            self.samples.push(v);
+            self.samples.push((v, at_s));
         } else {
-            self.samples[self.next] = v;
+            self.samples[self.next] = (v, at_s);
             self.next = (self.next + 1) % LATENCY_WINDOW;
         }
     }
@@ -47,10 +53,17 @@ impl Reservoir {
         if self.samples.is_empty() {
             return 0.0;
         }
-        let mut v = self.samples.clone();
+        let mut v: Vec<f64> = self.samples.iter().map(|&(l, _)| l).collect();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
         let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
         v[idx.min(v.len() - 1)]
+    }
+
+    /// Samples recorded at or after `since_s`. Bounded by the window
+    /// size, so this under-counts (never over-counts) when more than
+    /// [`LATENCY_WINDOW`] requests completed inside the interval.
+    fn recorded_since(&self, since_s: f64) -> usize {
+        self.samples.iter().filter(|&&(_, at)| at >= since_s).count()
     }
 }
 
@@ -91,12 +104,13 @@ impl MetricsInner {
     }
 
     pub fn record_latency(&self, mode: ServeMode, latency_s: f64) {
-        self.lat_all.lock().unwrap().record(latency_s);
+        let at_s = self.start.elapsed().as_secs_f64();
+        self.lat_all.lock().unwrap().record(latency_s, at_s);
         match mode {
             ServeMode::Incremental { .. } => {
-                self.lat_incremental.lock().unwrap().record(latency_s)
+                self.lat_incremental.lock().unwrap().record(latency_s, at_s)
             }
-            ServeMode::Full => self.lat_full.lock().unwrap().record(latency_s),
+            ServeMode::Full => self.lat_full.lock().unwrap().record(latency_s, at_s),
             ServeMode::CacheHit => {}
         }
     }
@@ -105,6 +119,12 @@ impl MetricsInner {
         let all = self.lat_all.lock().unwrap();
         let uptime_s = self.start.elapsed().as_secs_f64();
         let completed = self.completed.load(Ordering::Relaxed);
+        // Recent throughput from reservoir timestamps: unlike lifetime
+        // qps this doesn't decay toward zero on a long-idle service.
+        // The window can hold at most LATENCY_WINDOW samples, so a
+        // burst past that rate yields a lower bound.
+        let window_s = RECENT_QPS_WINDOW_S.min(uptime_s).max(1e-9);
+        let recent = all.recorded_since(uptime_s - window_s);
         ServiceMetrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
@@ -117,6 +137,7 @@ impl MetricsInner {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             uptime_s,
             qps: completed as f64 / uptime_s.max(1e-9),
+            recent_qps: recent as f64 / window_s,
             mean_latency_s: all.mean(),
             p50_latency_s: all.percentile(50.0),
             p99_latency_s: all.percentile(99.0),
@@ -152,8 +173,13 @@ pub struct ServiceMetrics {
     pub batched_requests: u64,
     /// Seconds since the service started.
     pub uptime_s: f64,
-    /// Completed requests per second of uptime.
+    /// Completed requests per second of uptime (lifetime average —
+    /// decays toward zero while the service idles).
     pub qps: f64,
+    /// Completed requests per second over the trailing
+    /// [`RECENT_QPS_WINDOW_S`]-second window (a lower bound when the
+    /// burst outruns the latency reservoir's capacity).
+    pub recent_qps: f64,
     /// Mean submit-to-completion latency, seconds (lifetime).
     pub mean_latency_s: f64,
     /// Median latency over the recent window, seconds.
@@ -188,6 +214,7 @@ impl ServiceMetrics {
             .set("batched_requests", self.batched_requests)
             .set("uptime_s", self.uptime_s)
             .set("qps", self.qps)
+            .set("recent_qps", self.recent_qps)
             .set("mean_latency_s", self.mean_latency_s)
             .set("p50_latency_s", self.p50_latency_s)
             .set("p99_latency_s", self.p99_latency_s)
@@ -208,7 +235,7 @@ mod tests {
     fn reservoir_percentiles_and_mean() {
         let mut r = Reservoir::default();
         for i in 1..=100 {
-            r.record(i as f64);
+            r.record(i as f64, 0.0);
         }
         assert!((r.mean() - 50.5).abs() < 1e-9);
         assert!((r.percentile(50.0) - 50.0).abs() <= 1.0);
@@ -220,13 +247,24 @@ mod tests {
     fn reservoir_window_overwrites_oldest() {
         let mut r = Reservoir::default();
         for _ in 0..LATENCY_WINDOW {
-            r.record(1.0);
+            r.record(1.0, 0.0);
         }
         for _ in 0..LATENCY_WINDOW {
-            r.record(9.0);
+            r.record(9.0, 1.0);
         }
         assert_eq!(r.percentile(50.0), 9.0, "old window fully displaced");
         assert_eq!(r.count, 2 * LATENCY_WINDOW as u64);
+    }
+
+    #[test]
+    fn reservoir_counts_recent_samples_by_timestamp() {
+        let mut r = Reservoir::default();
+        for i in 0..10 {
+            r.record(0.01, i as f64);
+        }
+        assert_eq!(r.recorded_since(0.0), 10);
+        assert_eq!(r.recorded_since(5.0), 5);
+        assert_eq!(r.recorded_since(9.5), 0);
     }
 
     #[test]
@@ -245,6 +283,134 @@ mod tests {
         assert!(s.mean_latency_s > 0.0);
         let j = s.to_json();
         assert!(j.get("qps").is_some());
+        assert!(j.get("recent_qps").is_some());
         assert!(j.get("p99_latency_s").is_some());
+    }
+
+    #[test]
+    fn recent_qps_counts_window_samples_and_ignores_decay() {
+        let m = MetricsInner::new();
+        // 3 fresh completions: all inside the 30 s window, and the
+        // service has been up well under 30 s, so recent_qps divides
+        // by the (short) uptime — it must come out positive and at
+        // least as large as the lifetime figure.
+        for _ in 0..3 {
+            m.record_latency(ServeMode::Full, 0.001);
+        }
+        m.completed.store(3, Ordering::Relaxed);
+        let s = m.snapshot(CacheStats::default());
+        assert!(s.recent_qps > 0.0);
+        assert!(s.recent_qps >= s.qps * 0.99, "{} vs {}", s.recent_qps, s.qps);
+    }
+
+    #[test]
+    fn cache_hit_latency_lands_in_all_but_no_mode_reservoir() {
+        let m = MetricsInner::new();
+        m.record_latency(ServeMode::CacheHit, 0.002);
+        assert_eq!(m.lat_all.lock().unwrap().count, 1);
+        assert_eq!(m.lat_incremental.lock().unwrap().count, 0);
+        assert_eq!(m.lat_full.lock().unwrap().count, 0);
+        let s = m.snapshot(CacheStats::default());
+        assert!((s.mean_latency_s - 0.002).abs() < 1e-12);
+        assert_eq!(s.incremental_mean_latency_s, 0.0);
+        assert_eq!(s.full_mean_latency_s, 0.0);
+    }
+
+    #[test]
+    fn concurrent_hammer_keeps_counters_consistent_and_snapshot_alive() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+
+        let m = Arc::new(MetricsInner::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        const WRITERS: usize = 4;
+        const ITERS: usize = 1500;
+
+        std::thread::scope(|s| {
+            let writers: Vec<_> = (0..WRITERS)
+                .map(|w| {
+                    let m = Arc::clone(&m);
+                    s.spawn(move || {
+                        for i in 0..ITERS {
+                            // Protocol: `completed` is bumped BEFORE
+                            // the per-mode counter, both with Release,
+                            // so any reader that observes a mode
+                            // increment (via Acquire) also observes
+                            // its completion — `completed ≥ hits +
+                            // incremental + full` holds at every
+                            // instant.
+                            m.submitted.fetch_add(1, Ordering::Release);
+                            m.completed.fetch_add(1, Ordering::Release);
+                            let mode = match (w + i) % 3 {
+                                0 => {
+                                    m.cache_hits.fetch_add(1, Ordering::Release);
+                                    ServeMode::CacheHit
+                                }
+                                1 => {
+                                    m.incremental.fetch_add(1, Ordering::Release);
+                                    ServeMode::Incremental { dirty_ops: 1 }
+                                }
+                                _ => {
+                                    m.full.fetch_add(1, Ordering::Release);
+                                    ServeMode::Full
+                                }
+                            };
+                            m.record_latency(mode, 1e-4 * (i % 7) as f64);
+                        }
+                    })
+                })
+                .collect();
+            let reader = {
+                let m = Arc::clone(&m);
+                let stop = Arc::clone(&stop);
+                s.spawn(move || {
+                    let mut snapshots = 0u64;
+                    // Do-while: at least one check runs even if the
+                    // writers win every race to the finish line.
+                    loop {
+                        // Load the mode counters first (Acquire), then
+                        // completed: see the writer protocol above.
+                        let hits = m.cache_hits.load(Ordering::Acquire);
+                        let inc = m.incremental.load(Ordering::Acquire);
+                        let full = m.full.load(Ordering::Acquire);
+                        let completed = m.completed.load(Ordering::Acquire);
+                        assert!(
+                            completed >= hits + inc + full,
+                            "completed {completed} < modes {hits}+{inc}+{full}"
+                        );
+                        let snap = m.snapshot(CacheStats::default());
+                        assert!(snap.completed <= (WRITERS * ITERS) as u64);
+                        assert!(snap.mean_latency_s >= 0.0);
+                        assert!(snap.p99_latency_s >= 0.0);
+                        assert!(snap.qps >= 0.0 && snap.recent_qps >= 0.0);
+                        snapshots += 1;
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
+                    snapshots
+                })
+            };
+            for w in writers {
+                w.join().unwrap();
+            }
+            stop.store(true, Ordering::Relaxed);
+            let snapshots = reader.join().unwrap();
+            assert!(snapshots > 0, "reader must have observed the writers");
+        });
+
+        // Quiesced: the counters add up exactly.
+        let total = (WRITERS * ITERS) as u64;
+        assert_eq!(m.completed.load(Ordering::Relaxed), total);
+        assert_eq!(m.submitted.load(Ordering::Relaxed), total);
+        assert_eq!(
+            m.cache_hits.load(Ordering::Relaxed)
+                + m.incremental.load(Ordering::Relaxed)
+                + m.full.load(Ordering::Relaxed),
+            total
+        );
+        assert_eq!(m.lat_all.lock().unwrap().count, total);
+        let final_snap = m.snapshot(CacheStats::default());
+        assert_eq!(final_snap.completed, total);
     }
 }

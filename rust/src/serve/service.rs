@@ -14,11 +14,19 @@
 //!    through the engine's `place_batch` ([`ServeMode::Full`]).
 //! 3. [`Ticket::wait`] returns the [`ServeOutcome`] (response + mode +
 //!    measured latency).
+//!
+//! When the engine's tracer is live, intake stamps a fresh trace id on
+//! each request (unless the caller stamped one), workers book the
+//! queue wait as a `queued` span under that trace, and every engine
+//! stage span carries it — so an exported timeline shows one request
+//! end to end. [`PlacementService::metrics_text`] renders the whole
+//! metrics surface in Prometheus text format.
 
 use super::incremental::{try_incremental, DeltaBase, IncrementalConfig, ServeMode};
 use super::metrics::{MetricsInner, ServiceMetrics};
 use crate::engine::{fingerprint, PlacementEngine, PlacementRequest, PlacementResponse};
 use crate::error::BaechiError;
+use crate::telemetry::tracer::TraceId;
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
@@ -177,6 +185,16 @@ impl PlacementService {
             .snapshot(self.shared.engine.cache_stats())
     }
 
+    /// Prometheus text-format (0.0.4) exposition over the service
+    /// metrics, the engine's cache counters, and the tracer's span
+    /// counters — the body served by [`crate::telemetry::MetricsServer`].
+    pub fn metrics_text(&self) -> String {
+        crate::telemetry::prometheus::render_metrics(
+            &self.metrics(),
+            &self.shared.engine.tracer().stats(),
+        )
+    }
+
     /// Enqueue a request under the configured default deadline, blocking
     /// while the queue is full (backpressure).
     pub fn submit(&self, req: PlacementRequest) -> crate::Result<Ticket> {
@@ -190,7 +208,7 @@ impl PlacementService {
         req: PlacementRequest,
         deadline: Option<Duration>,
     ) -> crate::Result<Ticket> {
-        let (job, ticket) = Self::job(req, deadline);
+        let (job, ticket) = self.job(req, deadline);
         self.sender()?
             .send(job)
             .map_err(|_| BaechiError::runtime("placement service is shut down"))?;
@@ -201,7 +219,7 @@ impl PlacementService {
     /// Non-blocking enqueue: [`BaechiError::Saturated`] when the queue is
     /// full, so callers can shed load instead of stalling.
     pub fn try_submit(&self, req: PlacementRequest) -> crate::Result<Ticket> {
-        let (job, ticket) = Self::job(req, self.shared.cfg.default_deadline);
+        let (job, ticket) = self.job(req, self.shared.cfg.default_deadline);
         match self.sender()?.try_send(job) {
             Ok(()) => {
                 self.shared.metrics.submitted.fetch_add(1, Relaxed);
@@ -233,7 +251,18 @@ impl PlacementService {
         }
     }
 
-    fn job(req: PlacementRequest, deadline: Option<Duration>) -> (Job, Ticket) {
+    fn job(&self, mut req: PlacementRequest, deadline: Option<Duration>) -> (Job, Ticket) {
+        // Trace intake: when telemetry is watching, stamp a fresh trace
+        // id so the queue wait and every engine stage of this request
+        // book under one id. A caller-stamped id is left alone.
+        if req.trace.is_none() {
+            req.trace = self
+                .shared
+                .engine
+                .tracer()
+                .active_trace_id()
+                .map(|t| t.0);
+        }
         let (tx, rx) = std::sync::mpsc::channel();
         let now = Instant::now();
         (
@@ -304,6 +333,7 @@ fn serve_batch(shared: &Shared, batch: Vec<Job>) {
     // requests placed against the same target share a `place_batch` call.
     let mut fulls: BTreeMap<u64, Vec<Job>> = BTreeMap::new();
     for job in batch {
+        record_queue_wait(shared, &job);
         if let Some(d) = job.deadline {
             if Instant::now() >= d {
                 m.deadline_misses.fetch_add(1, Relaxed);
@@ -373,6 +403,31 @@ fn serve_batch(shared: &Shared, batch: Vec<Job>) {
             finish(shared, job, result, ServeMode::Full);
         }
     }
+}
+
+/// Book the time this job spent in the intake queue as a `queued` span
+/// on its trace (a no-op unless intake stamped one — i.e. unless the
+/// tracer was live at submission).
+fn record_queue_wait(shared: &Shared, job: &Job) {
+    let Some(trace) = job.req.trace.filter(|&t| t != 0) else {
+        return;
+    };
+    let tracer = shared.engine.tracer();
+    if !tracer.is_live() {
+        return;
+    }
+    let waited = job.submitted.elapsed().as_secs_f64();
+    let end_s = tracer.now_s();
+    tracer.record_at(
+        TraceId(trace),
+        None,
+        "queued",
+        &job.req.placer,
+        end_s - waited,
+        end_s,
+        0,
+        0,
+    );
 }
 
 fn finish(

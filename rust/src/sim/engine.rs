@@ -290,6 +290,58 @@ impl ContentionReport {
     }
 }
 
+/// One op's execution interval on a device, as replayed by the
+/// simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpSpan {
+    pub node: NodeId,
+    pub device: usize,
+    /// Seconds into the simulated step.
+    pub start: f64,
+    pub end: f64,
+}
+
+/// One tensor transfer's in-flight interval (from the moment it holds
+/// links / joins the flow network until delivery at the destination).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferSpan {
+    /// Producer op of the transferred tensor.
+    pub node: NodeId,
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+    /// Topology links on the transfer's path (empty for same-device).
+    pub links: Vec<usize>,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// The full timeline of one simulated step: what ran where, when, and
+/// what moved over which links. Recorded unconditionally (it is a
+/// by-product of the event loop, not a second schedule computation) and
+/// exported to Chrome trace-event JSON by
+/// [`crate::telemetry::chrome`]. For a non-OOM step [`max_end`] equals
+/// [`SimResult::makespan`] bit-for-bit: every event that advances the
+/// makespan closes a span at the same instant.
+///
+/// [`max_end`]: SimSchedule::max_end
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimSchedule {
+    pub ops: Vec<OpSpan>,
+    pub transfers: Vec<TransferSpan>,
+}
+
+impl SimSchedule {
+    /// Latest interval end across ops and transfers (0 when empty).
+    pub fn max_end(&self) -> f64 {
+        let op_end = self.ops.iter().map(|s| s.end).fold(0.0, f64::max);
+        self.transfers
+            .iter()
+            .map(|s| s.end)
+            .fold(op_end, f64::max)
+    }
+}
+
 /// Simulation outcome.
 #[derive(Debug, Clone)]
 pub struct SimResult {
@@ -304,6 +356,10 @@ pub struct SimResult {
     pub events: usize,
     /// Per-link contention observations (feeds re-placement).
     pub contention: ContentionReport,
+    /// Executed timeline (per-device op intervals, per-link transfer
+    /// intervals); an OOM-truncated step keeps what ran before the
+    /// failure.
+    pub schedule: SimSchedule,
 }
 
 impl SimResult {
@@ -320,6 +376,8 @@ struct Transfer {
     bytes: u64,
     /// When the producer finished and the transfer joined the queue.
     enqueued_at: f64,
+    /// When the transfer actually began (valid once `started`).
+    started_at: f64,
     started: bool,
     done: bool,
 }
@@ -398,6 +456,7 @@ pub fn simulate(
         busy: vec![0.0; n],
         events: 0,
         contention: ContentionReport::new(topo.n_links()),
+        schedule: SimSchedule::default(),
     };
     let finish_with = |mut r: SimResult, mem: &[DeviceMem], oom: Option<OomError>| -> SimResult {
         r.peak_memory = mem.iter().map(|m| m.peak).collect();
@@ -468,6 +527,7 @@ pub fn simulate(
                     if engines_free && compute_ok {
                         pend[d].swap_remove(i);
                         transfers[idx].started = true;
+                        transfers[idx].started_at = now;
                         let dt = topo.time(src, dst, transfers[idx].bytes);
                         let waited = now - transfers[idx].enqueued_at;
                         if cluster.sequential_comm {
@@ -570,6 +630,14 @@ pub fn simulate(
             Event::ComputeDone { dev, node } => {
                 compute_idle[dev] = true;
                 let nd = graph.node(node);
+                // Timeline: the op ran [t - dt, t] (dt recomputed the
+                // same way it was scheduled, so the interval is exact).
+                result.schedule.ops.push(OpSpan {
+                    node,
+                    device: dev,
+                    start: t - nd.compute / cluster.devices[dev].speed,
+                    end: t,
+                });
                 let tmp = nd.mem.temporary_training();
                 if tmp > 0 {
                     mem[dev].free_temp(tmp);
@@ -615,6 +683,7 @@ pub fn simulate(
                         dst: d,
                         bytes,
                         enqueued_at: t,
+                        started_at: t,
                         started: false,
                         done: false,
                     });
@@ -658,6 +727,17 @@ pub fn simulate(
             Event::TransferDone { idx } => {
                 let tr = transfers[idx].clone();
                 transfers[idx].done = true;
+                // Timeline: in flight from link acquisition (or flow
+                // admission) until delivery at the destination.
+                result.schedule.transfers.push(TransferSpan {
+                    node: tr.node,
+                    src: tr.src,
+                    dst: tr.dst,
+                    bytes: tr.bytes,
+                    links: topo.path(tr.src, tr.dst).to_vec(),
+                    start: tr.started_at,
+                    end: t,
+                });
                 if cluster.sequential_comm {
                     links.release(topo.path(tr.src, tr.dst));
                 }
@@ -1430,6 +1510,46 @@ mod tests {
         assert!(strict.contention.drop_warnings > 0);
         // Accounting never alters the schedule.
         assert_eq!(relaxed.makespan.to_bits(), strict.makespan.to_bits());
+    }
+
+    #[test]
+    fn schedule_records_ops_and_transfers_and_reconstructs_makespan() {
+        let g = chain3();
+        let cluster = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap());
+        let r = simulate(&g, &cluster, &place_all(&g, &[0, 1, 2]), SimConfig::default());
+        assert!(r.ok());
+        let sched = &r.schedule;
+        assert_eq!(sched.ops.len(), 3, "one span per executed op");
+        assert_eq!(sched.transfers.len(), r.transfers);
+        // a on dev 0 over [0, 1]; the a→b transfer holds its 2-link
+        // path over [1, 11]; b on dev 1 over [11, 13]; etc.
+        let a = &sched.ops[0];
+        assert_eq!(a.device, 0);
+        assert!((a.start - 0.0).abs() < 1e-12 && (a.end - 1.0).abs() < 1e-12);
+        let t0 = &sched.transfers[0];
+        assert_eq!((t0.src, t0.dst, t0.bytes), (0, 1, 10));
+        assert_eq!(t0.links.len(), 2);
+        assert!((t0.start - 1.0).abs() < 1e-12 && (t0.end - 11.0).abs() < 1e-12);
+        // The timeline reconstructs the makespan exactly.
+        assert_eq!(sched.max_end().to_bits(), r.makespan.to_bits());
+        for s in &sched.ops {
+            assert!(s.start >= 0.0 && s.end >= s.start && s.end <= r.makespan);
+        }
+        for s in &sched.transfers {
+            assert!(s.start >= 0.0 && s.end >= s.start && s.end <= r.makespan);
+        }
+    }
+
+    #[test]
+    fn schedule_parallel_comm_matches_makespan_too() {
+        let g = chain3();
+        let par = Cluster::homogeneous(3, 1000, CommModel::new(0.0, 1.0).unwrap())
+            .with_sequential_comm(false);
+        let r = simulate(&g, &par, &place_all(&g, &[0, 1, 2]), SimConfig::default());
+        assert!(r.ok());
+        assert_eq!(r.schedule.ops.len(), 3);
+        assert_eq!(r.schedule.transfers.len(), 2);
+        assert_eq!(r.schedule.max_end().to_bits(), r.makespan.to_bits());
     }
 
     #[test]

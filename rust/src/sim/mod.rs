@@ -10,6 +10,7 @@ pub mod flows;
 pub mod memory;
 
 pub use engine::{
-    simulate, ContentionReport, Framework, LinkUse, SimConfig, SimResult, QUEUE_DEPTH_BUCKETS,
+    simulate, ContentionReport, Framework, LinkUse, OpSpan, SimConfig, SimResult, SimSchedule,
+    TransferSpan, QUEUE_DEPTH_BUCKETS,
 };
 pub use memory::OomError;

@@ -1,0 +1,290 @@
+//! Chrome/Perfetto trace-event JSON export.
+//!
+//! Serializes collected pipeline spans and (optionally) a simulated
+//! execution schedule into the trace-event format understood by
+//! `chrome://tracing` and <https://ui.perfetto.dev>: a `traceEvents`
+//! array of complete (`ph:"X"`) events with microsecond `ts`/`dur`,
+//! plus metadata (`ph:"M"`) events naming processes and threads.
+//!
+//! Two synthetic "processes" keep the tracks apart:
+//!
+//! * **pid 1 — "baechi pipeline"**: one track per worker thread, one
+//!   event per span (request, optimize, place, expand, simulate,
+//!   cache_hit, queued). Span ids and parent ids ride in `args`, so
+//!   nesting is recoverable even though trace-event rendering already
+//!   nests by time containment per track.
+//! * **pid 2 — "simulated plan"**: one track per device (op intervals)
+//!   and one per interconnect link (transfer intervals; a transfer
+//!   crossing k links appears on all k of its path tracks). Timestamps
+//!   are simulated seconds into the step, scaled to µs.
+
+use crate::graph::OpGraph;
+use crate::sim::SimSchedule;
+use crate::telemetry::tracer::SpanRecord;
+use crate::topology::Topology;
+use crate::util::json::Json;
+
+const PIPELINE_PID: u64 = 1;
+const SIM_PID: u64 = 2;
+
+/// The simulated-plan side of an export: which graph and topology the
+/// schedule's indices refer to.
+pub struct SimTrack<'a> {
+    pub graph: &'a OpGraph,
+    pub topo: &'a Topology,
+    pub schedule: &'a SimSchedule,
+}
+
+fn meta(pid: u64, tid: Option<u64>, kind: &str, name: &str) -> Json {
+    let mut ev = Json::obj();
+    ev.set("ph", "M").set("pid", pid).set("name", kind);
+    if let Some(tid) = tid {
+        ev.set("tid", tid);
+    }
+    let mut args = Json::obj();
+    args.set("name", name);
+    ev.set("args", args);
+    ev
+}
+
+fn complete(pid: u64, tid: u64, name: &str, start_s: f64, end_s: f64, args: Json) -> Json {
+    let mut ev = Json::obj();
+    ev.set("ph", "X")
+        .set("pid", pid)
+        .set("tid", tid)
+        .set("name", name)
+        .set("ts", start_s * 1e6)
+        .set("dur", (end_s - start_s).max(0.0) * 1e6)
+        .set("args", args);
+    ev
+}
+
+/// Label for a topology endpoint: devices first, then switches.
+fn endpoint_label(topo: &Topology, e: usize) -> String {
+    if e < topo.n() {
+        format!("gpu{e}")
+    } else {
+        format!("sw{}", e - topo.n())
+    }
+}
+
+/// Serialize spans (and optionally a simulated schedule) to a
+/// trace-event JSON document.
+pub fn chrome_trace(spans: &[SpanRecord], sim: Option<SimTrack<'_>>) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+
+    // Pipeline tracks: one per worker thread that emitted a span.
+    if !spans.is_empty() {
+        events.push(meta(PIPELINE_PID, None, "process_name", "baechi pipeline"));
+        let mut threads: Vec<u64> = spans.iter().map(|s| s.thread).collect();
+        threads.sort_unstable();
+        threads.dedup();
+        for &t in &threads {
+            events.push(meta(
+                PIPELINE_PID,
+                Some(t),
+                "thread_name",
+                &format!("worker {t}"),
+            ));
+        }
+        for s in spans {
+            let mut args = Json::obj();
+            args.set("trace", s.trace.0).set("span", s.span.0);
+            if let Some(p) = s.parent {
+                args.set("parent", p.0);
+            }
+            if !s.detail.is_empty() {
+                args.set("placer", s.detail.as_str());
+            }
+            if s.ops_in != 0 || s.ops_out != 0 {
+                args.set("ops_in", s.ops_in).set("ops_out", s.ops_out);
+            }
+            events.push(complete(
+                PIPELINE_PID,
+                s.thread,
+                s.name,
+                s.start_s,
+                s.end_s,
+                args,
+            ));
+        }
+    }
+
+    // Simulated-plan tracks: devices 0..n, then one per link.
+    if let Some(sim) = sim {
+        let n = sim.topo.n();
+        events.push(meta(SIM_PID, None, "process_name", "simulated plan"));
+        for d in 0..n {
+            events.push(meta(SIM_PID, Some(d as u64), "thread_name", &format!("gpu{d}")));
+        }
+        for (i, link) in sim.topo.links().iter().enumerate() {
+            let name = format!(
+                "link {}-{} ({})",
+                endpoint_label(sim.topo, link.a),
+                endpoint_label(sim.topo, link.b),
+                link.kind.name()
+            );
+            events.push(meta(SIM_PID, Some((n + i) as u64), "thread_name", &name));
+        }
+        for op in &sim.schedule.ops {
+            let mut args = Json::obj();
+            args.set("node", op.node.0).set("device", op.device);
+            events.push(complete(
+                SIM_PID,
+                op.device as u64,
+                &sim.graph.node(op.node).name,
+                op.start,
+                op.end,
+                args,
+            ));
+        }
+        for tr in &sim.schedule.transfers {
+            for &l in &tr.links {
+                let mut args = Json::obj();
+                args.set("node", tr.node.0)
+                    .set("src", tr.src)
+                    .set("dst", tr.dst)
+                    .set("bytes", tr.bytes)
+                    .set("link", l);
+                events.push(complete(
+                    SIM_PID,
+                    (n + l) as u64,
+                    &format!("xfer {}", sim.graph.node(tr.node).name),
+                    tr.start,
+                    tr.end,
+                    args,
+                ));
+            }
+        }
+    }
+
+    let mut doc = Json::obj();
+    doc.set("traceEvents", events).set("displayTimeUnit", "ms");
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::tracer::{SpanId, TraceId};
+
+    fn span(trace: u64, id: u64, parent: Option<u64>, name: &'static str, s: f64, e: f64) -> SpanRecord {
+        SpanRecord {
+            trace: TraceId(trace),
+            span: SpanId(id),
+            parent: parent.map(SpanId),
+            name,
+            detail: "m-etf".to_string(),
+            start_s: s,
+            end_s: e,
+            thread: 7,
+            ops_in: 3,
+            ops_out: 4,
+        }
+    }
+
+    #[test]
+    fn pipeline_spans_become_complete_events() {
+        let spans = vec![
+            span(1, 10, None, "request", 0.0, 1.0),
+            span(1, 11, Some(10), "place", 0.25, 0.75),
+        ];
+        let doc = chrome_trace(&spans, None);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        let req = xs.iter().find(|e| e.get("name").unwrap().as_str() == Some("request")).unwrap();
+        assert_eq!(req.get("ts").unwrap().as_f64(), Some(0.0));
+        assert_eq!(req.get("dur").unwrap().as_f64(), Some(1e6));
+        assert_eq!(req.get("pid").unwrap().as_u64(), Some(1));
+        assert_eq!(req.get("tid").unwrap().as_u64(), Some(7));
+        let place = xs.iter().find(|e| e.get("name").unwrap().as_str() == Some("place")).unwrap();
+        let args = place.get("args").unwrap();
+        assert_eq!(args.get("parent").unwrap().as_u64(), Some(10));
+        assert_eq!(args.get("trace").unwrap().as_u64(), Some(1));
+        assert_eq!(args.get("placer").unwrap().as_str(), Some("m-etf"));
+        // Metadata names the process and the worker thread.
+        assert!(events.iter().any(|e| {
+            e.get("ph").unwrap().as_str() == Some("M")
+                && e.get("name").unwrap().as_str() == Some("process_name")
+        }));
+        assert!(events.iter().any(|e| {
+            e.get("ph").unwrap().as_str() == Some("M")
+                && e.get("name").unwrap().as_str() == Some("thread_name")
+                && e.get("tid").map(|t| t.as_u64()) == Some(Some(7))
+        }));
+    }
+
+    #[test]
+    fn sim_track_maps_ops_to_device_tids_and_transfers_to_link_tids() {
+        use crate::graph::{OpGraph, OpKind};
+        use crate::profile::CommModel;
+        use crate::sim::{OpSpan, SimSchedule, TransferSpan};
+
+        let mut g = OpGraph::new("t");
+        let a = g.add_node("a", OpKind::MatMul);
+        let b = g.add_node("b", OpKind::MatMul);
+        g.add_edge(a, b, 10);
+        let topo = Topology::uniform(2, CommModel::new(0.0, 1.0).unwrap());
+        let sched = SimSchedule {
+            ops: vec![
+                OpSpan { node: a, device: 0, start: 0.0, end: 1.0 },
+                OpSpan { node: b, device: 1, start: 11.0, end: 12.0 },
+            ],
+            transfers: vec![TransferSpan {
+                node: a,
+                src: 0,
+                dst: 1,
+                bytes: 10,
+                links: vec![0, 1],
+                start: 1.0,
+                end: 11.0,
+            }],
+        };
+        let doc = chrome_trace(
+            &[],
+            Some(SimTrack { graph: &g, topo: &topo, schedule: &sched }),
+        );
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        // 2 op events + 1 transfer × 2 path links.
+        assert_eq!(xs.len(), 4);
+        let op_b = xs.iter().find(|e| e.get("name").unwrap().as_str() == Some("b")).unwrap();
+        assert_eq!(op_b.get("pid").unwrap().as_u64(), Some(2));
+        assert_eq!(op_b.get("tid").unwrap().as_u64(), Some(1));
+        let xfers: Vec<&&Json> = xs
+            .iter()
+            .filter(|e| e.get("name").unwrap().as_str() == Some("xfer a"))
+            .collect();
+        assert_eq!(xfers.len(), 2);
+        // Link tracks start after the device tracks (tid = n + link).
+        for x in &xfers {
+            let tid = x.get("tid").unwrap().as_u64().unwrap();
+            assert!(tid >= 2 && tid < 4);
+            assert_eq!(x.get("dur").unwrap().as_f64(), Some(10.0 * 1e6));
+        }
+        // The max interval end across X events reconstructs max_end.
+        let max_end_us = xs
+            .iter()
+            .map(|e| {
+                e.get("ts").unwrap().as_f64().unwrap() + e.get("dur").unwrap().as_f64().unwrap()
+            })
+            .fold(0.0, f64::max);
+        assert!((max_end_us - sched.max_end() * 1e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_export_is_still_valid_json() {
+        let doc = chrome_trace(&[], None);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    }
+}

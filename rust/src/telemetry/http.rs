@@ -1,0 +1,172 @@
+//! Minimal blocking HTTP/1.1 listener for Prometheus scrapes.
+//!
+//! One accept thread, one request per connection (`Connection: close`),
+//! two routes: `GET /metrics` (and `/`) returns the rendered exposition
+//! text, anything else 404. This is deliberately not a web server — a
+//! Prometheus scraper sends one short GET and reads one response, which
+//! is exactly what `std::net` handles comfortably without pulling in an
+//! async stack.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::BaechiError;
+
+/// Background metrics endpoint; shuts down when dropped.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`; port 0 picks a free port)
+    /// and serve `render()`'s output on every scrape.
+    pub fn bind(
+        addr: &str,
+        render: impl Fn() -> String + Send + Sync + 'static,
+    ) -> crate::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| BaechiError::io(format!("metrics listener on {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| BaechiError::io(format!("metrics listener addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("baechi-metrics".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        // A hung scraper must not wedge the endpoint.
+                        let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                        let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+                        let _ = serve_one(stream, &render);
+                    }
+                }
+            })
+            .map_err(|e| BaechiError::runtime(format!("metrics thread: {e}")))?;
+        Ok(MetricsServer {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the listener thread (idempotent).
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // The accept loop is blocked in `incoming()`; a throwaway
+        // connection wakes it so it can observe the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_one(mut stream: TcpStream, render: &dyn Fn() -> String) -> std::io::Result<()> {
+    // Read until the end of the request head (or the buffer fills —
+    // scrape requests are tiny).
+    let mut buf = [0u8; 4096];
+    let mut len = 0;
+    while len < buf.len() {
+        let n = stream.read(&mut buf[len..])?;
+        if n == 0 {
+            break;
+        }
+        len += n;
+        if buf[..len].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..len]);
+    let mut parts = head.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let response = if method == "GET" && (path == "/metrics" || path == "/") {
+        let body = render();
+        format!(
+            "HTTP/1.1 200 OK\r\n\
+             Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\n\
+             Connection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    } else {
+        let body = "not found\n";
+        format!(
+            "HTTP/1.1 404 Not Found\r\n\
+             Content-Type: text/plain; charset=utf-8\r\n\
+             Content-Length: {}\r\n\
+             Connection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    };
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_everything_else() {
+        let mut server =
+            MetricsServer::bind("127.0.0.1:0", || "# TYPE up gauge\nup 1\n".to_string()).unwrap();
+        let addr = server.addr();
+        let ok = get(addr, "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("version=0.0.4"), "{ok}");
+        assert!(ok.ends_with("# TYPE up gauge\nup 1\n"), "{ok}");
+        let root = get(addr, "/");
+        assert!(root.starts_with("HTTP/1.1 200 OK\r\n"));
+        let missing = get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        server.shutdown();
+        // Idempotent; Drop after shutdown is fine too.
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_the_listener_thread() {
+        let server = MetricsServer::bind("127.0.0.1:0", String::new).unwrap();
+        let addr = server.addr();
+        drop(server); // Drop path exercises shutdown.
+        // The port is released: connecting either fails or the
+        // throwaway wake connection already consumed the listener.
+        // Binding again must succeed.
+        let again = MetricsServer::bind(&addr.to_string(), String::new);
+        assert!(again.is_ok(), "port must be released after shutdown");
+    }
+}

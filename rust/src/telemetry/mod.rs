@@ -1,0 +1,60 @@
+//! End-to-end telemetry: request tracing, Chrome-trace export, and
+//! Prometheus metrics exposition.
+//!
+//! The paper's headline claim is placement *speed* (654×–206,000× faster
+//! than learning-based planners), which makes the placement pipeline
+//! itself a latency-sensitive serving system — and a serving system
+//! needs to show where a request spends its time. This layer provides
+//! the three standard observability surfaces over the engine and the
+//! service, with zero external dependencies:
+//!
+//! * **Spans & trace IDs** ([`tracer`]) — a [`Tracer`] mints one trace
+//!   id per placement request (at [`crate::serve::PlacementService`]
+//!   intake, or per [`crate::engine::PlacementEngine::place`] call) and
+//!   times each pipeline stage as a span nested under the request span.
+//!   Spans land in a bounded, lock-sharded collector; when tracing is
+//!   off and no listeners are attached, opening a span is a single
+//!   relaxed atomic load and nothing else. The engine's legacy
+//!   [`crate::engine::PlacementObserver`] hooks are fed by a
+//!   span-close listener ([`SpanListener`]), so observers keep working
+//!   unchanged whether or not spans are being collected.
+//! * **Chrome trace-event export** ([`chrome`]) — serializes collected
+//!   spans (one track per worker thread) and the execution simulator's
+//!   schedule (one track per device and per interconnect link, from
+//!   [`crate::sim::SimSchedule`]) to Chrome/Perfetto trace-event JSON.
+//!   `baechi trace --model … --out trace.json` writes a file that opens
+//!   directly in `chrome://tracing` or <https://ui.perfetto.dev>.
+//! * **Prometheus exposition** ([`prometheus`]) — renders
+//!   [`crate::serve::ServiceMetrics`] + engine cache counters + tracer
+//!   counters in text format 0.0.4, surfaced as
+//!   `PlacementService::metrics_text()` and served by the minimal
+//!   HTTP/1.1 listener in [`http`] (`baechi serve-bench
+//!   --metrics-addr 127.0.0.1:9184`).
+//!
+//! Collection is controlled by the `BAECHI_TRACE` environment variable
+//! (any value except `0|false|off|no` enables it) or explicitly via
+//! [`crate::engine::PlacementEngineBuilder::tracing`]. Log lines gain a
+//! `t=<trace id>` context while a span is open on the logging thread
+//! (see [`crate::util::log`]).
+
+pub mod chrome;
+pub mod http;
+pub mod prometheus;
+pub mod tracer;
+
+pub use chrome::{chrome_trace, SimTrack};
+pub use http::MetricsServer;
+pub use tracer::{Span, SpanId, SpanListener, SpanRecord, TraceId, TraceStats, Tracer};
+
+/// Whether the `BAECHI_TRACE` environment variable asks for span
+/// collection. Unset, empty, `0`, `false`, `off`, and `no` mean off;
+/// anything else means on.
+pub fn env_tracing_enabled() -> bool {
+    match std::env::var("BAECHI_TRACE") {
+        Ok(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "" | "0" | "false" | "off" | "no"
+        ),
+        Err(_) => false,
+    }
+}

@@ -1,0 +1,428 @@
+//! Prometheus text exposition format 0.0.4.
+//!
+//! [`render_metrics`] turns a [`ServiceMetrics`] snapshot (plus the
+//! tracer's counters) into the `# HELP` / `# TYPE` / sample-line text a
+//! Prometheus scraper expects; [`parse_text`] is the strict line-level
+//! validator the tests (and any future self-scrape) use. Both sides
+//! are hand-rolled — the format is line-oriented and small enough that
+//! a dependency would cost more than it saves.
+
+use crate::serve::ServiceMetrics;
+use crate::telemetry::tracer::TraceStats;
+
+/// Format one sample value the way Prometheus expects (`NaN`, `+Inf`,
+/// `-Inf` for the non-finite cases).
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+struct Renderer {
+    out: String,
+}
+
+impl Renderer {
+    fn family(&mut self, name: &str, kind: &str, help: &str) -> &mut Self {
+        self.out.push_str(&format!("# HELP {name} {help}\n"));
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+        self
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], v: f64) -> &mut Self {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, val)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{val}\""));
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(v));
+        self.out.push('\n');
+        self
+    }
+}
+
+/// Render a metrics snapshot + tracer counters as Prometheus text.
+pub fn render_metrics(m: &ServiceMetrics, t: &TraceStats) -> String {
+    let mut r = Renderer { out: String::new() };
+    r.family(
+        "baechi_requests_submitted_total",
+        "counter",
+        "Placement requests accepted by the service.",
+    )
+    .sample("baechi_requests_submitted_total", &[], m.submitted as f64);
+    r.family(
+        "baechi_requests_completed_total",
+        "counter",
+        "Placement requests answered (success or error).",
+    )
+    .sample("baechi_requests_completed_total", &[], m.completed as f64);
+    r.family(
+        "baechi_request_errors_total",
+        "counter",
+        "Requests that completed with an error.",
+    )
+    .sample("baechi_request_errors_total", &[], m.errors as f64);
+    r.family(
+        "baechi_deadline_misses_total",
+        "counter",
+        "Requests answered after their deadline expired.",
+    )
+    .sample("baechi_deadline_misses_total", &[], m.deadline_misses as f64);
+    r.family(
+        "baechi_served_total",
+        "counter",
+        "Requests served, by placement mode.",
+    )
+    .sample("baechi_served_total", &[("mode", "cache_hit")], m.cache_hits as f64)
+    .sample("baechi_served_total", &[("mode", "incremental")], m.incremental as f64)
+    .sample("baechi_served_total", &[("mode", "full")], m.full as f64);
+    r.family(
+        "baechi_batches_total",
+        "counter",
+        "Worker batches executed.",
+    )
+    .sample("baechi_batches_total", &[], m.batches as f64);
+    r.family(
+        "baechi_batched_requests_total",
+        "counter",
+        "Requests that rode in a multi-request batch.",
+    )
+    .sample("baechi_batched_requests_total", &[], m.batched_requests as f64);
+    r.family("baechi_uptime_seconds", "gauge", "Service uptime.")
+        .sample("baechi_uptime_seconds", &[], m.uptime_s);
+    r.family(
+        "baechi_qps",
+        "gauge",
+        "Lifetime completions per second of uptime.",
+    )
+    .sample("baechi_qps", &[], m.qps);
+    r.family(
+        "baechi_recent_qps",
+        "gauge",
+        "Completions per second over the recent latency window.",
+    )
+    .sample("baechi_recent_qps", &[], m.recent_qps);
+    r.family(
+        "baechi_request_latency_seconds",
+        "gauge",
+        "Request latency statistics over the sliding reservoir.",
+    )
+    .sample("baechi_request_latency_seconds", &[("stat", "mean")], m.mean_latency_s)
+    .sample("baechi_request_latency_seconds", &[("stat", "p50")], m.p50_latency_s)
+    .sample("baechi_request_latency_seconds", &[("stat", "p99")], m.p99_latency_s)
+    .sample(
+        "baechi_request_latency_seconds",
+        &[("stat", "incremental_mean")],
+        m.incremental_mean_latency_s,
+    )
+    .sample(
+        "baechi_request_latency_seconds",
+        &[("stat", "full_mean")],
+        m.full_mean_latency_s,
+    );
+    r.family(
+        "baechi_engine_cache_hits_total",
+        "counter",
+        "Placement-cache hits across all shards.",
+    )
+    .sample("baechi_engine_cache_hits_total", &[], m.engine_cache.hits as f64);
+    r.family(
+        "baechi_engine_cache_misses_total",
+        "counter",
+        "Placement-cache misses across all shards.",
+    )
+    .sample("baechi_engine_cache_misses_total", &[], m.engine_cache.misses as f64);
+    r.family(
+        "baechi_engine_cache_evictions_total",
+        "counter",
+        "Placement-cache LRU evictions across all shards.",
+    )
+    .sample(
+        "baechi_engine_cache_evictions_total",
+        &[],
+        m.engine_cache.evictions as f64,
+    );
+    r.family(
+        "baechi_trace_spans_recorded_total",
+        "counter",
+        "Telemetry spans stored in the collector.",
+    )
+    .sample("baechi_trace_spans_recorded_total", &[], t.recorded as f64);
+    r.family(
+        "baechi_trace_spans_dropped_total",
+        "counter",
+        "Telemetry spans lost to a full collector shard.",
+    )
+    .sample("baechi_trace_spans_dropped_total", &[], t.dropped as f64);
+    r.family(
+        "baechi_trace_collecting",
+        "gauge",
+        "1 when span collection is enabled.",
+    )
+    .sample(
+        "baechi_trace_collecting",
+        &[],
+        if t.collecting { 1.0 } else { 0.0 },
+    );
+    r.out
+}
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PromSample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_value(s: &str) -> Result<f64, String> {
+    match s {
+        "NaN" => Ok(f64::NAN),
+        "+Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        _ => s.parse().map_err(|_| format!("bad sample value {s:?}")),
+    }
+}
+
+/// Parse `{k="v",...}` starting after the `{`. Returns the labels and
+/// the rest of the line after the closing `}`.
+fn parse_labels(s: &str) -> Result<(Vec<(String, String)>, &str), String> {
+    let mut labels = Vec::new();
+    let mut rest = s;
+    loop {
+        rest = rest.trim_start();
+        if let Some(r) = rest.strip_prefix('}') {
+            return Ok((labels, r));
+        }
+        let eq = rest.find('=').ok_or("label without '='")?;
+        let name = rest[..eq].trim();
+        if !valid_label_name(name) {
+            return Err(format!("bad label name {name:?}"));
+        }
+        rest = rest[eq + 1..]
+            .trim_start()
+            .strip_prefix('"')
+            .ok_or("label value must be quoted")?;
+        // Scan the quoted value honoring \" escapes.
+        let mut value = String::new();
+        let mut chars = rest.char_indices();
+        let end = loop {
+            let (i, c) = chars.next().ok_or("unterminated label value")?;
+            match c {
+                '"' => break i,
+                '\\' => {
+                    let (_, esc) = chars.next().ok_or("dangling escape")?;
+                    value.push(match esc {
+                        'n' => '\n',
+                        '\\' => '\\',
+                        '"' => '"',
+                        other => return Err(format!("bad escape \\{other}")),
+                    });
+                }
+                c => value.push(c),
+            }
+        };
+        labels.push((name.to_string(), value));
+        rest = &rest[end + 1..];
+        rest = rest.trim_start();
+        if let Some(r) = rest.strip_prefix(',') {
+            rest = r;
+        }
+    }
+}
+
+/// Strictly parse a text-format 0.0.4 exposition: every line must be a
+/// well-formed `# HELP`/`# TYPE` comment or a sample, every sample's
+/// family must have a preceding `# TYPE`, and values must parse.
+/// Returns the samples in order.
+pub fn parse_text(text: &str) -> Result<Vec<PromSample>, String> {
+    const TYPES: [&str; 5] = ["counter", "gauge", "histogram", "summary", "untyped"];
+    let mut typed: Vec<String> = Vec::new();
+    let mut samples = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if let Some(body) = rest.strip_prefix("HELP ") {
+                let name = body.split_whitespace().next().unwrap_or("");
+                if !valid_metric_name(name) {
+                    return Err(format!("line {lineno}: bad HELP metric name {name:?}"));
+                }
+            } else if let Some(body) = rest.strip_prefix("TYPE ") {
+                let mut parts = body.split_whitespace();
+                let name = parts.next().unwrap_or("");
+                let kind = parts.next().unwrap_or("");
+                if !valid_metric_name(name) {
+                    return Err(format!("line {lineno}: bad TYPE metric name {name:?}"));
+                }
+                if !TYPES.contains(&kind) {
+                    return Err(format!("line {lineno}: bad metric type {kind:?}"));
+                }
+                typed.push(name.to_string());
+            } else {
+                return Err(format!("line {lineno}: comment is neither HELP nor TYPE"));
+            }
+            continue;
+        }
+        // Sample line: name[{labels}] value [timestamp]
+        let name_end = line
+            .find(|c: char| c == '{' || c.is_whitespace())
+            .ok_or_else(|| format!("line {lineno}: sample without value"))?;
+        let name = &line[..name_end];
+        if !valid_metric_name(name) {
+            return Err(format!("line {lineno}: bad metric name {name:?}"));
+        }
+        let (labels, rest) = if line[name_end..].starts_with('{') {
+            parse_labels(&line[name_end + 1..]).map_err(|e| format!("line {lineno}: {e}"))?
+        } else {
+            (Vec::new(), &line[name_end..])
+        };
+        let mut parts = rest.split_whitespace();
+        let value = parse_value(parts.next().ok_or(format!("line {lineno}: missing value"))?)
+            .map_err(|e| format!("line {lineno}: {e}"))?;
+        if let Some(ts) = parts.next() {
+            // Optional millisecond timestamp.
+            ts.parse::<i64>()
+                .map_err(|_| format!("line {lineno}: bad timestamp {ts:?}"))?;
+        }
+        if parts.next().is_some() {
+            return Err(format!("line {lineno}: trailing garbage"));
+        }
+        // The family of `name_bucket`/`name_sum`/`name_count` is `name`.
+        let family_ok = typed.iter().any(|t| {
+            name == t
+                || (name.strip_prefix(t.as_str()).is_some_and(|s| {
+                    matches!(s, "_bucket" | "_sum" | "_count")
+                }))
+        });
+        if !family_ok {
+            return Err(format!("line {lineno}: sample {name:?} has no preceding # TYPE"));
+        }
+        samples.push(PromSample {
+            name: name.to_string(),
+            labels,
+            value,
+        });
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CacheStats;
+
+    fn sample_metrics() -> ServiceMetrics {
+        ServiceMetrics {
+            submitted: 10,
+            completed: 9,
+            errors: 1,
+            deadline_misses: 0,
+            cache_hits: 4,
+            incremental: 2,
+            full: 3,
+            batches: 5,
+            batched_requests: 2,
+            uptime_s: 12.5,
+            qps: 0.72,
+            recent_qps: 1.5,
+            mean_latency_s: 0.01,
+            p50_latency_s: 0.008,
+            p99_latency_s: 0.05,
+            incremental_mean_latency_s: 0.004,
+            full_mean_latency_s: 0.02,
+            engine_cache: CacheStats::default(),
+        }
+    }
+
+    #[test]
+    fn rendered_text_parses_and_round_trips_counters() {
+        let text = render_metrics(&sample_metrics(), &TraceStats::default());
+        let samples = parse_text(&text).expect("must parse");
+        let find = |name: &str, labels: &[(&str, &str)]| -> f64 {
+            samples
+                .iter()
+                .find(|s| {
+                    s.name == name
+                        && s.labels.len() == labels.len()
+                        && labels
+                            .iter()
+                            .all(|(k, v)| s.labels.iter().any(|(sk, sv)| sk == k && sv == v))
+                })
+                .unwrap_or_else(|| panic!("missing {name} {labels:?}"))
+                .value
+        };
+        assert_eq!(find("baechi_requests_submitted_total", &[]), 10.0);
+        assert_eq!(find("baechi_served_total", &[("mode", "cache_hit")]), 4.0);
+        assert_eq!(find("baechi_served_total", &[("mode", "full")]), 3.0);
+        assert_eq!(find("baechi_qps", &[]), 0.72);
+        assert_eq!(find("baechi_recent_qps", &[]), 1.5);
+        assert_eq!(find("baechi_request_latency_seconds", &[("stat", "p99")]), 0.05);
+        assert_eq!(find("baechi_trace_collecting", &[]), 0.0);
+    }
+
+    #[test]
+    fn non_finite_values_render_in_prometheus_spelling() {
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        let parsed = parse_text("# TYPE x gauge\nx +Inf\n").unwrap();
+        assert_eq!(parsed[0].value, f64::INFINITY);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_text("no_type_sample 1\n").is_err(), "sample without TYPE");
+        assert!(parse_text("# TYPE x widget\nx 1\n").is_err(), "bad type");
+        assert!(parse_text("# TYPE x gauge\nx notanumber\n").is_err());
+        assert!(parse_text("# TYPE 9x gauge\n").is_err(), "bad name");
+        assert!(parse_text("# TYPE x gauge\nx{9bad=\"v\"} 1\n").is_err());
+        assert!(parse_text("# TYPE x gauge\nx{l=\"unterminated} 1\n").is_err());
+        assert!(parse_text("# random comment\n").is_err());
+        assert!(parse_text("# TYPE x gauge\nx 1 123 extra\n").is_err());
+    }
+
+    #[test]
+    fn parser_handles_labels_and_escapes() {
+        let s = parse_text("# TYPE m counter\nm{a=\"x\",b=\"q\\\"uo\\\\te\"} 2 1700000000000\n")
+            .unwrap();
+        assert_eq!(s[0].labels[0], ("a".into(), "x".into()));
+        assert_eq!(s[0].labels[1], ("b".into(), "q\"uo\\te".into()));
+        assert_eq!(s[0].value, 2.0);
+    }
+}

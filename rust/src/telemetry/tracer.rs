@@ -1,0 +1,518 @@
+//! Request tracing: trace IDs, span guards, and a bounded lock-sharded
+//! span collector.
+//!
+//! A [`Tracer`] is owned by the placement engine. Each top-level
+//! `place` call opens a *request span* (minting a fresh [`TraceId`]
+//! unless the caller stamped one on the request), and each pipeline
+//! stage opens a child span under it. Spans are RAII guards: they
+//! capture a start timestamp on open and emit a [`SpanRecord`] on drop.
+//!
+//! The hot path is engineered around one question — "is anyone
+//! watching?" — answered by a single relaxed atomic load
+//! ([`Tracer::is_live`]). The tracer is live when span *collection* is
+//! enabled or at least one [`SpanListener`] is attached (the engine
+//! bridges legacy `PlacementObserver`s through a listener). When not
+//! live, every span constructor returns an inert guard whose drop does
+//! nothing: no clock reads, no allocation, no locks.
+//!
+//! Collected records land in a fixed number of mutex-sharded buffers,
+//! each individually bounded; a full shard counts a drop instead of
+//! growing, so a runaway trace can never exhaust memory. While a span
+//! is open, the logging layer's thread-local trace context is set to
+//! its trace id, so `info!`/`debug!` lines emitted from inside the
+//! pipeline carry `t=<id>` (see [`crate::util::log`]).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::log;
+
+/// Identifies one placement request end to end. Minted by
+/// [`Tracer::mint_trace`]; never zero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TraceId(pub u64);
+
+/// Identifies one span within the tracer's lifetime. Never zero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SpanId(pub u64);
+
+/// One closed span: a named interval on a thread, attributed to a
+/// trace, optionally nested under a parent span.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub trace: TraceId,
+    pub span: SpanId,
+    pub parent: Option<SpanId>,
+    /// Stage name ("request", "optimize", "place", "expand",
+    /// "simulate", "cache_hit", "queued", ...).
+    pub name: &'static str,
+    /// Free-form annotation; for pipeline stages this is the placer
+    /// name, which the observer bridge forwards as `StageStats.placer`.
+    pub detail: String,
+    /// Seconds since the tracer's epoch.
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Stable per-thread id (small integers in spawn order), used by
+    /// the Chrome exporter as the track id.
+    pub thread: u64,
+    pub ops_in: usize,
+    pub ops_out: usize,
+}
+
+/// Receives every closed span, live or collected. Listeners are
+/// attached before the tracer is shared (no lock on the emit path) and
+/// must be cheap: they run inline on the traced thread.
+pub trait SpanListener: Send + Sync {
+    fn on_close(&self, record: &SpanRecord);
+}
+
+/// Counters for the Prometheus surface.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Spans stored in the collector since construction (drained spans
+    /// still count).
+    pub recorded: u64,
+    /// Spans lost to a full shard.
+    pub dropped: u64,
+    /// Whether span collection is currently enabled.
+    pub collecting: bool,
+}
+
+const SHARDS: usize = 8;
+
+/// Default per-tracer bound on collected spans (across all shards).
+pub const DEFAULT_SPAN_CAPACITY: usize = 65_536;
+
+/// Span factory and bounded collector. See the module docs for the
+/// liveness model.
+pub struct Tracer {
+    /// `collecting || !listeners.is_empty()` — the one flag the hot
+    /// path reads.
+    live: AtomicBool,
+    collecting: AtomicBool,
+    epoch: Instant,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    shards: Vec<Mutex<Vec<SpanRecord>>>,
+    shard_capacity: usize,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    listeners: Vec<Arc<dyn SpanListener>>,
+}
+
+impl Tracer {
+    /// A tracer that can hold up to `capacity` spans before dropping.
+    /// Collection starts disabled; call [`set_collecting`] or attach a
+    /// listener to make the tracer live.
+    ///
+    /// [`set_collecting`]: Tracer::set_collecting
+    pub fn new(capacity: usize) -> Self {
+        let shard_capacity = capacity.div_ceil(SHARDS).max(1);
+        Tracer {
+            live: AtomicBool::new(false),
+            collecting: AtomicBool::new(false),
+            epoch: Instant::now(),
+            next_trace: AtomicU64::new(1),
+            next_span: AtomicU64::new(1),
+            shards: (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+            shard_capacity,
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            listeners: Vec::new(),
+        }
+    }
+
+    /// Attach a close listener. Requires exclusive access — the engine
+    /// builder calls this before wrapping the tracer in an `Arc` — so
+    /// the emit path can iterate listeners without a lock.
+    pub fn add_listener(&mut self, listener: Arc<dyn SpanListener>) {
+        self.listeners.push(listener);
+        self.live.store(true, Ordering::Release);
+    }
+
+    /// Enable or disable span collection. Listeners keep firing either
+    /// way.
+    pub fn set_collecting(&self, on: bool) {
+        self.collecting.store(on, Ordering::Release);
+        self.live
+            .store(on || !self.listeners.is_empty(), Ordering::Release);
+    }
+
+    pub fn collecting(&self) -> bool {
+        self.collecting.load(Ordering::Acquire)
+    }
+
+    /// The no-op fast path: false means spans are inert guards.
+    #[inline]
+    pub fn is_live(&self) -> bool {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// Seconds since this tracer was constructed.
+    pub fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// A fresh, unique, non-zero trace id.
+    pub fn mint_trace(&self) -> TraceId {
+        TraceId(self.next_trace.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// `Some(fresh id)` when live, `None` otherwise. Used by the
+    /// service to stamp requests only when someone is watching.
+    pub fn active_trace_id(&self) -> Option<TraceId> {
+        if self.is_live() {
+            Some(self.mint_trace())
+        } else {
+            None
+        }
+    }
+
+    fn mint_span(&self) -> SpanId {
+        SpanId(self.next_span.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Open the top-level span for one placement request. `trace` is
+    /// the id stamped on the request by the service (propagation), or
+    /// `None` to mint one here. Inert when the tracer is not live.
+    pub fn request_span(&self, trace: Option<u64>, placer: &str) -> Span<'_> {
+        if !self.is_live() {
+            return Span::inert();
+        }
+        let trace = match trace {
+            Some(t) if t != 0 => TraceId(t),
+            _ => self.mint_trace(),
+        };
+        Span::open(self, trace, None, "request", placer.to_string())
+    }
+
+    /// Open a stage span nested under `parent`. An inert parent yields
+    /// an inert child, so stage code never checks liveness itself.
+    pub fn child(&self, parent: &Span<'_>, name: &'static str, detail: &str) -> Span<'_> {
+        match parent.ids {
+            Some((trace, span)) => Span::open(self, trace, Some(span), name, detail.to_string()),
+            None => Span::inert(),
+        }
+    }
+
+    /// Book a span whose interval was measured externally (cache hits
+    /// timed around a lock-free lookup, queue-wait intervals measured
+    /// by the service). Timestamps are seconds since this tracer's
+    /// epoch. No-op when not live.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_at(
+        &self,
+        trace: TraceId,
+        parent: Option<SpanId>,
+        name: &'static str,
+        detail: &str,
+        start_s: f64,
+        end_s: f64,
+        ops_in: usize,
+        ops_out: usize,
+    ) -> SpanId {
+        let span = self.mint_span();
+        if self.is_live() {
+            self.emit(SpanRecord {
+                trace,
+                span,
+                parent,
+                name,
+                detail: detail.to_string(),
+                start_s,
+                end_s,
+                thread: thread_track_id(),
+                ops_in,
+                ops_out,
+            });
+        }
+        span
+    }
+
+    fn emit(&self, record: SpanRecord) {
+        for l in &self.listeners {
+            l.on_close(&record);
+        }
+        if !self.collecting() {
+            return;
+        }
+        let shard = (record.span.0 as usize) % SHARDS;
+        let mut buf = self.shards[shard].lock().unwrap();
+        if buf.len() >= self.shard_capacity {
+            drop(buf);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        } else {
+            buf.push(record);
+            drop(buf);
+            self.recorded.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Remove and return every collected span, ordered by start time.
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.append(&mut shard.lock().unwrap());
+        }
+        out.sort_by(|a, b| a.start_s.total_cmp(&b.start_s));
+        out
+    }
+
+    pub fn stats(&self) -> TraceStats {
+        TraceStats {
+            recorded: self.recorded.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            collecting: self.collecting(),
+        }
+    }
+}
+
+/// RAII span guard. Created by [`Tracer::request_span`] /
+/// [`Tracer::child`]; records its interval when dropped. The inert
+/// form (tracer not live) carries no tracer reference and drops for
+/// free.
+pub struct Span<'t> {
+    tracer: Option<&'t Tracer>,
+    /// `(trace, span)` — present even for inert spans' children check.
+    ids: Option<(TraceId, SpanId)>,
+    parent: Option<SpanId>,
+    name: &'static str,
+    detail: String,
+    start_s: f64,
+    ops_in: usize,
+    ops_out: usize,
+    /// Previous log trace context, restored on drop.
+    prev_log_ctx: u64,
+}
+
+impl<'t> Span<'t> {
+    fn inert() -> Span<'static> {
+        Span {
+            tracer: None,
+            ids: None,
+            parent: None,
+            name: "",
+            detail: String::new(),
+            start_s: 0.0,
+            ops_in: 0,
+            ops_out: 0,
+            prev_log_ctx: 0,
+        }
+    }
+
+    fn open(
+        tracer: &'t Tracer,
+        trace: TraceId,
+        parent: Option<SpanId>,
+        name: &'static str,
+        detail: String,
+    ) -> Span<'t> {
+        let span = tracer.mint_span();
+        let prev_log_ctx = log::set_trace_context(trace.0);
+        Span {
+            tracer: Some(tracer),
+            ids: Some((trace, span)),
+            parent,
+            name,
+            detail,
+            start_s: tracer.now_s(),
+            ops_in: 0,
+            ops_out: 0,
+            prev_log_ctx,
+        }
+    }
+
+    /// The trace id this span belongs to, if it is live.
+    pub fn trace_id(&self) -> Option<TraceId> {
+        self.ids.map(|(t, _)| t)
+    }
+
+    /// The span's own id, if it is live.
+    pub fn span_id(&self) -> Option<SpanId> {
+        self.ids.map(|(_, s)| s)
+    }
+
+    /// Attach op counts (forwarded to `StageStats` by the observer
+    /// bridge).
+    pub fn annotate(&mut self, ops_in: usize, ops_out: usize) {
+        self.ops_in = ops_in;
+        self.ops_out = ops_out;
+    }
+
+    /// Replace the free-form annotation.
+    pub fn set_detail(&mut self, detail: &str) {
+        if self.tracer.is_some() {
+            self.detail = detail.to_string();
+        }
+    }
+
+    /// Disarm the span: restore the log context now and emit nothing on
+    /// drop. Used when the measured operation failed — pre-telemetry
+    /// observers reported nothing for failed stages, and the bridge
+    /// keeps that contract.
+    pub fn cancel(&mut self) {
+        if self.tracer.take().is_some() {
+            log::set_trace_context(self.prev_log_ctx);
+        }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let Some(tracer) = self.tracer else { return };
+        let (trace, span) = self.ids.expect("live span has ids");
+        log::set_trace_context(self.prev_log_ctx);
+        tracer.emit(SpanRecord {
+            trace,
+            span,
+            parent: self.parent,
+            name: self.name,
+            detail: std::mem::take(&mut self.detail),
+            start_s: self.start_s,
+            end_s: tracer.now_s(),
+            thread: thread_track_id(),
+            ops_in: self.ops_in,
+            ops_out: self.ops_out,
+        });
+    }
+}
+
+/// Stable small-integer thread id, assigned in first-use order. Rust's
+/// `ThreadId` has no stable integer form, and Chrome's `tid` renders
+/// best as a small number.
+pub fn thread_track_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static ID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    ID.with(|id| *id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn not_live_spans_are_inert_and_free() {
+        let tracer = Tracer::new(128);
+        assert!(!tracer.is_live());
+        assert!(tracer.active_trace_id().is_none());
+        {
+            let root = tracer.request_span(None, "m-etf");
+            assert!(root.trace_id().is_none());
+            let child = tracer.child(&root, "place", "m-etf");
+            assert!(child.span_id().is_none());
+        }
+        assert!(tracer.drain().is_empty());
+        assert_eq!(tracer.stats(), TraceStats::default());
+    }
+
+    #[test]
+    fn collecting_records_nested_spans() {
+        let tracer = Tracer::new(128);
+        tracer.set_collecting(true);
+        assert!(tracer.is_live());
+        let (root_trace, root_span);
+        {
+            let mut root = tracer.request_span(None, "m-sct");
+            root_trace = root.trace_id().unwrap();
+            root_span = root.span_id().unwrap();
+            {
+                let mut child = tracer.child(&root, "place", "m-sct");
+                child.annotate(10, 12);
+            }
+            root.annotate(10, 12);
+        }
+        let spans = tracer.drain();
+        assert_eq!(spans.len(), 2);
+        let root = spans.iter().find(|s| s.name == "request").unwrap();
+        let child = spans.iter().find(|s| s.name == "place").unwrap();
+        assert_eq!(root.trace, root_trace);
+        assert_eq!(root.span, root_span);
+        assert_eq!(root.parent, None);
+        assert_eq!(child.trace, root_trace);
+        assert_eq!(child.parent, Some(root_span));
+        assert_eq!((child.ops_in, child.ops_out), (10, 12));
+        assert!(child.start_s >= root.start_s);
+        assert!(child.end_s <= root.end_s);
+        assert!(spans.iter().all(|s| s.end_s >= s.start_s));
+        assert_eq!(tracer.stats().recorded, 2);
+        // Drain empties the collector but keeps counters.
+        assert!(tracer.drain().is_empty());
+        assert_eq!(tracer.stats().recorded, 2);
+    }
+
+    #[test]
+    fn explicit_trace_id_is_propagated() {
+        let tracer = Tracer::new(16);
+        tracer.set_collecting(true);
+        drop(tracer.request_span(Some(0xbaec1), "m-topo"));
+        let spans = tracer.drain();
+        assert_eq!(spans[0].trace, TraceId(0xbaec1));
+    }
+
+    #[test]
+    fn capacity_bounds_collection_and_counts_drops() {
+        let tracer = Tracer::new(SHARDS); // one span per shard
+        tracer.set_collecting(true);
+        for _ in 0..40 {
+            drop(tracer.request_span(None, "p"));
+        }
+        let stats = tracer.stats();
+        assert_eq!(stats.recorded + stats.dropped, 40);
+        assert!(stats.dropped > 0);
+        assert!(tracer.drain().len() <= SHARDS);
+    }
+
+    #[test]
+    fn listeners_fire_without_collection() {
+        struct Count(AtomicU64);
+        impl SpanListener for Count {
+            fn on_close(&self, _: &SpanRecord) {
+                self.0.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let count = Arc::new(Count(AtomicU64::new(0)));
+        let mut tracer = Tracer::new(16);
+        tracer.add_listener(count.clone());
+        assert!(tracer.is_live());
+        assert!(!tracer.collecting());
+        {
+            let root = tracer.request_span(None, "m-etf");
+            drop(tracer.child(&root, "optimize", "m-etf"));
+        }
+        assert_eq!(count.0.load(Ordering::Relaxed), 2);
+        assert!(tracer.drain().is_empty());
+        assert_eq!(tracer.stats().recorded, 0);
+    }
+
+    #[test]
+    fn cancelled_spans_emit_nothing() {
+        let tracer = Tracer::new(16);
+        tracer.set_collecting(true);
+        {
+            let root = tracer.request_span(None, "m-etf");
+            let mut child = tracer.child(&root, "place", "m-etf");
+            child.cancel();
+        }
+        let spans = tracer.drain();
+        assert_eq!(spans.len(), 1, "only the request span survives");
+        assert_eq!(spans[0].name, "request");
+        assert_eq!(log::trace_context(), 0, "cancel restores the log context");
+    }
+
+    #[test]
+    fn record_at_books_manual_intervals() {
+        let tracer = Tracer::new(16);
+        tracer.set_collecting(true);
+        let trace = tracer.mint_trace();
+        tracer.record_at(trace, None, "cache_hit", "m-etf", 1.0, 1.5, 7, 7);
+        let spans = tracer.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "cache_hit");
+        assert_eq!(spans[0].trace, trace);
+        assert_eq!(spans[0].start_s, 1.0);
+        assert_eq!(spans[0].end_s, 1.5);
+    }
+}

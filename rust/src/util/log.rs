@@ -1,5 +1,12 @@
-//! Leveled stderr logger controlled by `BAECHI_LOG` (error|warn|info|debug).
+//! Leveled stderr logger controlled by `BAECHI_LOG`
+//! (error|warn|info|debug, or numeric 0–3).
+//!
+//! Lines emitted while a telemetry span is open on the current thread
+//! carry that span's trace id as `t=<hex>` (see
+//! [`crate::telemetry::tracer`]), so service logs can be joined with
+//! exported traces.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 
@@ -15,17 +22,41 @@ pub enum Level {
 static LEVEL: AtomicU8 = AtomicU8::new(2);
 static INIT: OnceLock<()> = OnceLock::new();
 
+/// Parse one `BAECHI_LOG` value. Accepts the level names and their
+/// numeric forms (`0`=error … `3`=debug); `None` for anything else.
+pub fn parse_level(v: &str) -> Option<Level> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "error" | "0" => Some(Level::Error),
+        "warn" | "warning" | "1" => Some(Level::Warn),
+        "info" | "2" => Some(Level::Info),
+        "debug" | "3" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
+/// Resolve an environment value to a level, flagging unrecognized
+/// input (which falls back to `Info` rather than silently changing
+/// verbosity in either direction).
+pub fn level_from_env(v: &str) -> (Level, bool) {
+    match parse_level(v) {
+        Some(lvl) => (lvl, false),
+        None => (Level::Info, true),
+    }
+}
+
 /// Initialize from the `BAECHI_LOG` environment variable (idempotent).
+/// An unrecognized value maps to `Info` and warns once on stderr.
 pub fn init() {
     INIT.get_or_init(|| {
         if let Ok(v) = std::env::var("BAECHI_LOG") {
-            let lvl = match v.to_ascii_lowercase().as_str() {
-                "error" => Level::Error,
-                "warn" => Level::Warn,
-                "debug" => Level::Debug,
-                _ => Level::Info,
-            };
+            let (lvl, unknown) = level_from_env(&v);
             LEVEL.store(lvl as u8, Ordering::Relaxed);
+            if unknown {
+                eprintln!(
+                    "[baechi WARN ] BAECHI_LOG={v:?} not recognized \
+                     (expected error|warn|info|debug or 0-3); using info"
+                );
+            }
         }
     });
 }
@@ -42,6 +73,23 @@ pub fn enabled(level: Level) -> bool {
     (level as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
+thread_local! {
+    /// Trace id of the innermost open span on this thread; 0 = none.
+    static TRACE_CTX: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Install `trace` as this thread's log context, returning the
+/// previous value so the caller (a span guard) can restore nesting on
+/// drop. Pass 0 to clear.
+pub fn set_trace_context(trace: u64) -> u64 {
+    TRACE_CTX.with(|c| c.replace(trace))
+}
+
+/// The current thread's trace context (0 = none).
+pub fn trace_context() -> u64 {
+    TRACE_CTX.with(|c| c.get())
+}
+
 /// Emit a log line.
 pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     if enabled(level) {
@@ -51,7 +99,12 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
         };
-        eprintln!("[baechi {tag}] {args}");
+        let ctx = trace_context();
+        if ctx != 0 {
+            eprintln!("[baechi {tag} t={ctx:08x}] {args}");
+        } else {
+            eprintln!("[baechi {tag}] {args}");
+        }
     }
 }
 
@@ -85,5 +138,43 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn parse_level_accepts_names_and_numbers() {
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("0"), Some(Level::Error));
+        assert_eq!(parse_level("WARN"), Some(Level::Warn));
+        assert_eq!(parse_level("warning"), Some(Level::Warn));
+        assert_eq!(parse_level("1"), Some(Level::Warn));
+        assert_eq!(parse_level(" info "), Some(Level::Info));
+        assert_eq!(parse_level("2"), Some(Level::Info));
+        assert_eq!(parse_level("Debug"), Some(Level::Debug));
+        assert_eq!(parse_level("3"), Some(Level::Debug));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level("4"), None);
+        assert_eq!(parse_level(""), None);
+    }
+
+    #[test]
+    fn unknown_env_value_flags_and_falls_back_to_info() {
+        assert_eq!(level_from_env("trace"), (Level::Info, true));
+        assert_eq!(level_from_env("-1"), (Level::Info, true));
+        assert_eq!(level_from_env("debug"), (Level::Debug, false));
+        assert_eq!(level_from_env("0"), (Level::Error, false));
+    }
+
+    #[test]
+    fn trace_context_nests_and_restores() {
+        assert_eq!(trace_context(), 0);
+        let prev = set_trace_context(0xabc);
+        assert_eq!(prev, 0);
+        assert_eq!(trace_context(), 0xabc);
+        let prev2 = set_trace_context(0xdef);
+        assert_eq!(prev2, 0xabc);
+        set_trace_context(prev2);
+        assert_eq!(trace_context(), 0xabc);
+        set_trace_context(prev);
+        assert_eq!(trace_context(), 0);
     }
 }

@@ -674,3 +674,79 @@ fn prop_iterative_zero_rounds_bit_identical_to_place() {
         assert_eq!(it2.baseline_makespan.to_bits(), plain_makespan.to_bits());
     });
 }
+
+#[test]
+fn prop_trace_collection_preserves_bit_identical_responses() {
+    use baechi::engine::{PlacementEngine, PlacementRequest, RecordingObserver};
+
+    prop_check("trace_identity", 40, |rng| {
+        let g = random_dag(rng, 40);
+        let traced = PlacementEngine::builder()
+            .cluster(unit_cluster(3, 1 << 30))
+            .tracing(true)
+            .observer(RecordingObserver::new())
+            .build()
+            .unwrap();
+        let plain = PlacementEngine::builder()
+            .cluster(unit_cluster(3, 1 << 30))
+            .tracing(false)
+            .build()
+            .unwrap();
+        let req = PlacementRequest::new(g, "m-etf");
+        let a = traced.place(&req).unwrap();
+        let b = plain.place(&req).unwrap();
+        // Telemetry must be purely observational: same placement, same
+        // simulation, bit for bit.
+        assert_eq!(a.placement.device_of, b.placement.device_of);
+        assert_eq!(
+            a.placement.predicted_makespan.to_bits(),
+            b.placement.predicted_makespan.to_bits()
+        );
+        assert_eq!(a.devices_used, b.devices_used);
+        let (sa, sb) = (a.sim.as_ref().unwrap(), b.sim.as_ref().unwrap());
+        assert_eq!(sa.makespan.to_bits(), sb.makespan.to_bits());
+        assert_eq!(sa.peak_memory, sb.peak_memory);
+        assert!(!traced.tracer().drain().is_empty(), "spans were collected");
+        assert!(plain.tracer().drain().is_empty(), "nothing booked when off");
+    });
+}
+
+#[test]
+fn prop_trace_sim_schedule_reconstructs_makespan() {
+    prop_check("trace_schedule", 120, |rng| {
+        let g = random_dag(rng, 50);
+        let n_dev = rng.range(2, 5);
+        let cluster = unit_cluster(n_dev, u64::MAX / 4);
+        let placement: std::collections::BTreeMap<_, _> = g
+            .node_ids()
+            .map(|id| (id, baechi::graph::DeviceId(rng.range(0, n_dev))))
+            .collect();
+        let r = simulate(&g, &cluster, &placement, SimConfig::default());
+        assert!(r.ok());
+        // The recorded schedule reproduces the makespan exactly — this
+        // is what makes the exported timeline trustworthy.
+        assert_eq!(r.schedule.max_end().to_bits(), r.makespan.to_bits());
+        assert_eq!(r.schedule.ops.len(), g.len(), "every op has a span");
+        for op in &r.schedule.ops {
+            assert!(op.end >= op.start - 1e-12);
+            assert!(op.start >= -1e-9 && op.end <= r.makespan + 1e-9);
+        }
+        for tr in &r.schedule.transfers {
+            assert!(tr.end >= tr.start - 1e-12);
+            assert!(tr.start >= -1e-9 && tr.end <= r.makespan + 1e-9);
+            assert!(!tr.links.is_empty(), "a transfer rides ≥1 link");
+        }
+        // Devices execute one op at a time, so per-device intervals
+        // must not overlap (beyond fp rounding of reconstructed starts).
+        let mut per_dev: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n_dev];
+        for op in &r.schedule.ops {
+            per_dev[op.device].push((op.start, op.end));
+        }
+        for ivals in &mut per_dev {
+            ivals.sort_by(|x, y| x.0.total_cmp(&y.0));
+            for w in ivals.windows(2) {
+                assert!(w[1].0 >= w[0].1 - 1e-9, "device ops overlap: {w:?}");
+            }
+        }
+    });
+}

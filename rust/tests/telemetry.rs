@@ -1,0 +1,330 @@
+//! Integration tests for the telemetry layer: span collection through
+//! the engine and service, Chrome trace-event export (pipeline tracks +
+//! simulated-plan tracks), and Prometheus metrics exposition.
+
+use baechi::coordinator::{run_serve_bench, run_traced, BaechiConfig, PlacerKind, ServeBenchOpts};
+use baechi::engine::{PlacementEngine, PlacementRequest};
+use baechi::graph::{MemorySpec, OpGraph, OpKind};
+use baechi::models::Benchmark;
+use baechi::profile::{Cluster, CommModel};
+use baechi::serve::{PlacementService, ServiceConfig};
+use baechi::telemetry::prometheus::parse_text;
+use baechi::telemetry::{MetricsServer, SpanRecord};
+use baechi::util::json::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn unit_cluster(n: usize, mem: u64) -> Cluster {
+    Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0).unwrap())
+}
+
+fn traced_engine() -> PlacementEngine {
+    PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 30))
+        .tracing(true)
+        .build()
+        .unwrap()
+}
+
+const STAGES: [&str; 4] = ["optimize", "place", "expand", "simulate"];
+
+fn spans_named<'a>(spans: &'a [SpanRecord], name: &str) -> Vec<&'a SpanRecord> {
+    spans.iter().filter(|s| s.name == name).collect()
+}
+
+#[test]
+fn tracing_disabled_engine_is_inert() {
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1 << 30))
+        .tracing(false)
+        .build()
+        .unwrap();
+    assert!(!engine.tracer().is_live());
+    let r = engine
+        .place(&PlacementRequest::new(Benchmark::LinReg.graph(), "m-etf"))
+        .unwrap();
+    assert!(r.sim.is_some());
+    let stats = engine.tracer().stats();
+    assert_eq!(stats.recorded, 0);
+    assert_eq!(stats.dropped, 0);
+    assert!(!stats.collecting);
+    assert!(engine.tracer().drain().is_empty());
+}
+
+#[test]
+fn stage_spans_nest_inside_request_span() {
+    let engine = traced_engine();
+    engine
+        .place(&PlacementRequest::new(Benchmark::LinReg.graph(), "m-etf"))
+        .unwrap();
+    let spans = engine.tracer().drain();
+    let requests = spans_named(&spans, "request");
+    assert_eq!(requests.len(), 1);
+    let root = requests[0];
+    for stage in STAGES {
+        let found = spans_named(&spans, stage);
+        assert_eq!(found.len(), 1, "exactly one {stage} span: {spans:?}");
+        let s = found[0];
+        assert_eq!(s.trace, root.trace, "{stage} shares the request trace");
+        assert_eq!(s.parent, Some(root.span), "{stage} parented to request");
+        assert!(s.start_s >= root.start_s - 1e-9, "{stage} starts inside request");
+        assert!(s.end_s <= root.end_s + 1e-9, "{stage} ends inside request");
+        assert!(s.end_s >= s.start_s, "{stage} well-formed interval");
+        assert_eq!(s.detail, "m-etf");
+    }
+    assert!(spans_named(&spans, "cache_hit").is_empty());
+}
+
+#[test]
+fn cache_hit_span_rides_its_own_request_span() {
+    let engine = traced_engine();
+    let req = PlacementRequest::new(Benchmark::LinReg.graph(), "m-etf");
+    engine.place(&req).unwrap();
+    engine.tracer().drain();
+    engine.place(&req).unwrap();
+    let spans = engine.tracer().drain();
+    let requests = spans_named(&spans, "request");
+    assert_eq!(requests.len(), 1);
+    let hits = spans_named(&spans, "cache_hit");
+    assert_eq!(hits.len(), 1, "second place is a cache hit: {spans:?}");
+    assert_eq!(hits[0].trace, requests[0].trace);
+    assert_eq!(hits[0].parent, Some(requests[0].span));
+    // The hit skipped the pipeline: no stage spans.
+    for stage in STAGES {
+        assert!(spans_named(&spans, stage).is_empty(), "no {stage} on a hit");
+    }
+}
+
+#[test]
+fn failed_placement_cancels_the_stage_span() {
+    // 3 × 800-byte ops on a 2 × 1000-byte cluster: the placer must fail.
+    let mut g = OpGraph::new("big");
+    for i in 0..3 {
+        let id = g.add_node(&format!("op{i}"), OpKind::MatMul);
+        g.node_mut(id).mem = MemorySpec {
+            params: 800,
+            ..Default::default()
+        };
+    }
+    let engine = PlacementEngine::builder()
+        .cluster(unit_cluster(2, 1000))
+        .tracing(true)
+        .build()
+        .unwrap();
+    assert!(engine.place(&PlacementRequest::new(g, "m-etf")).is_err());
+    let spans = engine.tracer().drain();
+    // The optimizer ran and the request envelope closed, but the failed
+    // place stage (and everything after it) emitted nothing — observers
+    // see the same silence they did pre-telemetry.
+    assert_eq!(spans_named(&spans, "optimize").len(), 1);
+    assert_eq!(spans_named(&spans, "request").len(), 1);
+    assert!(spans_named(&spans, "place").is_empty());
+    assert!(spans_named(&spans, "expand").is_empty());
+    assert!(spans_named(&spans, "simulate").is_empty());
+}
+
+#[test]
+fn service_stamps_trace_ids_and_books_queue_waits() {
+    let engine = Arc::new(traced_engine());
+    let mut scfg = ServiceConfig::default();
+    scfg.workers = 2;
+    let service = PlacementService::new(Arc::clone(&engine), scfg).unwrap();
+    for _ in 0..3 {
+        service
+            .place(PlacementRequest::new(Benchmark::LinReg.graph(), "m-etf"))
+            .unwrap();
+    }
+    drop(service);
+    let spans = engine.tracer().drain();
+    let queued = spans_named(&spans, "queued");
+    assert_eq!(queued.len(), 3, "one queue-wait span per request: {spans:?}");
+    for q in &queued {
+        assert_ne!(q.trace.0, 0, "intake minted a real trace id");
+        assert!(q.end_s >= q.start_s);
+    }
+    // Every queued span's trace id connects to spans from the serving
+    // path of the same request (request envelope or cache-hit lookup).
+    for q in &queued {
+        assert!(
+            spans
+                .iter()
+                .any(|s| s.trace == q.trace && s.name != "queued"),
+            "trace {:?} has serving-side spans",
+            q.trace
+        );
+    }
+    // Distinct requests got distinct trace ids.
+    let mut ids: Vec<u64> = queued.iter().map(|q| q.trace.0).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 3);
+}
+
+/// Pull the `ph:"X"` complete events of one pid out of an exported doc.
+fn complete_events(doc: &Json, pid: u64) -> Vec<&Json> {
+    doc.get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array")
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("X")
+                && e.get("pid").and_then(|p| p.as_u64()) == Some(pid)
+        })
+        .collect()
+}
+
+#[test]
+fn serve_bench_trace_export_nests_every_stage_in_its_request() {
+    let cfg = BaechiConfig::paper_default(Benchmark::LinReg, PlacerKind::MEtf);
+    let opts = ServeBenchOpts {
+        requests: 16,
+        clients: 2,
+        mutation_rate: 0.4,
+        workers: 2,
+        trace: true,
+        ..ServeBenchOpts::default()
+    };
+    let report = run_serve_bench(&cfg, &opts).unwrap();
+    let doc = report.trace.as_ref().expect("trace requested");
+    // The export is valid JSON end to end (what the CLI writes to disk).
+    let parsed = Json::parse(&doc.pretty()).unwrap();
+    let events = complete_events(&parsed, 1);
+    assert!(!events.is_empty(), "pipeline track has events");
+
+    let ev_trace = |e: &Json| e.get("args").and_then(|a| a.get("trace")).and_then(|t| t.as_u64());
+    let ts = |e: &Json| e.get("ts").unwrap().as_f64().unwrap();
+    let dur = |e: &Json| e.get("dur").unwrap().as_f64().unwrap();
+    let mut stage_events = 0;
+    for e in &events {
+        let name = e.get("name").unwrap().as_str().unwrap();
+        if !STAGES.contains(&name) {
+            continue;
+        }
+        stage_events += 1;
+        let trace = ev_trace(e).expect("stage events carry their trace id");
+        let req = events
+            .iter()
+            .find(|r| {
+                r.get("name").unwrap().as_str() == Some("request") && ev_trace(r) == Some(trace)
+            })
+            .unwrap_or_else(|| panic!("stage {name} (trace {trace}) has a request event"));
+        // Nesting, in exported microseconds (0.5 µs rounding slack).
+        assert!(ts(e) >= ts(req) - 0.5, "{name} starts inside its request");
+        assert!(
+            ts(e) + dur(e) <= ts(req) + dur(req) + 0.5,
+            "{name} ends inside its request"
+        );
+    }
+    assert!(stage_events > 0, "the stream ran full pipelines");
+    // The service stamped queue waits into the same document.
+    assert!(
+        events
+            .iter()
+            .any(|e| e.get("name").unwrap().as_str() == Some("queued")),
+        "queued spans exported"
+    );
+}
+
+#[test]
+fn run_traced_sim_track_reconstructs_the_simulated_makespan() {
+    let cfg = BaechiConfig::paper_default(Benchmark::LinReg, PlacerKind::MEtf);
+    let (report, doc) = run_traced(&cfg).unwrap();
+    assert!(report.sim.ok());
+    // The recorded schedule reproduces the makespan to the exact bit.
+    assert_eq!(
+        report.sim.schedule.max_end().to_bits(),
+        report.sim.makespan.to_bits(),
+        "schedule max end {} vs makespan {}",
+        report.sim.schedule.max_end(),
+        report.sim.makespan
+    );
+    let parsed = Json::parse(&doc.pretty()).unwrap();
+    // Pipeline track exists (the traced run collected spans) …
+    assert!(!complete_events(&parsed, 1).is_empty());
+    // … and the simulated-plan track's latest interval end equals the
+    // makespan in exported microseconds.
+    let sim_events = complete_events(&parsed, 2);
+    assert!(!sim_events.is_empty(), "simulated plan track has events");
+    let max_end_us = sim_events
+        .iter()
+        .map(|e| e.get("ts").unwrap().as_f64().unwrap() + e.get("dur").unwrap().as_f64().unwrap())
+        .fold(0.0, f64::max);
+    assert!(
+        (max_end_us - report.sim.makespan * 1e6).abs() < 1e-3,
+        "track max end {max_end_us} µs vs makespan {} µs",
+        report.sim.makespan * 1e6
+    );
+    // Every simulated interval is well-formed and inside the step.
+    for e in &sim_events {
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        let dur = e.get("dur").unwrap().as_f64().unwrap();
+        assert!(ts >= 0.0 && dur >= 0.0);
+        assert!(ts + dur <= report.sim.makespan * 1e6 + 1e-3);
+    }
+}
+
+#[test]
+fn metrics_text_is_valid_prometheus_exposition() {
+    let engine = Arc::new(traced_engine());
+    let mut scfg = ServiceConfig::default();
+    scfg.workers = 1;
+    let service = PlacementService::new(Arc::clone(&engine), scfg).unwrap();
+    let req = PlacementRequest::new(Benchmark::LinReg.graph(), "m-etf");
+    for _ in 0..3 {
+        service.place(req.clone()).unwrap();
+    }
+    let text = service.metrics_text();
+    let samples = parse_text(&text).unwrap_or_else(|e| panic!("must parse: {e}\n{text}"));
+    let find = |name: &str| {
+        samples
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing {name}"))
+            .value
+    };
+    assert_eq!(find("baechi_requests_submitted_total"), 3.0);
+    assert_eq!(find("baechi_requests_completed_total"), 3.0);
+    assert_eq!(find("baechi_request_errors_total"), 0.0);
+    assert_eq!(find("baechi_trace_collecting"), 1.0);
+    assert!(find("baechi_trace_spans_recorded_total") > 0.0);
+    // Mode-labelled family: the repeats hit the cache.
+    let hit = samples
+        .iter()
+        .find(|s| {
+            s.name == "baechi_served_total"
+                && s.labels.iter().any(|(k, v)| k == "mode" && v == "cache_hit")
+        })
+        .expect("served_total{mode=cache_hit}");
+    assert!(hit.value >= 1.0, "repeats must hit the cache: {text}");
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn metrics_server_scrapes_the_live_service() {
+    let engine = Arc::new(traced_engine());
+    let service =
+        Arc::new(PlacementService::new(Arc::clone(&engine), ServiceConfig::default()).unwrap());
+    let svc = Arc::clone(&service);
+    let server = MetricsServer::bind("127.0.0.1:0", move || svc.metrics_text()).unwrap();
+    service
+        .place(PlacementRequest::new(Benchmark::LinReg.graph(), "m-etf"))
+        .unwrap();
+    let ok = http_get(server.addr(), "/metrics");
+    assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+    assert!(ok.contains("version=0.0.4"), "content-type advertises 0.0.4");
+    let body = ok.split("\r\n\r\n").nth(1).expect("body");
+    let samples = parse_text(body).unwrap_or_else(|e| panic!("scrape must parse: {e}"));
+    assert!(samples
+        .iter()
+        .any(|s| s.name == "baechi_requests_completed_total" && s.value == 1.0));
+    let missing = http_get(server.addr(), "/nope");
+    assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+}

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Validate a `baechi trace` export as Chrome trace-event JSON.
+
+Checks, beyond "it parses":
+
+* the document is an object with a ``traceEvents`` list;
+* every complete (``ph: "X"``) event has a non-negative ``ts`` and
+  ``dur``, a ``pid``/``tid``, and a name;
+* on the pipeline track (pid 1), every engine stage span (optimize /
+  place / expand / simulate) nests inside the request span of the same
+  trace id, within a 0.5 µs rounding slack.
+
+Exit status 0 when valid, 1 with a diagnostic otherwise. Used by ci.sh
+on the `baechi trace` smoke artifact.
+"""
+
+import json
+import sys
+
+PIPELINE_PID = 1
+STAGES = {"optimize", "place", "expand", "simulate"}
+SLACK_US = 0.5
+
+
+def fail(msg):
+    print(f"validate_trace: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: {e}")
+
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        fail(f"{path}: no traceEvents array")
+    events = doc["traceEvents"]
+
+    complete = [e for e in events if e.get("ph") == "X"]
+    if not complete:
+        fail(f"{path}: no complete (ph=X) events")
+    for e in complete:
+        name = e.get("name")
+        if not name:
+            fail(f"unnamed X event: {e}")
+        for key in ("ts", "dur"):
+            v = e.get(key)
+            if not isinstance(v, (int, float)) or v < 0:
+                fail(f"{name}: bad {key} {v!r}")
+        for key in ("pid", "tid"):
+            if not isinstance(e.get(key), int):
+                fail(f"{name}: bad {key} {e.get(key)!r}")
+
+    pipeline = [e for e in complete if e["pid"] == PIPELINE_PID]
+    requests = {}
+    for e in pipeline:
+        if e["name"] == "request":
+            trace = e.get("args", {}).get("trace")
+            if trace is None:
+                fail("request event without args.trace")
+            requests[trace] = e
+
+    checked = 0
+    for e in pipeline:
+        if e["name"] not in STAGES:
+            continue
+        trace = e.get("args", {}).get("trace")
+        if trace is None:
+            fail(f"{e['name']} event without args.trace")
+        req = requests.get(trace)
+        if req is None:
+            fail(f"{e['name']} (trace {trace}) has no request span")
+        if e["ts"] < req["ts"] - SLACK_US:
+            fail(f"{e['name']} starts before its request span")
+        if e["ts"] + e["dur"] > req["ts"] + req["dur"] + SLACK_US:
+            fail(f"{e['name']} ends after its request span")
+        checked += 1
+    if not requests:
+        fail("pipeline track has no request spans")
+    if not checked:
+        fail("pipeline track has no stage spans")
+
+    print(
+        f"{path}: ok — {len(complete)} events, {len(requests)} request "
+        f"span(s), {checked} nested stage span(s)"
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        fail("usage: validate_trace.py <trace.json>")
+    main(sys.argv[1])
