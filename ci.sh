@@ -19,6 +19,15 @@ fi
 fast=0
 [[ "${1:-}" == "--fast" ]] && fast=1
 
+# The full gate shells out to python3 (trace validation, bench
+# regression gate); fail up front rather than 10 minutes in.
+if [[ "$fast" == 0 ]] && ! command -v python3 >/dev/null 2>&1; then
+    echo "error: 'python3' not found on PATH (needed by the full gate's" >&2
+    echo "trace-validation and bench-regression stages). Install python3" >&2
+    echo "or run ./ci.sh --fast." >&2
+    exit 1
+fi
+
 stage() {
     echo "==> $*"
     local t0=$SECONDS
@@ -62,9 +71,26 @@ if [[ "$fast" == 0 ]]; then
     # its request span (uploaded as the trace-smoke CI artifact).
     stage ./target/release/baechi trace --model linreg --placer m-etf --out trace-smoke.json
     stage python3 tools/validate_trace.py trace-smoke.json
+    # Hierarchical placement suite: coarsen/refine unit tests plus the
+    # hier property tests (contraction acyclicity, super-op aggregation,
+    # expand/coarsen identity, zero-coarsening ≡ m-SCT, memory safety).
+    stage cargo test -q hier
+    # Scaling bench smoke run: 100K-op synthetic graph through flat
+    # m-SCT and the hier placer; the in-bench assertion requires hier to
+    # be strictly faster, and the run emits
+    # bench-json/BENCH_table3_placement_time.json for the gate below.
+    stage env BAECHI_BENCH_JSON=bench-json cargo bench --bench table3_placement_time -- --smoke
+    # Bench regression gate: compare the fresh bench JSON written above
+    # against committed baselines (bench-baselines/), with tolerances
+    # from bench-baselines/tolerances.json. Gate the gate's own tests
+    # first so a checker bug can't masquerade as a green bench run.
+    stage python3 tools/test_check_bench.py
+    stage python3 tools/check_bench.py --fresh bench-json --baselines bench-baselines
     stage cargo fmt --check
     stage cargo clippy --all-targets -- -D warnings
     stage cargo doc --no-deps
+else
+    echo "fast mode: skipped stages: named test suites (calibration, flow, serve, incremental, telemetry, trace, hier), bench smoke runs (fig12_serving, table3_placement_time), bench regression gate (check_bench), trace smoke + validation, fmt, clippy, doc"
 fi
 
 echo "CI green."

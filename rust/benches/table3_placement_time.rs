@@ -1,25 +1,35 @@
 //! Paper Table 3: time to generate a placement for the 4-GPU target —
 //! Baechi's algorithmic placers (measured) vs the learning-based
 //! baseline (RL episodes × per-episode step-evaluation cost, the
-//! normalized metric the paper uses for HierarchicalRL/Placeto).
+//! normalized metric the paper uses for HierarchicalRL/Placeto) — plus
+//! the scaled-up section: `hier` (coarsen→place→refine) vs flat m-SCT
+//! on synthetic 100K–1M-op graphs, where placement *speed* is the whole
+//! point.
 //!
 //! The algorithmic placers are served through the `PlacementEngine`
 //! (one engine per benchmark, one request per placer, served
 //! sequentially for measurement isolation), so the numbers measure
 //! exactly the serving path the crate exposes.
 //!
-//! Expected shape: Baechi in milliseconds-to-seconds; learning-based
-//! placement orders of magnitude slower because every sample requires a
-//! full step execution on the target cluster.
+//! Asserted: at every synthetic size ≥ 100K ops the hierarchical placer
+//! is strictly faster than flat m-SCT on the same graph — the coarse
+//! graph m-SCT sees is orders of magnitude smaller, and the refine
+//! sweep is linear.
+//!
+//! `--smoke` (or BAECHI_BENCH_SMOKE=1) runs only the 100K-op scale
+//! comparison (what the CI bench gate checks); the full run adds the
+//! paper table, the RL projection, and the 300K / 1M sizes.
 
 use baechi::baselines::rl::{RlConfig, RlPlacer};
 use baechi::coordinator::{engine_for, BaechiConfig, PlacerKind};
 use baechi::engine::PlacementRequest;
 use baechi::models::Benchmark;
 use baechi::optimizer::{optimize, OptConfig};
+use baechi::util::bench::maybe_write_json;
+use baechi::util::json::Json;
 use baechi::util::table::{fmt_secs, Table};
 
-fn main() {
+fn paper_table(json_rows: &mut Vec<Json>) {
     let benchmarks = [
         Benchmark::InceptionV3 { batch: 32 },
         Benchmark::Gnmt {
@@ -66,6 +76,11 @@ fn main() {
             if placer == "m-sct" {
                 msct_time = r.placement.placement_time;
             }
+            let mut j = Json::obj();
+            j.set("name", format!("{placer}/{}", b.name()).as_str())
+                .set("placement_time_s", r.placement.placement_time)
+                .set("ops", r.placement.device_of.len());
+            json_rows.push(j);
         }
         // RL baseline on the optimized graph (sane action space).
         let g = b.graph();
@@ -93,4 +108,71 @@ fn main() {
         "paper: Inception 1.8–11.8 h (RL) vs 1–10 s (Baechi); GNMT 1.9–2.9 days vs ≤48 s;\n\
          shape check = Baechi orders of magnitude faster."
     );
+}
+
+fn scale_table(sizes: &[usize], json_rows: &mut Vec<Json>) {
+    let mut t = Table::new(
+        "Scale — hier (coarsen→place→refine) vs flat m-SCT (4 devices)",
+        &["ops", "m-sct", "hier", "speedup"],
+    );
+    for &ops in sizes {
+        let b = Benchmark::Synthetic { ops };
+        let cfg = BaechiConfig::paper_default(
+            b,
+            PlacerKind::Hier {
+                enabled: true,
+                max_members: 0,
+            },
+        );
+        let engine = engine_for(&cfg).expect("engine");
+        // One graph build, shared by both requests: at 1M ops the
+        // generator itself is non-trivial and must not skew either side.
+        let g = b.graph();
+        let mut times = [f64::NAN; 2];
+        for (i, placer) in ["m-sct", "hier"].into_iter().enumerate() {
+            let req = PlacementRequest::new(g.clone(), placer).without_simulation();
+            let r = engine.place(&req).expect("placement");
+            assert_eq!(
+                r.placement.device_of.len(),
+                ops,
+                "{placer}: every op must be placed"
+            );
+            times[i] = r.placement.placement_time;
+            let mut j = Json::obj();
+            j.set("name", format!("{placer}/{}", b.name()).as_str())
+                .set("placement_time_s", r.placement.placement_time)
+                .set("ops", ops);
+            json_rows.push(j);
+        }
+        let [msct, hier] = times;
+        assert!(
+            hier < msct,
+            "hier must beat flat m-SCT at {ops} ops ({hier}s vs {msct}s)"
+        );
+        t.row(&[
+            ops.to_string(),
+            fmt_secs(msct),
+            fmt_secs(hier),
+            format!("{:.1}×", msct / hier),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BAECHI_BENCH_SMOKE").is_ok();
+    let mut json_rows: Vec<Json> = Vec::new();
+    if !smoke {
+        paper_table(&mut json_rows);
+    }
+    let sizes: &[usize] = if smoke {
+        &[100_000]
+    } else {
+        &[100_000, 300_000, 1_000_000]
+    };
+    scale_table(sizes, &mut json_rows);
+    let mut summary = Json::obj();
+    summary.set("smoke", smoke);
+    maybe_write_json("table3_placement_time", json_rows, Some(summary));
 }

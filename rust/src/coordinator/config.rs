@@ -34,6 +34,9 @@ pub enum PlacerKind {
     MSctLp,
     /// REINFORCE baseline with this many episodes.
     Rl { episodes: usize },
+    /// Hierarchical coarsen→place→refine for very large graphs.
+    /// `max_members == 0` keeps the default super-op size cap.
+    Hier { enabled: bool, max_members: usize },
 }
 
 impl PlacerKind {
@@ -52,6 +55,20 @@ impl PlacerKind {
                     .and_then(|e| e.parse().ok())
                     .unwrap_or(200);
                 PlacerKind::Rl { episodes }
+            }
+            "hier:off" => PlacerKind::Hier {
+                enabled: false,
+                max_members: 0,
+            },
+            s if s.starts_with("hier") => {
+                let max_members = s
+                    .strip_prefix("hier:")
+                    .and_then(|e| e.parse().ok())
+                    .unwrap_or(0);
+                PlacerKind::Hier {
+                    enabled: true,
+                    max_members,
+                }
             }
             other => {
                 return Err(BaechiError::UnknownPlacer {
@@ -72,6 +89,7 @@ impl PlacerKind {
             PlacerKind::MSctHeuristic => "m-sct-heur",
             PlacerKind::MSctLp => "m-sct-lp",
             PlacerKind::Rl { .. } => "rl",
+            PlacerKind::Hier { .. } => "hier",
         }
     }
 
@@ -86,6 +104,11 @@ impl PlacerKind {
             PlacerKind::MSctHeuristic => "m-sct-heur".to_string(),
             PlacerKind::MSctLp => "m-sct-lp".to_string(),
             PlacerKind::Rl { episodes } => format!("rl:{episodes}"),
+            PlacerKind::Hier {
+                enabled: false, ..
+            } => "hier:off".to_string(),
+            PlacerKind::Hier { max_members: 0, .. } => "hier".to_string(),
+            PlacerKind::Hier { max_members, .. } => format!("hier:{max_members}"),
         }
     }
 
@@ -315,9 +338,10 @@ impl BaechiConfig {
     /// PCIe, TF memory semantics.
     pub fn paper_default(benchmark: Benchmark, placer: PlacerKind) -> BaechiConfig {
         let framework = match benchmark {
-            Benchmark::InceptionV3 { .. } | Benchmark::Gnmt { .. } | Benchmark::LinReg => {
-                Framework::TensorFlow
-            }
+            Benchmark::InceptionV3 { .. }
+            | Benchmark::Gnmt { .. }
+            | Benchmark::LinReg
+            | Benchmark::Synthetic { .. } => Framework::TensorFlow,
             Benchmark::Transformer { .. } | Benchmark::Mlp => Framework::PyTorch,
         };
         let comm = CommModel::pcie_via_host();
@@ -431,6 +455,29 @@ mod tests {
             PlacerKind::parse("rl:50").unwrap(),
             PlacerKind::Rl { episodes: 50 }
         );
+        assert_eq!(
+            PlacerKind::parse("hier").unwrap(),
+            PlacerKind::Hier {
+                enabled: true,
+                max_members: 0
+            }
+        );
+        assert_eq!(
+            PlacerKind::parse("hier:128").unwrap(),
+            PlacerKind::Hier {
+                enabled: true,
+                max_members: 128
+            }
+        );
+        assert_eq!(
+            PlacerKind::parse("hier:off").unwrap(),
+            PlacerKind::Hier {
+                enabled: false,
+                max_members: 0
+            }
+        );
+        assert_eq!(PlacerKind::parse("hier:128").unwrap().spec(), "hier:128");
+        assert_eq!(PlacerKind::parse("hier:off").unwrap().spec(), "hier:off");
         assert!(PlacerKind::parse("nope").is_err());
     }
 
@@ -457,6 +504,18 @@ mod tests {
             PlacerKind::MSctHeuristic,
             PlacerKind::MSctLp,
             PlacerKind::Rl { episodes: 5 },
+            PlacerKind::Hier {
+                enabled: true,
+                max_members: 0,
+            },
+            PlacerKind::Hier {
+                enabled: true,
+                max_members: 16,
+            },
+            PlacerKind::Hier {
+                enabled: false,
+                max_members: 0,
+            },
         ] {
             let resolved = registry
                 .resolve(&kind.spec(), Some(Benchmark::Mlp))

@@ -215,6 +215,19 @@ pub fn opt_fingerprint(o: &OptConfig) -> u64 {
     h.finish()
 }
 
+/// Fingerprint of a hierarchical-coarsening override. The cache key
+/// reserves `0` for "no override", so this is only called for `Some`
+/// configs (an FNV collision with 0 is as unlikely as any other).
+pub fn coarsen_fingerprint(c: &crate::hierarchy::CoarsenConfig) -> u64 {
+    let mut h = Fnv::new();
+    h.write_bool(c.enabled);
+    h.write_usize(c.max_members);
+    h.write_usize(c.rounds);
+    h.write_bool(c.fuse_chains);
+    h.write_bool(c.fuse_groups);
+    h.finish()
+}
+
 /// Fingerprint of the simulator configuration.
 pub fn sim_fingerprint(s: &SimConfig) -> u64 {
     let mut h = Fnv::new();
@@ -342,6 +355,21 @@ mod tests {
         assert_ne!(
             opt_fingerprint(&OptConfig::default()),
             opt_fingerprint(&OptConfig::none())
+        );
+    }
+
+    #[test]
+    fn coarsen_fingerprint_distinguishes_configs() {
+        use crate::hierarchy::CoarsenConfig;
+        let base = CoarsenConfig::default();
+        assert_eq!(coarsen_fingerprint(&base), coarsen_fingerprint(&base));
+        assert_ne!(
+            coarsen_fingerprint(&base),
+            coarsen_fingerprint(&CoarsenConfig::off())
+        );
+        assert_ne!(
+            coarsen_fingerprint(&base),
+            coarsen_fingerprint(&CoarsenConfig::with_max_members(8))
         );
     }
 }

@@ -58,6 +58,7 @@ pub use registry::{PlacerContext, PlacerRegistration, PlacerRegistry, ResolvedPl
 use crate::error::BaechiError;
 use crate::feedback::{ReplacementPolicy, ReplacementRound, TopologyAdjustment};
 use crate::graph::OpGraph;
+use crate::hierarchy::CoarsenConfig;
 use crate::models::Benchmark;
 use crate::optimizer::{self, OptConfig, OptStats};
 use crate::placer::Placement;
@@ -91,6 +92,10 @@ pub struct PlacementRequest {
     /// cluster's own topology). Part of the cache fingerprint: requests
     /// differing only in topology never share a cached plan.
     pub topology: Option<Topology>,
+    /// Hierarchical-coarsening knobs for the `hier` placer (None = the
+    /// placer's defaults; a spec arg like `"hier:128"` still wins). Part
+    /// of the cache fingerprint.
+    pub coarsen: Option<CoarsenConfig>,
     /// Evaluate the expanded placement in the execution simulator.
     pub simulate: bool,
     /// Telemetry trace id to attribute this request's spans to (stamped
@@ -108,6 +113,7 @@ impl PlacementRequest {
             benchmark: None,
             opt: None,
             topology: None,
+            coarsen: None,
             simulate: true,
             trace: None,
         }
@@ -132,6 +138,13 @@ impl PlacementRequest {
     /// engine cluster's (must cover the same device count).
     pub fn with_topology(mut self, topology: Topology) -> PlacementRequest {
         self.topology = Some(topology);
+        self
+    }
+
+    /// Override the hierarchical-coarsening knobs for this request
+    /// (consumed by the `hier` placer; other placers ignore it).
+    pub fn with_coarsening(mut self, cfg: CoarsenConfig) -> PlacementRequest {
+        self.coarsen = Some(cfg);
         self
     }
 
@@ -207,6 +220,8 @@ struct CacheKey {
     cluster: u64,
     opt: u64,
     sim: u64,
+    /// Coarsening-override fingerprint (`0` = request carried none).
+    coarsen: u64,
     placer: String,
     /// Benchmark identity — part of the key because benchmark-keyed
     /// placers (the expert) produce different placements for the same
@@ -222,6 +237,7 @@ impl CacheKey {
         h.write_u64(self.cluster);
         h.write_u64(self.opt);
         h.write_u64(self.sim);
+        h.write_u64(self.coarsen);
         h.write_str(&self.placer);
         h.write_opt_str(self.benchmark.as_deref());
         h.finish()
@@ -491,7 +507,9 @@ impl PlacementEngine {
     /// [`Self::lookup`] so a peek and the subsequent placement agree on
     /// the key bit-for-bit.
     fn keyed<'req>(&self, req: &'req PlacementRequest) -> crate::Result<Keyed<'req>> {
-        let resolved = self.registry.resolve(&req.placer, req.benchmark)?;
+        let resolved = self
+            .registry
+            .resolve_with(&req.placer, req.benchmark, req.coarsen)?;
         // Per-request topology override: fold the topology into the
         // cluster fingerprint so the cache cannot serve a stale plan.
         // An override identical to the engine's own topology is served
@@ -517,6 +535,10 @@ impl PlacementEngine {
             cluster: cluster_fp,
             opt: fingerprint::opt_fingerprint(&ocfg),
             sim: if req.simulate { self.sim_fp } else { 0 },
+            coarsen: req
+                .coarsen
+                .map(|c| fingerprint::coarsen_fingerprint(&c))
+                .unwrap_or(0),
             placer: req.placer.clone(),
             benchmark: req.benchmark.map(|b| b.name()),
         };
@@ -976,6 +998,27 @@ mod tests {
             .place(&PlacementRequest::new(g, "m-etf").with_opt(OptConfig::none()))
             .unwrap();
         assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(e.cache_stats().misses, 2);
+    }
+
+    #[test]
+    fn coarsening_override_changes_key() {
+        let e = engine(2, 1 << 30);
+        let g = crate::models::synthetic::synthetic_graph(300);
+        let a = e
+            .place(&PlacementRequest::new(g.clone(), "hier").without_simulation())
+            .unwrap();
+        let b = e
+            .place(
+                &PlacementRequest::new(g, "hier")
+                    .without_simulation()
+                    .with_coarsening(CoarsenConfig::off()),
+            )
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "coarsen must be part of the key");
+        assert_eq!(a.placement.algorithm, "hier");
+        // Disabled coarsening delegates wholesale to plain m-SCT.
+        assert_eq!(b.placement.algorithm, "m-sct");
         assert_eq!(e.cache_stats().misses, 2);
     }
 

@@ -9,6 +9,7 @@
 
 use crate::baselines::{expert::Expert, rl::RlConfig, rl::RlPlacer, single::SingleDevice};
 use crate::error::BaechiError;
+use crate::hierarchy::{CoarsenConfig, HierPlacer};
 use crate::models::Benchmark;
 use crate::placer::{metf::MEtf, msct::MSct, mtopo::MTopo, Placer};
 use std::collections::BTreeMap;
@@ -20,6 +21,9 @@ pub struct PlacerContext<'a> {
     pub arg: Option<&'a str>,
     /// Benchmark identity, for placers keyed to a model (the expert).
     pub benchmark: Option<Benchmark>,
+    /// Request-level coarsening override for the `hier` placer
+    /// (`PlacementRequest::with_coarsening`); the spec arg still wins.
+    pub coarsen: Option<CoarsenConfig>,
 }
 
 /// Factory producing a fresh placer per request. `Send + Sync` because
@@ -88,7 +92,8 @@ impl PlacerRegistry {
 
     /// Registry pre-populated with every built-in placer:
     /// `single`, `expert`, `m-topo`, `m-etf`, `m-sct`, `m-sct-heur`,
-    /// `m-sct-lp`, and `rl[:episodes]` (plus dash-less aliases).
+    /// `m-sct-lp`, `hier[:off|:<max_members>]`, and `rl[:episodes]`
+    /// (plus dash-less aliases).
     pub fn with_builtins() -> PlacerRegistry {
         let mut r = PlacerRegistry::empty();
         r.register(
@@ -117,6 +122,26 @@ impl PlacerRegistry {
         r.register(
             "m-sct-lp",
             PlacerRegistration::new(|_| Ok(Box::new(MSct::with_lp()))),
+        );
+        r.register(
+            "hier",
+            PlacerRegistration::new(|ctx| {
+                let mut cfg = ctx.coarsen.unwrap_or_default();
+                match ctx.arg {
+                    None => {}
+                    Some("off") => cfg.enabled = false,
+                    Some(a) => {
+                        let n: usize = a.parse().map_err(|_| {
+                            BaechiError::invalid(format!(
+                                "hier arg must be 'off' or a max super-op size, got '{a}'"
+                            ))
+                        })?;
+                        cfg.enabled = true;
+                        cfg.max_members = n.max(2);
+                    }
+                }
+                Ok(Box::new(HierPlacer::new(cfg)))
+            }),
         );
         r.register(
             "rl",
@@ -164,6 +189,18 @@ impl PlacerRegistry {
         spec: &str,
         benchmark: Option<Benchmark>,
     ) -> crate::Result<ResolvedPlacer> {
+        self.resolve_with(spec, benchmark, None)
+    }
+
+    /// [`Self::resolve`] with a request-level coarsening override for the
+    /// `hier` placer (the engine threads `PlacementRequest::coarsen`
+    /// through here; a spec arg like `hier:128` still wins).
+    pub fn resolve_with(
+        &self,
+        spec: &str,
+        benchmark: Option<Benchmark>,
+        coarsen: Option<CoarsenConfig>,
+    ) -> crate::Result<ResolvedPlacer> {
         let (name, arg) = match spec.split_once(':') {
             Some((n, a)) => (n, Some(a)),
             None => (spec, None),
@@ -176,7 +213,11 @@ impl PlacerRegistry {
                 name: spec.to_string(),
                 known: self.names(),
             })?;
-        let ctx = PlacerContext { arg, benchmark };
+        let ctx = PlacerContext {
+            arg,
+            benchmark,
+            coarsen,
+        };
         Ok(ResolvedPlacer {
             placer: (entry.factory)(&ctx)?,
             optimize_graph: entry.optimize_graph,
@@ -197,7 +238,7 @@ mod tests {
     #[test]
     fn builtins_resolve() {
         let r = PlacerRegistry::with_builtins();
-        for name in ["single", "m-topo", "m-etf", "m-sct", "m-sct-heur", "rl"] {
+        for name in ["single", "m-topo", "m-etf", "m-sct", "m-sct-heur", "hier", "rl"] {
             let resolved = r.resolve(name, None).unwrap_or_else(|e| panic!("{name}: {e}"));
             assert!(!resolved.placer.name().is_empty());
         }
@@ -217,6 +258,31 @@ mod tests {
             r.resolve("rl:xx", None),
             Err(BaechiError::InvalidRequest(_))
         ));
+    }
+
+    #[test]
+    fn hier_args_and_context_override() {
+        let r = PlacerRegistry::with_builtins();
+        assert_eq!(r.resolve("hier", None).unwrap().placer.name(), "hier");
+        assert_eq!(
+            r.resolve("hier:off", None).unwrap().placer.name(),
+            "hier(off)"
+        );
+        assert!(r.resolve("hier:128", None).is_ok());
+        assert!(matches!(
+            r.resolve("hier:huge", None),
+            Err(BaechiError::InvalidRequest(_))
+        ));
+        // A request-level CoarsenConfig reaches the factory…
+        let off = r
+            .resolve_with("hier", None, Some(CoarsenConfig::off()))
+            .unwrap();
+        assert_eq!(off.placer.name(), "hier(off)");
+        // …but an explicit spec arg still wins over it.
+        let on = r
+            .resolve_with("hier:16", None, Some(CoarsenConfig::off()))
+            .unwrap();
+        assert_eq!(on.placer.name(), "hier");
     }
 
     #[test]

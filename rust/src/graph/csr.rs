@@ -1,0 +1,144 @@
+//! Compressed-sparse-row adjacency snapshot of an [`OpGraph`].
+//!
+//! `OpGraph` stores adjacency as one `Vec` per node — convenient while a
+//! graph is being built or mutated, but at 100K–1M ops the per-node
+//! allocations and pointer chasing dominate traversal-heavy passes (the
+//! hierarchical coarsener re-scans every edge once per round). [`Csr`]
+//! flattens both directions into four arrays built in two O(V + E)
+//! passes, so a full edge sweep is a linear walk over contiguous memory.
+//!
+//! The snapshot is indexed by raw `NodeId` slots (`graph.capacity()`),
+//! so tombstoned nodes simply have empty adjacency — the same convention
+//! the rest of the codebase uses for dense side tables.
+
+use super::{NodeId, OpGraph};
+
+/// Immutable CSR view of a graph's adjacency (both directions).
+#[derive(Debug, Clone)]
+pub struct Csr {
+    out_off: Vec<usize>,
+    out_adj: Vec<(NodeId, u64)>,
+    in_off: Vec<usize>,
+    in_adj: Vec<(NodeId, u64)>,
+}
+
+impl Csr {
+    /// Snapshot `graph`'s live adjacency.
+    pub fn build(graph: &OpGraph) -> Csr {
+        let cap = graph.capacity();
+        let mut out_off = Vec::with_capacity(cap + 1);
+        let mut in_off = Vec::with_capacity(cap + 1);
+        out_off.push(0);
+        in_off.push(0);
+        let mut n_edges = 0usize;
+        for slot in 0..cap {
+            let id = NodeId(slot);
+            if graph.is_alive(id) {
+                n_edges += graph.out_degree(id);
+            }
+            out_off.push(n_edges);
+            // in_off filled in the second pass below.
+        }
+        let mut out_adj = Vec::with_capacity(n_edges);
+        let mut in_count = vec![0usize; cap];
+        for slot in 0..cap {
+            let id = NodeId(slot);
+            if graph.is_alive(id) {
+                out_adj.extend_from_slice(graph.successors(id));
+                in_count[slot] = graph.in_degree(id);
+            }
+        }
+        let mut total = 0usize;
+        for &c in &in_count {
+            total += c;
+            in_off.push(total);
+        }
+        let mut in_adj = Vec::with_capacity(total);
+        for slot in 0..cap {
+            let id = NodeId(slot);
+            if graph.is_alive(id) {
+                in_adj.extend_from_slice(graph.predecessors(id));
+            }
+        }
+        Csr {
+            out_off,
+            out_adj,
+            in_off,
+            in_adj,
+        }
+    }
+
+    /// Number of node slots (== `graph.capacity()` at build time).
+    pub fn n(&self) -> usize {
+        self.out_off.len() - 1
+    }
+
+    /// Total directed edges in the snapshot.
+    pub fn edge_count(&self) -> usize {
+        self.out_adj.len()
+    }
+
+    /// Successors of `u` with edge bytes.
+    pub fn out(&self, u: NodeId) -> &[(NodeId, u64)] {
+        &self.out_adj[self.out_off[u.0]..self.out_off[u.0 + 1]]
+    }
+
+    /// Predecessors of `u` with edge bytes.
+    pub fn ins(&self, u: NodeId) -> &[(NodeId, u64)] {
+        &self.in_adj[self.in_off[u.0]..self.in_off[u.0 + 1]]
+    }
+
+    pub fn out_degree(&self, u: NodeId) -> usize {
+        self.out_off[u.0 + 1] - self.out_off[u.0]
+    }
+
+    pub fn in_degree(&self, u: NodeId) -> usize {
+        self.in_off[u.0 + 1] - self.in_off[u.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    fn diamond() -> (OpGraph, [NodeId; 4]) {
+        let mut g = OpGraph::new("diamond");
+        let a = g.add_node("a", OpKind::Input);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::Loss);
+        g.add_edge(a, b, 10);
+        g.add_edge(a, c, 11);
+        g.add_edge(b, d, 20);
+        g.add_edge(c, d, 21);
+        (g, [a, b, c, d])
+    }
+
+    #[test]
+    fn csr_matches_vec_adjacency() {
+        let (g, _) = diamond();
+        let csr = Csr::build(&g);
+        assert_eq!(csr.n(), g.capacity());
+        assert_eq!(csr.edge_count(), g.edge_count());
+        for id in g.node_ids() {
+            assert_eq!(csr.out(id), g.successors(id));
+            assert_eq!(csr.ins(id), g.predecessors(id));
+            assert_eq!(csr.out_degree(id), g.out_degree(id));
+            assert_eq!(csr.in_degree(id), g.in_degree(id));
+        }
+    }
+
+    #[test]
+    fn csr_skips_tombstoned_nodes() {
+        let (mut g, [a, b, _c, d]) = diamond();
+        g.remove_node(b);
+        let csr = Csr::build(&g);
+        assert_eq!(csr.out_degree(b), 0);
+        assert_eq!(csr.in_degree(b), 0);
+        assert_eq!(csr.out(b), &[]);
+        assert_eq!(csr.out(a), g.successors(a));
+        assert_eq!(csr.ins(d), g.predecessors(d));
+        assert_eq!(csr.edge_count(), g.edge_count());
+    }
+}

@@ -7,6 +7,7 @@
 //! communicated if its endpoints land on different devices.
 
 pub mod builder;
+pub mod csr;
 pub mod delta;
 pub mod dot;
 pub mod topo;

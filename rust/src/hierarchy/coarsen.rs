@@ -1,0 +1,476 @@
+//! Graph coarsening: contract chains and co-placement groups into
+//! super-ops.
+//!
+//! The contraction is organized in rounds over the current *quotient*
+//! graph (original nodes merged by a union-find). In each round an edge
+//! `U → V` between distinct components is contracted when the source
+//! component has **exactly one** outgoing quotient edge, and either
+//!
+//! * **chain rule** — `V` also has exactly one incoming quotient edge
+//!   (a true linear chain; fan-in/fan-out stays uncontracted so the
+//!   coarse graph keeps the original parallelism), or
+//! * **group rule** — `U` and `V` carry the same optimizer co-placement
+//!   group ([`crate::optimizer::coplacement`]), which the placer would
+//!   keep together anyway.
+//!
+//! **Cycle safety.** All edges selected in a round are contracted
+//! simultaneously (any subset of them — the size/colocation guards may
+//! drop some). Because every selected edge leaves a component with
+//! quotient out-degree 1, the selected edges form a functional forest on
+//! components: each tree contracts toward a single exit component `r`,
+//! and only `r` can keep external out-edges. Any cycle through the
+//! merged component would therefore have to both enter and leave through
+//! paths that lift to a path in the original graph re-entering one of
+//! the merged components — i.e. an original cycle, which a DAG does not
+//! have. So contraction never creates a cycle (`debug_assert`ed, and
+//! property-tested in `prop_invariants`).
+//!
+//! **Aggregation.** A super-op's compute and five-component memory are
+//! the *component-wise sums* of its members (not [`MemorySpec::merge`],
+//! which maxes transients — the sum guarantees that if a super-op fits a
+//! device, re-placing all members there during refine also fits). A
+//! coarse edge `A → B` carries, for every member `u ∈ A` with edges into
+//! `B`, the **max** bytes over those edges (one physical transfer per
+//! tensor per destination device, §4.2), summed over the distinct
+//! sources `u`.
+
+use crate::graph::csr::Csr;
+use crate::graph::{MemorySpec, NodeId, OpGraph};
+
+/// Knobs for the hierarchical coarsen→place→refine pipeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoarsenConfig {
+    /// Master switch: disabled means the `hier` placer delegates to
+    /// plain m-SCT (bit-identical, property-tested).
+    pub enabled: bool,
+    /// Maximum original ops folded into one super-op.
+    pub max_members: usize,
+    /// Contraction rounds (each round rebuilds the quotient degrees).
+    pub rounds: usize,
+    /// Contract linear chains (out-degree 1 → in-degree 1).
+    pub fuse_chains: bool,
+    /// Contract edges within one optimizer co-placement group.
+    pub fuse_groups: bool,
+}
+
+impl Default for CoarsenConfig {
+    fn default() -> CoarsenConfig {
+        CoarsenConfig {
+            enabled: true,
+            max_members: 64,
+            rounds: 4,
+            fuse_chains: true,
+            fuse_groups: true,
+        }
+    }
+}
+
+impl CoarsenConfig {
+    /// Coarsening disabled: `hier` becomes plain m-SCT.
+    pub fn off() -> CoarsenConfig {
+        CoarsenConfig {
+            enabled: false,
+            ..CoarsenConfig::default()
+        }
+    }
+
+    /// Enabled with a custom super-op size cap.
+    pub fn with_max_members(max_members: usize) -> CoarsenConfig {
+        CoarsenConfig {
+            max_members: max_members.max(2),
+            ..CoarsenConfig::default()
+        }
+    }
+}
+
+/// Result of coarsening: the coarse graph plus both directions of the
+/// node mapping.
+#[derive(Debug, Clone)]
+pub struct Coarse {
+    /// The coarse graph of super-ops.
+    pub graph: OpGraph,
+    /// Original node slot → coarse node (`None` for tombstoned slots).
+    pub super_of: Vec<Option<NodeId>>,
+    /// Coarse node → sorted original member ids.
+    pub members: Vec<Vec<NodeId>>,
+}
+
+/// No coplacement label seen yet.
+const LBL_NONE: i64 = -1;
+/// Members carry conflicting coplacement labels.
+const LBL_CONFLICT: i64 = -2;
+
+struct Dsu {
+    parent: Vec<usize>,
+    size: Vec<usize>,
+    /// Colocation label per root (`LBL_NONE` = none; conflicts are
+    /// prevented by the union guard).
+    colo: Vec<i64>,
+    /// Coplacement label per root (`LBL_NONE` / `LBL_CONFLICT`).
+    copl: Vec<i64>,
+}
+
+impl Dsu {
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]]; // path halving
+            x = self.parent[x];
+        }
+        x
+    }
+}
+
+/// Contract `graph` under `cfg` (the `enabled` flag is the caller's
+/// concern; this function always coarsens per the fuse flags).
+pub fn coarsen(graph: &OpGraph, cfg: &CoarsenConfig) -> Coarse {
+    let cap = graph.capacity();
+    let csr = Csr::build(graph);
+    let max_members = cfg.max_members.max(2);
+
+    // Intern group labels so union guards compare integers.
+    let mut label_ids: std::collections::BTreeMap<&str, i64> = std::collections::BTreeMap::new();
+    let mut intern = |s: Option<&str>| -> i64 {
+        match s {
+            None => LBL_NONE,
+            Some(s) => {
+                let next = label_ids.len() as i64;
+                *label_ids.entry(s).or_insert(next)
+            }
+        }
+    };
+    let mut dsu = Dsu {
+        parent: (0..cap).collect(),
+        size: vec![1; cap],
+        colo: vec![LBL_NONE; cap],
+        copl: vec![LBL_NONE; cap],
+    };
+    for id in graph.node_ids() {
+        let n = graph.node(id);
+        dsu.colo[id.0] = intern(n.colocation_group.as_deref());
+        dsu.copl[id.0] = intern(n.coplacement_group.as_deref());
+    }
+
+    for _round in 0..cfg.rounds {
+        // Quotient edges, deduplicated.
+        let mut qedges: Vec<(usize, usize)> = Vec::new();
+        for id in graph.node_ids() {
+            let ru = dsu.find(id.0);
+            for &(v, _) in csr.out(id) {
+                let rv = dsu.find(v.0);
+                if ru != rv {
+                    qedges.push((ru, rv));
+                }
+            }
+        }
+        qedges.sort_unstable();
+        qedges.dedup();
+        let mut outdeg = vec![0u32; cap];
+        let mut indeg = vec![0u32; cap];
+        for &(ru, rv) in &qedges {
+            outdeg[ru] += 1;
+            indeg[rv] += 1;
+        }
+
+        let mut progressed = false;
+        for &(ru, rv) in &qedges {
+            if outdeg[ru] != 1 {
+                continue;
+            }
+            let chain_ok = cfg.fuse_chains && indeg[rv] == 1;
+            let group_ok =
+                cfg.fuse_groups && dsu.copl[ru] >= 0 && dsu.copl[ru] == dsu.copl[rv];
+            if !chain_ok && !group_ok {
+                continue;
+            }
+            let a = dsu.find(ru);
+            let b = dsu.find(rv);
+            if a == b {
+                continue; // already merged via another selected edge
+            }
+            if dsu.size[a] + dsu.size[b] > max_members {
+                continue;
+            }
+            // Never merge two *different* colocation groups: their
+            // members are pinned to (potentially) different devices.
+            if dsu.colo[a] >= 0 && dsu.colo[b] >= 0 && dsu.colo[a] != dsu.colo[b] {
+                continue;
+            }
+            // Union by size; fold labels into the surviving root.
+            let (root, child) = if dsu.size[a] >= dsu.size[b] {
+                (a, b)
+            } else {
+                (b, a)
+            };
+            dsu.parent[child] = root;
+            dsu.size[root] += dsu.size[child];
+            if dsu.colo[root] == LBL_NONE {
+                dsu.colo[root] = dsu.colo[child];
+            }
+            if dsu.copl[root] != dsu.copl[child] {
+                dsu.copl[root] = LBL_CONFLICT;
+            }
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+
+    // Assign coarse ids in order of smallest member id (deterministic).
+    let mut super_of: Vec<Option<NodeId>> = vec![None; cap];
+    let mut root_to_coarse: Vec<usize> = vec![usize::MAX; cap];
+    let mut members: Vec<Vec<NodeId>> = Vec::new();
+    let mut roots: Vec<usize> = Vec::new();
+    for id in graph.node_ids() {
+        let r = dsu.find(id.0);
+        if root_to_coarse[r] == usize::MAX {
+            root_to_coarse[r] = members.len();
+            members.push(Vec::new());
+            roots.push(r);
+        }
+        let cid = root_to_coarse[r];
+        super_of[id.0] = Some(NodeId(cid));
+        members[cid].push(id);
+    }
+
+    // Build the coarse graph: aggregated nodes first.
+    let mut coarse = OpGraph::new(&format!("{} (coarse)", graph.name));
+    for (cid, mem_ids) in members.iter().enumerate() {
+        let first = graph.node(mem_ids[0]);
+        let name = if mem_ids.len() == 1 {
+            first.name.clone()
+        } else {
+            format!("{}+{}", first.name, mem_ids.len() - 1)
+        };
+        let id = coarse.add_node(&name, first.kind.clone());
+        debug_assert_eq!(id.0, cid);
+        let node = coarse.node_mut(id);
+        let mut mem = MemorySpec::default();
+        let mut compute = 0.0f64;
+        let mut output_bytes = 0u64;
+        let mut all_backward = true;
+        for &m in mem_ids {
+            let n = graph.node(m);
+            compute += n.compute;
+            mem.params += n.mem.params;
+            mem.output += n.mem.output;
+            mem.param_grad += n.mem.param_grad;
+            mem.upstream_grad += n.mem.upstream_grad;
+            mem.temp += n.mem.temp;
+            output_bytes += n.output_bytes;
+            all_backward &= n.is_backward;
+        }
+        node.compute = compute;
+        node.mem = mem;
+        node.output_bytes = output_bytes;
+        node.is_backward = all_backward;
+        node.fused_from = mem_ids.clone();
+        let root = roots[cid];
+        if dsu.colo[root] >= 0 {
+            node.colocation_group = graph
+                .node(mem_ids[0])
+                .colocation_group
+                .clone()
+                .or_else(|| {
+                    mem_ids
+                        .iter()
+                        .find_map(|&m| graph.node(m).colocation_group.clone())
+                });
+        }
+        if dsu.copl[root] >= 0 {
+            // Label only meaningful when *every* member shares it.
+            let lbl = graph.node(mem_ids[0]).coplacement_group.clone();
+            if lbl.is_some()
+                && mem_ids
+                    .iter()
+                    .all(|&m| graph.node(m).coplacement_group == lbl)
+            {
+                node.coplacement_group = lbl;
+            }
+        }
+    }
+
+    // Cut edges: per-source max into each destination super, summed over
+    // distinct sources. Collected flat and sorted so each coarse edge is
+    // added exactly once (OpGraph::add_edge would max-merge duplicates).
+    let mut cut: Vec<(usize, usize, usize, u64)> = Vec::new(); // (cu, cv, u, bytes)
+    for id in graph.node_ids() {
+        let cu = super_of[id.0].unwrap().0;
+        for &(v, bytes) in csr.out(id) {
+            let cv = super_of[v.0].unwrap().0;
+            if cu != cv {
+                cut.push((cu, cv, id.0, bytes));
+            }
+        }
+    }
+    cut.sort_unstable();
+    let mut i = 0;
+    while i < cut.len() {
+        let (cu, cv, _, _) = cut[i];
+        let mut total = 0u64;
+        while i < cut.len() && cut[i].0 == cu && cut[i].1 == cv {
+            let u = cut[i].2;
+            let mut max_bytes = 0u64;
+            while i < cut.len() && cut[i].0 == cu && cut[i].1 == cv && cut[i].2 == u {
+                max_bytes = max_bytes.max(cut[i].3);
+                i += 1;
+            }
+            total += max_bytes;
+        }
+        coarse.add_edge(NodeId(cu), NodeId(cv), total);
+    }
+
+    debug_assert!(coarse.is_acyclic(), "contraction created a cycle");
+    Coarse {
+        graph: coarse,
+        super_of,
+        members,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new("chain");
+        let mut prev = None;
+        for i in 0..n {
+            let id = g.add_node(&format!("op{i}"), OpKind::MatMul);
+            g.node_mut(id).compute = 1.0;
+            g.node_mut(id).mem = MemorySpec {
+                params: 10,
+                output: 5,
+                param_grad: 3,
+                upstream_grad: 2,
+                temp: 1,
+            };
+            g.node_mut(id).output_bytes = 5;
+            if let Some(p) = prev {
+                g.add_edge(p, id, 5);
+            }
+            prev = Some(id);
+        }
+        g
+    }
+
+    #[test]
+    fn chain_contracts_to_one_super() {
+        let g = chain(6);
+        let c = coarsen(&g, &CoarsenConfig::default());
+        assert_eq!(c.graph.len(), 1);
+        let s = c.graph.node(NodeId(0));
+        assert!((s.compute - 6.0).abs() < 1e-12);
+        assert_eq!(s.mem.params, 60);
+        assert_eq!(s.mem.output, 30);
+        assert_eq!(s.mem.param_grad, 18);
+        assert_eq!(s.mem.upstream_grad, 12);
+        assert_eq!(s.mem.temp, 6);
+        assert_eq!(c.members[0].len(), 6);
+        assert_eq!(s.fused_from.len(), 6);
+    }
+
+    #[test]
+    fn max_members_caps_super_size() {
+        let g = chain(10);
+        let cfg = CoarsenConfig {
+            max_members: 3,
+            ..CoarsenConfig::default()
+        };
+        let c = coarsen(&g, &cfg);
+        assert!(c.graph.len() >= 4, "10 ops / ≤3 members ⇒ ≥4 supers");
+        for m in &c.members {
+            assert!(m.len() <= 3);
+        }
+        assert!(c.graph.is_acyclic());
+    }
+
+    #[test]
+    fn diamond_keeps_parallel_branches() {
+        // a → (b, c) → d: no quotient edge satisfies the chain rule, so
+        // the parallelism survives coarsening.
+        let mut g = OpGraph::new("diamond");
+        let a = g.add_node("a", OpKind::Input);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::Loss);
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        g.add_edge(b, d, 1);
+        g.add_edge(c, d, 1);
+        let coarse = coarsen(&g, &CoarsenConfig::default());
+        assert_eq!(coarse.graph.len(), 4);
+    }
+
+    #[test]
+    fn coplacement_group_fuses_fan_in() {
+        // b and c both feed d; all three share a co-placement group, so
+        // the group rule may contract b→d and c→d despite d's fan-in.
+        let mut g = OpGraph::new("grp");
+        let a = g.add_node("a", OpKind::Input);
+        let b = g.add_node("b", OpKind::MatMul);
+        let c = g.add_node("c", OpKind::MatMul);
+        let d = g.add_node("d", OpKind::Loss);
+        for id in [b, c, d] {
+            g.node_mut(id).coplacement_group = Some("g0".into());
+        }
+        g.add_edge(a, b, 1);
+        g.add_edge(a, c, 1);
+        g.add_edge(b, d, 1);
+        g.add_edge(c, d, 1);
+        let coarse = coarsen(&g, &CoarsenConfig::default());
+        // a stays; {b, c, d} collapse (possibly over two rounds).
+        assert_eq!(coarse.graph.len(), 2);
+        assert!(coarse.graph.is_acyclic());
+        let sup = coarse.super_of[d.0].unwrap();
+        assert_eq!(coarse.super_of[b.0], Some(sup));
+        assert_eq!(coarse.super_of[c.0], Some(sup));
+    }
+
+    #[test]
+    fn cut_edge_bytes_take_per_source_max() {
+        // a feeds two members of the same destination super: the tensor
+        // is transferred once per destination device (§4.2), so the
+        // coarse edge carries max(20, 30), not the sum.
+        let mut g = OpGraph::new("cut");
+        let a = g.add_node("a", OpKind::Input);
+        let b1 = g.add_node("b1", OpKind::MatMul);
+        let b2 = g.add_node("b2", OpKind::MatMul);
+        for id in [b1, b2] {
+            g.node_mut(id).coplacement_group = Some("dst".into());
+        }
+        g.add_edge(a, b1, 20);
+        g.add_edge(a, b2, 30);
+        g.add_edge(b1, b2, 1); // group rule merges {b1, b2}
+        let coarse = coarsen(&g, &CoarsenConfig::default());
+        assert_eq!(coarse.graph.len(), 2);
+        let ca = coarse.super_of[a.0].unwrap();
+        let cb = coarse.super_of[b1.0].unwrap();
+        assert_eq!(coarse.graph.edge_bytes(ca, cb), Some(30));
+    }
+
+    #[test]
+    fn distinct_colocation_groups_never_merge() {
+        let mut g = chain(2);
+        g.node_mut(NodeId(0)).colocation_group = Some("g0".into());
+        g.node_mut(NodeId(1)).colocation_group = Some("g1".into());
+        let c = coarsen(&g, &CoarsenConfig::default());
+        assert_eq!(c.graph.len(), 2, "colocation conflict blocks the merge");
+    }
+
+    #[test]
+    fn zero_rounds_is_identity_on_node_sets() {
+        let g = chain(5);
+        let cfg = CoarsenConfig {
+            rounds: 0,
+            ..CoarsenConfig::default()
+        };
+        let c = coarsen(&g, &cfg);
+        assert_eq!(c.graph.len(), 5);
+        for (cid, m) in c.members.iter().enumerate() {
+            assert_eq!(m.len(), 1);
+            assert_eq!(c.super_of[m[0].0], Some(NodeId(cid)));
+        }
+    }
+}

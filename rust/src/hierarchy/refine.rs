@@ -1,0 +1,202 @@
+//! Refine pass: expand super-ops and re-place their members.
+//!
+//! After the coarse graph is placed, every original op inherits its
+//! super-op's device as a *starting point*. The refine sweep walks the
+//! original graph in depth-bucket order
+//! ([`crate::placer::sched::ReadyBuckets`]) under a full
+//! [`MemoryLedger`], exactly like the incremental serving path
+//! (`serve/incremental.rs`):
+//!
+//! * **colocation-pinned** ops follow their group's ledger pin (dominates
+//!   everything — TF semantics);
+//! * **boundary** ops (any edge crossing supers) stay pinned to their
+//!   super's device so the coarse placement's cut decisions survive,
+//!   falling back to greedy min-EST only if memory no longer allows it;
+//! * **interior** ops min-EST across all devices, preferring the super's
+//!   device on ties — cheap local slack recovery without disturbing the
+//!   coarse structure.
+//!
+//! Memory is checked (`ledger.fits`) before every commit, so refined
+//! placements respect per-device capacity *by construction*
+//! (property-tested in `prop_invariants`).
+
+use super::coarsen::Coarse;
+use crate::graph::{DeviceId, NodeId, OpGraph};
+use crate::placer::ledger::MemoryLedger;
+use crate::placer::sched::ReadyBuckets;
+use crate::placer::{oom_error, Placement};
+use crate::profile::Cluster;
+use std::collections::BTreeMap;
+
+/// Expand `coarse_placement` onto the original graph. Returns
+/// `(device_of, predicted_makespan, peak_memory)`.
+pub fn refine(
+    graph: &OpGraph,
+    coarse: &Coarse,
+    coarse_placement: &Placement,
+    cluster: &Cluster,
+) -> crate::Result<(BTreeMap<NodeId, DeviceId>, f64, Vec<u64>)> {
+    let cap = graph.capacity();
+    let n_dev = cluster.n();
+    let topo = cluster.effective_topology();
+    let caps: Vec<u64> = cluster.devices.iter().map(|d| d.memory).collect();
+
+    // Each original op's super device, and whether it sits on a cut.
+    let mut super_dev: Vec<Option<DeviceId>> = vec![None; cap];
+    let mut boundary = vec![false; cap];
+    for id in graph.node_ids() {
+        let sup = coarse.super_of[id.0].expect("live node has a super");
+        super_dev[id.0] = Some(coarse_placement.device(sup));
+        for &(v, _) in graph.successors(id) {
+            if coarse.super_of[v.0] != Some(sup) {
+                boundary[id.0] = true;
+                boundary[v.0] = true;
+            }
+        }
+    }
+
+    let depths = graph.depths();
+    let max_depth = depths.iter().copied().max().unwrap_or(0);
+    let mut ready = ReadyBuckets::new(max_depth);
+    let mut preds_left = vec![0usize; cap];
+    for id in graph.node_ids() {
+        preds_left[id.0] = graph.in_degree(id);
+        if preds_left[id.0] == 0 {
+            ready.push(id, depths[id.0]);
+        }
+    }
+
+    let mut ledger = MemoryLedger::new(graph, &caps);
+    let mut dev_ready = vec![0.0f64; n_dev];
+    let mut finish = vec![0.0f64; cap];
+    let mut device_of: BTreeMap<NodeId, DeviceId> = BTreeMap::new();
+    let mut makespan = 0.0f64;
+
+    let est = |id: NodeId, d: DeviceId, dev_ready: &[f64], finish: &[f64], homes: &[Option<DeviceId>]| {
+        let mut t = dev_ready[d.0];
+        for &(p, bytes) in graph.predecessors(id) {
+            let pd = homes[p.0].expect("pred scheduled before successor");
+            let arrive = finish[p.0]
+                + if pd == d {
+                    0.0
+                } else {
+                    topo.pair(pd.0, d.0).time(bytes)
+                };
+            if arrive > t {
+                t = arrive;
+            }
+        }
+        t
+    };
+    // Dense mirror of device_of for O(1) predecessor lookups in `est`.
+    let mut homes: Vec<Option<DeviceId>> = vec![None; cap];
+
+    while let Some(id) = ready.pop() {
+        let node = graph.node(id);
+        let home = super_dev[id.0].expect("live node");
+        let choice = if let Some(pin) = ledger.pinned_device(graph, id) {
+            // Colocation dominates: the group is already reserved there.
+            if !ledger.fits(graph, id, pin) {
+                return Err(oom_error(graph, id, &ledger));
+            }
+            pin
+        } else if boundary[id.0] && ledger.fits(graph, id, home) {
+            home
+        } else {
+            // Interior op (or a boundary op whose super device is out of
+            // memory): greedy min-EST. The super's device is probed
+            // first, so strict `<` comparison prefers it on ties, then
+            // lowest device id.
+            let mut best: Option<(f64, DeviceId)> = None;
+            for d in std::iter::once(home)
+                .chain((0..n_dev).map(DeviceId).filter(|&d| d != home))
+            {
+                if !ledger.fits(graph, id, d) {
+                    continue;
+                }
+                let t = est(id, d, &dev_ready, &finish, &homes);
+                if best.map_or(true, |(bt, _)| t < bt) {
+                    best = Some((t, d));
+                }
+            }
+            match best {
+                Some((_, d)) => d,
+                None => return Err(oom_error(graph, id, &ledger)),
+            }
+        };
+        ledger.commit(graph, id, choice);
+        let start = est(id, choice, &dev_ready, &finish, &homes);
+        let done = start + node.compute / cluster.devices[choice.0].speed.max(1e-12);
+        finish[id.0] = done;
+        dev_ready[choice.0] = done;
+        makespan = makespan.max(done);
+        homes[id.0] = Some(choice);
+        device_of.insert(id, choice);
+        for &(s, _) in graph.successors(id) {
+            preds_left[s.0] -= 1;
+            if preds_left[s.0] == 0 {
+                ready.push(s, depths[s.0]);
+            }
+        }
+    }
+
+    debug_assert_eq!(device_of.len(), graph.len(), "refine covered every op");
+    Ok((device_of, makespan, ledger.peaks()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{MemorySpec, OpKind};
+    use crate::hierarchy::coarsen::{coarsen, CoarsenConfig};
+    use crate::placer::{msct::MSct, Placer};
+    use crate::profile::CommModel;
+
+    fn unit_cluster(n: usize, mem: u64) -> Cluster {
+        Cluster::homogeneous(n, mem, CommModel::new(0.0, 1.0).unwrap())
+    }
+
+    fn chain(n: usize) -> OpGraph {
+        let mut g = OpGraph::new("chain");
+        let mut prev = None;
+        for i in 0..n {
+            let id = g.add_node(&format!("op{i}"), OpKind::MatMul);
+            g.node_mut(id).compute = 1.0;
+            g.node_mut(id).mem = MemorySpec {
+                params: 10,
+                ..Default::default()
+            };
+            if let Some(p) = prev {
+                g.add_edge(p, id, 2);
+            }
+            prev = Some(id);
+        }
+        g
+    }
+
+    #[test]
+    fn refine_covers_every_op_and_respects_memory() {
+        let g = chain(8);
+        let cluster = unit_cluster(2, 1000);
+        let coarse = coarsen(&g, &CoarsenConfig::with_max_members(3));
+        let cp = MSct::default().place(&coarse.graph, &cluster).unwrap();
+        let (device_of, makespan, peaks) = refine(&g, &coarse, &cp, &cluster).unwrap();
+        assert_eq!(device_of.len(), 8);
+        assert!(makespan >= 8.0 - 1e-9, "8 × 1 s of serial work");
+        for (d, &p) in peaks.iter().enumerate() {
+            assert!(p <= 1000, "device {d} peak {p}");
+        }
+    }
+
+    #[test]
+    fn refine_keeps_colocation_groups_together() {
+        let mut g = chain(6);
+        g.node_mut(NodeId(0)).colocation_group = Some("w".into());
+        g.node_mut(NodeId(5)).colocation_group = Some("w".into());
+        let cluster = unit_cluster(2, 1000);
+        let coarse = coarsen(&g, &CoarsenConfig::with_max_members(2));
+        let cp = MSct::default().place(&coarse.graph, &cluster).unwrap();
+        let (device_of, _, _) = refine(&g, &coarse, &cp, &cluster).unwrap();
+        assert_eq!(device_of[&NodeId(0)], device_of[&NodeId(5)]);
+    }
+}

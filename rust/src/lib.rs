@@ -57,6 +57,11 @@
 //!   forward-only placement (paper §3.1).
 //! * [`lp`] — dense interior-point LP solver + the SCT favorite-child LP.
 //! * [`placer`] — m-TOPO, m-ETF, m-SCT (paper §2).
+//! * [`hierarchy`] — million-op scaling: coarsen chains/co-placement
+//!   groups into super-ops (cycle-safe contraction), place the coarse
+//!   graph with m-SCT, then refine members within each super-op's
+//!   device budget. Exposed as the `hier` placer; with coarsening
+//!   disabled it is bit-identical to plain m-SCT.
 //! * [`sim`] — the event-driven Execution Simulator (paper §4.2), which
 //!   also emits a per-link [`sim::ContentionReport`].
 //! * [`baselines`] — single-device, expert, and RL placers (paper §5).
@@ -95,6 +100,7 @@ pub mod error;
 pub mod exec;
 pub mod feedback;
 pub mod graph;
+pub mod hierarchy;
 pub mod lp;
 pub mod models;
 pub mod optimizer;

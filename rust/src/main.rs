@@ -36,13 +36,13 @@ fn specs() -> Vec<OptSpec> {
     vec![
         OptSpec {
             name: "model",
-            help: "benchmark: inception[:bs] | gnmt[:bs[:len]] | transformer[:bs] | linreg | mlp",
+            help: "benchmark: inception[:bs] | gnmt[:bs[:len]] | transformer[:bs] | linreg | mlp | synthetic[:ops]",
             takes_value: true,
             default: Some("transformer:64"),
         },
         OptSpec {
             name: "placer",
-            help: "single | expert | m-topo | m-etf | m-sct | m-sct-heur | m-sct-lp | rl[:episodes]",
+            help: "single | expert | m-topo | m-etf | m-sct | m-sct-heur | m-sct-lp | rl[:episodes] | hier[:off|:members]",
             takes_value: true,
             default: Some("m-sct"),
         },

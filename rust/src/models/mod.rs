@@ -11,6 +11,7 @@ pub mod gnmt;
 pub mod inception;
 pub mod linreg;
 pub mod mlp;
+pub mod synthetic;
 pub mod transformer;
 
 pub use common::calibration_probe_costs;
@@ -30,11 +31,14 @@ pub enum Benchmark {
     LinReg,
     /// The e2e-trainable MLP.
     Mlp,
+    /// Seeded layered scale-N graph (100K–1M ops) for the hierarchical
+    /// placement bench.
+    Synthetic { ops: usize },
 }
 
 impl Benchmark {
     /// Parse `inception:32`, `gnmt:128:40`, `transformer:64`, `linreg`,
-    /// `mlp`.
+    /// `mlp`, `synthetic:100000`.
     pub fn parse(s: &str) -> crate::Result<Benchmark> {
         let parts: Vec<&str> = s.split(':').collect();
         let num = |i: usize, d: usize| -> usize {
@@ -49,6 +53,9 @@ impl Benchmark {
             "transformer" => Ok(Benchmark::Transformer { batch: num(1, 64) }),
             "linreg" => Ok(Benchmark::LinReg),
             "mlp" => Ok(Benchmark::Mlp),
+            "synthetic" => Ok(Benchmark::Synthetic {
+                ops: num(1, 100_000),
+            }),
             other => Err(crate::BaechiError::invalid(format!(
                 "unknown benchmark '{other}'"
             ))),
@@ -67,6 +74,7 @@ impl Benchmark {
             }
             Benchmark::LinReg => linreg::linreg_graph(),
             Benchmark::Mlp => mlp::mlp(&mlp::MlpConfig::default()),
+            Benchmark::Synthetic { ops } => synthetic::synthetic_graph(ops),
         }
     }
 
@@ -77,6 +85,7 @@ impl Benchmark {
             Benchmark::Transformer { batch } => format!("transformer:{batch}"),
             Benchmark::LinReg => "linreg".to_string(),
             Benchmark::Mlp => "mlp".to_string(),
+            Benchmark::Synthetic { ops } => format!("synthetic:{ops}"),
         }
     }
 }
@@ -87,7 +96,14 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for s in ["inception:32", "gnmt:128:40", "transformer:64", "linreg", "mlp"] {
+        for s in [
+            "inception:32",
+            "gnmt:128:40",
+            "transformer:64",
+            "linreg",
+            "mlp",
+            "synthetic:1000",
+        ] {
             let b = Benchmark::parse(s).unwrap();
             assert_eq!(b.name(), s);
         }
@@ -100,6 +116,7 @@ mod tests {
             Benchmark::Transformer { batch: 64 },
             Benchmark::LinReg,
             Benchmark::Mlp,
+            Benchmark::Synthetic { ops: 1_000 },
         ] {
             assert!(b.graph().is_acyclic(), "{}", b.name());
         }

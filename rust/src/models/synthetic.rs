@@ -1,0 +1,116 @@
+//! Synthetic scale-N graph generator for the million-op regime.
+//!
+//! The paper's benchmark models top out at a few thousand ops, far below
+//! the scale where placement *speed* — Baechi's headline result —
+//! actually differentiates algorithms. [`synthetic_graph`] emits a
+//! seeded, deterministic layered DAG of any size (100K–1M ops in the
+//! scaled `table3_placement_time` bench):
+//!
+//! * `LANES` parallel chains ("lanes") advance in lock-step layers;
+//!   every op depends on its predecessor in the same lane, so most of
+//!   the graph is linear chain — exactly the structure the hierarchical
+//!   coarsener contracts;
+//! * every `MIX_EVERY` layers an op also reads a tensor from a random
+//!   other lane, bounding chain length and keeping the DAG connected
+//!   enough that placement is not trivially per-lane;
+//! * compute and memory are drawn from a seeded [`Pcg`], sized so a
+//!   1M-op graph still fits the paper-default 4 × 8 GiB cluster.
+//!
+//! Determinism matters: the graph (and therefore its engine fingerprint)
+//! depends only on `ops`, so bench baselines and cache keys are stable
+//! across runs.
+
+use crate::graph::{MemorySpec, OpGraph, OpKind};
+use crate::util::rng::Pcg;
+
+/// Parallel chains advancing per layer.
+pub const LANES: usize = 64;
+/// Cross-lane mix edge every this many layers.
+pub const MIX_EVERY: usize = 24;
+
+/// Build a deterministic `ops`-node layered DAG.
+pub fn synthetic_graph(ops: usize) -> OpGraph {
+    let ops = ops.max(1);
+    let mut g = OpGraph::new(&format!("synthetic:{ops}"));
+    let mut rng = Pcg::seed(0x5ca1ab1e ^ ops as u64);
+    let lanes = LANES.min(ops);
+    let mut ids = Vec::with_capacity(ops);
+    for i in 0..ops {
+        let lane = i % lanes;
+        let step = i / lanes;
+        let kind = if rng.chance(0.7) {
+            OpKind::MatMul
+        } else {
+            OpKind::Elementwise
+        };
+        let id = g.add_node(&format!("syn{i}"), kind);
+        {
+            let node = g.node_mut(id);
+            node.compute = rng.uniform(1e-5, 2e-4);
+            node.mem = MemorySpec {
+                params: rng.below(16 << 10) + 256,
+                output: rng.below(8 << 10) + 256,
+                param_grad: 0,
+                upstream_grad: 0,
+                temp: rng.below(4 << 10),
+            };
+            node.output_bytes = node.mem.output;
+        }
+        if step > 0 {
+            let up = ids[i - lanes];
+            let bytes = g.node(up).output_bytes;
+            g.add_edge(up, id, bytes);
+            if step % MIX_EVERY == 0 {
+                let other = rng.below(lanes as u64) as usize;
+                if other != lane {
+                    let cross = ids[(step - 1) * lanes + other];
+                    let bytes = g.node(cross).output_bytes;
+                    g.add_edge(cross, id, bytes);
+                }
+            }
+        }
+        ids.push(id);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_acyclic() {
+        let a = synthetic_graph(2_000);
+        let b = synthetic_graph(2_000);
+        assert_eq!(a.len(), 2_000);
+        assert!(a.is_acyclic());
+        assert_eq!(a.edge_count(), b.edge_count());
+        for id in a.node_ids() {
+            assert_eq!(a.node(id).compute, b.node(id).compute);
+            assert_eq!(a.node(id).mem, b.node(id).mem);
+        }
+    }
+
+    #[test]
+    fn small_sizes_work() {
+        for n in [1, 2, 63, 64, 65] {
+            let g = synthetic_graph(n);
+            assert_eq!(g.len(), n);
+            assert!(g.is_acyclic());
+        }
+    }
+
+    #[test]
+    fn mostly_chains_for_the_coarsener() {
+        let g = synthetic_graph(5_000);
+        let chainlike = g
+            .node_ids()
+            .filter(|&id| g.out_degree(id) <= 1 && g.in_degree(id) <= 1)
+            .count();
+        assert!(
+            chainlike * 2 > g.len(),
+            "at least half the ops sit on plain chains ({chainlike}/{})",
+            g.len()
+        );
+    }
+}

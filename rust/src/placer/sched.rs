@@ -33,10 +33,11 @@ pub struct SchedState<'a> {
     /// one transfer at a time per link; uniform topologies make links
     /// exactly the per-device transfer engines).
     comm_free: LinkTimes,
-    /// arrival[node][device]: when the node's output tensor is available
-    /// on that device (INF = not transferred). The home device is set at
-    /// schedule time.
-    arrival: Vec<Vec<f64>>,
+    /// `arrival[node * n_dev + device]`: when the node's output tensor is
+    /// available on that device (INF = not transferred). The home device
+    /// is set at schedule time. Stored flat — one allocation instead of
+    /// one per node, which dominates setup cost on 100K+-op graphs.
+    arrival: Vec<f64>,
     /// Unscheduled predecessor count (readiness tracking).
     pub unscheduled_preds: Vec<usize>,
     pub scheduled_count: usize,
@@ -61,7 +62,7 @@ impl<'a> SchedState<'a> {
             device_of: vec![None; cap],
             device_free: vec![0.0; n],
             comm_free: LinkTimes::new(topo.n_links()),
-            arrival: vec![vec![INF; n]; cap],
+            arrival: vec![INF; cap * n],
             unscheduled_preds,
             scheduled_count: 0,
             topo,
@@ -71,6 +72,12 @@ impl<'a> SchedState<'a> {
     /// The topology this schedule prices communication against.
     pub fn topology(&self) -> &Topology {
         &self.topo
+    }
+
+    /// Index into the flat `arrival` table.
+    #[inline]
+    fn arr_idx(&self, i: NodeId, p: DeviceId) -> usize {
+        i.0 * self.device_free.len() + p.0
     }
 
     /// Earliest free instant of one interconnect link.
@@ -109,7 +116,7 @@ impl<'a> SchedState<'a> {
         if src == p {
             return self.finish[i.0];
         }
-        let cached = self.arrival[i.0][p.0];
+        let cached = self.arrival[self.arr_idx(i, p)];
         if cached.is_finite() {
             return cached;
         }
@@ -168,8 +175,8 @@ impl<'a> SchedState<'a> {
             let src = self.device_of[i.0].expect("pred scheduled");
             let avail = if src == p {
                 self.finish[i.0]
-            } else if self.arrival[i.0][p.0].is_finite() {
-                self.arrival[i.0][p.0] // cached — no new transfer
+            } else if self.arrival[self.arr_idx(i, p)].is_finite() {
+                self.arrival[self.arr_idx(i, p)] // cached — no new transfer
             } else {
                 let t = self.topo.time(src.0, p.0, bytes);
                 let arr = if self.cluster.sequential_comm {
@@ -181,7 +188,8 @@ impl<'a> SchedState<'a> {
                 } else {
                     self.finish[i.0] + t
                 };
-                self.arrival[i.0][p.0] = arr;
+                let idx = self.arr_idx(i, p);
+                self.arrival[idx] = arr;
                 arr
             };
             ready = ready.max(avail);
@@ -193,7 +201,8 @@ impl<'a> SchedState<'a> {
         self.finish[j.0] = finish;
         self.device_free[p.0] = finish;
         self.device_of[j.0] = Some(p);
-        self.arrival[j.0][p.0] = finish;
+        let idx = self.arr_idx(j, p);
+        self.arrival[idx] = finish;
         self.ledger.commit(self.graph, j, p);
         self.scheduled_count += 1;
 
@@ -206,6 +215,66 @@ impl<'a> SchedState<'a> {
             }
         }
         newly_ready
+    }
+}
+
+/// Depth-bucketed FIFO ready queue.
+///
+/// Large-graph sweeps (the hierarchical refine pass, list schedulers
+/// that only need *a* deterministic topological-ish order) don't need a
+/// full priority heap: bucketing ready nodes by their DAG depth
+/// ([`OpGraph::depths`](crate::graph::OpGraph)) gives O(1) push/pop with
+/// a monotone cursor, because every successor is strictly deeper than
+/// the node that readied it. Within a bucket, order is FIFO — push
+/// order — which keeps sweeps deterministic.
+#[derive(Debug, Default)]
+pub struct ReadyBuckets {
+    buckets: Vec<std::collections::VecDeque<NodeId>>,
+    cursor: usize,
+    len: usize,
+}
+
+impl ReadyBuckets {
+    /// Queue sized for depths `0..=max_depth` (grows on demand).
+    pub fn new(max_depth: usize) -> ReadyBuckets {
+        ReadyBuckets {
+            buckets: (0..=max_depth)
+                .map(|_| std::collections::VecDeque::new())
+                .collect(),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Enqueue `node` at `depth`.
+    pub fn push(&mut self, node: NodeId, depth: usize) {
+        if depth >= self.buckets.len() {
+            self.buckets
+                .resize_with(depth + 1, std::collections::VecDeque::new);
+        }
+        self.buckets[depth].push_back(node);
+        self.cursor = self.cursor.min(depth);
+        self.len += 1;
+    }
+
+    /// Dequeue the shallowest node (FIFO within a depth).
+    pub fn pop(&mut self) -> Option<NodeId> {
+        if self.len == 0 {
+            return None;
+        }
+        while self.buckets[self.cursor].is_empty() {
+            self.cursor += 1;
+        }
+        self.len -= 1;
+        self.buckets[self.cursor].pop_front()
     }
 }
 
@@ -372,6 +441,36 @@ mod tests {
         st2.commit(d, DeviceId(3)); // disjoint host-links: no queueing
         assert_eq!(st2.start[c.0], 6.0);
         assert_eq!(st2.start[d.0], 6.0);
+    }
+
+    #[test]
+    fn ready_buckets_pop_in_depth_order() {
+        let mut q = ReadyBuckets::new(3);
+        q.push(NodeId(10), 2);
+        q.push(NodeId(1), 0);
+        q.push(NodeId(2), 0);
+        q.push(NodeId(5), 1);
+        assert_eq!(q.len(), 4);
+        // Depth order, FIFO within depth 0.
+        assert_eq!(q.pop(), Some(NodeId(1)));
+        assert_eq!(q.pop(), Some(NodeId(2)));
+        // Interleaved push at a depth not shallower than the cursor.
+        q.push(NodeId(6), 1);
+        assert_eq!(q.pop(), Some(NodeId(5)));
+        assert_eq!(q.pop(), Some(NodeId(6)));
+        assert_eq!(q.pop(), Some(NodeId(10)));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ready_buckets_grow_past_initial_depth() {
+        let mut q = ReadyBuckets::new(0);
+        q.push(NodeId(3), 7); // deeper than the initial allocation
+        q.push(NodeId(4), 0);
+        assert_eq!(q.pop(), Some(NodeId(4)));
+        assert_eq!(q.pop(), Some(NodeId(3)));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -750,3 +750,138 @@ fn prop_trace_sim_schedule_reconstructs_makespan() {
         }
     });
 }
+
+/// Random coarsening knobs for the hierarchical-placement properties.
+fn random_coarsen_cfg(rng: &mut Pcg) -> baechi::hierarchy::CoarsenConfig {
+    baechi::hierarchy::CoarsenConfig {
+        enabled: true,
+        max_members: rng.range(2, 12),
+        rounds: rng.range(1, 6),
+        fuse_chains: rng.chance(0.9),
+        fuse_groups: rng.chance(0.9),
+    }
+}
+
+#[test]
+fn prop_hier_contraction_never_creates_cycle() {
+    use baechi::hierarchy::coarsen;
+    prop_check("hier_acyclic", 200, |rng| {
+        let g = random_dag(rng, 60);
+        let cfg = random_coarsen_cfg(rng);
+        let coarse = coarsen(&g, &cfg);
+        assert!(coarse.graph.is_acyclic(), "contraction created a cycle");
+        for members in &coarse.members {
+            assert!(
+                members.len() <= cfg.max_members,
+                "super-op exceeds max_members ({} > {})",
+                members.len(),
+                cfg.max_members
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_hier_super_ops_aggregate_member_sums() {
+    use baechi::hierarchy::coarsen;
+    prop_check("hier_sums", 150, |rng| {
+        let g = random_dag(rng, 60);
+        let coarse = coarsen(&g, &random_coarsen_cfg(rng));
+        for cid in coarse.graph.node_ids() {
+            let members = &coarse.members[cid.0];
+            let s = coarse.graph.node(cid);
+            let compute: f64 = members.iter().map(|&m| g.node(m).compute).sum();
+            assert!(
+                (s.compute - compute).abs() <= 1e-9 * compute.max(1.0),
+                "super compute is the member sum"
+            );
+            let sum = |f: fn(&MemorySpec) -> u64| members.iter().map(|&m| f(&g.node(m).mem)).sum::<u64>();
+            assert_eq!(s.mem.params, sum(|m| m.params));
+            assert_eq!(s.mem.output, sum(|m| m.output));
+            assert_eq!(s.mem.param_grad, sum(|m| m.param_grad));
+            assert_eq!(s.mem.upstream_grad, sum(|m| m.upstream_grad));
+            assert_eq!(s.mem.temp, sum(|m| m.temp));
+            let out: u64 = members.iter().map(|&m| g.node(m).output_bytes).sum();
+            assert_eq!(s.output_bytes, out);
+        }
+    });
+}
+
+#[test]
+fn prop_hier_expand_coarsen_identity_on_node_sets() {
+    use baechi::hierarchy::coarsen;
+    use std::collections::BTreeSet;
+    prop_check("hier_node_sets", 150, |rng| {
+        let g = random_dag(rng, 60);
+        let coarse = coarsen(&g, &random_coarsen_cfg(rng));
+        // Every original node belongs to exactly one super-op, and the
+        // member lists expand back to exactly the original node set.
+        let mut seen = BTreeSet::new();
+        for cid in coarse.graph.node_ids() {
+            for &m in &coarse.members[cid.0] {
+                assert_eq!(coarse.super_of[m.0], Some(cid), "mapping is consistent");
+                assert!(seen.insert(m), "node {m:?} in two super-ops");
+            }
+        }
+        let original: BTreeSet<NodeId> = g.node_ids().collect();
+        assert_eq!(seen, original, "expand∘coarsen is the identity on node sets");
+    });
+}
+
+#[test]
+fn prop_hier_zero_coarsening_bit_identical_to_msct() {
+    use baechi::hierarchy::{CoarsenConfig, HierPlacer};
+    prop_check("hier_off_identity", 80, |rng| {
+        let g = random_dag(rng, 40);
+        let total: u64 = g
+            .iter_nodes()
+            .map(|n| n.mem.params + n.mem.param_grad + n.mem.output)
+            .sum();
+        let n_dev = rng.range(2, 5);
+        let mem = (total / n_dev as u64) * 3 + 200;
+        let cluster = unit_cluster(n_dev, mem);
+        let flat = MSct::default().place(&g, &cluster);
+        let hier = HierPlacer::new(CoarsenConfig::off()).place(&g, &cluster);
+        match (flat, hier) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.algorithm, b.algorithm, "delegation is wholesale");
+                assert_eq!(a.device_of, b.device_of);
+                assert_eq!(
+                    a.predicted_makespan.to_bits(),
+                    b.predicted_makespan.to_bits()
+                );
+                assert_eq!(a.peak_memory, b.peak_memory);
+            }
+            (Err(_), Err(_)) => {} // identically infeasible
+            other => panic!("divergent feasibility: {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_hier_refined_placements_respect_memory() {
+    use baechi::hierarchy::{CoarsenConfig, HierPlacer};
+    prop_check("hier_memory", 100, |rng| {
+        let g = random_dag(rng, 50);
+        let total: u64 = g
+            .iter_nodes()
+            .map(|n| n.mem.params + n.mem.param_grad + n.mem.output)
+            .sum();
+        let n_dev = rng.range(2, 5);
+        let mem = (total / n_dev as u64) * 3 + 200;
+        let cluster = unit_cluster(n_dev, mem);
+        let cfg = random_coarsen_cfg(rng);
+        match HierPlacer::new(cfg).place(&g, &cluster) {
+            Ok(p) => {
+                assert_eq!(p.device_of.len(), g.len(), "hier covers every op");
+                for (d, &peak) in p.peak_memory.iter().enumerate() {
+                    assert!(peak <= mem, "device {d} peak {peak} > capacity {mem}");
+                }
+            }
+            Err(_) => {
+                // Tight instances may be infeasible even for flat m-SCT
+                // (which hier falls back to); that is a valid outcome.
+            }
+        }
+    });
+}

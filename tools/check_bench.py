@@ -1,0 +1,282 @@
+#!/usr/bin/env python3
+"""Compare fresh bench JSON against committed baselines and fail on regression.
+
+Usage:
+    check_bench.py --fresh DIR --baselines DIR [--tolerance 0.15] [--update DIR]
+
+Both directories hold ``BENCH_<name>.json`` documents in the schema the
+Rust benches emit (``util/bench.rs``):
+
+    {"bench": "<name>", "schema": 1, "rows": [{...}, ...], "summary": {...}}
+
+Every baseline file must have a fresh counterpart, and every baseline row
+(matched by its identity keys, default ``["name"]``) must appear in the
+fresh run; numeric fields are compared within a relative tolerance.
+Fresh rows or files without a baseline are reported but not gated — the
+baseline is the contract, the fresh run may grow beyond it.
+
+A ``tolerances.json`` next to the baselines tunes the gate:
+
+    {
+      "default": 0.15,              // relative tolerance
+      "abs_floor": 1e-12,           // |f-b| <= tol * max(|b|, abs_floor)
+      "overrides": {"^p99_.*$": 0.5},   // per-field-name regex -> tolerance
+      "ignore": ["^iters$"],        // field-name regexes never compared
+      "identity": {"BENCH_serving.json": ["model", "mutation_rate"]}
+    }
+
+A baseline document with a top-level ``"bootstrap": true`` is a
+*structural* baseline: recorded before trustworthy numbers existed (e.g.
+no toolchain on the authoring machine). It gates only the shape — bench
+name, schema, and that every baseline row identity is present in the
+fresh run — never the values. ``--update DIR`` then writes promoted
+baselines carrying the fresh run's real numbers (bootstrap flag dropped),
+ready to be committed once a trusted runner has produced them.
+
+Exit status: 0 = all gates pass, 1 = regression/missing data, 2 = usage.
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+
+DEFAULT_TOLERANCE = 0.15
+DEFAULT_ABS_FLOOR = 1e-12
+
+
+class GateConfig:
+    """Parsed tolerances.json (all fields optional)."""
+
+    def __init__(self, raw=None, default_tolerance=None):
+        raw = raw or {}
+        self.default = float(
+            default_tolerance
+            if default_tolerance is not None
+            else raw.get("default", DEFAULT_TOLERANCE)
+        )
+        self.abs_floor = float(raw.get("abs_floor", DEFAULT_ABS_FLOOR))
+        self.overrides = [
+            (re.compile(pat), float(tol))
+            for pat, tol in raw.get("overrides", {}).items()
+        ]
+        self.ignore = [re.compile(pat) for pat in raw.get("ignore", [])]
+        self.identity = {
+            fname: list(keys) for fname, keys in raw.get("identity", {}).items()
+        }
+
+    @classmethod
+    def load(cls, baselines_dir, default_tolerance=None):
+        path = os.path.join(baselines_dir, "tolerances.json")
+        raw = None
+        if os.path.exists(path):
+            with open(path) as f:
+                raw = json.load(f)
+        return cls(raw, default_tolerance)
+
+    def tolerance_for(self, key):
+        for pat, tol in self.overrides:
+            if pat.fullmatch(key):
+                return tol
+        return self.default
+
+    def is_ignored(self, key):
+        return any(pat.fullmatch(key) for pat in self.ignore)
+
+    def identity_keys(self, filename):
+        return self.identity.get(filename, ["name"])
+
+
+def load_doc(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "rows" not in doc:
+        raise ValueError(f"{path}: not a bench document (no 'rows')")
+    return doc
+
+
+def row_identity(row, keys):
+    """Identity tuple of a row; None when an identity key is missing."""
+    try:
+        return tuple((k, row[k]) for k in keys)
+    except KeyError:
+        return None
+
+
+def is_number(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def compare_rows(base_row, fresh_row, cfg, label, issues):
+    """Append an issue string per out-of-tolerance field."""
+    for key, b in base_row.items():
+        if cfg.is_ignored(key):
+            continue
+        if key not in fresh_row:
+            issues.append(f"{label}: field '{key}' missing from fresh row")
+            continue
+        f = fresh_row[key]
+        if is_number(b) and is_number(f):
+            tol = cfg.tolerance_for(key)
+            allowed = tol * max(abs(b), cfg.abs_floor)
+            if abs(f - b) > allowed:
+                delta = (f - b) / b if b else float("inf")
+                issues.append(
+                    f"{label}: '{key}' = {f:g} vs baseline {b:g} "
+                    f"({delta:+.1%}, tolerance ±{tol:.0%})"
+                )
+        elif b != f:
+            issues.append(f"{label}: '{key}' = {f!r} vs baseline {b!r}")
+
+
+def compare_docs(filename, base, fresh, cfg):
+    """Gate one baseline document. Returns (issues, notes)."""
+    issues, notes = [], []
+    if base.get("bench") != fresh.get("bench"):
+        issues.append(
+            f"{filename}: bench name {fresh.get('bench')!r} "
+            f"vs baseline {base.get('bench')!r}"
+        )
+    if base.get("schema") != fresh.get("schema"):
+        issues.append(
+            f"{filename}: schema {fresh.get('schema')!r} "
+            f"vs baseline {base.get('schema')!r}"
+        )
+    keys = cfg.identity_keys(filename)
+    bootstrap = bool(base.get("bootstrap"))
+
+    fresh_by_id = {}
+    for row in fresh.get("rows", []):
+        ident = row_identity(row, keys)
+        if ident is not None:
+            fresh_by_id[ident] = row
+
+    gated = 0
+    for row in base.get("rows", []):
+        ident = row_identity(row, keys)
+        if ident is None:
+            issues.append(
+                f"{filename}: baseline row lacks identity keys {keys}: {row}"
+            )
+            continue
+        label = f"{filename}[{', '.join(str(v) for _, v in ident)}]"
+        if ident not in fresh_by_id:
+            issues.append(f"{label}: row missing from fresh run")
+            continue
+        gated += 1
+        if not bootstrap:
+            compare_rows(row, fresh_by_id[ident], cfg, label, issues)
+
+    extra = len(fresh_by_id) - sum(
+        1
+        for row in base.get("rows", [])
+        if row_identity(row, keys) in fresh_by_id
+    )
+    if extra > 0:
+        notes.append(f"{filename}: {extra} fresh row(s) not gated (no baseline)")
+    if bootstrap:
+        notes.append(
+            f"{filename}: bootstrap baseline — structure gated ({gated} rows), "
+            "values not yet trusted"
+        )
+    return issues, notes
+
+
+def promote(fresh, base):
+    """The baseline a trusted fresh run promotes to (bootstrap flag gone)."""
+    doc = dict(fresh)
+    doc.pop("bootstrap", None)
+    # Keep a provenance hint when the previous baseline was a bootstrap.
+    if base.get("bootstrap"):
+        doc["promoted_from_bootstrap"] = True
+    return doc
+
+
+def run(fresh_dir, baselines_dir, default_tolerance=None, update_dir=None):
+    """Gate every baseline; returns (exit_code, report_lines)."""
+    lines = []
+    cfg = GateConfig.load(baselines_dir, default_tolerance)
+    baseline_files = sorted(
+        f
+        for f in os.listdir(baselines_dir)
+        if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not baseline_files:
+        lines.append(f"FAIL: no BENCH_*.json baselines in {baselines_dir}")
+        return 1, lines
+
+    all_issues = []
+    for fname in baseline_files:
+        base = load_doc(os.path.join(baselines_dir, fname))
+        fresh_path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(fresh_path):
+            all_issues.append(f"{fname}: fresh run produced no such file")
+            lines.append(f"  {fname:40s} MISSING")
+            continue
+        fresh = load_doc(fresh_path)
+        issues, notes = compare_docs(fname, base, fresh, cfg)
+        status = "FAIL" if issues else ("BOOTSTRAP-OK" if base.get("bootstrap") else "OK")
+        lines.append(f"  {fname:40s} {status}")
+        for n in notes:
+            lines.append(f"    note: {n}")
+        for i in issues:
+            lines.append(f"    regression: {i}")
+        all_issues.extend(issues)
+        if update_dir is not None and not issues:
+            os.makedirs(update_dir, exist_ok=True)
+            out = os.path.join(update_dir, fname)
+            with open(out, "w") as f:
+                json.dump(promote(fresh, base), f, indent=2, sort_keys=True)
+                f.write("\n")
+            lines.append(f"    promoted: {out}")
+
+    fresh_only = sorted(
+        f
+        for f in os.listdir(fresh_dir)
+        if f.startswith("BENCH_")
+        and f.endswith(".json")
+        and f not in baseline_files
+    )
+    for fname in fresh_only:
+        lines.append(f"  {fname:40s} (fresh only, not gated)")
+
+    lines.append(
+        f"{len(baseline_files)} baseline file(s) gated, "
+        f"{len(all_issues)} issue(s)"
+    )
+    return (1 if all_issues else 0), lines
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--fresh", required=True, help="directory of fresh BENCH_*.json")
+    p.add_argument("--baselines", required=True, help="directory of committed baselines")
+    p.add_argument(
+        "--tolerance",
+        type=float,
+        default=None,
+        help=f"default relative tolerance (default {DEFAULT_TOLERANCE}, "
+        "overridden per-field by tolerances.json)",
+    )
+    p.add_argument(
+        "--update",
+        metavar="DIR",
+        default=None,
+        help="write promoted baselines (fresh values, bootstrap flag dropped) here",
+    )
+    args = p.parse_args(argv)
+    for d in (args.fresh, args.baselines):
+        if not os.path.isdir(d):
+            print(f"error: {d} is not a directory", file=sys.stderr)
+            return 2
+    code, lines = run(args.fresh, args.baselines, args.tolerance, args.update)
+    print("bench gate:")
+    for line in lines:
+        print(line)
+    print("bench gate: " + ("PASS" if code == 0 else "FAIL"))
+    return code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,235 @@
+#!/usr/bin/env python3
+"""Unit tests for check_bench.py (stdlib unittest, fixture JSON on disk)."""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import check_bench
+
+
+def doc(name, rows, bootstrap=False, schema=1):
+    d = {"bench": name, "schema": schema, "rows": rows}
+    if bootstrap:
+        d["bootstrap"] = True
+    return d
+
+
+class Tree:
+    """Writes fixture docs into fresh/ and baselines/ under a tempdir."""
+
+    def __init__(self, tmp):
+        self.fresh = os.path.join(tmp, "fresh")
+        self.baselines = os.path.join(tmp, "baselines")
+        os.makedirs(self.fresh)
+        os.makedirs(self.baselines)
+
+    def write(self, where, fname, payload):
+        with open(os.path.join(where, fname), "w") as f:
+            json.dump(payload, f)
+
+
+class CheckBenchTest(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.t = Tree(self._tmp.name)
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def gate(self, **kw):
+        return check_bench.run(self.t.fresh, self.t.baselines, **kw)
+
+    def test_pass_within_tolerance(self):
+        self.t.write(
+            self.t.baselines, "BENCH_a.json", doc("a", [{"name": "x", "mean_s": 1.0}])
+        )
+        self.t.write(
+            self.t.fresh, "BENCH_a.json", doc("a", [{"name": "x", "mean_s": 1.1}])
+        )
+        code, lines = self.gate()
+        self.assertEqual(code, 0, lines)
+
+    def test_fail_beyond_tolerance(self):
+        self.t.write(
+            self.t.baselines, "BENCH_a.json", doc("a", [{"name": "x", "mean_s": 1.0}])
+        )
+        self.t.write(
+            self.t.fresh, "BENCH_a.json", doc("a", [{"name": "x", "mean_s": 1.3}])
+        )
+        code, lines = self.gate()
+        self.assertEqual(code, 1)
+        self.assertTrue(any("mean_s" in l for l in lines), lines)
+
+    def test_cli_tolerance_widens_gate(self):
+        self.t.write(
+            self.t.baselines, "BENCH_a.json", doc("a", [{"name": "x", "mean_s": 1.0}])
+        )
+        self.t.write(
+            self.t.fresh, "BENCH_a.json", doc("a", [{"name": "x", "mean_s": 1.3}])
+        )
+        code, _ = self.gate(default_tolerance=0.5)
+        self.assertEqual(code, 0)
+
+    def test_per_key_override_and_ignore(self):
+        self.t.write(
+            self.t.baselines,
+            "tolerances.json",
+            {
+                "default": 0.15,
+                "overrides": {"^p99_.*$": 1.0},
+                "ignore": ["^iters$"],
+            },
+        )
+        self.t.write(
+            self.t.baselines,
+            "BENCH_a.json",
+            doc("a", [{"name": "x", "p99_latency_s": 1.0, "iters": 100}]),
+        )
+        # p99 doubled (allowed by override), iters wildly off (ignored).
+        self.t.write(
+            self.t.fresh,
+            "BENCH_a.json",
+            doc("a", [{"name": "x", "p99_latency_s": 1.9, "iters": 3}]),
+        )
+        code, lines = self.gate()
+        self.assertEqual(code, 0, lines)
+
+    def test_baseline_row_missing_from_fresh_fails(self):
+        self.t.write(
+            self.t.baselines,
+            "BENCH_a.json",
+            doc("a", [{"name": "x", "v": 1.0}, {"name": "y", "v": 2.0}]),
+        )
+        self.t.write(self.t.fresh, "BENCH_a.json", doc("a", [{"name": "x", "v": 1.0}]))
+        code, lines = self.gate()
+        self.assertEqual(code, 1)
+        self.assertTrue(any("missing from fresh run" in l for l in lines), lines)
+
+    def test_fresh_extra_rows_are_not_gated(self):
+        self.t.write(
+            self.t.baselines, "BENCH_a.json", doc("a", [{"name": "x", "v": 1.0}])
+        )
+        self.t.write(
+            self.t.fresh,
+            "BENCH_a.json",
+            doc("a", [{"name": "x", "v": 1.0}, {"name": "z", "v": 999.0}]),
+        )
+        code, lines = self.gate()
+        self.assertEqual(code, 0)
+        self.assertTrue(any("not gated" in l for l in lines), lines)
+
+    def test_missing_fresh_file_fails(self):
+        self.t.write(
+            self.t.baselines, "BENCH_a.json", doc("a", [{"name": "x", "v": 1.0}])
+        )
+        code, lines = self.gate()
+        self.assertEqual(code, 1)
+        self.assertTrue(any("MISSING" in l for l in lines), lines)
+
+    def test_custom_identity_keys(self):
+        self.t.write(
+            self.t.baselines,
+            "tolerances.json",
+            {"identity": {"BENCH_serving.json": ["model", "shards"]}},
+        )
+        self.t.write(
+            self.t.baselines,
+            "BENCH_serving.json",
+            doc("serving", [{"model": "gnmt", "shards": 8, "rate": 100.0}]),
+        )
+        self.t.write(
+            self.t.fresh,
+            "BENCH_serving.json",
+            doc("serving", [{"model": "gnmt", "shards": 8, "rate": 101.0}]),
+        )
+        code, lines = self.gate()
+        self.assertEqual(code, 0, lines)
+
+    def test_non_numeric_mismatch_fails(self):
+        self.t.write(
+            self.t.baselines,
+            "BENCH_a.json",
+            doc("a", [{"name": "x", "mode": "fast"}]),
+        )
+        self.t.write(
+            self.t.fresh, "BENCH_a.json", doc("a", [{"name": "x", "mode": "slow"}])
+        )
+        code, lines = self.gate()
+        self.assertEqual(code, 1)
+        self.assertTrue(any("'mode'" in l for l in lines), lines)
+
+    def test_bootstrap_gates_structure_only(self):
+        self.t.write(
+            self.t.baselines,
+            "BENCH_a.json",
+            doc("a", [{"name": "x", "v": 1.0}], bootstrap=True),
+        )
+        # Wildly different value: fine under a bootstrap baseline.
+        self.t.write(self.t.fresh, "BENCH_a.json", doc("a", [{"name": "x", "v": 50.0}]))
+        code, lines = self.gate()
+        self.assertEqual(code, 0, lines)
+        self.assertTrue(any("BOOTSTRAP-OK" in l for l in lines), lines)
+
+    def test_bootstrap_still_fails_on_missing_row(self):
+        self.t.write(
+            self.t.baselines,
+            "BENCH_a.json",
+            doc("a", [{"name": "x", "v": 1.0}], bootstrap=True),
+        )
+        self.t.write(self.t.fresh, "BENCH_a.json", doc("a", [{"name": "other", "v": 1.0}]))
+        code, _ = self.gate()
+        self.assertEqual(code, 1)
+
+    def test_update_promotes_fresh_values(self):
+        self.t.write(
+            self.t.baselines,
+            "BENCH_a.json",
+            doc("a", [{"name": "x", "v": 1.0}], bootstrap=True),
+        )
+        self.t.write(self.t.fresh, "BENCH_a.json", doc("a", [{"name": "x", "v": 7.0}]))
+        update = os.path.join(self._tmp.name, "promoted")
+        code, _ = self.gate(update_dir=update)
+        self.assertEqual(code, 0)
+        with open(os.path.join(update, "BENCH_a.json")) as f:
+            promoted = json.load(f)
+        self.assertNotIn("bootstrap", promoted)
+        self.assertTrue(promoted["promoted_from_bootstrap"])
+        self.assertEqual(promoted["rows"][0]["v"], 7.0)
+
+    def test_no_update_written_on_failure(self):
+        self.t.write(
+            self.t.baselines, "BENCH_a.json", doc("a", [{"name": "x", "v": 1.0}])
+        )
+        self.t.write(self.t.fresh, "BENCH_a.json", doc("a", [{"name": "x", "v": 9.0}]))
+        update = os.path.join(self._tmp.name, "promoted")
+        code, _ = self.gate(update_dir=update)
+        self.assertEqual(code, 1)
+        self.assertFalse(os.path.exists(os.path.join(update, "BENCH_a.json")))
+
+    def test_empty_baselines_dir_fails(self):
+        code, lines = self.gate()
+        self.assertEqual(code, 1)
+        self.assertTrue(any("no BENCH_" in l for l in lines), lines)
+
+    def test_main_exit_codes(self):
+        self.t.write(
+            self.t.baselines, "BENCH_a.json", doc("a", [{"name": "x", "v": 1.0}])
+        )
+        self.t.write(self.t.fresh, "BENCH_a.json", doc("a", [{"name": "x", "v": 1.0}]))
+        self.assertEqual(
+            check_bench.main(["--fresh", self.t.fresh, "--baselines", self.t.baselines]),
+            0,
+        )
+        self.assertEqual(
+            check_bench.main(["--fresh", "/nonexistent", "--baselines", self.t.baselines]),
+            2,
+        )
+
+
+if __name__ == "__main__":
+    unittest.main()
