@@ -70,7 +70,19 @@ if [[ "$fast" == 0 ]]; then
     # validates as trace-event JSON with every stage span nested inside
     # its request span (uploaded as the trace-smoke CI artifact).
     stage ./target/release/baechi trace --model linreg --placer m-etf --out trace-smoke.json
+    stage python3 tools/test_validate_trace.py
     stage python3 tools/validate_trace.py trace-smoke.json
+    # Explainability suite: decision records, critical-path attribution
+    # (sums to the makespan within 1e-9), explain-off bit-identity for
+    # every registered placer, run-history JSONL round-trip.
+    stage cargo test -q --test explain
+    # Explain smoke run: `baechi explain --json` must emit an artifact
+    # whose attribution sums to the simulated makespan and whose
+    # decision records are well-formed (uploaded as the explain-smoke
+    # CI artifact). The validator's own tests gate the validator first.
+    stage python3 tools/test_validate_explain.py
+    stage sh -c './target/release/baechi explain --model inception --placer m-sct --json > explain-smoke.json'
+    stage python3 tools/validate_explain.py --require-decisions explain-smoke.json
     # Hierarchical placement suite: coarsen/refine unit tests plus the
     # hier property tests (contraction acyclicity, super-op aggregation,
     # expand/coarsen identity, zero-coarsening ≡ m-SCT, memory safety).
@@ -90,7 +102,7 @@ if [[ "$fast" == 0 ]]; then
     stage cargo clippy --all-targets -- -D warnings
     stage cargo doc --no-deps
 else
-    echo "fast mode: skipped stages: named test suites (calibration, flow, serve, incremental, telemetry, trace, hier), bench smoke runs (fig12_serving, table3_placement_time), bench regression gate (check_bench), trace smoke + validation, fmt, clippy, doc"
+    echo "fast mode: skipped stages: named test suites (calibration, flow, serve, incremental, telemetry, trace, explain, hier), bench smoke runs (fig12_serving, table3_placement_time), bench regression gate (check_bench), trace smoke + validation, explain smoke + validation, fmt, clippy, doc"
 fi
 
 echo "CI green."

@@ -8,5 +8,7 @@ pub mod pipeline;
 pub mod serve;
 
 pub use config::{BaechiConfig, CalibrationSpec, PlacerKind, TopologySpec};
-pub use pipeline::{engine_for, run, run_traced, ReplacementSummary, RunReport};
+pub use pipeline::{
+    engine_for, run, run_explained, run_traced, ExplainReport, ReplacementSummary, RunReport,
+};
 pub use serve::{run_serve_bench, ServeBenchOpts, ServeBenchReport};

@@ -167,15 +167,76 @@ pub fn run_traced(cfg: &BaechiConfig) -> crate::Result<(RunReport, Json)> {
     let spans = engine.tracer().drain();
     let graph = cfg.benchmark.graph();
     let topo = engine.cluster().effective_topology().into_owned();
+    // Critical-path annotation: events on the makespan-defining chain
+    // get `crit`/`crit_category` args so Perfetto can highlight them.
+    let attribution = report
+        .sim
+        .ok()
+        .then(|| crate::explain::attribute(&graph, &report.sim.schedule, report.sim.makespan));
     let trace = chrome_trace(
         &spans,
         Some(SimTrack {
             graph: &graph,
             topo: &topo,
             schedule: &report.sim.schedule,
+            attribution: attribution.as_ref(),
         }),
     );
     Ok((report, trace))
+}
+
+/// Everything `baechi explain` reports: the run itself, the per-op
+/// decision log captured while the placer ran, and the critical-path
+/// attribution of the simulated schedule.
+#[derive(Debug, Clone)]
+pub struct ExplainReport {
+    pub report: RunReport,
+    /// Decisions recorded by the placer under this run's explain scope.
+    pub decisions: crate::explain::DecisionLog,
+    /// Makespan attribution over the simulated schedule. When the run
+    /// OOMed at runtime the walk covers the truncated schedule (its own
+    /// `max_end`), so the breakdown still describes what executed.
+    pub attribution: crate::explain::Attribution,
+}
+
+impl ExplainReport {
+    /// The run report plus `attribution` and `decisions` sections
+    /// (`baechi explain --json`).
+    pub fn to_json(&self, top_k: usize) -> Json {
+        let mut j = self.report.to_json();
+        j.set(
+            "attribution",
+            self.attribution.to_json(&self.report.sim.schedule, top_k),
+        )
+        .set("decisions", self.decisions.to_json());
+        j
+    }
+}
+
+/// [`run`] with decision recording on: the placer runs under a
+/// [`crate::explain::DecisionScope`], and the simulated schedule is
+/// attributed back to compute / transfer / queue-wait / idle. The
+/// response itself is bit-identical to a plain [`run`] — recording
+/// only observes.
+pub fn run_explained(cfg: &BaechiConfig) -> crate::Result<ExplainReport> {
+    let calibrated = cfg.calibrated()?;
+    let engine = engine_with(cfg, calibrated.as_ref(), None)?;
+    let scope = crate::explain::record_decisions();
+    let report = run_with_engine(cfg, &engine, calibrated);
+    let decisions = scope.finish();
+    let report = report?;
+    let graph = cfg.benchmark.graph();
+    let makespan = if report.sim.ok() {
+        report.sim.makespan
+    } else {
+        report.sim.schedule.max_end()
+    };
+    let attribution = crate::explain::attribute(&graph, &report.sim.schedule, makespan);
+    Ok(ExplainReport {
+        report,
+        decisions,
+        attribution,
+    })
 }
 
 fn run_with_engine(

@@ -56,6 +56,7 @@ pub use observer::{LogObserver, PlacementObserver, RecordingObserver, Stage, Sta
 pub use registry::{PlacerContext, PlacerRegistration, PlacerRegistry, ResolvedPlacer};
 
 use crate::error::BaechiError;
+use crate::explain::record::{AttributionTotals, FlightRecorder, RecorderStats, RunRecord};
 use crate::feedback::{ReplacementPolicy, ReplacementRound, TopologyAdjustment};
 use crate::graph::OpGraph;
 use crate::hierarchy::CoarsenConfig;
@@ -260,6 +261,8 @@ pub struct PlacementEngineBuilder {
     /// `None` defers to `BAECHI_TRACE` at build time.
     tracing: Option<bool>,
     trace_capacity: usize,
+    /// `None` defers to `BAECHI_RUN_HISTORY` at build time.
+    run_history: Option<(String, u64)>,
 }
 
 impl PlacementEngineBuilder {
@@ -274,6 +277,7 @@ impl PlacementEngineBuilder {
             cache_shards: DEFAULT_CACHE_SHARDS,
             tracing: None,
             trace_capacity: DEFAULT_SPAN_CAPACITY,
+            run_history: None,
         }
     }
 
@@ -346,6 +350,18 @@ impl PlacementEngineBuilder {
         self
     }
 
+    /// Record every served placement to an append-only JSONL run
+    /// history at `path` (rotated past `max_bytes` — see
+    /// [`crate::explain::record::FlightRecorder`]). Without this call
+    /// the engine defers to the `BAECHI_RUN_HISTORY` /
+    /// `BAECHI_RUN_HISTORY_MAX_BYTES` environment variables (off unless
+    /// set). Recording never changes what is served: the cache key is
+    /// untouched and append failures are dropped, not surfaced.
+    pub fn run_history(mut self, path: impl Into<String>, max_bytes: u64) -> PlacementEngineBuilder {
+        self.run_history = Some((path.into(), max_bytes));
+        self
+    }
+
     pub fn build(self) -> crate::Result<PlacementEngine> {
         let cluster = self.cluster.ok_or_else(|| {
             BaechiError::invalid("PlacementEngine::builder(): a cluster is required")
@@ -363,7 +379,13 @@ impl PlacementEngineBuilder {
             self.tracing
                 .unwrap_or_else(crate::telemetry::env_tracing_enabled),
         );
+        let recorder = match self.run_history.or_else(crate::explain::env_run_history) {
+            Some((path, max_bytes)) => Some(Arc::new(FlightRecorder::open(path, max_bytes)?)),
+            None => None,
+        };
         Ok(PlacementEngine {
+            recorder,
+            last_attribution: std::sync::Mutex::new(None),
             cluster_fp: fingerprint::cluster_fingerprint(&cluster),
             topo_fp: fingerprint::topology_fingerprint(&cluster.effective_topology()),
             sim_fp: fingerprint::sim_fingerprint(&self.sim),
@@ -394,6 +416,12 @@ pub struct PlacementEngine {
     registry: PlacerRegistry,
     tracer: Arc<Tracer>,
     cache: ShardedLru<CacheKey, Arc<PlacementResponse>>,
+    /// Run-history flight recorder (None = recording disabled).
+    recorder: Option<Arc<FlightRecorder>>,
+    /// Most recent critical-path attribution totals (feeds the
+    /// `baechi_critical_path_fraction` gauge). Only written when run
+    /// history is enabled — the attribution walk rides the recorder.
+    last_attribution: std::sync::Mutex<Option<AttributionTotals>>,
     cluster_fp: u64,
     /// Fingerprint of the engine cluster's own topology, to recognize
     /// per-request overrides that change nothing.
@@ -445,6 +473,68 @@ impl PlacementEngine {
     /// collection, drain collected spans for export.
     pub fn tracer(&self) -> &Arc<Tracer> {
         &self.tracer
+    }
+
+    /// The run-history flight recorder, when one is configured.
+    pub fn run_recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.recorder.as_ref()
+    }
+
+    /// Recorder counters (records / bytes / rotations); `None` when run
+    /// history is disabled.
+    pub fn recorder_stats(&self) -> Option<RecorderStats> {
+        self.recorder.as_ref().map(|r| r.stats())
+    }
+
+    /// Critical-path category totals of the most recently recorded run
+    /// (`None` until a simulated run is recorded). Feeds the
+    /// `baechi_critical_path_fraction` Prometheus gauge.
+    pub fn last_attribution(&self) -> Option<AttributionTotals> {
+        *self
+            .last_attribution
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Append a [`RunRecord`] for a served response. No-op without a
+    /// recorder; append failures are swallowed (recording must never
+    /// fail a placement). `serve_mode` is the serving-path label
+    /// (`"full"`, `"cache_hit"`, `"incremental"`). Public so the
+    /// serving layer can record paths that bypass [`Self::place`]
+    /// (lookup hits, incremental deltas).
+    pub fn record_served(
+        &self,
+        req: &PlacementRequest,
+        resp: &PlacementResponse,
+        serve_mode: &str,
+    ) {
+        let Some(rec) = &self.recorder else { return };
+        let mut r = RunRecord::from_graph(&req.graph, self.cluster.n(), &resp.placer, serve_mode);
+        r.coarsening = req.coarsen.map(|c| {
+            if c.enabled {
+                format!("members:{}", c.max_members)
+            } else {
+                "off".to_string()
+            }
+        });
+        if let Some(sim) = &resp.sim {
+            if sim.ok() {
+                r.makespan = Some(sim.makespan);
+                let a = crate::explain::attribute(&req.graph, &sim.schedule, sim.makespan);
+                let totals = AttributionTotals {
+                    compute: a.compute,
+                    transfer: a.transfer,
+                    queue_wait: a.queue_wait,
+                    idle: a.idle,
+                };
+                r.attribution = Some(totals);
+                *self
+                    .last_attribution
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner()) = Some(totals);
+            }
+        }
+        let _ = rec.append(&r);
     }
 
     /// The trace id this request's telemetry books under: the caller's
@@ -601,6 +691,7 @@ impl PlacementEngine {
                 ops,
                 ops,
             );
+            self.record_served(req, &hit, "cache_hit");
             return Ok(hit);
         }
         let cluster: Cow<'_, Cluster> = match override_t {
@@ -664,6 +755,7 @@ impl PlacementEngine {
         });
         let cost = resp.placement.device_of.len() as u64 + 1;
         self.cache.insert(key.shard_fp(), key, resp.clone(), cost);
+        self.record_served(req, &resp, "full");
         Ok(resp)
     }
 
@@ -1020,6 +1112,34 @@ mod tests {
         // Disabled coarsening delegates wholesale to plain m-SCT.
         assert_eq!(b.placement.algorithm, "m-sct");
         assert_eq!(e.cache_stats().misses, 2);
+    }
+
+    #[test]
+    fn run_history_records_full_and_cache_hit() {
+        let dir = std::env::temp_dir().join(format!("baechi-engine-rh-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("runs.jsonl");
+        let e = PlacementEngine::builder()
+            .cluster(Cluster::homogeneous(2, 1 << 20, CommModel::new(0.0, 1.0).unwrap()))
+            .run_history(path.to_string_lossy().into_owned(), 1 << 20)
+            .build()
+            .unwrap();
+        let g = crate::models::linreg::linreg_graph();
+        let req = PlacementRequest::new(g, "m-sct");
+        e.place(&req).unwrap();
+        e.place(&req).unwrap();
+        let recs = crate::explain::FlightRecorder::read_all(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].serve_mode, "full");
+        assert_eq!(recs[1].serve_mode, "cache_hit");
+        // The attribution totals telescoped from the sim schedule must
+        // reconstruct the recorded makespan.
+        let m = recs[0].makespan.unwrap();
+        let a = recs[0].attribution.unwrap();
+        let sum = a.compute + a.transfer + a.queue_wait + a.idle;
+        assert!((sum - m).abs() <= 1e-9 * m.abs().max(1.0), "{sum} vs {m}");
+        assert_eq!(e.recorder_stats().unwrap().records, 2);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,698 @@
+//! Critical-path attribution of a simulated step.
+//!
+//! Walks the simulator's [`SimSchedule`] backward from the element
+//! that ends at the makespan, at each step asking *what kept this from
+//! starting earlier*: a dependency (a predecessor's compute, or the
+//! transfer that delivered its tensor), or an occupancy blocker (an
+//! unrelated op holding the device, an unrelated transfer holding a
+//! link). The walk telescopes, so every second of the makespan lands
+//! in exactly one of four categories:
+//!
+//! - **compute** — dependency/root op execution on the path,
+//! - **transfer** — dependency tensor movement on the path,
+//! - **queue-wait** — durations of blocking elements the critical
+//!   chain sat behind,
+//! - **idle** — gaps where nothing in the schedule explains the wait
+//!   (scheduler slack), plus the stretch before the first element.
+//!
+//! The four totals sum to the makespan within 1e-9 (Kahan-compensated;
+//! property-tested in `tests/explain.rs`). The per-device and per-link
+//! breakdowns cover path elements only — a transfer's duration is
+//! booked against *every* link it rides, so link blame intentionally
+//! overlaps and only the category totals satisfy the sum invariant.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::graph::{NodeId, OpGraph};
+use crate::sim::SimSchedule;
+use crate::util::json::Json;
+
+/// Where a second of makespan went.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlameCategory {
+    Compute,
+    Transfer,
+    QueueWait,
+    Idle,
+}
+
+impl BlameCategory {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BlameCategory::Compute => "compute",
+            BlameCategory::Transfer => "transfer",
+            BlameCategory::QueueWait => "queue_wait",
+            BlameCategory::Idle => "idle",
+        }
+    }
+}
+
+/// A schedule element on the critical path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PathElem {
+    /// Index into [`SimSchedule::ops`].
+    Op(usize),
+    /// Index into [`SimSchedule::transfers`].
+    Transfer(usize),
+}
+
+/// One step of the backward walk, in chronological order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PathStep {
+    pub elem: PathElem,
+    /// How the element's own duration was booked (`Compute`,
+    /// `Transfer`, or `QueueWait`; never `Idle`).
+    pub category: BlameCategory,
+    pub start: f64,
+    pub end: f64,
+    /// Unexplained gap booked as idle immediately before this step.
+    pub gap_before: f64,
+}
+
+/// Per-device share of the path (ops only).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeviceBlame {
+    pub device: usize,
+    pub compute: f64,
+    pub queue_wait: f64,
+    pub idle: f64,
+}
+
+/// Per-link share of the path (transfers only; overlapping by design).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LinkBlame {
+    pub link: usize,
+    pub transfer: f64,
+    pub queue_wait: f64,
+}
+
+/// A compute op on the critical path, heaviest first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopOp {
+    pub node: NodeId,
+    pub name: String,
+    pub device: usize,
+    pub seconds: f64,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// The full blame summary for one simulated step.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Attribution {
+    pub makespan: f64,
+    pub compute: f64,
+    pub transfer: f64,
+    pub queue_wait: f64,
+    pub idle: f64,
+    /// Critical path, earliest element first.
+    pub path: Vec<PathStep>,
+    pub per_device: Vec<DeviceBlame>,
+    pub per_link: Vec<LinkBlame>,
+    /// Compute ops on the path, sorted by duration descending.
+    pub top_ops: Vec<TopOp>,
+}
+
+impl Attribution {
+    /// `compute + transfer + queue_wait + idle - makespan` (the
+    /// invariant bounds its magnitude by `1e-9 · max(1, makespan)`).
+    pub fn residual(&self) -> f64 {
+        (self.compute + self.transfer + self.queue_wait + self.idle) - self.makespan
+    }
+
+    /// Fraction of the makespan booked to `cat` (0 when makespan is 0).
+    pub fn fraction(&self, cat: BlameCategory) -> f64 {
+        let total = match cat {
+            BlameCategory::Compute => self.compute,
+            BlameCategory::Transfer => self.transfer,
+            BlameCategory::QueueWait => self.queue_wait,
+            BlameCategory::Idle => self.idle,
+        };
+        if self.makespan > 0.0 {
+            total / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    /// Schedule-op indices on the path with their booked category
+    /// (feeds the Chrome-trace `crit` span args).
+    pub fn crit_ops(&self) -> BTreeMap<usize, BlameCategory> {
+        self.path
+            .iter()
+            .filter_map(|s| match s.elem {
+                PathElem::Op(i) => Some((i, s.category)),
+                PathElem::Transfer(_) => None,
+            })
+            .collect()
+    }
+
+    /// Schedule-transfer indices on the path with their booked category.
+    pub fn crit_transfers(&self) -> BTreeMap<usize, BlameCategory> {
+        self.path
+            .iter()
+            .filter_map(|s| match s.elem {
+                PathElem::Transfer(i) => Some((i, s.category)),
+                PathElem::Op(_) => None,
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self, schedule: &SimSchedule, top_k: usize) -> Json {
+        let mut j = Json::obj();
+        j.set("makespan", self.makespan)
+            .set("compute", self.compute)
+            .set("transfer", self.transfer)
+            .set("queue_wait", self.queue_wait)
+            .set("idle", self.idle)
+            .set("residual", self.residual());
+        let mut fractions = Json::obj();
+        for cat in [
+            BlameCategory::Compute,
+            BlameCategory::Transfer,
+            BlameCategory::QueueWait,
+            BlameCategory::Idle,
+        ] {
+            fractions.set(cat.as_str(), self.fraction(cat));
+        }
+        j.set("fractions", fractions);
+        j.set(
+            "per_device",
+            Json::Arr(
+                self.per_device
+                    .iter()
+                    .map(|d| {
+                        let mut o = Json::obj();
+                        o.set("device", d.device)
+                            .set("compute", d.compute)
+                            .set("queue_wait", d.queue_wait)
+                            .set("idle", d.idle);
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "per_link",
+            Json::Arr(
+                self.per_link
+                    .iter()
+                    .map(|l| {
+                        let mut o = Json::obj();
+                        o.set("link", l.link)
+                            .set("transfer", l.transfer)
+                            .set("queue_wait", l.queue_wait);
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "top_ops",
+            Json::Arr(
+                self.top_ops
+                    .iter()
+                    .take(top_k)
+                    .map(|t| {
+                        let mut o = Json::obj();
+                        o.set("node", t.node.0)
+                            .set("name", t.name.as_str())
+                            .set("device", t.device)
+                            .set("seconds", t.seconds)
+                            .set("start", t.start)
+                            .set("end", t.end);
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "path",
+            Json::Arr(
+                self.path
+                    .iter()
+                    .map(|s| {
+                        let mut o = Json::obj();
+                        match s.elem {
+                            PathElem::Op(i) => {
+                                let sp = &schedule.ops[i];
+                                o.set("kind", "op")
+                                    .set("node", sp.node.0)
+                                    .set("device", sp.device);
+                            }
+                            PathElem::Transfer(i) => {
+                                let sp = &schedule.transfers[i];
+                                o.set("kind", "transfer")
+                                    .set("node", sp.node.0)
+                                    .set("src", sp.src)
+                                    .set("dst", sp.dst)
+                                    .set("bytes", sp.bytes);
+                            }
+                        }
+                        o.set("category", s.category.as_str())
+                            .set("start", s.start)
+                            .set("end", s.end)
+                            .set("gap_before", s.gap_before);
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+}
+
+/// Kahan-compensated accumulator: keeps the four category sums exact
+/// enough that the telescoped total meets the 1e-9 invariant even on
+/// million-element paths.
+#[derive(Default, Clone, Copy)]
+struct Kahan {
+    sum: f64,
+    c: f64,
+}
+
+impl Kahan {
+    fn add(&mut self, x: f64) {
+        let y = x - self.c;
+        let t = self.sum + y;
+        self.c = (t - self.sum) - y;
+        self.sum = t;
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Cause {
+    Dependency(PathElem),
+    Blocker(PathElem),
+}
+
+fn elem_key(e: PathElem) -> (u8, usize) {
+    match e {
+        PathElem::Op(i) => (0, i),
+        PathElem::Transfer(i) => (1, i),
+    }
+}
+
+/// Attribute `makespan` over `schedule`. `graph` supplies the
+/// dependency structure (which earlier elements an op was actually
+/// waiting for, as opposed to merely queued behind).
+pub fn attribute(graph: &OpGraph, schedule: &SimSchedule, makespan: f64) -> Attribution {
+    let mut out = Attribution {
+        makespan,
+        ..Default::default()
+    };
+    let eps = 1e-9 * makespan.abs().max(1.0);
+
+    // Indexes: node → its op span, (producer, dst) → delivering
+    // transfer, per-device op lists and per-link transfer lists for
+    // blocker lookups. Later spans win so re-executed elements resolve
+    // to their final interval.
+    let mut op_of_node: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut ops_by_device: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, sp) in schedule.ops.iter().enumerate() {
+        op_of_node.insert(sp.node.0, i);
+        ops_by_device.entry(sp.device).or_default().push(i);
+    }
+    let mut xfer_to: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    let mut xfers_by_link: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, sp) in schedule.transfers.iter().enumerate() {
+        xfer_to.insert((sp.node.0, sp.dst), i);
+        for &l in &sp.links {
+            xfers_by_link.entry(l).or_default().push(i);
+        }
+    }
+    // Blocker lookups binary-search these lists, so sort by end time
+    // (recording order is already close for ops, not guaranteed for
+    // flow-mode transfers).
+    for list in ops_by_device.values_mut() {
+        list.sort_by(|&a, &b| {
+            schedule.ops[a]
+                .end
+                .partial_cmp(&schedule.ops[b].end)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+    }
+    for list in xfers_by_link.values_mut() {
+        list.sort_by(|&a, &b| {
+            schedule.transfers[a]
+                .end
+                .partial_cmp(&schedule.transfers[b].end)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+    }
+
+    let interval = |e: PathElem| -> (f64, f64) {
+        match e {
+            PathElem::Op(i) => (schedule.ops[i].start, schedule.ops[i].end),
+            PathElem::Transfer(i) => (schedule.transfers[i].start, schedule.transfers[i].end),
+        }
+    };
+
+    // Root: the element whose end is the makespan.
+    let mut root: Option<PathElem> = None;
+    let mut best_end = f64::NEG_INFINITY;
+    for (i, sp) in schedule.ops.iter().enumerate() {
+        if sp.end > best_end {
+            best_end = sp.end;
+            root = Some(PathElem::Op(i));
+        }
+    }
+    for (i, sp) in schedule.transfers.iter().enumerate() {
+        if sp.end > best_end {
+            best_end = sp.end;
+            root = Some(PathElem::Transfer(i));
+        }
+    }
+
+    let mut compute = Kahan::default();
+    let mut transfer = Kahan::default();
+    let mut queue_wait = Kahan::default();
+    let mut idle = Kahan::default();
+    let mut dev_blame: BTreeMap<usize, DeviceBlame> = BTreeMap::new();
+    let mut link_blame: BTreeMap<usize, LinkBlame> = BTreeMap::new();
+    let mut steps_rev: Vec<PathStep> = Vec::new();
+
+    let mut cur = root;
+    // An OOM-truncated (or empty) schedule ends short of the makespan;
+    // book the unexplained tail as idle so the invariant still holds.
+    idle.add(makespan - best_end.max(0.0));
+
+    // `true` while the current element is a dependency/root (its
+    // duration is real work); `false` while it is a blocker we were
+    // queued behind.
+    let mut on_dependency = true;
+    let mut visited: HashSet<(u8, usize)> = HashSet::new();
+    let budget = schedule.ops.len() + schedule.transfers.len() + 1;
+
+    while let Some(e) = cur {
+        if steps_rev.len() > budget || visited.contains(&elem_key(e)) {
+            // Defensive: a malformed schedule (overlapping zero-width
+            // spans) could otherwise cycle. Close the walk as if the
+            // element had no cause.
+            let (start, _) = interval(e);
+            idle.add(start);
+            break;
+        }
+        visited.insert(elem_key(e));
+        let (start, end) = interval(e);
+        let dur = end - start;
+        let category = match (on_dependency, e) {
+            (true, PathElem::Op(_)) => BlameCategory::Compute,
+            (true, PathElem::Transfer(_)) => BlameCategory::Transfer,
+            (false, _) => BlameCategory::QueueWait,
+        };
+        match category {
+            BlameCategory::Compute => compute.add(dur),
+            BlameCategory::Transfer => transfer.add(dur),
+            BlameCategory::QueueWait => queue_wait.add(dur),
+            BlameCategory::Idle => unreachable!(),
+        }
+        match e {
+            PathElem::Op(i) => {
+                let d = dev_blame.entry(schedule.ops[i].device).or_default();
+                d.device = schedule.ops[i].device;
+                if category == BlameCategory::QueueWait {
+                    d.queue_wait += dur;
+                } else {
+                    d.compute += dur;
+                }
+            }
+            PathElem::Transfer(i) => {
+                for &l in &schedule.transfers[i].links {
+                    let lb = link_blame.entry(l).or_default();
+                    lb.link = l;
+                    if category == BlameCategory::QueueWait {
+                        lb.queue_wait += dur;
+                    } else {
+                        lb.transfer += dur;
+                    }
+                }
+            }
+        }
+
+        // What kept this element from starting earlier? Take the
+        // latest-ending candidate; on a tie a dependency beats a
+        // blocker (more informative).
+        let mut cause: Option<Cause> = None;
+        let mut cause_end = f64::NEG_INFINITY;
+        let mut consider = |c: Cause, c_end: f64| {
+            let better = c_end > cause_end + eps
+                || (c_end > cause_end - eps && matches!(c, Cause::Dependency(_)));
+            if c_end <= start + eps && better {
+                cause = Some(c);
+                cause_end = c_end;
+            }
+        };
+        match e {
+            PathElem::Op(i) => {
+                let sp = &schedule.ops[i];
+                for &(p, _) in graph.predecessors(sp.node) {
+                    if let Some(&pi) = op_of_node.get(&p.0) {
+                        if schedule.ops[pi].device == sp.device {
+                            consider(Cause::Dependency(PathElem::Op(pi)), schedule.ops[pi].end);
+                        }
+                    }
+                    if let Some(&ti) = xfer_to.get(&(p.0, sp.device)) {
+                        consider(
+                            Cause::Dependency(PathElem::Transfer(ti)),
+                            schedule.transfers[ti].end,
+                        );
+                    }
+                }
+                if let Some(peers) = ops_by_device.get(&sp.device) {
+                    let k = peers.partition_point(|&oi| schedule.ops[oi].end <= start + eps);
+                    // The latest-ending peer that isn't this op (the
+                    // last equal-end slot may be the op itself).
+                    for &oi in peers[..k].iter().rev() {
+                        if oi != i {
+                            consider(Cause::Blocker(PathElem::Op(oi)), schedule.ops[oi].end);
+                            break;
+                        }
+                    }
+                }
+            }
+            PathElem::Transfer(i) => {
+                let sp = &schedule.transfers[i];
+                if let Some(&pi) = op_of_node.get(&sp.node.0) {
+                    consider(Cause::Dependency(PathElem::Op(pi)), schedule.ops[pi].end);
+                }
+                for &l in &sp.links {
+                    if let Some(peers) = xfers_by_link.get(&l) {
+                        let k = peers
+                            .partition_point(|&ti| schedule.transfers[ti].end <= start + eps);
+                        for &ti in peers[..k].iter().rev() {
+                            if ti != i {
+                                consider(
+                                    Cause::Blocker(PathElem::Transfer(ti)),
+                                    schedule.transfers[ti].end,
+                                );
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let gap_before = match cause {
+            Some(_) => start - cause_end,
+            None => start, // back at the beginning of time
+        };
+        idle.add(gap_before);
+        steps_rev.push(PathStep {
+            elem: e,
+            category,
+            start,
+            end,
+            gap_before,
+        });
+        match cause {
+            Some(Cause::Dependency(next)) => {
+                on_dependency = true;
+                cur = Some(next);
+            }
+            Some(Cause::Blocker(next)) => {
+                on_dependency = false;
+                cur = Some(next);
+            }
+            None => cur = None,
+        }
+    }
+
+    steps_rev.reverse();
+    // Idle gaps belong to whatever the *later* element was waiting on.
+    for s in &steps_rev {
+        if let PathElem::Op(i) = s.elem {
+            if s.gap_before > 0.0 {
+                let d = dev_blame.entry(schedule.ops[i].device).or_default();
+                d.device = schedule.ops[i].device;
+                d.idle += s.gap_before;
+            }
+        }
+    }
+
+    out.compute = compute.sum;
+    out.transfer = transfer.sum;
+    out.queue_wait = queue_wait.sum;
+    out.idle = idle.sum;
+    out.per_device = dev_blame.into_values().collect();
+    out.per_link = link_blame.into_values().collect();
+    out.top_ops = steps_rev
+        .iter()
+        .filter_map(|s| match (s.elem, s.category) {
+            (PathElem::Op(i), BlameCategory::Compute) => {
+                let sp = &schedule.ops[i];
+                Some(TopOp {
+                    node: sp.node,
+                    name: graph.node(sp.node).name.clone(),
+                    device: sp.device,
+                    seconds: sp.end - sp.start,
+                    start: sp.start,
+                    end: sp.end,
+                })
+            }
+            _ => None,
+        })
+        .collect();
+    out.top_ops.sort_by(|a, b| {
+        b.seconds
+            .partial_cmp(&a.seconds)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.node.0.cmp(&b.node.0))
+    });
+    out.path = steps_rev;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+    use crate::sim::{OpSpan, TransferSpan};
+
+    fn graph(edges: &[(usize, usize)], n: usize) -> OpGraph {
+        let mut g = OpGraph::new("attr-test");
+        let ids: Vec<NodeId> = (0..n)
+            .map(|i| g.add_node(&format!("op{i}"), OpKind::Elementwise))
+            .collect();
+        for &(a, b) in edges {
+            g.add_edge(ids[a], ids[b], 64);
+        }
+        g
+    }
+
+    fn op(node: usize, device: usize, start: f64, end: f64) -> OpSpan {
+        OpSpan {
+            node: NodeId(node),
+            device,
+            start,
+            end,
+        }
+    }
+
+    #[test]
+    fn single_device_chain_is_all_compute() {
+        let g = graph(&[(0, 1)], 2);
+        let sched = SimSchedule {
+            ops: vec![op(0, 0, 0.0, 2.0), op(1, 0, 2.0, 5.0)],
+            transfers: vec![],
+        };
+        let a = attribute(&g, &sched, 5.0);
+        assert_eq!(a.compute, 5.0);
+        assert_eq!(a.transfer, 0.0);
+        assert_eq!(a.queue_wait, 0.0);
+        assert_eq!(a.idle, 0.0);
+        assert!(a.residual().abs() <= 1e-9);
+        assert_eq!(a.path.len(), 2);
+        assert_eq!(a.top_ops[0].node, NodeId(1));
+        assert_eq!(a.per_device.len(), 1);
+        assert_eq!(a.per_device[0].compute, 5.0);
+    }
+
+    #[test]
+    fn cross_device_transfer_is_booked() {
+        let g = graph(&[(0, 1)], 2);
+        let sched = SimSchedule {
+            ops: vec![op(0, 0, 0.0, 2.0), op(1, 1, 3.0, 6.0)],
+            transfers: vec![TransferSpan {
+                node: NodeId(0),
+                src: 0,
+                dst: 1,
+                bytes: 64,
+                links: vec![4],
+                start: 2.0,
+                end: 3.0,
+            }],
+        };
+        let a = attribute(&g, &sched, 6.0);
+        assert_eq!(a.compute, 5.0);
+        assert_eq!(a.transfer, 1.0);
+        assert_eq!(a.queue_wait, 0.0);
+        assert_eq!(a.idle, 0.0);
+        assert!(a.residual().abs() <= 1e-9);
+        assert_eq!(a.per_link.len(), 1);
+        assert_eq!(a.per_link[0].link, 4);
+        assert_eq!(a.per_link[0].transfer, 1.0);
+        assert_eq!(a.crit_transfers().len(), 1);
+    }
+
+    #[test]
+    fn occupancy_blocker_books_queue_wait() {
+        // dev0: op0 [0,1] (pred of op2), op1 [1,4] (unrelated),
+        // op2 [4,6]. op2's data was ready at 1; it queued behind op1.
+        let g = graph(&[(0, 2)], 3);
+        let sched = SimSchedule {
+            ops: vec![op(0, 0, 0.0, 1.0), op(1, 0, 1.0, 4.0), op(2, 0, 4.0, 6.0)],
+            transfers: vec![],
+        };
+        let a = attribute(&g, &sched, 6.0);
+        // op2 is compute; op1 is a blocker (queue wait); op0 blocks op1
+        // in turn (the device was simply busy end-to-end).
+        assert_eq!(a.compute, 2.0);
+        assert_eq!(a.queue_wait, 4.0);
+        assert_eq!(a.idle, 0.0);
+        assert!(a.residual().abs() <= 1e-9);
+        assert_eq!(a.per_device[0].queue_wait, 4.0);
+    }
+
+    #[test]
+    fn unexplained_gap_books_idle() {
+        let g = graph(&[(0, 1)], 2);
+        let sched = SimSchedule {
+            ops: vec![op(0, 0, 0.0, 1.0), op(1, 0, 3.0, 5.0)],
+            transfers: vec![],
+        };
+        let a = attribute(&g, &sched, 5.0);
+        assert_eq!(a.compute, 3.0);
+        assert_eq!(a.idle, 2.0);
+        assert!(a.residual().abs() <= 1e-9);
+        // The gap belongs to op1's device.
+        assert_eq!(a.per_device[0].idle, 2.0);
+    }
+
+    #[test]
+    fn empty_schedule_is_all_idle() {
+        let g = graph(&[], 1);
+        let a = attribute(&g, &SimSchedule::default(), 3.0);
+        assert_eq!(a.idle, 3.0);
+        assert!(a.residual().abs() <= 1e-9);
+        assert!(a.path.is_empty());
+    }
+
+    #[test]
+    fn fractions_and_json_shape() {
+        let g = graph(&[(0, 1)], 2);
+        let sched = SimSchedule {
+            ops: vec![op(0, 0, 0.0, 2.0), op(1, 0, 2.0, 4.0)],
+            transfers: vec![],
+        };
+        let a = attribute(&g, &sched, 4.0);
+        assert!((a.fraction(BlameCategory::Compute) - 1.0).abs() < 1e-12);
+        let j = a.to_json(&sched, 1);
+        assert_eq!(j.get("top_ops").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("path").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("residual").unwrap().as_f64().unwrap().abs() <= 1e-9);
+        let fr = j.get("fractions").unwrap();
+        assert!(fr.get("compute").unwrap().as_f64().unwrap() > 0.99);
+    }
+}

@@ -1,0 +1,310 @@
+//! Per-op placement decision records.
+//!
+//! Placers explain each commit by calling [`record`] with a
+//! [`Decision`]: the op, every candidate device's EST split into its
+//! data-ready (comm) and device-free (queue) components, the memory
+//! deficit of each disqualified device, and a [`DecisionReason`] for
+//! the winner. Collection is scoped: [`record_decisions`] installs a
+//! thread-local sink and bumps a global active-scope counter;
+//! [`DecisionScope::finish`] tears both down and returns the
+//! [`DecisionLog`].
+//!
+//! **Hot-path contract:** with no scope active anywhere, [`is_live`]
+//! is a single relaxed atomic load returning `false`, and placers do no
+//! other explain work. The `Placer` trait signature is unchanged — the
+//! sink rides the thread running the placement (engine placements run
+//! on the caller's thread). A thread that observes `is_live()` without
+//! a local sink (another caller's scope) records nothing; responses are
+//! unaffected either way.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::graph::NodeId;
+use crate::util::json::Json;
+
+/// Number of [`DecisionScope`]s currently open across all threads.
+static ACTIVE_SCOPES: AtomicUsize = AtomicUsize::new(0);
+
+/// Process-lifetime count of decisions recorded (Prometheus
+/// `baechi_explain_decisions_total`).
+static DECISIONS_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static SINK: RefCell<Option<DecisionLog>> = const { RefCell::new(None) };
+}
+
+/// One relaxed load; `false` means every explain hook is skipped.
+#[inline]
+pub fn is_live() -> bool {
+    ACTIVE_SCOPES.load(Ordering::Relaxed) != 0
+}
+
+/// Total decisions recorded since process start.
+pub fn decisions_recorded() -> u64 {
+    DECISIONS_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Why a placer chose the device it chose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionReason {
+    /// Plain earliest-start-time winner (m-ETF, refine interior ops).
+    MinEst,
+    /// m-SCT favorite-child preference overrode/confirmed the pick.
+    SctFavoriteChild,
+    /// Pinned by a colocation group or a coarsening boundary
+    /// (hierarchy refine keeps the super-op's device).
+    CoarsenPin,
+    /// The preferred device did not fit; fell back to one that did.
+    OomFallback,
+}
+
+impl DecisionReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DecisionReason::MinEst => "min-est",
+            DecisionReason::SctFavoriteChild => "sct-favorite-child",
+            DecisionReason::CoarsenPin => "coarsen-pin",
+            DecisionReason::OomFallback => "oom-fallback",
+        }
+    }
+}
+
+/// One device's bid for an op.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub device: usize,
+    /// Earliest start time on this device; `None` when memory
+    /// disqualified it.
+    pub est: Option<f64>,
+    /// When the op's inputs arrive on this device (the comm component
+    /// of the EST).
+    pub data_ready: f64,
+    /// When this device's compute queue frees up (the queue component).
+    pub device_free: f64,
+    /// Bytes this device fell short by (0 when it fits).
+    pub memory_deficit: u64,
+}
+
+impl Candidate {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("device", self.device)
+            .set("data_ready", self.data_ready)
+            .set("device_free", self.device_free)
+            .set("memory_deficit", self.memory_deficit);
+        match self.est {
+            Some(e) => j.set("est", e),
+            None => j.set("est", Json::Null),
+        };
+        j
+    }
+}
+
+/// One committed op with every bid that was on the table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    pub node: NodeId,
+    pub name: String,
+    pub chosen: usize,
+    pub reason: DecisionReason,
+    pub candidates: Vec<Candidate>,
+}
+
+impl Decision {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("node", self.node.0)
+            .set("name", self.name.as_str())
+            .set("chosen", self.chosen)
+            .set("reason", self.reason.as_str())
+            .set(
+                "candidates",
+                Json::Arr(self.candidates.iter().map(|c| c.to_json()).collect()),
+            );
+        j
+    }
+}
+
+/// Everything one scope collected.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DecisionLog {
+    pub decisions: Vec<Decision>,
+    /// Free-form pipeline notes (e.g. "hier: coarse placement OOM,
+    /// falling back to flat m-SCT").
+    pub notes: Vec<String>,
+}
+
+impl DecisionLog {
+    /// The decision for a specific op, if it was placed in this scope.
+    pub fn for_node(&self, node: NodeId) -> Option<&Decision> {
+        // Last write wins: re-placement rounds may commit an op twice.
+        self.decisions.iter().rev().find(|d| d.node == node)
+    }
+
+    /// Decision counts keyed by reason, in `DecisionReason` order.
+    pub fn counts_by_reason(&self) -> [(DecisionReason, usize); 4] {
+        let mut counts = [
+            (DecisionReason::MinEst, 0),
+            (DecisionReason::SctFavoriteChild, 0),
+            (DecisionReason::CoarsenPin, 0),
+            (DecisionReason::OomFallback, 0),
+        ];
+        for d in &self.decisions {
+            for c in counts.iter_mut() {
+                if c.0 == d.reason {
+                    c.1 += 1;
+                }
+            }
+        }
+        counts
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "decisions",
+            Json::Arr(self.decisions.iter().map(|d| d.to_json()).collect()),
+        )
+        .set(
+            "notes",
+            Json::Arr(self.notes.iter().map(|n| Json::from(n.as_str())).collect()),
+        );
+        j
+    }
+}
+
+/// RAII handle for one recording scope on the current thread.
+///
+/// Scopes do not nest on a thread: opening a second one replaces the
+/// first sink (the earlier scope then finishes empty). In practice one
+/// scope wraps one `engine.place` call.
+#[must_use = "finish() returns the collected DecisionLog"]
+pub struct DecisionScope {
+    _private: (),
+}
+
+/// Start collecting decisions on this thread.
+pub fn record_decisions() -> DecisionScope {
+    ACTIVE_SCOPES.fetch_add(1, Ordering::Relaxed);
+    SINK.with(|s| *s.borrow_mut() = Some(DecisionLog::default()));
+    DecisionScope { _private: () }
+}
+
+impl DecisionScope {
+    /// Stop collecting and return what was recorded.
+    pub fn finish(self) -> DecisionLog {
+        SINK.with(|s| s.borrow_mut().take()).unwrap_or_default()
+        // Drop decrements ACTIVE_SCOPES.
+    }
+}
+
+impl Drop for DecisionScope {
+    fn drop(&mut self) {
+        ACTIVE_SCOPES.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Append a decision to this thread's sink, if one is installed.
+/// Callers gate on [`is_live`] first so the off path stays one load.
+pub fn record(decision: Decision) {
+    SINK.with(|s| {
+        if let Some(log) = s.borrow_mut().as_mut() {
+            DECISIONS_TOTAL.fetch_add(1, Ordering::Relaxed);
+            log.decisions.push(decision);
+        }
+    });
+}
+
+/// Append a free-form note to this thread's sink, if one is installed.
+pub fn note(msg: impl Into<String>) {
+    SINK.with(|s| {
+        if let Some(log) = s.borrow_mut().as_mut() {
+            log.notes.push(msg.into());
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decision(node: usize, chosen: usize, reason: DecisionReason) -> Decision {
+        Decision {
+            node: NodeId(node),
+            name: format!("op{node}"),
+            chosen,
+            reason,
+            candidates: vec![
+                Candidate {
+                    device: 0,
+                    est: Some(1.5),
+                    data_ready: 1.5,
+                    device_free: 1.0,
+                    memory_deficit: 0,
+                },
+                Candidate {
+                    device: 1,
+                    est: None,
+                    data_ready: 0.5,
+                    device_free: 0.0,
+                    memory_deficit: 64,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn off_by_default_and_scope_toggles() {
+        assert!(!is_live());
+        record(decision(0, 0, DecisionReason::MinEst)); // no sink: dropped
+        let scope = record_decisions();
+        assert!(is_live());
+        record(decision(1, 0, DecisionReason::MinEst));
+        note("hello");
+        let log = scope.finish();
+        assert!(!is_live());
+        assert_eq!(log.decisions.len(), 1);
+        assert_eq!(log.notes, vec!["hello".to_string()]);
+        assert_eq!(log.for_node(NodeId(1)).unwrap().chosen, 0);
+        assert!(log.for_node(NodeId(0)).is_none());
+    }
+
+    #[test]
+    fn counts_by_reason_and_last_write_wins() {
+        let scope = record_decisions();
+        record(decision(3, 0, DecisionReason::MinEst));
+        record(decision(4, 1, DecisionReason::SctFavoriteChild));
+        record(decision(3, 1, DecisionReason::OomFallback));
+        let log = scope.finish();
+        let counts = log.counts_by_reason();
+        assert_eq!(counts[0], (DecisionReason::MinEst, 1));
+        assert_eq!(counts[1], (DecisionReason::SctFavoriteChild, 1));
+        assert_eq!(counts[3], (DecisionReason::OomFallback, 1));
+        // Re-placement of node 3: the later decision is the answer.
+        assert_eq!(log.for_node(NodeId(3)).unwrap().chosen, 1);
+    }
+
+    #[test]
+    fn json_shape() {
+        let scope = record_decisions();
+        record(decision(2, 0, DecisionReason::CoarsenPin));
+        let log = scope.finish();
+        let j = log.to_json();
+        let d = &j.get("decisions").unwrap().as_arr().unwrap()[0];
+        assert_eq!(d.get("reason").unwrap().as_str(), Some("coarsen-pin"));
+        let cands = d.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[1].get("est"), Some(&Json::Null));
+        assert_eq!(cands[1].get("memory_deficit").unwrap().as_u64(), Some(64));
+    }
+
+    #[test]
+    fn decisions_counter_is_monotonic() {
+        let before = decisions_recorded();
+        let scope = record_decisions();
+        record(decision(7, 0, DecisionReason::MinEst));
+        let _ = scope.finish();
+        assert!(decisions_recorded() >= before + 1);
+    }
+}

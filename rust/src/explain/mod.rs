@@ -1,0 +1,98 @@
+//! Placement explainability — the third observability pillar.
+//!
+//! [`crate::telemetry`] answers *how long* each pipeline stage took;
+//! this module answers *why the plan looks the way it does*:
+//!
+//! - [`decision`] — opt-in per-op **decision records**: for every op a
+//!   placer commits, the candidate-device ESTs split into data-ready
+//!   (comm) and queue (device-free) components, the memory deficits
+//!   that disqualified devices, and the reason the winner won (min-EST,
+//!   SCT favorite-child, coarsening pin, OOM fallback). Threaded
+//!   through `placer/sched.rs`, `metf.rs`, `msct.rs`, and
+//!   `hierarchy/refine.rs` behind a single relaxed atomic load.
+//! - [`attribution`] — **critical-path attribution**: walk the
+//!   simulator's [`crate::sim::SimSchedule`] backward from the makespan
+//!   and attribute every second of it to compute / transfer /
+//!   queue-wait / idle, per device and per link, with the top-k
+//!   critical ops. The four category totals sum to the makespan within
+//!   1e-9 (property-tested).
+//! - [`record`] — a **run-history flight recorder**: an append-only
+//!   JSONL store of [`record::RunRecord`]s (graph + topology features,
+//!   placer spec, serve mode, simulated makespan, critical-path
+//!   breakdown), size-bounded with rotation. Written by
+//!   [`crate::engine::PlacementEngine`] and
+//!   [`crate::serve::PlacementService`] when enabled; this is the
+//!   substrate the learned-scorer/portfolio roadmap item trains on.
+//!
+//! Surfaced by `baechi explain` (per-op query, critical-path report,
+//! placer diff), by new Prometheus families in
+//! [`crate::telemetry::prometheus`], and as `crit`/`crit_category`
+//! Chrome-trace span args so Perfetto highlights the critical path.
+//!
+//! **Off by default, same contract as tracing:** with no
+//! [`decision::DecisionScope`] active and no recorder configured,
+//! responses are bit-identical to a build without this module and the
+//! placer hot path pays one relaxed atomic load
+//! ([`decision::is_live`]). Enable per-process with `BAECHI_EXPLAIN`
+//! (decision records) and `BAECHI_RUN_HISTORY=<path>` (flight
+//! recorder), or per-call with [`decision::record_decisions`] /
+//! [`crate::engine::PlacementEngineBuilder::run_history`].
+
+pub mod attribution;
+pub mod decision;
+pub mod record;
+
+pub use attribution::{attribute, Attribution, BlameCategory, DeviceBlame, LinkBlame, PathStep};
+pub use decision::{
+    decisions_recorded, is_live, record_decisions, Candidate, Decision, DecisionLog,
+    DecisionReason, DecisionScope,
+};
+pub use record::{FlightRecorder, RecorderStats, RunRecord};
+
+/// Whether the `BAECHI_EXPLAIN` environment variable asks for decision
+/// recording. Unset, empty, `0`, `false`, `off`, and `no` mean off;
+/// anything else means on. Same contract as `BAECHI_TRACE`.
+pub fn env_explain_enabled() -> bool {
+    match std::env::var("BAECHI_EXPLAIN") {
+        Ok(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "" | "0" | "false" | "off" | "no"
+        ),
+        Err(_) => false,
+    }
+}
+
+/// Flight-recorder path requested by `BAECHI_RUN_HISTORY` (unset or
+/// off-valued means no recorder). `BAECHI_RUN_HISTORY_MAX_BYTES`
+/// overrides the rotation bound (default
+/// [`record::DEFAULT_MAX_BYTES`]).
+pub fn env_run_history() -> Option<(String, u64)> {
+    let path = std::env::var("BAECHI_RUN_HISTORY").ok()?;
+    let trimmed = path.trim();
+    if matches!(
+        trimmed.to_ascii_lowercase().as_str(),
+        "" | "0" | "false" | "off" | "no"
+    ) {
+        return None;
+    }
+    let max_bytes = std::env::var("BAECHI_RUN_HISTORY_MAX_BYTES")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or(record::DEFAULT_MAX_BYTES);
+    Some((trimmed.to_string(), max_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn env_gates_default_off() {
+        // The test harness does not set the variables, so both gates
+        // must read as disabled (the off-by-default contract).
+        if std::env::var("BAECHI_EXPLAIN").is_err() {
+            assert!(!super::env_explain_enabled());
+        }
+        if std::env::var("BAECHI_RUN_HISTORY").is_err() {
+            assert!(super::env_run_history().is_none());
+        }
+    }
+}

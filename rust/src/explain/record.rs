@@ -1,0 +1,425 @@
+//! Run-history flight recorder: append-only JSONL of placement runs.
+//!
+//! Every recorded run is one [`RunRecord`] line — graph + topology
+//! feature vector, placer + coarsening spec, serve mode, simulated
+//! makespan, and the critical-path category breakdown. The store is
+//! the training substrate for the roadmap's learned placement scorer:
+//! features in, observed makespan out.
+//!
+//! [`FlightRecorder`] keeps the file bounded: when an append would
+//! push the live file past `max_bytes`, the file is rotated to
+//! `<path>.1` (replacing any previous rotation) and a fresh file is
+//! started. Stats (records, cumulative bytes, rotations) are plain
+//! atomics, surfaced through [`crate::serve::ServiceMetrics`] and the
+//! Prometheus exposition.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::graph::OpGraph;
+use crate::util::json::Json;
+use crate::BaechiError;
+
+/// Schema version stamped on every line; bump on breaking changes.
+pub const RUN_RECORD_SCHEMA: u64 = 1;
+
+/// Default rotation bound (16 MiB of JSONL ≈ tens of thousands of
+/// runs).
+pub const DEFAULT_MAX_BYTES: u64 = 16 << 20;
+
+/// Critical-path category totals carried in a record.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AttributionTotals {
+    pub compute: f64,
+    pub transfer: f64,
+    pub queue_wait: f64,
+    pub idle: f64,
+}
+
+/// One placement run, one JSONL line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    pub schema: u64,
+    /// Graph name (benchmark or caller-supplied).
+    pub graph: String,
+    pub placer: String,
+    /// Coarsening spec when the hierarchical path was requested.
+    pub coarsening: Option<String>,
+    /// How the request was served: `full`, `cache_hit`, `incremental`.
+    pub serve_mode: String,
+    // Graph + topology feature vector (the learned-scorer inputs).
+    pub ops: u64,
+    pub edges: u64,
+    pub devices: u64,
+    pub total_compute: f64,
+    pub total_permanent_memory: u64,
+    pub total_edge_bytes: u64,
+    /// Simulated step time; `None` when simulation was skipped or hit
+    /// OOM.
+    pub makespan: Option<f64>,
+    pub attribution: Option<AttributionTotals>,
+}
+
+impl RunRecord {
+    /// Build a record from a graph about to be (or just) placed.
+    pub fn from_graph(graph: &OpGraph, devices: usize, placer: &str, serve_mode: &str) -> RunRecord {
+        RunRecord {
+            schema: RUN_RECORD_SCHEMA,
+            graph: graph.name.clone(),
+            placer: placer.to_string(),
+            coarsening: None,
+            serve_mode: serve_mode.to_string(),
+            ops: graph.len() as u64,
+            edges: graph.edge_count() as u64,
+            devices: devices as u64,
+            total_compute: graph.total_compute(),
+            total_permanent_memory: graph.total_permanent_memory(),
+            total_edge_bytes: graph.edges().iter().map(|e| e.bytes).sum(),
+            makespan: None,
+            attribution: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", self.schema)
+            .set("graph", self.graph.as_str())
+            .set("placer", self.placer.as_str())
+            .set("serve_mode", self.serve_mode.as_str())
+            .set("ops", self.ops)
+            .set("edges", self.edges)
+            .set("devices", self.devices)
+            .set("total_compute", self.total_compute)
+            .set("total_permanent_memory", self.total_permanent_memory)
+            .set("total_edge_bytes", self.total_edge_bytes);
+        match &self.coarsening {
+            Some(c) => j.set("coarsening", c.as_str()),
+            None => j.set("coarsening", Json::Null),
+        };
+        match self.makespan {
+            Some(m) => j.set("makespan", m),
+            None => j.set("makespan", Json::Null),
+        };
+        match &self.attribution {
+            Some(a) => {
+                let mut o = Json::obj();
+                o.set("compute", a.compute)
+                    .set("transfer", a.transfer)
+                    .set("queue_wait", a.queue_wait)
+                    .set("idle", a.idle);
+                j.set("attribution", o)
+            }
+            None => j.set("attribution", Json::Null),
+        };
+        j
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<RunRecord> {
+        let field = |name: &str| {
+            j.get(name)
+                .ok_or_else(|| BaechiError::invalid(format!("run record missing '{name}'")))
+        };
+        let str_field = |name: &str| {
+            field(name).and_then(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| BaechiError::invalid(format!("run record '{name}' not a string")))
+            })
+        };
+        let num_field = |name: &str| {
+            field(name).and_then(|v| {
+                v.as_f64()
+                    .ok_or_else(|| BaechiError::invalid(format!("run record '{name}' not a number")))
+            })
+        };
+        let schema = num_field("schema")? as u64;
+        if schema != RUN_RECORD_SCHEMA {
+            return Err(BaechiError::invalid(format!(
+                "run record schema {schema} (this build reads {RUN_RECORD_SCHEMA})"
+            )));
+        }
+        let coarsening = match j.get("coarsening") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| BaechiError::invalid("run record 'coarsening' not a string"))?
+                    .to_string(),
+            ),
+        };
+        let makespan = match j.get("makespan") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .ok_or_else(|| BaechiError::invalid("run record 'makespan' not a number"))?,
+            ),
+        };
+        let attribution = match j.get("attribution") {
+            None | Some(Json::Null) => None,
+            Some(a) => {
+                let get = |name: &str| {
+                    a.get(name).and_then(Json::as_f64).ok_or_else(|| {
+                        BaechiError::invalid(format!("run record attribution missing '{name}'"))
+                    })
+                };
+                Some(AttributionTotals {
+                    compute: get("compute")?,
+                    transfer: get("transfer")?,
+                    queue_wait: get("queue_wait")?,
+                    idle: get("idle")?,
+                })
+            }
+        };
+        Ok(RunRecord {
+            schema,
+            graph: str_field("graph")?,
+            placer: str_field("placer")?,
+            coarsening,
+            serve_mode: str_field("serve_mode")?,
+            ops: num_field("ops")? as u64,
+            edges: num_field("edges")? as u64,
+            devices: num_field("devices")? as u64,
+            total_compute: num_field("total_compute")?,
+            total_permanent_memory: num_field("total_permanent_memory")? as u64,
+            total_edge_bytes: num_field("total_edge_bytes")? as u64,
+            makespan,
+            attribution,
+        })
+    }
+
+    /// One JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn parse_line(line: &str) -> crate::Result<RunRecord> {
+        RunRecord::from_json(&Json::parse(line.trim())?)
+    }
+}
+
+/// Point-in-time recorder counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RecorderStats {
+    /// Records appended since open.
+    pub records: u64,
+    /// Cumulative bytes written (across rotations).
+    pub bytes: u64,
+    /// Times the live file was rotated to `<path>.1`.
+    pub rotations: u64,
+}
+
+/// Size-bounded append-only JSONL store. Appends are serialized by an
+/// internal mutex; stats reads are lock-free.
+pub struct FlightRecorder {
+    path: PathBuf,
+    max_bytes: u64,
+    /// Serializes append + rotate against each other.
+    write_lock: Mutex<()>,
+    /// Bytes currently in the live file (reset on rotation).
+    file_bytes: AtomicU64,
+    records: AtomicU64,
+    bytes: AtomicU64,
+    rotations: AtomicU64,
+}
+
+impl FlightRecorder {
+    /// Open (creating or appending to) the store at `path`. A
+    /// pre-existing file counts toward the rotation bound.
+    pub fn open(path: impl Into<PathBuf>, max_bytes: u64) -> crate::Result<FlightRecorder> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| BaechiError::io(format!("creating {}: {e}", parent.display())))?;
+            }
+        }
+        let existing = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        Ok(FlightRecorder {
+            path,
+            max_bytes: max_bytes.max(1),
+            write_lock: Mutex::new(()),
+            file_bytes: AtomicU64::new(existing),
+            records: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            rotations: AtomicU64::new(0),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record, rotating first if it would overflow the
+    /// bound.
+    pub fn append(&self, record: &RunRecord) -> crate::Result<()> {
+        use std::io::Write;
+        let mut line = record.to_line();
+        line.push('\n');
+        let guard = self
+            .write_lock
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let current = self.file_bytes.load(Ordering::Relaxed);
+        if current > 0 && current + line.len() as u64 > self.max_bytes {
+            let rotated = self.rotated_path();
+            std::fs::rename(&self.path, &rotated)
+                .map_err(|e| BaechiError::io(format!("rotating {}: {e}", self.path.display())))?;
+            self.file_bytes.store(0, Ordering::Relaxed);
+            self.rotations.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| BaechiError::io(format!("opening {}: {e}", self.path.display())))?;
+        f.write_all(line.as_bytes())
+            .map_err(|e| BaechiError::io(format!("appending {}: {e}", self.path.display())))?;
+        drop(guard);
+        self.file_bytes
+            .fetch_add(line.len() as u64, Ordering::Relaxed);
+        self.records.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(line.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Where rotated history goes (one generation kept).
+    pub fn rotated_path(&self) -> PathBuf {
+        let mut name = self
+            .path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "run-history.jsonl".to_string());
+        name.push_str(".1");
+        self.path.with_file_name(name)
+    }
+
+    pub fn stats(&self) -> RecorderStats {
+        RecorderStats {
+            records: self.records.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            rotations: self.rotations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Read every record in the live file (skips the rotated
+    /// generation).
+    pub fn read_all(path: &Path) -> crate::Result<Vec<RunRecord>> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| BaechiError::io(format!("reading {}: {e}", path.display())))?;
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(RunRecord::parse_line)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "baechi-recorder-{tag}-{}-{}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample(serve_mode: &str, makespan: Option<f64>) -> RunRecord {
+        RunRecord {
+            schema: RUN_RECORD_SCHEMA,
+            graph: "mlp".into(),
+            placer: "m-sct".into(),
+            coarsening: Some("members:8".into()),
+            serve_mode: serve_mode.into(),
+            ops: 42,
+            edges: 63,
+            devices: 4,
+            total_compute: 0.125,
+            total_permanent_memory: 1 << 20,
+            total_edge_bytes: 4096,
+            makespan,
+            attribution: makespan.map(|m| AttributionTotals {
+                compute: m * 0.5,
+                transfer: m * 0.25,
+                queue_wait: m * 0.125,
+                idle: m * 0.125,
+            }),
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trip() {
+        for rec in [sample("full", Some(0.25)), sample("cache_hit", None)] {
+            let back = RunRecord::parse_line(&rec.to_line()).unwrap();
+            assert_eq!(back, rec);
+        }
+    }
+
+    #[test]
+    fn rejects_future_schema_and_garbage() {
+        let mut j = sample("full", None).to_json();
+        j.set("schema", 99u64);
+        assert!(RunRecord::from_json(&j).is_err());
+        assert!(RunRecord::parse_line("not json").is_err());
+        assert!(RunRecord::parse_line("{}").is_err());
+    }
+
+    #[test]
+    fn append_and_read_back() {
+        let dir = temp_dir("append");
+        let path = dir.join("runs.jsonl");
+        let rec = FlightRecorder::open(&path, DEFAULT_MAX_BYTES).unwrap();
+        rec.append(&sample("full", Some(1.5))).unwrap();
+        rec.append(&sample("incremental", None)).unwrap();
+        let got = FlightRecorder::read_all(&path).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].serve_mode, "full");
+        assert_eq!(got[1].serve_mode, "incremental");
+        let stats = rec.stats();
+        assert_eq!(stats.records, 2);
+        assert!(stats.bytes > 0);
+        assert_eq!(stats.rotations, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rotation_bounds_the_live_file() {
+        let dir = temp_dir("rotate");
+        let path = dir.join("runs.jsonl");
+        let line_len = sample("full", Some(1.0)).to_line().len() as u64 + 1;
+        // Room for two lines per generation.
+        let rec = FlightRecorder::open(&path, line_len * 2).unwrap();
+        for _ in 0..5 {
+            rec.append(&sample("full", Some(1.0))).unwrap();
+        }
+        let stats = rec.stats();
+        assert_eq!(stats.records, 5);
+        assert!(stats.rotations >= 1, "{stats:?}");
+        assert!(std::fs::metadata(&path).unwrap().len() <= line_len * 2);
+        assert!(rec.rotated_path().exists());
+        // Every surviving line still parses.
+        for p in [path.clone(), rec.rotated_path()] {
+            for r in FlightRecorder::read_all(&p).unwrap() {
+                assert_eq!(r.schema, RUN_RECORD_SCHEMA);
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn preexisting_bytes_count_toward_rotation() {
+        let dir = temp_dir("preexist");
+        let path = dir.join("runs.jsonl");
+        std::fs::write(&path, "x".repeat(128)).unwrap();
+        let rec = FlightRecorder::open(&path, 129).unwrap();
+        rec.append(&sample("full", None)).unwrap();
+        assert_eq!(rec.stats().rotations, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

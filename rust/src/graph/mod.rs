@@ -409,8 +409,11 @@ impl OpGraph {
     /// Critical (longest) path length, with `comm` charging every edge as
     /// if endpoints were on different devices. A lower bound on makespan
     /// with communication; with `|_| 0.0` it is the zero-comm lower bound.
-    pub fn critical_path(&self, comm: impl Fn(u64) -> f64) -> f64 {
-        let order = self.topo_order().expect("critical_path on cyclic graph");
+    /// Errors with [`crate::BaechiError::Cyclic`] on a non-DAG instead
+    /// of panicking, so callers handling untrusted graphs get a typed
+    /// failure.
+    pub fn critical_path(&self, comm: impl Fn(u64) -> f64) -> crate::Result<f64> {
+        let order = self.topo_order().ok_or(crate::BaechiError::Cyclic)?;
         let mut dist: Vec<f64> = vec![0.0; self.capacity()];
         let mut best = 0.0f64;
         for &u in &order {
@@ -423,7 +426,7 @@ impl OpGraph {
                 }
             }
         }
-        best
+        Ok(best)
     }
 
     /// Map of colocation group → member nodes.
@@ -515,9 +518,22 @@ mod tests {
         g.node_mut(c).compute = 5.0;
         g.node_mut(d).compute = 1.0;
         // zero comm: a + c + d = 7
-        assert!((g.critical_path(|_| 0.0) - 7.0).abs() < 1e-12);
+        assert!((g.critical_path(|_| 0.0).unwrap() - 7.0).abs() < 1e-12);
         // comm = bytes/10 seconds: a +1 + c +2 + d = 10
-        assert!((g.critical_path(|b| b as f64 / 10.0) - 10.0).abs() < 1e-12);
+        assert!((g.critical_path(|b| b as f64 / 10.0).unwrap() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_path_cyclic_is_typed_error() {
+        let mut g = OpGraph::new("cycle");
+        let a = g.add_node("a", OpKind::Input);
+        let b = g.add_node("b", OpKind::MatMul);
+        g.add_edge(a, b, 1);
+        g.add_edge(b, a, 1);
+        assert!(matches!(
+            g.critical_path(|_| 0.0),
+            Err(crate::BaechiError::Cyclic)
+        ));
     }
 
     #[test]

@@ -76,12 +76,28 @@ impl Placer for HierPlacer {
             // tightly packed cluster can OOM at coarse granularity where
             // op granularity would fit. Fall back to flat m-SCT instead
             // of failing a placeable graph.
-            Err(BaechiError::Oom { .. }) => return MSct::default().place(graph, cluster),
+            Err(BaechiError::Oom { .. }) => {
+                if crate::explain::is_live() {
+                    crate::explain::decision::note(
+                        "hier: coarse placement OOM (conservative super-op sums); \
+                         falling back to flat m-SCT",
+                    );
+                }
+                return MSct::default().place(graph, cluster);
+            }
             Err(e) => return Err(e),
         };
         let refined = match refine::refine(graph, &coarse, &coarse_placement, cluster) {
             Ok(r) => r,
-            Err(BaechiError::Oom { .. }) => return MSct::default().place(graph, cluster),
+            Err(BaechiError::Oom { .. }) => {
+                if crate::explain::is_live() {
+                    crate::explain::decision::note(
+                        "hier: refine ran out of memory expanding super-ops; \
+                         falling back to flat m-SCT",
+                    );
+                }
+                return MSct::default().place(graph, cluster);
+            }
             Err(e) => return Err(e),
         };
         let (device_of, predicted_makespan, peak_memory) = refined;

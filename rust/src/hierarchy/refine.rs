@@ -94,15 +94,23 @@ pub fn refine(
     while let Some(id) = ready.pop() {
         let node = graph.node(id);
         let home = super_dev[id.0].expect("live node");
+        let mut reason = crate::explain::DecisionReason::MinEst;
         let choice = if let Some(pin) = ledger.pinned_device(graph, id) {
             // Colocation dominates: the group is already reserved there.
             if !ledger.fits(graph, id, pin) {
                 return Err(oom_error(graph, id, &ledger));
             }
+            reason = crate::explain::DecisionReason::CoarsenPin;
             pin
         } else if boundary[id.0] && ledger.fits(graph, id, home) {
+            reason = crate::explain::DecisionReason::CoarsenPin;
             home
         } else {
+            if !ledger.fits(graph, id, home) {
+                // The coarse placement wanted `home`; memory no longer
+                // allows it and the greedy sweep must divert.
+                reason = crate::explain::DecisionReason::OomFallback;
+            }
             // Interior op (or a boundary op whose super device is out of
             // memory): greedy min-EST. The super's device is probed
             // first, so strict `<` comparison prefers it on ties, then
@@ -124,6 +132,49 @@ pub fn refine(
                 None => return Err(oom_error(graph, id, &ledger)),
             }
         };
+        if crate::explain::is_live() {
+            let candidates = (0..n_dev)
+                .map(|d| {
+                    let dev = DeviceId(d);
+                    let mut data_ready = 0.0f64;
+                    for &(p, bytes) in graph.predecessors(id) {
+                        let pd = homes[p.0].expect("pred scheduled before successor");
+                        let arrive = finish[p.0]
+                            + if pd == dev {
+                                0.0
+                            } else {
+                                topo.pair(pd.0, d).time(bytes)
+                            };
+                        data_ready = data_ready.max(arrive);
+                    }
+                    let (cand_est, deficit) = match ledger.required_on(graph, id, dev) {
+                        None => (None, 0),
+                        Some(need) => {
+                            let free = ledger.devices[d].free();
+                            if need <= free {
+                                (Some(data_ready.max(dev_ready[d])), 0)
+                            } else {
+                                (None, need - free)
+                            }
+                        }
+                    };
+                    crate::explain::Candidate {
+                        device: d,
+                        est: cand_est,
+                        data_ready,
+                        device_free: dev_ready[d],
+                        memory_deficit: deficit,
+                    }
+                })
+                .collect();
+            crate::explain::decision::record(crate::explain::Decision {
+                node: id,
+                name: node.name.clone(),
+                chosen: choice.0,
+                reason,
+                candidates,
+            });
+        }
         ledger.commit(graph, id, choice);
         let start = est(id, choice, &dev_ready, &finish, &homes);
         let done = start + node.compute / cluster.devices[choice.0].speed.max(1e-12);

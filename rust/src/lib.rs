@@ -86,6 +86,12 @@
 //!   Chrome/Perfetto trace-event export of spans and simulated
 //!   schedules, and Prometheus text exposition with a minimal HTTP
 //!   listener.
+//! * [`explain`] — placement explainability: opt-in per-op decision
+//!   records (candidate ESTs, memory deficits, chosen-device reason),
+//!   critical-path attribution of the simulated makespan into
+//!   compute / transfer / queue-wait / idle, and a size-bounded JSONL
+//!   run-history flight recorder. Off by default; surfaced by
+//!   `baechi explain`, Prometheus gauges, and Chrome-trace span args.
 //! * [`runtime`] — PJRT client + AOT HLO artifact registry (stubbed
 //!   offline; see `runtime::xla`).
 //! * [`exec`] — real multi-device executor + trainer (end-to-end example).
@@ -98,6 +104,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod error;
 pub mod exec;
+pub mod explain;
 pub mod feedback;
 pub mod graph;
 pub mod hierarchy;

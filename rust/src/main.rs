@@ -10,6 +10,9 @@
 //! baechi serve-bench --model gnmt:16:8 --requests 500 --mutation-rate 0.3
 //! baechi serve-bench --trace serve.json --metrics-addr 127.0.0.1:9184
 //! baechi trace   --model linreg --placer m-etf --out trace.json
+//! baechi explain --model inception --placer m-sct [--top 5]
+//! baechi explain --model gnmt:32:10 --placer m-sct --op lstm_3_fwd
+//! baechi explain --model transformer:64 --placer m-etf --diff-placer m-sct
 //! baechi info    --model inception:32
 //! ```
 //!
@@ -22,8 +25,8 @@
 //! Perfetto.
 
 use baechi::coordinator::{
-    engine_for, run, run_serve_bench, run_traced, BaechiConfig, CalibrationSpec, PlacerKind,
-    ServeBenchOpts, TopologySpec,
+    engine_for, run, run_explained, run_serve_bench, run_traced, BaechiConfig, CalibrationSpec,
+    PlacerKind, ServeBenchOpts, TopologySpec,
 };
 use baechi::engine::PlacementRequest;
 use baechi::models::Benchmark;
@@ -164,6 +167,24 @@ fn specs() -> Vec<OptSpec> {
             default: None,
         },
         OptSpec {
+            name: "op",
+            help: "explain: show the decision record for one op (name or node id)",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
+            name: "top",
+            help: "explain: how many critical-path ops to list",
+            takes_value: true,
+            default: Some("10"),
+        },
+        OptSpec {
+            name: "diff-placer",
+            help: "explain: second placer to diff per-op device choices against",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
             name: "metrics-addr",
             help: "serve-bench: serve Prometheus metrics over HTTP at this address \
                    (e.g. 127.0.0.1:9184) for the duration of the run",
@@ -206,9 +227,11 @@ fn real_main() -> baechi::Result<()> {
         "e2e" => cmd_e2e(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "trace" => cmd_trace(&args),
+        "explain" => cmd_explain(&args),
         "info" => cmd_info(&args),
         other => Err(BaechiError::invalid(format!(
-            "unknown command '{other}' (place|compare|calibrate|e2e|serve-bench|trace|info)\n{}",
+            "unknown command '{other}' \
+             (place|compare|calibrate|e2e|serve-bench|trace|explain|info)\n{}",
             args.usage()
         ))),
     }
@@ -586,6 +609,243 @@ fn cmd_trace(args: &Args) -> baechi::Result<()> {
     Ok(())
 }
 
+fn cmd_explain(args: &Args) -> baechi::Result<()> {
+    use baechi::explain::BlameCategory;
+    let cfg = config_from(args)?;
+    let top_k = args.get_usize("top", 10)?;
+    let er = run_explained(&cfg)?;
+
+    if let Some(other) = args.get("diff-placer") {
+        let mut cfg2 = config_from(args)?;
+        cfg2.placer = PlacerKind::parse(&other)?;
+        let er2 = run_explained(&cfg2)?;
+        return explain_diff(args, &cfg, &er, &er2);
+    }
+    if let Some(query) = args.get("op") {
+        return explain_op(args, &cfg, &er, &query);
+    }
+    if args.has("json") {
+        println!("{}", er.to_json(top_k).pretty());
+        return Ok(());
+    }
+
+    let a = &er.attribution;
+    // The acceptance invariant: the four categories telescope back to
+    // the simulated makespan. Surface a violation loudly — CI smoke
+    // runs this command.
+    let residual = a.residual();
+    if residual.abs() > 1e-9 * a.makespan.abs().max(1.0) {
+        return Err(BaechiError::runtime(format!(
+            "critical-path attribution does not sum to the makespan: \
+             residual {residual:e} over {}",
+            a.makespan
+        )));
+    }
+    let mut t = Table::new(
+        &format!(
+            "explain: {} via {}",
+            er.report.benchmark, er.report.placer
+        ),
+        &["metric", "value"],
+    );
+    let makespan_label = if er.report.sim.ok() {
+        "simulated makespan"
+    } else {
+        "simulated makespan (OOM, partial)"
+    };
+    t.row_strs(&[makespan_label, &fmt_secs(a.makespan)]);
+    for (name, cat) in [
+        ("  compute", BlameCategory::Compute),
+        ("  transfer", BlameCategory::Transfer),
+        ("  queue wait", BlameCategory::QueueWait),
+        ("  idle", BlameCategory::Idle),
+    ] {
+        let secs = match cat {
+            BlameCategory::Compute => a.compute,
+            BlameCategory::Transfer => a.transfer,
+            BlameCategory::QueueWait => a.queue_wait,
+            BlameCategory::Idle => a.idle,
+        };
+        t.row_strs(&[
+            name,
+            &format!("{} ({:.1}%)", fmt_secs(secs), a.fraction(cat) * 100.0),
+        ]);
+    }
+    t.row_strs(&["sum check", &format!("ok (residual {residual:.1e})")]);
+    t.row_strs(&["path elements", &a.path.len().to_string()]);
+    for d in &a.per_device {
+        t.row_strs(&[
+            &format!("gpu{} on path", d.device),
+            &format!(
+                "{} compute, {} queued, {} idle",
+                fmt_secs(d.compute),
+                fmt_secs(d.queue_wait),
+                fmt_secs(d.idle)
+            ),
+        ]);
+    }
+    for l in &a.per_link {
+        t.row_strs(&[
+            &format!("link {} on path", l.link),
+            &format!(
+                "{} transfer, {} queued",
+                fmt_secs(l.transfer),
+                fmt_secs(l.queue_wait)
+            ),
+        ]);
+    }
+    for (i, top) in a.top_ops.iter().take(top_k).enumerate() {
+        t.row_strs(&[
+            &format!("critical op {}", i + 1),
+            &format!("{} on gpu{} ({})", top.name, top.device, fmt_secs(top.seconds)),
+        ]);
+    }
+    let counts = er.decisions.counts_by_reason();
+    if er.decisions.decisions.is_empty() {
+        t.row_strs(&["decisions", "none recorded (placer has no explain hooks)"]);
+    } else {
+        for (reason, n) in counts.iter().filter(|(_, n)| *n > 0) {
+            t.row_strs(&[&format!("decisions: {}", reason.as_str()), &n.to_string()]);
+        }
+    }
+    for note in &er.decisions.notes {
+        t.row_strs(&["note", note]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// `baechi explain --op <name-or-id>`: one op's decision record.
+fn explain_op(
+    args: &Args,
+    cfg: &BaechiConfig,
+    er: &baechi::coordinator::ExplainReport,
+    query: &str,
+) -> baechi::Result<()> {
+    let graph = cfg.benchmark.graph();
+    let decision = er
+        .decisions
+        .decisions
+        .iter()
+        .rev()
+        .find(|d| d.name == query)
+        .or_else(|| {
+            query
+                .parse::<usize>()
+                .ok()
+                .and_then(|id| er.decisions.for_node(baechi::graph::NodeId(id)))
+        })
+        .ok_or_else(|| {
+            BaechiError::invalid(format!(
+                "no decision recorded for op '{query}' in {} \
+                 ({} decisions; ops are matched by exact name or node id)",
+                graph.name,
+                er.decisions.decisions.len()
+            ))
+        })?;
+    if args.has("json") {
+        println!("{}", decision.to_json().pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!("decision: {} (node {})", decision.name, decision.node.0),
+        &["metric", "value"],
+    );
+    t.row_strs(&["chosen device", &format!("gpu{}", decision.chosen)]);
+    t.row_strs(&["reason", decision.reason.as_str()]);
+    for c in &decision.candidates {
+        let bid = match c.est {
+            Some(est) => format!(
+                "EST {} (data ready {}, device free {})",
+                fmt_secs(est),
+                fmt_secs(c.data_ready),
+                fmt_secs(c.device_free)
+            ),
+            None => format!("does not fit (short {})", fmt_bytes(c.memory_deficit)),
+        };
+        let marker = if c.device == decision.chosen { " *" } else { "" };
+        t.row_strs(&[&format!("gpu{}{marker}", c.device), &bid]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// `baechi explain --diff-placer <p>`: where two placers disagree.
+fn explain_diff(
+    args: &Args,
+    cfg: &BaechiConfig,
+    a: &baechi::coordinator::ExplainReport,
+    b: &baechi::coordinator::ExplainReport,
+) -> baechi::Result<()> {
+    let graph = cfg.benchmark.graph();
+    let moved: Vec<(baechi::graph::NodeId, usize, usize)> = a
+        .report
+        .device_of
+        .iter()
+        .filter_map(|(&node, &da)| {
+            let db = *b.report.device_of.get(&node)?;
+            (da != db).then_some((node, da.0, db.0))
+        })
+        .collect();
+    if args.has("json") {
+        let mut j = Json::obj();
+        let side = |er: &baechi::coordinator::ExplainReport| {
+            let mut o = Json::obj();
+            o.set("placer", er.report.placer.as_str())
+                .set("makespan", er.attribution.makespan)
+                .set("oom", !er.report.sim.ok());
+            o
+        };
+        j.set("a", side(a)).set("b", side(b)).set(
+            "moved",
+            Json::Arr(
+                moved
+                    .iter()
+                    .map(|&(node, da, db)| {
+                        let mut o = Json::obj();
+                        o.set("node", node.0)
+                            .set("name", graph.node(node).name.as_str())
+                            .set("a_device", da)
+                            .set("b_device", db);
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        println!("{}", j.pretty());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!(
+            "explain diff: {} vs {} on {}",
+            a.report.placer, b.report.placer, a.report.benchmark
+        ),
+        &["metric", "value"],
+    );
+    let step = |er: &baechi::coordinator::ExplainReport| {
+        if er.report.sim.ok() {
+            fmt_secs(er.report.sim.makespan)
+        } else {
+            "OOM".to_string()
+        }
+    };
+    t.row_strs(&[&format!("makespan {}", a.report.placer), &step(a)]);
+    t.row_strs(&[&format!("makespan {}", b.report.placer), &step(b)]);
+    t.row_strs(&[
+        "ops moved",
+        &format!("{} of {}", moved.len(), a.report.device_of.len()),
+    ]);
+    let top_k = args.get_usize("top", 10)?;
+    for &(node, da, db) in moved.iter().take(top_k) {
+        t.row_strs(&[&graph.node(node).name, &format!("gpu{da} → gpu{db}")]);
+    }
+    if moved.len() > top_k {
+        t.row_strs(&["…", &format!("{} more (raise --top)", moved.len() - top_k)]);
+    }
+    t.print();
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> baechi::Result<()> {
     let cfg = config_from(args)?;
     let g = cfg.benchmark.graph();
@@ -597,7 +857,7 @@ fn cmd_info(args: &Args) -> baechi::Result<()> {
     t.row_strs(&["total compute", &fmt_secs(g.total_compute())]);
     t.row_strs(&[
         "critical path (no comm)",
-        &fmt_secs(g.critical_path(|_| 0.0)),
+        &fmt_secs(g.critical_path(|_| 0.0)?),
     ]);
     t.row_strs(&["permanent memory", &fmt_bytes(g.total_permanent_memory())]);
     t.row_strs(&[

@@ -78,6 +78,15 @@ impl Placer for MEtf {
                         heap.push(Reverse(QueueEntry { est: now, ..entry }));
                         continue;
                     }
+                    if crate::explain::is_live() {
+                        crate::explain::decision::record(crate::explain::Decision {
+                            node: entry.node,
+                            name: graph.node(entry.node).name.clone(),
+                            chosen: entry.dev.0,
+                            reason: crate::explain::DecisionReason::MinEst,
+                            candidates: st.explain_candidates(entry.node),
+                        });
+                    }
                     let newly_ready = st.commit(entry.node, entry.dev);
                     for r in newly_ready {
                         push_all(&st, &mut heap, r);

@@ -140,6 +140,21 @@ impl Placer for MSct {
             }
             let node = entry.node;
             let dev = entry.dev;
+            if crate::explain::is_live() {
+                crate::explain::decision::record(crate::explain::Decision {
+                    node,
+                    name: graph.node(node).name.clone(),
+                    chosen: dev.0,
+                    // `prefer` marks the favorite parent's device winning
+                    // the est tie — the SCT relation at work.
+                    reason: if entry.prefer {
+                        crate::explain::DecisionReason::SctFavoriteChild
+                    } else {
+                        crate::explain::DecisionReason::MinEst
+                    },
+                    candidates: st.explain_candidates(node),
+                });
+            }
             let newly_ready = st.commit(node, dev);
             awake[dev.0] = None;
             // Reserve the device for this op's favorite child — but only

@@ -144,6 +144,45 @@ impl<'a> SchedState<'a> {
         Some(ready.max(self.device_free[p.0]))
     }
 
+    /// Decision-record view of every device's bid for `j`
+    /// ([`crate::explain::Candidate`]): the EST split into its
+    /// data-ready (comm) and device-free (queue) components, plus the
+    /// memory deficit of devices that don't fit. Explain-only — callers
+    /// gate on [`crate::explain::decision::is_live`], it is never on
+    /// the hot path, and it reserves nothing (same hypothetical view as
+    /// [`est`](Self::est)).
+    pub fn explain_candidates(&self, j: NodeId) -> Vec<crate::explain::Candidate> {
+        (0..self.device_free.len())
+            .map(|d| {
+                let p = DeviceId(d);
+                let mut data_ready = 0.0f64;
+                for &(i, bytes) in self.graph.predecessors(j) {
+                    data_ready = data_ready.max(self.data_ready_from(i, p, bytes));
+                }
+                let (est, memory_deficit) = match self.ledger.required_on(self.graph, j, p) {
+                    // Colocation pins `j` to another device; not a
+                    // memory disqualification.
+                    None => (None, 0),
+                    Some(need) => {
+                        let free = self.ledger.devices[d].free();
+                        if need <= free {
+                            (Some(data_ready.max(self.device_free[d])), 0)
+                        } else {
+                            (None, need - free)
+                        }
+                    }
+                };
+                crate::explain::Candidate {
+                    device: d,
+                    est,
+                    data_ready,
+                    device_free: self.device_free[d],
+                    memory_deficit,
+                }
+            })
+            .collect()
+    }
+
     /// Urgent time of `j`: the earliest `j` could start on *any* device,
     /// charging full communication from every predecessor (paper App. B).
     /// Heterogeneous topologies charge each predecessor's cheapest

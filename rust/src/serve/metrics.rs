@@ -115,7 +115,7 @@ impl MetricsInner {
         }
     }
 
-    pub fn snapshot(&self, engine_cache: CacheStats) -> ServiceMetrics {
+    pub fn snapshot(&self, engine_cache: CacheStats, explain: ExplainStats) -> ServiceMetrics {
         let all = self.lat_all.lock().unwrap();
         let uptime_s = self.start.elapsed().as_secs_f64();
         let completed = self.completed.load(Ordering::Relaxed);
@@ -144,8 +144,29 @@ impl MetricsInner {
             incremental_mean_latency_s: self.lat_incremental.lock().unwrap().mean(),
             full_mean_latency_s: self.lat_full.lock().unwrap().mean(),
             engine_cache,
+            explain,
         }
     }
+}
+
+/// Explainability counters folded into the service snapshot: the
+/// run-history flight recorder's totals
+/// ([`crate::explain::record::RecorderStats`], zero when recording is
+/// disabled) plus the process-wide decision-record count
+/// ([`crate::explain::decisions_recorded`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ExplainStats {
+    /// Run records appended to the flight recorder.
+    pub run_records: u64,
+    /// Cumulative bytes of run history written (across rotations).
+    pub run_record_bytes: u64,
+    /// Times the run-history file was rotated.
+    pub run_record_rotations: u64,
+    /// Placement decisions captured by explain scopes, process-wide.
+    pub decisions: u64,
+    /// Critical-path category totals of the most recently recorded run
+    /// (`None` until a simulated run lands in the flight recorder).
+    pub critical_path: Option<crate::explain::record::AttributionTotals>,
 }
 
 /// Point-in-time service metrics snapshot
@@ -192,6 +213,8 @@ pub struct ServiceMetrics {
     pub full_mean_latency_s: f64,
     /// The shared engine's cache counters at snapshot time.
     pub engine_cache: CacheStats,
+    /// Explainability counters (run history + decision records).
+    pub explain: ExplainStats,
 }
 
 impl ServiceMetrics {
@@ -222,7 +245,19 @@ impl ServiceMetrics {
             .set("full_mean_latency_s", self.full_mean_latency_s)
             .set("engine_cache_hits", self.engine_cache.hits)
             .set("engine_cache_misses", self.engine_cache.misses)
-            .set("engine_cache_evictions", self.engine_cache.evictions);
+            .set("engine_cache_evictions", self.engine_cache.evictions)
+            .set("run_records", self.explain.run_records)
+            .set("run_record_bytes", self.explain.run_record_bytes)
+            .set("run_record_rotations", self.explain.run_record_rotations)
+            .set("explain_decisions", self.explain.decisions);
+        if let Some(a) = self.explain.critical_path {
+            let mut o = Json::obj();
+            o.set("compute", a.compute)
+                .set("transfer", a.transfer)
+                .set("queue_wait", a.queue_wait)
+                .set("idle", a.idle);
+            j.set("critical_path", o);
+        }
         j
     }
 }
@@ -275,7 +310,7 @@ mod tests {
         m.record_latency(ServeMode::Full, 0.2);
         m.record_latency(ServeMode::Incremental { dirty_ops: 1 }, 0.01);
         m.record_latency(ServeMode::CacheHit, 0.001);
-        let s = m.snapshot(CacheStats::default());
+        let s = m.snapshot(CacheStats::default(), ExplainStats::default());
         assert_eq!(s.completed, 10);
         assert!((s.cache_hit_rate() - 0.4).abs() < 1e-9);
         assert!((s.full_mean_latency_s - 0.2).abs() < 1e-9);
@@ -298,7 +333,7 @@ mod tests {
             m.record_latency(ServeMode::Full, 0.001);
         }
         m.completed.store(3, Ordering::Relaxed);
-        let s = m.snapshot(CacheStats::default());
+        let s = m.snapshot(CacheStats::default(), ExplainStats::default());
         assert!(s.recent_qps > 0.0);
         assert!(s.recent_qps >= s.qps * 0.99, "{} vs {}", s.recent_qps, s.qps);
     }
@@ -310,7 +345,7 @@ mod tests {
         assert_eq!(m.lat_all.lock().unwrap().count, 1);
         assert_eq!(m.lat_incremental.lock().unwrap().count, 0);
         assert_eq!(m.lat_full.lock().unwrap().count, 0);
-        let s = m.snapshot(CacheStats::default());
+        let s = m.snapshot(CacheStats::default(), ExplainStats::default());
         assert!((s.mean_latency_s - 0.002).abs() < 1e-12);
         assert_eq!(s.incremental_mean_latency_s, 0.0);
         assert_eq!(s.full_mean_latency_s, 0.0);
@@ -378,7 +413,7 @@ mod tests {
                             completed >= hits + inc + full,
                             "completed {completed} < modes {hits}+{inc}+{full}"
                         );
-                        let snap = m.snapshot(CacheStats::default());
+                        let snap = m.snapshot(CacheStats::default(), ExplainStats::default());
                         assert!(snap.completed <= (WRITERS * ITERS) as u64);
                         assert!(snap.mean_latency_s >= 0.0);
                         assert!(snap.p99_latency_s >= 0.0);
@@ -410,7 +445,7 @@ mod tests {
             total
         );
         assert_eq!(m.lat_all.lock().unwrap().count, total);
-        let final_snap = m.snapshot(CacheStats::default());
+        let final_snap = m.snapshot(CacheStats::default(), ExplainStats::default());
         assert_eq!(final_snap.completed, total);
     }
 }

@@ -24,5 +24,5 @@ pub mod metrics;
 pub mod service;
 
 pub use incremental::{DeltaBase, IncrementalConfig, ServeMode};
-pub use metrics::ServiceMetrics;
+pub use metrics::{ExplainStats, ServiceMetrics};
 pub use service::{PlacementService, ServeOutcome, ServiceConfig, Ticket};

@@ -178,11 +178,19 @@ impl PlacementService {
         &self.shared.engine
     }
 
-    /// Snapshot of service + engine-cache metrics.
+    /// Snapshot of service + engine-cache + explainability metrics.
     pub fn metrics(&self) -> ServiceMetrics {
+        let rec = self.shared.engine.recorder_stats().unwrap_or_default();
+        let explain = super::metrics::ExplainStats {
+            run_records: rec.records,
+            run_record_bytes: rec.bytes,
+            run_record_rotations: rec.rotations,
+            decisions: crate::explain::decisions_recorded(),
+            critical_path: self.shared.engine.last_attribution(),
+        };
         self.shared
             .metrics
-            .snapshot(self.shared.engine.cache_stats())
+            .snapshot(self.shared.engine.cache_stats(), explain)
     }
 
     /// Prometheus text-format (0.0.4) exposition over the service
@@ -351,6 +359,9 @@ fn serve_batch(shared: &Shared, batch: Vec<Job>) {
         match shared.engine.lookup(&job.req) {
             Ok(Some(hit)) => {
                 m.cache_hits.fetch_add(1, Relaxed);
+                // `lookup` bypasses `engine.place`, so the run history
+                // is written here (the full path records engine-side).
+                shared.engine.record_served(&job.req, &hit, "cache_hit");
                 finish(shared, job, Ok(hit), ServeMode::CacheHit);
                 continue;
             }
@@ -380,6 +391,9 @@ fn serve_batch(shared: &Shared, batch: Vec<Job>) {
                     let mode = ServeMode::Incremental {
                         dirty_ops: plan.dirty_ops,
                     };
+                    shared
+                        .engine
+                        .record_served(&job.req, &plan.response, "incremental");
                     finish(shared, job, Ok(plan.response), mode);
                     continue;
                 }

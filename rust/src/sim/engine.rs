@@ -1563,7 +1563,7 @@ mod tests {
             .collect();
         let r = simulate(&g, &cluster, &placement, SimConfig::default());
         assert!(r.ok());
-        let cp = g.critical_path(|_| 0.0);
+        let cp = g.critical_path(|_| 0.0).unwrap();
         let work_bound = g.total_compute() / 2.0;
         assert!(r.makespan >= cp - 1e-9);
         assert!(r.makespan >= work_bound - 1e-9);

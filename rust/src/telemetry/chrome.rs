@@ -28,11 +28,15 @@ const PIPELINE_PID: u64 = 1;
 const SIM_PID: u64 = 2;
 
 /// The simulated-plan side of an export: which graph and topology the
-/// schedule's indices refer to.
+/// schedule's indices refer to. When `attribution` is supplied, events
+/// on the critical path carry `crit: true` and `crit_category` args so
+/// Perfetto queries (`SELECT ... WHERE EXTRACT_ARG(arg_set_id,
+/// 'args.crit')`) can highlight the path.
 pub struct SimTrack<'a> {
     pub graph: &'a OpGraph,
     pub topo: &'a Topology,
     pub schedule: &'a SimSchedule,
+    pub attribution: Option<&'a crate::explain::Attribution>,
 }
 
 fn meta(pid: u64, tid: Option<u64>, kind: &str, name: &str) -> Json {
@@ -126,9 +130,16 @@ pub fn chrome_trace(spans: &[SpanRecord], sim: Option<SimTrack<'_>>) -> Json {
             );
             events.push(meta(SIM_PID, Some((n + i) as u64), "thread_name", &name));
         }
-        for op in &sim.schedule.ops {
+        let (crit_ops, crit_xfers) = match sim.attribution {
+            Some(a) => (a.crit_ops(), a.crit_transfers()),
+            None => Default::default(),
+        };
+        for (i, op) in sim.schedule.ops.iter().enumerate() {
             let mut args = Json::obj();
             args.set("node", op.node.0).set("device", op.device);
+            if let Some(cat) = crit_ops.get(&i) {
+                args.set("crit", true).set("crit_category", cat.as_str());
+            }
             events.push(complete(
                 SIM_PID,
                 op.device as u64,
@@ -138,7 +149,7 @@ pub fn chrome_trace(spans: &[SpanRecord], sim: Option<SimTrack<'_>>) -> Json {
                 args,
             ));
         }
-        for tr in &sim.schedule.transfers {
+        for (i, tr) in sim.schedule.transfers.iter().enumerate() {
             for &l in &tr.links {
                 let mut args = Json::obj();
                 args.set("node", tr.node.0)
@@ -146,6 +157,9 @@ pub fn chrome_trace(spans: &[SpanRecord], sim: Option<SimTrack<'_>>) -> Json {
                     .set("dst", tr.dst)
                     .set("bytes", tr.bytes)
                     .set("link", l);
+                if let Some(cat) = crit_xfers.get(&i) {
+                    args.set("crit", true).set("crit_category", cat.as_str());
+                }
                 events.push(complete(
                     SIM_PID,
                     (n + l) as u64,
@@ -246,9 +260,15 @@ mod tests {
                 end: 11.0,
             }],
         };
+        let attribution = crate::explain::attribute(&g, &sched, sched.max_end());
         let doc = chrome_trace(
             &[],
-            Some(SimTrack { graph: &g, topo: &topo, schedule: &sched }),
+            Some(SimTrack {
+                graph: &g,
+                topo: &topo,
+                schedule: &sched,
+                attribution: Some(&attribution),
+            }),
         );
         let events = doc.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
         let xs: Vec<&Json> = events
@@ -270,6 +290,13 @@ mod tests {
             let tid = x.get("tid").unwrap().as_u64().unwrap();
             assert!(tid >= 2 && tid < 4);
             assert_eq!(x.get("dur").unwrap().as_f64(), Some(10.0 * 1e6));
+        }
+        // The whole a → xfer → b chain defines the makespan, so every
+        // event carries the critical-path annotation.
+        for e in &xs {
+            let args = e.get("args").unwrap();
+            assert_eq!(args.get("crit").unwrap().as_bool(), Some(true));
+            assert!(args.get("crit_category").unwrap().as_str().is_some());
         }
         // The max interval end across X events reconstructs max_end.
         let max_end_us = xs

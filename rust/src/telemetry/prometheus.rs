@@ -156,6 +156,62 @@ pub fn render_metrics(m: &ServiceMetrics, t: &TraceStats) -> String {
         m.engine_cache.evictions as f64,
     );
     r.family(
+        "baechi_run_records_total",
+        "counter",
+        "Placement runs appended to the run-history flight recorder.",
+    )
+    .sample("baechi_run_records_total", &[], m.explain.run_records as f64);
+    r.family(
+        "baechi_run_record_bytes_total",
+        "counter",
+        "Cumulative run-history bytes written (across rotations).",
+    )
+    .sample(
+        "baechi_run_record_bytes_total",
+        &[],
+        m.explain.run_record_bytes as f64,
+    );
+    r.family(
+        "baechi_run_record_rotations_total",
+        "counter",
+        "Times the run-history file was rotated.",
+    )
+    .sample(
+        "baechi_run_record_rotations_total",
+        &[],
+        m.explain.run_record_rotations as f64,
+    );
+    r.family(
+        "baechi_explain_decisions_total",
+        "counter",
+        "Placement decisions captured by explain scopes.",
+    )
+    .sample(
+        "baechi_explain_decisions_total",
+        &[],
+        m.explain.decisions as f64,
+    );
+    r.family(
+        "baechi_critical_path_fraction",
+        "gauge",
+        "Fraction of the last recorded run's makespan, by blame category.",
+    );
+    if let Some(a) = m.explain.critical_path {
+        let total = (a.compute + a.transfer + a.queue_wait + a.idle).max(1e-12);
+        for (cat, v) in [
+            ("compute", a.compute),
+            ("transfer", a.transfer),
+            ("queue_wait", a.queue_wait),
+            ("idle", a.idle),
+        ] {
+            r.sample(
+                "baechi_critical_path_fraction",
+                &[("category", cat)],
+                v / total,
+            );
+        }
+    }
+    r.family(
         "baechi_trace_spans_recorded_total",
         "counter",
         "Telemetry spans stored in the collector.",
@@ -367,6 +423,18 @@ mod tests {
             incremental_mean_latency_s: 0.004,
             full_mean_latency_s: 0.02,
             engine_cache: CacheStats::default(),
+            explain: crate::serve::ExplainStats {
+                run_records: 7,
+                run_record_bytes: 2048,
+                run_record_rotations: 1,
+                decisions: 42,
+                critical_path: Some(crate::explain::record::AttributionTotals {
+                    compute: 0.5,
+                    transfer: 0.25,
+                    queue_wait: 0.15,
+                    idle: 0.1,
+                }),
+            },
         }
     }
 
@@ -394,6 +462,28 @@ mod tests {
         assert_eq!(find("baechi_recent_qps", &[]), 1.5);
         assert_eq!(find("baechi_request_latency_seconds", &[("stat", "p99")]), 0.05);
         assert_eq!(find("baechi_trace_collecting", &[]), 0.0);
+        assert_eq!(find("baechi_run_records_total", &[]), 7.0);
+        assert_eq!(find("baechi_run_record_bytes_total", &[]), 2048.0);
+        assert_eq!(find("baechi_run_record_rotations_total", &[]), 1.0);
+        assert_eq!(find("baechi_explain_decisions_total", &[]), 42.0);
+        // Fractions normalize the four totals (which sum to 1.0 here).
+        assert!((find("baechi_critical_path_fraction", &[("category", "compute")]) - 0.5).abs() < 1e-9);
+        assert!((find("baechi_critical_path_fraction", &[("category", "idle")]) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn critical_path_gauge_absent_without_attribution() {
+        let mut m = sample_metrics();
+        m.explain.critical_path = None;
+        let text = render_metrics(&m, &TraceStats::default());
+        let samples = parse_text(&text).expect("must parse");
+        assert!(
+            !samples.iter().any(|s| s.name == "baechi_critical_path_fraction"),
+            "no samples until a run is recorded"
+        );
+        // The family declaration still renders, so scrapers see a
+        // stable exposition either way.
+        assert!(text.contains("# TYPE baechi_critical_path_fraction gauge"));
     }
 
     #[test]

@@ -134,7 +134,7 @@ fn prop_sim_makespan_lower_bounds() {
             .collect();
         let r = simulate(&g, &cluster, &placement, SimConfig::default());
         assert!(r.ok());
-        let cp = g.critical_path(|_| 0.0);
+        let cp = g.critical_path(|_| 0.0).unwrap();
         let work = g.total_compute() / n_dev as f64;
         assert!(r.makespan >= cp - 1e-9, "makespan below critical path");
         assert!(r.makespan >= work - 1e-9, "makespan below work bound");
@@ -157,7 +157,8 @@ fn prop_metf_within_appendix_a_bound_proxy() {
         let cluster = unit_cluster(n_dev, u64::MAX / 4);
         let p = MEtf.place(&g, &cluster).expect("ample memory");
         let rho = g.rho(|b| cluster.comm.time(b));
-        let opt_lb = (g.total_compute() / n_dev as f64).max(g.critical_path(|_| 0.0));
+        let opt_lb =
+            (g.total_compute() / n_dev as f64).max(g.critical_path(|_| 0.0).unwrap());
         let bound = (2.0 + rho.max(1.0)) * opt_lb;
         assert!(
             p.predicted_makespan <= bound + 1e-6,

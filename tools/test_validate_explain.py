@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Unit tests for validate_explain.py (stdlib unittest, dict fixtures)."""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import validate_explain
+
+
+def attribution(makespan=4.0, compute=3.0, transfer=0.5, queue_wait=0.25, idle=0.25):
+    return {
+        "makespan": makespan,
+        "compute": compute,
+        "transfer": transfer,
+        "queue_wait": queue_wait,
+        "idle": idle,
+        "residual": (compute + transfer + queue_wait + idle) - makespan,
+        "fractions": {
+            "compute": compute / makespan,
+            "transfer": transfer / makespan,
+            "queue_wait": queue_wait / makespan,
+            "idle": idle / makespan,
+        },
+        "per_device": [{"device": 0, "compute": compute, "queue_wait": 0.0, "idle": 0.0}],
+        "per_link": [],
+        "top_ops": [
+            {"node": 1, "name": "matmul", "device": 0, "seconds": 2.0, "start": 1.0, "end": 3.0},
+            {"node": 0, "name": "add", "device": 0, "seconds": 1.0, "start": 0.0, "end": 1.0},
+        ],
+        "path": [
+            {"kind": "op", "node": 0, "device": 0, "category": "compute",
+             "start": 0.0, "end": 1.0, "gap_before": 0.0},
+            {"kind": "transfer", "node": 0, "src": 0, "dst": 1, "bytes": 64,
+             "category": "transfer", "start": 1.0, "end": 1.5, "gap_before": 0.0},
+            {"kind": "op", "node": 1, "device": 1, "category": "compute",
+             "start": 1.5, "end": makespan, "gap_before": 0.0},
+        ],
+    }
+
+
+def decision(name="matmul", chosen=0, reason="min-est", deficit=64):
+    return {
+        "node": 1,
+        "name": name,
+        "chosen": chosen,
+        "reason": reason,
+        "candidates": [
+            {"device": 0, "est": 1.5, "data_ready": 1.5, "device_free": 1.0,
+             "memory_deficit": 0},
+            {"device": 1, "est": None, "data_ready": 0.5, "device_free": 0.0,
+             "memory_deficit": deficit},
+        ],
+    }
+
+
+def doc(**overrides):
+    d = {
+        "benchmark": "mlp",
+        "placer": "m-sct",
+        "oom": False,
+        "attribution": attribution(),
+        "decisions": {"decisions": [decision()], "notes": []},
+    }
+    d.update(overrides)
+    return d
+
+
+class ValidateExplainTest(unittest.TestCase):
+    def test_valid_artifact_passes(self):
+        self.assertEqual(validate_explain.validate(doc()), [])
+
+    def test_requires_attribution(self):
+        errors = validate_explain.validate({"decisions": {"decisions": []}})
+        self.assertTrue(any("attribution" in e for e in errors), errors)
+
+    def test_sum_violation_is_caught(self):
+        bad = doc(attribution=attribution(compute=2.0))  # off by 1s
+        errors = validate_explain.validate(bad)
+        self.assertTrue(any("sum to makespan" in e for e in errors), errors)
+
+    def test_sum_tolerates_1e9_relative(self):
+        a = attribution()
+        a["compute"] += 1e-10 * a["makespan"]
+        self.assertEqual(validate_explain.validate(doc(attribution=a)), [])
+
+    def test_negative_category_is_caught(self):
+        a = attribution(compute=4.5, idle=-0.5)
+        errors = validate_explain.validate(doc(attribution=a))
+        self.assertTrue(any("negative" in e for e in errors), errors)
+
+    def test_backward_path_is_caught(self):
+        a = attribution()
+        a["path"][1], a["path"][2] = a["path"][2], a["path"][1]
+        errors = validate_explain.validate(doc(attribution=a))
+        self.assertTrue(any("backward" in e for e in errors), errors)
+
+    def test_path_must_end_at_makespan_unless_oom(self):
+        a = attribution()
+        a["path"][-1]["end"] = 3.0
+        errors = validate_explain.validate(doc(attribution=a))
+        self.assertTrue(any("not the makespan" in e for e in errors), errors)
+        # An OOM run legitimately has a truncated schedule.
+        self.assertEqual(validate_explain.validate(doc(attribution=a, oom=True)), [])
+
+    def test_unsorted_top_ops_is_caught(self):
+        a = attribution()
+        a["top_ops"].reverse()
+        errors = validate_explain.validate(doc(attribution=a))
+        self.assertTrue(any("heaviest-first" in e for e in errors), errors)
+
+    def test_unknown_reason_and_orphan_choice(self):
+        d = doc(decisions={"decisions": [decision(reason="vibes", chosen=9)], "notes": []})
+        errors = validate_explain.validate(d)
+        self.assertTrue(any("unknown reason" in e for e in errors), errors)
+        self.assertTrue(any("not among its candidates" in e for e in errors), errors)
+
+    def test_chosen_candidate_must_be_schedulable(self):
+        # The winner's candidate must carry a numeric EST; an est:null
+        # winner means the placer scheduled an unschedulable device.
+        d = doc(decisions={"decisions": [decision(chosen=1)], "notes": []})
+        errors = validate_explain.validate(d)
+        self.assertTrue(any("unschedulable winner" in e for e in errors), errors)
+
+    def test_colocation_pin_candidate_is_legal(self):
+        # est:null with deficit 0 is a colocation pin, not an error.
+        d = doc(decisions={"decisions": [decision(deficit=0)], "notes": []})
+        self.assertEqual(validate_explain.validate(d), [])
+
+    def test_bad_deficit_is_caught(self):
+        d = doc(decisions={"decisions": [decision(deficit=-5)], "notes": []})
+        errors = validate_explain.validate(d)
+        self.assertTrue(any("bad memory_deficit" in e for e in errors), errors)
+
+    def test_require_decisions_flag(self):
+        empty = doc(decisions={"decisions": [], "notes": []})
+        self.assertEqual(validate_explain.validate(empty), [])
+        errors = validate_explain.validate(empty, require_decisions=True)
+        self.assertTrue(any("no decision records" in e for e in errors), errors)
+
+    def test_fractions_must_cover_the_makespan(self):
+        a = attribution()
+        a["fractions"]["compute"] = 0.1
+        errors = validate_explain.validate(doc(attribution=a))
+        self.assertTrue(any("fractions sum" in e for e in errors), errors)
+
+    def test_main_exit_codes(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            good = os.path.join(tmp, "good.json")
+            with open(good, "w") as f:
+                json.dump(doc(), f)
+            self.assertEqual(validate_explain.main([good]), 0)
+            self.assertEqual(validate_explain.main([good, "--require-decisions"]), 0)
+            bad = os.path.join(tmp, "bad.json")
+            with open(bad, "w") as f:
+                json.dump(doc(attribution=attribution(compute=0.0)), f)
+            self.assertEqual(validate_explain.main([bad]), 1)
+            self.assertEqual(validate_explain.main(["/nonexistent.json"]), 1)
+            self.assertEqual(validate_explain.main([]), 2)
+
+
+if __name__ == "__main__":
+    unittest.main()

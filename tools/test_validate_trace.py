@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Unit tests for validate_trace.py (stdlib unittest, dict fixtures)."""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import validate_trace
+
+
+def ev(pid, tid, name, ts, dur, args=None):
+    e = {"ph": "X", "pid": pid, "tid": tid, "name": name, "ts": ts, "dur": dur}
+    if args is not None:
+        e["args"] = args
+    return e
+
+
+def pipeline_pair(trace=1):
+    return [
+        ev(1, 7, "request", 0.0, 100.0, {"trace": trace, "span": 1}),
+        ev(1, 7, "place", 10.0, 50.0, {"trace": trace, "span": 2, "parent": 1}),
+    ]
+
+
+def sim_op(name="matmul", crit=None, ts=0.0, dur=5.0):
+    args = {"node": 3, "device": 0}
+    if crit is not None:
+        args.update(crit)
+    return ev(2, 0, name, ts, dur, args)
+
+
+def sim_xfer(crit=None):
+    args = {"node": 3, "src": 0, "dst": 1, "bytes": 64, "link": 2}
+    if crit is not None:
+        args.update(crit)
+    return ev(2, 4, "xfer matmul", 5.0, 3.0, args)
+
+
+def doc(events):
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+class ValidateTraceTest(unittest.TestCase):
+    def check(self, events):
+        return validate_trace.validate(doc(events))
+
+    def test_valid_trace_passes(self):
+        errors, summary = self.check(
+            pipeline_pair()
+            + [
+                sim_op(crit={"crit": True, "crit_category": "compute"}),
+                sim_xfer(crit={"crit": True, "crit_category": "transfer"}),
+                sim_op(name="add"),
+            ]
+        )
+        self.assertEqual(errors, [])
+        self.assertIn("2 critical-path annotation(s)", summary)
+
+    def test_rejects_missing_trace_events(self):
+        errors, _ = validate_trace.validate({"foo": 1})
+        self.assertTrue(any("traceEvents" in e for e in errors), errors)
+
+    def test_rejects_negative_duration(self):
+        errors, _ = self.check(pipeline_pair() + [ev(2, 0, "op", 1.0, -2.0, {"node": 1})])
+        self.assertTrue(any("bad dur" in e for e in errors), errors)
+
+    def test_stage_outside_request_span_fails(self):
+        events = [
+            ev(1, 7, "request", 0.0, 10.0, {"trace": 1}),
+            ev(1, 7, "place", 5.0, 50.0, {"trace": 1}),
+        ]
+        errors, _ = self.check(events)
+        self.assertTrue(any("ends after" in e for e in errors), errors)
+
+    def test_stage_without_request_fails(self):
+        events = [
+            ev(1, 7, "request", 0.0, 10.0, {"trace": 1}),
+            ev(1, 7, "place", 1.0, 2.0, {"trace": 99}),
+        ]
+        errors, _ = self.check(events)
+        self.assertTrue(any("no request span" in e for e in errors), errors)
+
+    def test_args_must_be_object(self):
+        events = pipeline_pair() + [ev(2, 0, "op", 0.0, 1.0, "not-a-dict")]
+        errors, _ = self.check(events)
+        self.assertTrue(any("args is not an object" in e for e in errors), errors)
+
+    def test_sim_op_requires_int_node(self):
+        events = pipeline_pair() + [ev(2, 0, "op", 0.0, 1.0, {"node": "three"})]
+        errors, _ = self.check(events)
+        self.assertTrue(any("missing int args.node" in e for e in errors), errors)
+
+    def test_sim_transfer_requires_link_fields(self):
+        events = pipeline_pair() + [
+            ev(2, 4, "xfer op", 0.0, 1.0, {"node": 1, "src": 0, "dst": 1, "bytes": 64})
+        ]
+        errors, _ = self.check(events)
+        self.assertTrue(any("missing int args.link" in e for e in errors), errors)
+
+    def test_crit_requires_true_and_category(self):
+        errors, _ = self.check(
+            pipeline_pair() + [sim_op(crit={"crit": 1, "crit_category": "compute"})]
+        )
+        self.assertTrue(any("must be true" in e for e in errors), errors)
+        errors, _ = self.check(
+            pipeline_pair() + [sim_op(crit={"crit": True, "crit_category": "luck"})]
+        )
+        self.assertTrue(any("crit_category" in e for e in errors), errors)
+        errors, _ = self.check(pipeline_pair() + [sim_op(crit={"crit": True})])
+        self.assertTrue(any("crit_category" in e for e in errors), errors)
+
+    def test_crit_belongs_to_sim_track(self):
+        events = [
+            ev(1, 7, "request", 0.0, 100.0, {"trace": 1, "crit": True, "crit_category": "compute"}),
+            ev(1, 7, "place", 1.0, 2.0, {"trace": 1}),
+        ]
+        errors, _ = self.check(events)
+        self.assertTrue(
+            any("off the simulated-plan track" in e for e in errors), errors
+        )
+
+    def test_main_exit_codes(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            good = os.path.join(tmp, "good.json")
+            with open(good, "w") as f:
+                json.dump(doc(pipeline_pair() + [sim_op()]), f)
+            self.assertEqual(validate_trace.main([good]), 0)
+            bad = os.path.join(tmp, "bad.json")
+            with open(bad, "w") as f:
+                json.dump({"traceEvents": []}, f)
+            self.assertEqual(validate_trace.main([bad]), 1)
+            self.assertEqual(validate_trace.main(["/nonexistent.json"]), 1)
+            self.assertEqual(validate_trace.main([]), 2)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,191 @@
+#!/usr/bin/env python3
+"""Validate a `baechi explain --json` artifact.
+
+Checks, beyond "it parses":
+
+* the document carries an ``attribution`` object whose four category
+  totals (compute / transfer / queue_wait / idle) sum to ``makespan``
+  within 1e-9 (relative), matching the Rust-side invariant;
+* ``fractions`` lie in [0, 1] and sum to 1 for a non-zero makespan;
+* the critical ``path`` is chronological, uses only known categories,
+  and (for non-OOM runs) ends at the makespan;
+* ``top_ops`` are sorted heaviest-first;
+* every decision record names a known reason, the chosen device
+  appears among its candidates with a numeric EST (the placer cannot
+  have scheduled an unschedulable device), and every candidate carries
+  a non-negative ``memory_deficit`` (``est: null`` with deficit 0 is a
+  colocation pin to another device, not a memory disqualification).
+
+Exit status 0 when valid, 1 with a diagnostic otherwise. Used by ci.sh
+on the `baechi explain` smoke artifact.
+"""
+
+import json
+import sys
+
+CATEGORIES = ("compute", "transfer", "queue_wait", "idle")
+REASONS = {"min-est", "sct-favorite-child", "coarsen-pin", "oom-fallback"}
+REL_TOL = 1e-9
+
+
+def _num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate(doc, require_decisions=False):
+    """Return a list of problems (empty when the artifact is valid)."""
+    errors = []
+
+    def err(msg):
+        errors.append(msg)
+
+    if not isinstance(doc, dict):
+        return ["document is not a JSON object"]
+    attr = doc.get("attribution")
+    if not isinstance(attr, dict):
+        return ["no attribution object"]
+
+    makespan = attr.get("makespan")
+    if not _num(makespan) or makespan < 0:
+        return [f"bad attribution.makespan {makespan!r}"]
+    eps = REL_TOL * max(1.0, abs(makespan))
+
+    total = 0.0
+    for cat in CATEGORIES:
+        v = attr.get(cat)
+        if not _num(v):
+            err(f"attribution.{cat} missing or non-numeric: {v!r}")
+            continue
+        if v < -eps:
+            err(f"attribution.{cat} is negative: {v}")
+        total += v
+    if not errors and abs(total - makespan) > eps:
+        err(
+            f"attribution does not sum to makespan: "
+            f"{total!r} vs {makespan!r} (residual {total - makespan:e})"
+        )
+
+    fractions = attr.get("fractions")
+    if not isinstance(fractions, dict):
+        err("attribution.fractions missing")
+    else:
+        fsum = 0.0
+        for cat in CATEGORIES:
+            f = fractions.get(cat)
+            if not _num(f) or f < -eps or f > 1 + eps:
+                err(f"fractions.{cat} out of [0,1]: {f!r}")
+            else:
+                fsum += f
+        if makespan > 0 and abs(fsum - 1.0) > 1e-6:
+            err(f"fractions sum to {fsum}, expected 1")
+
+    path = attr.get("path")
+    if not isinstance(path, list):
+        err("attribution.path missing")
+        path = []
+    prev_end = float("-inf")
+    for i, step in enumerate(path):
+        if not isinstance(step, dict):
+            err(f"path[{i}] is not an object")
+            continue
+        if step.get("category") not in CATEGORIES:
+            err(f"path[{i}] has unknown category {step.get('category')!r}")
+        start, end = step.get("start"), step.get("end")
+        if not (_num(start) and _num(end)) or end < start - eps:
+            err(f"path[{i}] has a bad interval [{start!r}, {end!r}]")
+            continue
+        if start < prev_end - eps:
+            err(f"path[{i}] goes backward in time")
+        prev_end = end
+    if path and not doc.get("oom", False):
+        last_end = path[-1].get("end")
+        if _num(last_end) and abs(last_end - makespan) > eps:
+            err(f"path ends at {last_end}, not the makespan {makespan}")
+
+    top_ops = attr.get("top_ops")
+    if not isinstance(top_ops, list):
+        err("attribution.top_ops missing")
+        top_ops = []
+    for i, op in enumerate(top_ops):
+        if not isinstance(op, dict) or not op.get("name") or not _num(op.get("seconds")):
+            err(f"top_ops[{i}] malformed: {op!r}")
+        elif i > 0 and _num(top_ops[i - 1].get("seconds")):
+            if op["seconds"] > top_ops[i - 1]["seconds"] + eps:
+                err(f"top_ops[{i}] not sorted heaviest-first")
+
+    dec = doc.get("decisions")
+    if not isinstance(dec, dict) or not isinstance(dec.get("decisions"), list):
+        err("no decisions object")
+        records = []
+    else:
+        records = dec["decisions"]
+    if require_decisions and not records:
+        err("no decision records (expected some: placer has explain hooks)")
+    for i, d in enumerate(records):
+        if not isinstance(d, dict):
+            err(f"decisions[{i}] is not an object")
+            continue
+        if d.get("reason") not in REASONS:
+            err(f"decisions[{i}] has unknown reason {d.get('reason')!r}")
+        cands = d.get("candidates")
+        if not isinstance(cands, list) or not cands:
+            err(f"decisions[{i}] ({d.get('name')!r}) has no candidates")
+            continue
+        chosen = d.get("chosen")
+        winner = next(
+            (c for c in cands if isinstance(c, dict) and c.get("device") == chosen),
+            None,
+        )
+        if winner is None:
+            err(f"decisions[{i}] chose device {chosen!r} not among its candidates")
+        elif not _num(winner.get("est")):
+            err(
+                f"decisions[{i}] ({d.get('name')!r}) chose gpu{chosen!r} "
+                f"whose candidate has no EST (unschedulable winner)"
+            )
+        for c in cands:
+            if not isinstance(c, dict):
+                err(f"decisions[{i}] has a malformed candidate {c!r}")
+                continue
+            deficit = c.get("memory_deficit")
+            if not _num(deficit) or deficit < 0:
+                err(
+                    f"decisions[{i}] candidate gpu{c.get('device')!r} has a "
+                    f"bad memory_deficit {deficit!r}"
+                )
+
+    return errors
+
+
+def main(argv):
+    args = [a for a in argv if not a.startswith("--")]
+    require_decisions = "--require-decisions" in argv
+    if len(args) != 1:
+        print(
+            "usage: validate_explain.py [--require-decisions] <explain.json>",
+            file=sys.stderr,
+        )
+        return 2
+    path = args[0]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"validate_explain: {path}: {e}", file=sys.stderr)
+        return 1
+    errors = validate(doc, require_decisions=require_decisions)
+    if errors:
+        for e in errors:
+            print(f"validate_explain: {e}", file=sys.stderr)
+        return 1
+    attr = doc["attribution"]
+    n_dec = len(doc.get("decisions", {}).get("decisions", []))
+    print(
+        f"{path}: ok — makespan {attr['makespan']:.6g}s over "
+        f"{len(attr['path'])} path element(s), {n_dec} decision record(s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

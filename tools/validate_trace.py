@@ -8,7 +8,13 @@ Checks, beyond "it parses":
   ``dur``, a ``pid``/``tid``, and a name;
 * on the pipeline track (pid 1), every engine stage span (optimize /
   place / expand / simulate) nests inside the request span of the same
-  trace id, within a 0.5 µs rounding slack.
+  trace id, within a 0.5 µs rounding slack;
+* span ``args`` are well-formed: always an object when present; on the
+  simulated-plan track (pid 2) ops carry an integer ``node`` and
+  transfers (``xfer …``) integer ``src``/``dst``/``bytes``/``link``;
+* critical-path annotations are consistent: ``crit`` only appears on
+  the simulated-plan track, is literally ``true``, and is always paired
+  with a known ``crit_category``.
 
 Exit status 0 when valid, 1 with a diagnostic otherwise. Used by ci.sh
 on the `baechi trace` smoke artifact.
@@ -18,77 +24,122 @@ import json
 import sys
 
 PIPELINE_PID = 1
+SIM_PID = 2
 STAGES = {"optimize", "place", "expand", "simulate"}
+CRIT_CATEGORIES = {"compute", "transfer", "queue_wait", "idle"}
 SLACK_US = 0.5
 
 
-def fail(msg):
-    print(f"validate_trace: {msg}", file=sys.stderr)
-    sys.exit(1)
+def validate(doc):
+    """Return (errors, summary): a list of problems and a stats string."""
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        return ["no traceEvents array"], ""
+    events = doc["traceEvents"]
+
+    errors = []
+    complete = [e for e in events if isinstance(e, dict) and e.get("ph") == "X"]
+    if not complete:
+        return ["no complete (ph=X) events"], ""
+    for e in complete:
+        name = e.get("name")
+        if not name:
+            errors.append(f"unnamed X event: {e}")
+            continue
+        for key in ("ts", "dur"):
+            v = e.get(key)
+            if not isinstance(v, (int, float)) or v < 0:
+                errors.append(f"{name}: bad {key} {v!r}")
+        for key in ("pid", "tid"):
+            if not isinstance(e.get(key), int):
+                errors.append(f"{name}: bad {key} {e.get(key)!r}")
+
+    crit = 0
+    for e in complete:
+        name = e.get("name", "?")
+        args = e.get("args")
+        if args is None:
+            continue
+        if not isinstance(args, dict):
+            errors.append(f"{name}: args is not an object: {args!r}")
+            continue
+        if e.get("pid") == SIM_PID:
+            keys = (
+                ("src", "dst", "bytes", "link", "node")
+                if str(name).startswith("xfer ")
+                else ("node",)
+            )
+            for key in keys:
+                if not isinstance(args.get(key), int):
+                    errors.append(f"{name}: sim event missing int args.{key}")
+        if "crit" in args or "crit_category" in args:
+            if e.get("pid") != SIM_PID:
+                errors.append(f"{name}: crit annotation off the simulated-plan track")
+            if args.get("crit") is not True:
+                errors.append(f"{name}: args.crit must be true, got {args.get('crit')!r}")
+            if args.get("crit_category") not in CRIT_CATEGORIES:
+                errors.append(
+                    f"{name}: bad args.crit_category {args.get('crit_category')!r}"
+                )
+            crit += 1
+
+    pipeline = [e for e in complete if e.get("pid") == PIPELINE_PID]
+    requests = {}
+    for e in pipeline:
+        if e.get("name") == "request":
+            trace = e.get("args", {}).get("trace")
+            if trace is None:
+                errors.append("request event without args.trace")
+            else:
+                requests[trace] = e
+
+    checked = 0
+    for e in pipeline:
+        if e.get("name") not in STAGES:
+            continue
+        trace = e.get("args", {}).get("trace")
+        if trace is None:
+            errors.append(f"{e['name']} event without args.trace")
+            continue
+        req = requests.get(trace)
+        if req is None:
+            errors.append(f"{e['name']} (trace {trace}) has no request span")
+            continue
+        if e["ts"] < req["ts"] - SLACK_US:
+            errors.append(f"{e['name']} starts before its request span")
+        if e["ts"] + e["dur"] > req["ts"] + req["dur"] + SLACK_US:
+            errors.append(f"{e['name']} ends after its request span")
+        checked += 1
+    if not requests:
+        errors.append("pipeline track has no request spans")
+    if not checked:
+        errors.append("pipeline track has no stage spans")
+
+    summary = (
+        f"{len(complete)} events, {len(requests)} request span(s), "
+        f"{checked} nested stage span(s), {crit} critical-path annotation(s)"
+    )
+    return errors, summary
 
 
-def main(path):
+def main(argv):
+    if len(argv) != 1:
+        print("usage: validate_trace.py <trace.json>", file=sys.stderr)
+        return 2
+    path = argv[0]
     try:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, ValueError) as e:
-        fail(f"{path}: {e}")
-
-    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
-        fail(f"{path}: no traceEvents array")
-    events = doc["traceEvents"]
-
-    complete = [e for e in events if e.get("ph") == "X"]
-    if not complete:
-        fail(f"{path}: no complete (ph=X) events")
-    for e in complete:
-        name = e.get("name")
-        if not name:
-            fail(f"unnamed X event: {e}")
-        for key in ("ts", "dur"):
-            v = e.get(key)
-            if not isinstance(v, (int, float)) or v < 0:
-                fail(f"{name}: bad {key} {v!r}")
-        for key in ("pid", "tid"):
-            if not isinstance(e.get(key), int):
-                fail(f"{name}: bad {key} {e.get(key)!r}")
-
-    pipeline = [e for e in complete if e["pid"] == PIPELINE_PID]
-    requests = {}
-    for e in pipeline:
-        if e["name"] == "request":
-            trace = e.get("args", {}).get("trace")
-            if trace is None:
-                fail("request event without args.trace")
-            requests[trace] = e
-
-    checked = 0
-    for e in pipeline:
-        if e["name"] not in STAGES:
-            continue
-        trace = e.get("args", {}).get("trace")
-        if trace is None:
-            fail(f"{e['name']} event without args.trace")
-        req = requests.get(trace)
-        if req is None:
-            fail(f"{e['name']} (trace {trace}) has no request span")
-        if e["ts"] < req["ts"] - SLACK_US:
-            fail(f"{e['name']} starts before its request span")
-        if e["ts"] + e["dur"] > req["ts"] + req["dur"] + SLACK_US:
-            fail(f"{e['name']} ends after its request span")
-        checked += 1
-    if not requests:
-        fail("pipeline track has no request spans")
-    if not checked:
-        fail("pipeline track has no stage spans")
-
-    print(
-        f"{path}: ok — {len(complete)} events, {len(requests)} request "
-        f"span(s), {checked} nested stage span(s)"
-    )
+        print(f"validate_trace: {path}: {e}", file=sys.stderr)
+        return 1
+    errors, summary = validate(doc)
+    if errors:
+        for e in errors:
+            print(f"validate_trace: {e}", file=sys.stderr)
+        return 1
+    print(f"{path}: ok — {summary}")
+    return 0
 
 
 if __name__ == "__main__":
-    if len(sys.argv) != 2:
-        fail("usage: validate_trace.py <trace.json>")
-    main(sys.argv[1])
+    sys.exit(main(sys.argv[1:]))
